@@ -1,0 +1,83 @@
+//! Paper-scale experiment: the full §5.2 sweep on the calibrated DES.
+//!
+//! Replays the paper's workflow verbatim — 8 LLaMA2-13B workers, 10-minute
+//! CodeFuse-shaped Poisson traces at rates 12–28 req/s — across the five
+//! (engine, scheduler) cells of Fig. 12, printing throughput, average and
+//! tail response time, and the dive-in counters of Figs. 13/14. Because
+//! the cluster is a virtual-time simulation, the whole sweep takes seconds
+//! instead of the paper's hours of A100 time.
+//!
+//! Run with: `cargo run --release --example paper_scale_sim`
+//! (set SCLS_FULL=1 for the full 10-minute traces; default is 2 minutes)
+
+use scls::bench::figures::{run_cell, FigureConfig};
+use scls::engine::presets::EngineKind;
+
+fn main() {
+    let full = std::env::var("SCLS_FULL").is_ok();
+    let fc = if full {
+        FigureConfig::default() // the paper's full 600 s
+    } else {
+        FigureConfig::quick(0.2) // 120 s traces — same shapes, 5× faster
+    };
+    println!(
+        "paper_scale_sim: {} workers, {:.0}-second traces (SCLS_FULL=1 for 600 s)\n",
+        fc.workers, fc.duration
+    );
+
+    let rates = [12.0, 16.0, 20.0, 24.0, 28.0];
+    let cells: [(EngineKind, &str); 5] = [
+        (EngineKind::Hf, "SLS"),
+        (EngineKind::Hf, "SCLS"),
+        (EngineKind::Ds, "SLS"),
+        (EngineKind::Ds, "ILS"),
+        (EngineKind::Ds, "SCLS"),
+    ];
+
+    println!(
+        "{:<10} {:>5} {:>10} {:>9} {:>9} {:>8} {:>8} {:>8} {:>7}",
+        "cell", "rate", "thpt", "avgRT", "p95RT", "invalid", "batch", "pads", "CTstd"
+    );
+    // Track the paper's headline comparisons while sweeping.
+    let mut hf: Vec<(f64, f64, f64)> = Vec::new(); // (rate, sls, scls) throughput
+    let mut ds: Vec<(f64, f64, f64, f64)> = Vec::new(); // (rate, sls, ils, scls)
+    for &rate in &rates {
+        let mut row = std::collections::BTreeMap::new();
+        for &(kind, which) in &cells {
+            let s = run_cell(&fc, kind, which, rate, fc.slice_len);
+            println!(
+                "{:<10} {:>5.0} {:>10.2} {:>9.1} {:>9.1} {:>8.1} {:>8.1} {:>8.1} {:>7.1}",
+                format!("{}-{}", kind.name(), which),
+                rate,
+                s.throughput,
+                s.avg_response_time,
+                s.p95_response_time,
+                s.avg_invalid_tokens,
+                s.avg_batch_size,
+                s.avg_pad_tokens,
+                s.ct_std
+            );
+            row.insert(format!("{}-{}", kind.name(), which), s.throughput);
+        }
+        hf.push((rate, row["HF-SLS"], row["HF-SCLS"]));
+        ds.push((rate, row["DS-SLS"], row["DS-ILS"], row["DS-SCLS"]));
+        println!();
+    }
+
+    // The paper's headline claims (§5.2): SCLS vs SLS on HF = +232% to
+    // +316%; vs SLS on DS = +83% to +192%; vs ILS on DS = +62% to +171%.
+    println!("headline throughput gains (paper ranges in brackets):");
+    let span = |pairs: &[(f64, f64)]| {
+        let gains: Vec<f64> = pairs.iter().map(|(b, s)| 100.0 * (s / b - 1.0)).collect();
+        (
+            gains.iter().cloned().fold(f64::INFINITY, f64::min),
+            gains.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        )
+    };
+    let (lo, hi) = span(&hf.iter().map(|&(_, b, s)| (b, s)).collect::<Vec<_>>());
+    println!("  HF: SCLS over SLS  {lo:+.1}% .. {hi:+.1}%   [+232.3% .. +315.8%]");
+    let (lo, hi) = span(&ds.iter().map(|&(_, b, _, s)| (b, s)).collect::<Vec<_>>());
+    println!("  DS: SCLS over SLS  {lo:+.1}% .. {hi:+.1}%   [+82.5% .. +191.9%]");
+    let (lo, hi) = span(&ds.iter().map(|&(_, _, i, s)| (i, s)).collect::<Vec<_>>());
+    println!("  DS: SCLS over ILS  {lo:+.1}% .. {hi:+.1}%   [+61.6% .. +171.0%]");
+}

@@ -1,0 +1,106 @@
+"""AOT export: lower the tiny-GPT slice-serving function to HLO text.
+
+Emits one self-contained HLO program per (N, L, S) bucket plus a
+``manifest.json`` the Rust runtime uses to discover buckets. HLO **text** is
+the interchange format (NOT ``.serialize()``): jax >= 0.5 emits protos with
+64-bit instruction ids which xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage::
+
+    cd python && python -m compile.aot --out-dir ../artifacts \
+        [--batch-sizes 1,2,4,8] [--input-lens 16,32,64,128,160] \
+        [--slice-lens 16]
+
+Python runs ONLY here (and in pytest); the Rust binary is self-contained
+once ``artifacts/`` is built.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_bucket(cfg: M.ModelConfig, n: int, l: int, s: int, out_dir: str) -> dict:
+    """Lower one (N, L, S) bucket and write its HLO text file."""
+    import jax.numpy as jnp
+
+    fn = M.generate_slice_fn(cfg, n, l, s, use_pallas=True, interpret=True)
+    tok_spec = jax.ShapeDtypeStruct((n, l), jnp.int32)
+    vec_spec = jax.ShapeDtypeStruct((n,), jnp.int32)
+    t0 = time.time()
+    # inputs: tokens (N,L), lengths (N,), active (N,), gen_offset (N,)
+    lowered = jax.jit(fn).lower(tok_spec, vec_spec, vec_spec, vec_spec)
+    text = to_hlo_text(lowered)
+    fname = f"generate_n{n}_l{l}_s{s}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    dt = time.time() - t0
+    print(f"  bucket n={n:<2} l={l:<4} s={s:<3} -> {fname} "
+          f"({len(text)/1024:.0f} KiB, {dt:.1f}s)")
+    return {"n": n, "l": l, "s": s, "file": fname}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch-sizes", default="1,2,4,8")
+    ap.add_argument("--input-lens", default="16,32,64,128,160")
+    ap.add_argument("--slice-lens", default="16")
+    args = ap.parse_args()
+
+    cfg = M.ModelConfig()
+    ns = [int(x) for x in args.batch_sizes.split(",")]
+    ls = [int(x) for x in args.input_lens.split(",")]
+    ss = [int(x) for x in args.slice_lens.split(",")]
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    buckets = []
+    print(f"exporting {len(ns) * len(ls) * len(ss)} buckets to {args.out_dir}")
+    for s in ss:
+        for l in ls:
+            if l + s > cfg.max_pos:
+                print(f"  skip l={l} s={s}: exceeds max_pos={cfg.max_pos}")
+                continue
+            for n in ns:
+                buckets.append(export_bucket(cfg, n, l, s, args.out_dir))
+
+    manifest = {
+        "model": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "n_layers": cfg.n_layers,
+            "max_pos": cfg.max_pos,
+            "eos_alpha": cfg.eos_alpha,
+            "param_seed": cfg.param_seed,
+            "kv_bytes_per_token": cfg.kv_bytes_per_token,
+        },
+        "tokens": {"pad": M.PAD_ID, "eos": M.EOS_ID, "bos": M.BOS_ID},
+        "buckets": buckets,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(buckets)} buckets")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,165 @@
+"""L1 — Pallas attention kernels for static-batching LLM serving (SCLS).
+
+Two kernels cover the serving hot spot the paper's cost model (Eq. 1/2)
+splits into:
+
+* ``prefill_attention`` — full causal attention over a *left-padded* static
+  batch (paper §2.4): each request row occupies positions ``[L - len, L)``;
+  everything before that is pad and must never be attended to.
+* ``decode_attention`` — one-token attention against a KV cache of capacity
+  ``C``; only positions ``[start, cur)`` of the cache are valid keys.
+
+Hardware adaptation (see DESIGN.md §Hardware-Adaptation): the CUDA
+threadblock sweep of the paper's engines becomes a Pallas grid over
+``(batch, head)``; the combined causal+pad mask is built *inside* the kernel
+from ``broadcasted_iota`` against a per-row scalar start index, so no
+``(N, L, L)`` mask tensor is ever materialized in HBM. All contractions use
+``preferred_element_type=float32`` so they land on the MXU.
+
+Kernels are lowered with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); correctness is pinned against ``ref.py`` by pytest/hypothesis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30  # large negative for masked logits (f32-safe, avoids nan)
+
+
+# ---------------------------------------------------------------------------
+# Prefill kernel
+# ---------------------------------------------------------------------------
+
+def _prefill_kernel(start_ref, q_ref, k_ref, v_ref, o_ref, *, scale: float):
+    """One (batch row, head) tile: masked softmax(q @ k^T) @ v.
+
+    Block shapes: q/k/v/o are (L, dh) in VMEM; ``start_ref`` holds the row's
+    first valid position (L - true_len) as an int32 scalar block of shape (1,).
+    """
+    q = q_ref[...].astype(jnp.float32) * scale   # (L, dh)
+    k = k_ref[...].astype(jnp.float32)           # (L, dh)
+    v = v_ref[...].astype(jnp.float32)           # (L, dh)
+    start = start_ref[0]
+
+    # (L, L) attention scores on the MXU.
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+
+    l = q.shape[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (l, l), 0)  # query position i
+    cols = jax.lax.broadcasted_iota(jnp.int32, (l, l), 1)  # key position j
+    # causal: j <= i ; pad: j >= start. Queries in the pad region produce
+    # garbage rows, which downstream layers ignore (their residual output is
+    # never read — only positions >= start contribute to logits).
+    mask = (cols <= rows) & (cols >= start)
+    s = jnp.where(mask, s, NEG_INF)
+
+    # Numerically-stable softmax along keys.
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+
+    o_ref[...] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+def prefill_attention(q, k, v, lengths, *, interpret: bool = True):
+    """Masked causal attention over a left-padded static batch.
+
+    Args:
+      q, k, v: ``(N, H, L, dh)`` float32.
+      lengths: ``(N,)`` int32 — true (unpadded) length of each row.
+      interpret: run the Pallas interpreter (required on CPU PJRT).
+
+    Returns:
+      ``(N, H, L, dh)`` float32 attention output.
+    """
+    n, h, l, dh = q.shape
+    assert k.shape == (n, h, l, dh) and v.shape == (n, h, l, dh)
+    starts = (l - lengths).astype(jnp.int32)  # first valid position per row
+
+    kernel = functools.partial(_prefill_kernel, scale=1.0 / (dh ** 0.5))
+    grid = (n, h)
+    blk = pl.BlockSpec((None, None, l, dh), lambda i, j: (i, j, 0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (i,)),  # start scalar per row
+            blk, blk, blk,
+        ],
+        out_specs=blk,
+        out_shape=jax.ShapeDtypeStruct((n, h, l, dh), jnp.float32),
+        interpret=interpret,
+    )(starts, q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Decode kernel
+# ---------------------------------------------------------------------------
+
+def _decode_kernel(bounds_ref, q_ref, k_ref, v_ref, o_ref, *, scale: float):
+    """One (batch row, head) tile: single query against the KV cache.
+
+    Block shapes: q/o are (1, dh); k/v are (C, dh); ``bounds_ref`` is an int32
+    block of shape (2,) holding ``[start, cur)`` — the valid cache window.
+    """
+    q = q_ref[...].astype(jnp.float32) * scale   # (1, dh)
+    k = k_ref[...].astype(jnp.float32)           # (C, dh)
+    v = v_ref[...].astype(jnp.float32)           # (C, dh)
+    start = bounds_ref[0]
+    cur = bounds_ref[1]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (1, C)
+    c = k.shape[0]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (1, c), 1)
+    mask = (cols >= start) & (cols < cur)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+def decode_attention(q, k_cache, v_cache, starts, cur, *, interpret: bool = True):
+    """One-token attention against a static-capacity KV cache.
+
+    Args:
+      q: ``(N, H, 1, dh)`` float32 — current token's query.
+      k_cache, v_cache: ``(N, H, C, dh)`` float32 — cache, positions
+        ``[starts[i], cur)`` valid for row ``i``.
+      starts: ``(N,)`` int32 — first valid cache position per row
+        (left-padding offset).
+      cur: int32 scalar — one past the last valid cache position (same for
+        every row under static batching: all rows advance in lockstep).
+
+    Returns:
+      ``(N, H, 1, dh)`` float32.
+    """
+    n, h, one, dh = q.shape
+    assert one == 1
+    c = k_cache.shape[2]
+    assert k_cache.shape == (n, h, c, dh) and v_cache.shape == (n, h, c, dh)
+
+    cur_vec = jnp.full((n,), cur, dtype=jnp.int32)
+    bounds = jnp.stack([starts.astype(jnp.int32), cur_vec], axis=1)  # (N, 2)
+
+    kernel = functools.partial(_decode_kernel, scale=1.0 / (dh ** 0.5))
+    grid = (n, h)
+    qblk = pl.BlockSpec((None, None, 1, dh), lambda i, j: (i, j, 0, 0))
+    cblk = pl.BlockSpec((None, None, c, dh), lambda i, j: (i, j, 0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, 2), lambda i, j: (i, 0)),
+            qblk, cblk, cblk,
+        ],
+        out_specs=qblk,
+        out_shape=jax.ShapeDtypeStruct((n, h, 1, dh), jnp.float32),
+        interpret=interpret,
+    )(bounds, q, k_cache, v_cache)

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the CORE correctness signal: pytest + hypothesis assert the Pallas
+kernels (interpret mode) match these to float tolerance across shapes, batch
+sizes, head counts, and padding patterns.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def prefill_attention_ref(q, k, v, lengths):
+    """Reference masked causal attention over a left-padded batch.
+
+    Same contract as ``attention.prefill_attention``.
+    """
+    n, h, l, dh = q.shape
+    scale = 1.0 / (dh ** 0.5)
+    s = jnp.einsum("nhid,nhjd->nhij", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+
+    rows = jax.lax.broadcasted_iota(jnp.int32, (l, l), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (l, l), 1)
+    causal = cols <= rows                                    # (L, L)
+    starts = (l - lengths).astype(jnp.int32)                 # (N,)
+    pad_ok = cols[None, :, :] >= starts[:, None, None]       # (N, L, L)
+    mask = causal[None, None, :, :] & pad_ok[:, None, :, :]  # (N, 1, L, L)
+
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("nhij,nhjd->nhid", p, v.astype(jnp.float32))
+
+
+def decode_attention_ref(q, k_cache, v_cache, starts, cur):
+    """Reference one-token attention against a KV cache window.
+
+    Same contract as ``attention.decode_attention``.
+    """
+    n, h, _, dh = q.shape
+    c = k_cache.shape[2]
+    scale = 1.0 / (dh ** 0.5)
+    s = jnp.einsum(
+        "nhid,nhjd->nhij", q.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) * scale  # (N, H, 1, C)
+
+    cols = jax.lax.broadcasted_iota(jnp.int32, (1, c), 1)      # (1, C)
+    valid = (cols >= starts[:, None]) & (cols < cur)           # (N, C)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("nhij,nhjd->nhid", p, v_cache.astype(jnp.float32))

@@ -1,0 +1,313 @@
+"""L2 — tiny-GPT decoder-only model with static-batching slice generation.
+
+This is the *compute substrate* for the real-engine path of the SCLS
+reproduction: a deterministic, randomly-initialized decoder-only transformer
+small enough that CPU PJRT can serve it interactively, but implementing the
+exact static-batching semantics the paper's engines (huggingface-transformers /
+deepspeed-inference) expose to the scheduler (§2.4):
+
+* batches are **left-padded** to a common length ``L``;
+* pad tokens are masked out of attention;
+* generation runs for **exactly ``S`` iterations** (the slice length) unless
+  *every* active row has emitted EOS earlier — the paper's "early return";
+* rows that emit EOS early keep generating **invalid tokens** until the slice
+  ends (they still burn compute — that is the inefficiency SCLS exploits).
+
+The whole prefill + S-step decode loop is a single jittable function so that
+``aot.py`` can lower one self-contained HLO program per (N, L, S) bucket;
+Rust then makes exactly one PJRT call per batch per slice.
+
+Weights are generated from a fixed seed at export time and baked into the HLO
+as constants — the artifact is self-contained. A small position-progressive
+EOS logit boost (``eos_alpha``) makes the random-init model emit EOS at
+varied, content-dependent generation lengths, so the real engine exhibits the
+length dispersion the paper's motivation (§3.3) relies on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as K
+from .kernels import ref as KREF
+
+PAD_ID = 0
+EOS_ID = 1
+BOS_ID = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture of the tiny-GPT demo model (baked into artifacts)."""
+
+    vocab: int = 512
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 2
+    max_pos: int = 256          # positional-embedding table size (>= L + S)
+    mlp_ratio: int = 4
+    eos_alpha: float = 0.35     # EOS logit boost per generated position
+    param_seed: int = 20240612
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def kv_bytes_per_token(self) -> int:
+        """Per-token KV-cache footprint (f32 K+V across layers) — the Δ of
+        the paper's Eq. (5) for this model."""
+        return self.n_layers * 2 * self.d_model * 4
+
+
+def init_params(cfg: ModelConfig) -> Dict[str, Any]:
+    """Deterministic random init (fixed seed ⇒ identical artifacts)."""
+    key = jax.random.PRNGKey(cfg.param_seed)
+    ks = iter(jax.random.split(key, 4 + 8 * cfg.n_layers))
+    std = 0.08
+    p: Dict[str, Any] = {
+        "tok_emb": jax.random.normal(next(ks), (cfg.vocab, cfg.d_model)) * std,
+        "pos_emb": jax.random.normal(next(ks), (cfg.max_pos, cfg.d_model)) * std,
+        "lm_head": jax.random.normal(next(ks), (cfg.d_model, cfg.vocab)) * std,
+        "ln_f": jnp.ones((cfg.d_model,)),
+        "layers": [],
+    }
+    for _ in range(cfg.n_layers):
+        layer = {
+            "ln1": jnp.ones((cfg.d_model,)),
+            "wqkv": jax.random.normal(next(ks), (cfg.d_model, 3 * cfg.d_model)) * std,
+            "wo": jax.random.normal(next(ks), (cfg.d_model, cfg.d_model)) * std,
+            "ln2": jnp.ones((cfg.d_model,)),
+            "w1": jax.random.normal(next(ks), (cfg.d_model, cfg.mlp_ratio * cfg.d_model)) * std,
+            "w2": jax.random.normal(next(ks), (cfg.mlp_ratio * cfg.d_model, cfg.d_model)) * std,
+        }
+        p["layers"].append(layer)
+    return p
+
+
+def _rmsnorm(x, scale):
+    return x * scale * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+
+
+def _split_heads(x, n_heads, d_head):
+    # (N, L, D) -> (N, H, L, dh)
+    n, l, _ = x.shape
+    return x.reshape(n, l, n_heads, d_head).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    # (N, H, L, dh) -> (N, L, D)
+    n, h, l, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(n, l, h * dh)
+
+
+def _logits(cfg: ModelConfig, params, h_last, gen_pos):
+    """LM-head logits for the last position, with the EOS progression boost.
+
+    ``gen_pos``: (N,) int32 — number of tokens each row has generated so far
+    (0 at the prefill step). The boost grows linearly so every sequence
+    terminates at a content-dependent, bounded length.
+    """
+    logits = h_last @ params["lm_head"]  # (N, V)
+    boost = cfg.eos_alpha * gen_pos.astype(jnp.float32)
+    logits = logits.at[:, EOS_ID].add(boost)
+    # Never emit PAD/BOS: keeps the token stream clean for the runtime.
+    logits = logits.at[:, PAD_ID].add(-1e9)
+    logits = logits.at[:, BOS_ID].add(-1e9)
+    return logits
+
+
+def _block_prefill(cfg, layer, h, lengths, *, interpret, use_pallas):
+    """One transformer block over the full padded batch; returns (h, k, v)."""
+    x = _rmsnorm(h, layer["ln1"])
+    qkv = x @ layer["wqkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    qh = _split_heads(q, cfg.n_heads, cfg.d_head)
+    kh = _split_heads(k, cfg.n_heads, cfg.d_head)
+    vh = _split_heads(v, cfg.n_heads, cfg.d_head)
+    if use_pallas:
+        attn = K.prefill_attention(qh, kh, vh, lengths, interpret=interpret)
+    else:
+        attn = KREF.prefill_attention_ref(qh, kh, vh, lengths)
+    h = h + _merge_heads(attn) @ layer["wo"]
+    x = _rmsnorm(h, layer["ln2"])
+    h = h + jax.nn.gelu(x @ layer["w1"]) @ layer["w2"]
+    return h, kh, vh
+
+
+def _block_decode(cfg, layer, h, k_cache, v_cache, starts, cur, *, interpret, use_pallas):
+    """One transformer block for a single new token; returns (h, kc, vc)."""
+    x = _rmsnorm(h, layer["ln1"])  # (N, 1, D)
+    qkv = x @ layer["wqkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    qh = _split_heads(q, cfg.n_heads, cfg.d_head)  # (N, H, 1, dh)
+    kh = _split_heads(k, cfg.n_heads, cfg.d_head)
+    vh = _split_heads(v, cfg.n_heads, cfg.d_head)
+    # Insert the new K/V at cache position cur - 1 (it must be attendable by
+    # the current query: the valid window is [start, cur)).
+    k_cache = jax.lax.dynamic_update_slice(k_cache, kh, (0, 0, cur - 1, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, vh, (0, 0, cur - 1, 0))
+    if use_pallas:
+        attn = K.decode_attention(qh, k_cache, v_cache, starts, cur, interpret=interpret)
+    else:
+        attn = KREF.decode_attention_ref(qh, k_cache, v_cache, starts, cur)
+    h = h + _merge_heads(attn) @ layer["wo"]
+    x = _rmsnorm(h, layer["ln2"])
+    h = h + jax.nn.gelu(x @ layer["w1"]) @ layer["w2"]
+    return h, k_cache, v_cache
+
+
+def prefill_and_generate(
+    params,
+    tokens,        # (N, L) int32, LEFT-padded with PAD_ID
+    lengths,       # (N,)  int32, true lengths (1 <= len <= L for active rows)
+    active,        # (N,)  int32, 1 = real request, 0 = filler row
+    gen_offset=None,  # (N,) int32, tokens generated in previous slices
+    *,
+    cfg: ModelConfig,
+    slice_len: int,
+    interpret: bool = True,
+    use_pallas: bool = True,
+):
+    """Serve one slice: prefill the padded batch, then decode ``slice_len``
+    tokens (early-exiting iff every active row has emitted EOS).
+
+    Returns ``(gen, iters)``:
+      gen:   (N, slice_len) int32 — generated tokens; positions past the
+             executed iteration count are PAD_ID.
+      iters: ()  int32 — number of decode iterations actually executed
+             (== slice_len unless the batch early-returned, §4.2).
+    """
+    n, l = tokens.shape
+    s = slice_len
+    cap = l + s  # KV-cache capacity for this bucket
+    assert cap <= cfg.max_pos, "bucket exceeds positional table"
+    if gen_offset is None:
+        gen_offset = jnp.zeros((n,), jnp.int32)
+
+    starts = (l - lengths).astype(jnp.int32)          # (N,)
+    active_b = active.astype(jnp.bool_)
+
+    # ---- prefill over the padded batch --------------------------------
+    # Content position of column j in row i is j - starts[i] (clamped; the
+    # attention mask makes pad-region outputs unread).
+    cols = jnp.arange(l, dtype=jnp.int32)[None, :]
+    pos = jnp.clip(cols - starts[:, None], 0, cfg.max_pos - 1)
+    h = params["tok_emb"][tokens] + params["pos_emb"][pos]
+
+    k_list, v_list = [], []
+    for layer in params["layers"]:
+        h, kh, vh = _block_prefill(
+            cfg, layer, h, lengths, interpret=interpret, use_pallas=use_pallas
+        )
+        pad_kv = jnp.zeros((n, cfg.n_heads, s, cfg.d_head), jnp.float32)
+        k_list.append(jnp.concatenate([kh, pad_kv], axis=2))  # (N,H,cap,dh)
+        v_list.append(jnp.concatenate([vh, pad_kv], axis=2))
+    k_caches = jnp.stack(k_list)  # (layers, N, H, cap, dh)
+    v_caches = jnp.stack(v_list)
+
+    h_last = _rmsnorm(h[:, -1, :], params["ln_f"])    # (N, D)
+    logits = _logits(cfg, params, h_last, gen_offset)
+    tok0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (N,)
+
+    gen = jnp.full((n, s), PAD_ID, dtype=jnp.int32)
+    gen = gen.at[:, 0].set(tok0)
+    done = (tok0 == EOS_ID) | ~active_b
+
+    # ---- decode loop with early return ---------------------------------
+    def cond(state):
+        t, _, _, _, _, done = state
+        return (t < s) & ~jnp.all(done)
+
+    def body(state):
+        t, gen, prev, k_caches, v_caches, done = state
+        # prev token sits at cache position l + t - 1; window is [start, cur).
+        cur = l + t
+        h = params["tok_emb"][prev][:, None, :] + params["pos_emb"][
+            jnp.clip(lengths + t - 1, 0, cfg.max_pos - 1)
+        ][:, None, :]
+        new_k, new_v = [], []
+        for li, layer in enumerate(params["layers"]):
+            h, kc, vc = _block_decode(
+                cfg, layer, h, k_caches[li], v_caches[li], starts, cur,
+                interpret=interpret, use_pallas=use_pallas,
+            )
+            new_k.append(kc)
+            new_v.append(vc)
+        k_caches = jnp.stack(new_k)
+        v_caches = jnp.stack(new_v)
+        h_last = _rmsnorm(h[:, 0, :], params["ln_f"])
+        logits = _logits(cfg, params, h_last, gen_offset + t)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        gen = gen.at[:, t].set(tok)
+        done = done | (tok == EOS_ID)
+        return t + 1, gen, tok, k_caches, v_caches, done
+
+    t, gen, _, _, _, _ = jax.lax.while_loop(
+        cond, body, (jnp.int32(1), gen, tok0, k_caches, v_caches, done)
+    )
+    return gen, t
+
+
+def generate_slice_fn(cfg: ModelConfig, n: int, l: int, s: int, *, use_pallas=True, interpret=True):
+    """Build the jittable (tokens, lengths, active) -> (gen, iters) closure
+    for one (N, L, S) bucket, with weights baked in as constants."""
+    params = init_params(cfg)
+
+    def fn(tokens, lengths, active, gen_offset):
+        return prefill_and_generate(
+            params, tokens, lengths, active, gen_offset,
+            cfg=cfg, slice_len=s, interpret=interpret, use_pallas=use_pallas,
+        )
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Stateless reference generator (test oracle for the cached/pallas path)
+# ---------------------------------------------------------------------------
+
+def generate_ref(params, tokens, lengths, active, gen_offset=None, *,
+                 cfg: ModelConfig, slice_len: int):
+    """Naive stateless oracle: re-runs the full prefill forward pass for every
+    generated token (no KV cache, no Pallas, no early return inside HLO) and
+    applies the early-return rule in Python. Slow, but independently correct."""
+    import numpy as np
+
+    n, _ = tokens.shape
+    if gen_offset is None:
+        gen_offset = np.zeros((n,), np.int32)
+    gen_offset = np.asarray(gen_offset)
+    act = np.asarray(active).astype(bool)
+    outs = np.full((n, slice_len), PAD_ID, dtype=np.int32)
+    done = ~act
+    iters = 0
+
+    cur_tokens = np.asarray(tokens).copy()
+    cur_lens = np.asarray(lengths).copy()
+    for t in range(slice_len):
+        if done.all():
+            break
+        iters += 1
+        lcur = cur_tokens.shape[1]
+        starts = (lcur - jnp.asarray(cur_lens)).astype(jnp.int32)
+        cols = jnp.arange(lcur, dtype=jnp.int32)[None, :]
+        pos = jnp.clip(cols - starts[:, None], 0, cfg.max_pos - 1)
+        h = params["tok_emb"][jnp.asarray(cur_tokens)] + params["pos_emb"][pos]
+        for layer in params["layers"]:
+            h, _, _ = _block_prefill(
+                cfg, layer, h, jnp.asarray(cur_lens), interpret=True, use_pallas=False
+            )
+        h_last = _rmsnorm(h[:, -1, :], params["ln_f"])
+        logits = _logits(cfg, params, h_last, jnp.asarray(gen_offset + t, jnp.int32))
+        tok = np.asarray(jnp.argmax(logits, axis=-1)).astype(np.int32)
+        outs[:, t] = tok
+        done = done | (tok == EOS_ID)
+        # Append token (stateless: grow the sequence; rows stay left-padded).
+        cur_tokens = np.concatenate([cur_tokens, tok[:, None]], axis=1)
+        cur_lens = cur_lens + 1
+    return outs, iters

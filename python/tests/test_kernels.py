@@ -1,0 +1,207 @@
+"""L1 correctness: Pallas kernels (interpret mode) vs pure-jnp oracle.
+
+This is the CORE correctness signal for the compute layer: every shape,
+padding pattern, and cache window the runtime can produce must match the
+reference to float tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as A
+from compile.kernels import ref as R
+
+RTOL = 2e-5
+ATOL = 2e-5
+
+
+def rand(key, shape):
+    return jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def split(key, k):
+    return jax.random.split(key, k)
+
+
+# ---------------------------------------------------------------------------
+# Prefill kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,h,l,dh", [
+    (1, 1, 4, 4),
+    (1, 4, 16, 8),
+    (2, 2, 32, 16),
+    (4, 4, 64, 32),
+    (8, 4, 128, 32),
+])
+def test_prefill_matches_ref_full_lengths(n, h, l, dh):
+    ks = split(jax.random.PRNGKey(n * 1000 + l), 3)
+    q, k, v = (rand(kk, (n, h, l, dh)) for kk in ks)
+    lengths = jnp.full((n,), l, jnp.int32)
+    out = A.prefill_attention(q, k, v, lengths)
+    ref = R.prefill_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(out, ref, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("lengths", [
+    [1, 1, 1],
+    [16, 1, 9],
+    [5, 12, 16],
+    [3, 3, 3],
+])
+def test_prefill_matches_ref_padded(lengths):
+    n, h, l, dh = len(lengths), 2, 16, 8
+    ks = split(jax.random.PRNGKey(7), 3)
+    q, k, v = (rand(kk, (n, h, l, dh)) for kk in ks)
+    lens = jnp.asarray(lengths, jnp.int32)
+    out = A.prefill_attention(q, k, v, lens)
+    ref = R.prefill_attention_ref(q, k, v, lens)
+    # Compare only the valid (non-pad) query positions: pad-region outputs
+    # are unread garbage by contract.
+    for i, ln in enumerate(lengths):
+        s = l - ln
+        np.testing.assert_allclose(out[i, :, s:, :], ref[i, :, s:, :],
+                                   rtol=RTOL, atol=ATOL)
+
+
+def test_prefill_causality():
+    """Perturbing a future token must not change earlier outputs."""
+    n, h, l, dh = 1, 2, 12, 8
+    ks = split(jax.random.PRNGKey(3), 3)
+    q, k, v = (rand(kk, (n, h, l, dh)) for kk in ks)
+    lengths = jnp.full((n,), l, jnp.int32)
+    base = A.prefill_attention(q, k, v, lengths)
+    k2 = k.at[:, :, -1, :].add(100.0)
+    v2 = v.at[:, :, -1, :].add(100.0)
+    pert = A.prefill_attention(q, k2, v2, lengths)
+    np.testing.assert_allclose(base[:, :, :-1, :], pert[:, :, :-1, :],
+                               rtol=RTOL, atol=ATOL)
+    assert not np.allclose(base[:, :, -1, :], pert[:, :, -1, :])
+
+
+def test_prefill_pad_isolation():
+    """Perturbing the pad region must not change valid outputs."""
+    n, h, l, dh = 2, 2, 16, 8
+    ks = split(jax.random.PRNGKey(11), 3)
+    q, k, v = (rand(kk, (n, h, l, dh)) for kk in ks)
+    lengths = jnp.asarray([6, 10], jnp.int32)
+    base = A.prefill_attention(q, k, v, lengths)
+    # Scribble over pad keys/values of row 0 (positions [0, l-6)).
+    k2 = k.at[0, :, : l - 6, :].set(999.0)
+    v2 = v.at[0, :, : l - 6, :].set(-999.0)
+    pert = A.prefill_attention(q, k2, v2, lengths)
+    np.testing.assert_allclose(base[0, :, l - 6:, :], pert[0, :, l - 6:, :],
+                               rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 5),
+    h=st.sampled_from([1, 2, 4]),
+    l=st.sampled_from([4, 8, 16, 24]),
+    dh=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**16),
+    data=st.data(),
+)
+def test_prefill_hypothesis_sweep(n, h, l, dh, seed, data):
+    lengths = data.draw(
+        st.lists(st.integers(1, l), min_size=n, max_size=n), label="lengths"
+    )
+    ks = split(jax.random.PRNGKey(seed), 3)
+    q, k, v = (rand(kk, (n, h, l, dh)) for kk in ks)
+    lens = jnp.asarray(lengths, jnp.int32)
+    out = A.prefill_attention(q, k, v, lens)
+    ref = R.prefill_attention_ref(q, k, v, lens)
+    for i, ln in enumerate(lengths):
+        s = l - ln
+        np.testing.assert_allclose(out[i, :, s:, :], ref[i, :, s:, :],
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Decode kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,h,c,dh,cur", [
+    (1, 1, 8, 4, 4),
+    (2, 4, 24, 8, 20),
+    (4, 2, 48, 16, 48),
+    (8, 4, 144, 32, 100),
+])
+def test_decode_matches_ref(n, h, c, dh, cur):
+    ks = split(jax.random.PRNGKey(c + cur), 3)
+    q = rand(ks[0], (n, h, 1, dh))
+    kc = rand(ks[1], (n, h, c, dh))
+    vc = rand(ks[2], (n, h, c, dh))
+    starts = jnp.zeros((n,), jnp.int32)
+    out = A.decode_attention(q, kc, vc, starts, cur)
+    ref = R.decode_attention_ref(q, kc, vc, starts, cur)
+    np.testing.assert_allclose(out, ref, rtol=RTOL, atol=ATOL)
+
+
+def test_decode_window_isolation():
+    """K/V outside [start, cur) must not influence the output."""
+    n, h, c, dh = 2, 2, 16, 8
+    ks = split(jax.random.PRNGKey(5), 3)
+    q = rand(ks[0], (n, h, 1, dh))
+    kc = rand(ks[1], (n, h, c, dh))
+    vc = rand(ks[2], (n, h, c, dh))
+    starts = jnp.asarray([3, 6], jnp.int32)
+    cur = 12
+    base = A.decode_attention(q, kc, vc, starts, cur)
+    kc2 = kc.at[:, :, :3, :].set(1e3).at[:, :, 12:, :].set(-1e3)
+    vc2 = vc.at[:, :, :3, :].set(1e3).at[:, :, 12:, :].set(-1e3)
+    pert = A.decode_attention(q, kc2, vc2, starts, cur)
+    np.testing.assert_allclose(base, pert, rtol=RTOL, atol=ATOL)
+
+
+def test_decode_single_valid_position():
+    """cur = start + 1 ⇒ output is exactly the one valid V row."""
+    n, h, c, dh = 1, 1, 8, 4
+    ks = split(jax.random.PRNGKey(9), 3)
+    q = rand(ks[0], (n, h, 1, dh))
+    kc = rand(ks[1], (n, h, c, dh))
+    vc = rand(ks[2], (n, h, c, dh))
+    starts = jnp.asarray([4], jnp.int32)
+    out = A.decode_attention(q, kc, vc, starts, 5)
+    np.testing.assert_allclose(out[0, 0, 0], vc[0, 0, 4], rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 4),
+    h=st.sampled_from([1, 2, 4]),
+    c=st.sampled_from([8, 16, 32]),
+    dh=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**16),
+    data=st.data(),
+)
+def test_decode_hypothesis_sweep(n, h, c, dh, seed, data):
+    cur = data.draw(st.integers(2, c), label="cur")
+    starts = data.draw(
+        st.lists(st.integers(0, cur - 1), min_size=n, max_size=n),
+        label="starts",
+    )
+    ks = split(jax.random.PRNGKey(seed), 3)
+    q = rand(ks[0], (n, h, 1, dh))
+    kc = rand(ks[1], (n, h, c, dh))
+    vc = rand(ks[2], (n, h, c, dh))
+    out = A.decode_attention(q, kc, vc, jnp.asarray(starts, jnp.int32), cur)
+    ref = R.decode_attention_ref(q, kc, vc, jnp.asarray(starts, jnp.int32), cur)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_decode_equals_prefill_last_row():
+    """Decode of token t against a cache built by prefill must equal the
+    prefill attention output at position t (consistency across kernels)."""
+    n, h, l, dh = 2, 2, 10, 8
+    ks = split(jax.random.PRNGKey(21), 3)
+    q, k, v = (rand(kk, (n, h, l, dh)) for kk in ks)
+    lengths = jnp.full((n,), l, jnp.int32)
+    full = A.prefill_attention(q, k, v, lengths)
+    # Last position via the decode kernel:
+    out = A.decode_attention(q[:, :, -1:, :], k, v, jnp.zeros((n,), jnp.int32), l)
+    np.testing.assert_allclose(out, full[:, :, -1:, :], rtol=RTOL, atol=ATOL)

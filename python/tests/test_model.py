@@ -1,0 +1,185 @@
+"""L2 correctness: slice generation (KV-cached, Pallas) vs the stateless
+recompute oracle; static-batching semantics (padding, EOS, early return,
+invalid tokens); shape contracts of the AOT entrypoint."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+CFG = M.ModelConfig()
+PARAMS = M.init_params(CFG)
+
+
+def make_batch(lengths, l, seed=0):
+    """Left-padded token batch with the given true lengths."""
+    rng = np.random.default_rng(seed)
+    n = len(lengths)
+    toks = np.zeros((n, l), np.int32)
+    for i, ln in enumerate(lengths):
+        toks[i, l - ln:] = rng.integers(3, CFG.vocab, ln)
+    return toks
+
+
+def run_cached(toks, lens, active, s, gen_offset=None):
+    off = None if gen_offset is None else jnp.asarray(gen_offset, jnp.int32)
+    gen, iters = M.prefill_and_generate(
+        PARAMS, jnp.asarray(toks), jnp.asarray(lens, jnp.int32),
+        jnp.asarray(active, jnp.int32), off, cfg=CFG, slice_len=s,
+    )
+    return np.asarray(gen), int(iters)
+
+
+@pytest.mark.parametrize("lengths,l,s", [
+    ([8], 8, 4),
+    ([16, 5, 9], 16, 8),
+    ([1, 2, 3, 4], 8, 8),
+    ([32, 17], 32, 16),
+])
+def test_cached_matches_stateless_ref(lengths, l, s):
+    toks = make_batch(lengths, l, seed=l + s)
+    lens = np.asarray(lengths, np.int32)
+    active = np.ones(len(lengths), np.int32)
+    gen, iters = run_cached(toks, lens, active, s)
+    ref, ref_iters = M.generate_ref(PARAMS, toks, lens, active, cfg=CFG, slice_len=s)
+    assert iters == ref_iters
+    np.testing.assert_array_equal(gen, ref)
+
+
+def test_inactive_rows_do_not_perturb_active():
+    """Filler rows (bucket padding) must not change active rows' outputs."""
+    lengths = [12, 7]
+    l, s = 16, 8
+    toks = make_batch(lengths, l, seed=1)
+    gen_a, _ = run_cached(toks, lengths, [1, 1], s)
+
+    toks4 = np.zeros((4, l), np.int32)
+    toks4[:2] = toks
+    toks4[2:, -1] = 3  # filler rows: minimal length-1 content
+    gen_b, _ = run_cached(toks4, [12, 7, 1, 1], [1, 1, 0, 0], s)
+    np.testing.assert_array_equal(gen_a, gen_b[:2])
+
+
+def test_generation_deterministic():
+    toks = make_batch([10, 4], 16, seed=2)
+    g1, i1 = run_cached(toks, [10, 4], [1, 1], 8)
+    g2, i2 = run_cached(toks, [10, 4], [1, 1], 8)
+    np.testing.assert_array_equal(g1, g2)
+    assert i1 == i2
+
+
+def test_slice_iteration_limit():
+    """gen must have exactly slice_len columns and iters <= slice_len."""
+    toks = make_batch([16], 16, seed=3)
+    for s in (1, 2, 4, 8):
+        gen, iters = run_cached(toks, [16], [1], s)
+        assert gen.shape == (1, s)
+        assert 1 <= iters <= s
+
+
+def test_early_return_when_all_eos():
+    """A batch whose rows all emit EOS quickly must early-return (iters < S)
+    and pad the remaining columns — the paper's early-return case (§4.2)."""
+    # eos_alpha guarantees EOS wins once the boost passes the max logit, so a
+    # long slice must terminate early for ANY input.
+    toks = make_batch([4], 16, seed=4)
+    cfg_boost = M.ModelConfig(eos_alpha=8.0)  # aggressive: EOS by step ~2
+    params = M.init_params(cfg_boost)
+    gen, iters = M.prefill_and_generate(
+        params, jnp.asarray(toks), jnp.asarray([4], jnp.int32),
+        jnp.asarray([1], jnp.int32), None, cfg=cfg_boost, slice_len=12,
+    )
+    gen = np.asarray(gen)
+    iters = int(iters)
+    assert iters < 12
+    assert (gen[0, iters:] == M.PAD_ID).all()
+    assert M.EOS_ID in gen[0, :iters]
+
+
+def test_invalid_tokens_after_eos():
+    """With multiple rows, a row that hits EOS early keeps generating until
+    the batch finishes — static-batching invalid tokens (§2.4)."""
+    cfg = M.ModelConfig(eos_alpha=0.0)  # rows never EOS naturally...
+    params = M.init_params(cfg)
+    # ...except we can't force one row to EOS without the boost; instead use
+    # the default config and scan many seeds for the pattern.
+    found = False
+    for seed in range(12):
+        toks = make_batch([9, 9], 16, seed=100 + seed)
+        gen, iters = M.prefill_and_generate(
+            PARAMS, jnp.asarray(toks), jnp.asarray([9, 9], jnp.int32),
+            jnp.asarray([1, 1], jnp.int32), None, cfg=CFG, slice_len=12,
+        )
+        gen, iters = np.asarray(gen), int(iters)
+        for row in gen:
+            eos_pos = np.where(row[:iters] == M.EOS_ID)[0]
+            if len(eos_pos) and eos_pos[0] < iters - 1:
+                # tokens exist after the first EOS => invalid tokens generated
+                found = True
+        if found:
+            break
+    assert found, "no row exhibited post-EOS generation in 12 seeds"
+
+
+def test_prefix_consistency_across_slice_lengths():
+    """The first min(S1,S2) tokens must agree between slice lengths, until an
+    early return interferes (greedy decoding is prefix-stable)."""
+    toks = make_batch([14], 16, seed=6)
+    g4, i4 = run_cached(toks, [14], [1], 4)
+    g8, i8 = run_cached(toks, [14], [1], 8)
+    k = min(i4, i8, 4)
+    np.testing.assert_array_equal(g4[0, :k], g8[0, :k])
+
+
+def test_reschedule_prefill_recompute_consistency():
+    """Serving 2 slices with re-prefill (the SCLS reschedule path: input +
+    generated-so-far re-fed as a longer input) must equal serving one long
+    slice, when no early return truncates the first slice."""
+    l0, s = 8, 4
+    toks = make_batch([l0], l0, seed=7)
+    g1, i1 = run_cached(toks, [l0], [1], s)
+    if i1 < s or M.EOS_ID in g1[0]:
+        pytest.skip("first slice ended early for this seed")
+    # Reschedule: new input = original + generated, left-padded into L=16,
+    # with gen_offset carrying the EOS-boost progression across slices.
+    new_len = l0 + s
+    toks2 = np.zeros((1, 16), np.int32)
+    toks2[0, 16 - new_len: 16 - s] = toks[0]
+    toks2[0, 16 - s:] = g1[0]
+    g2, _ = run_cached(toks2, [new_len], [1], s, gen_offset=[s])
+    # One long slice of 2s tokens from the original input:
+    toks_l = np.zeros((1, 16), np.int32)
+    toks_l[0, 16 - l0:] = toks[0]
+    g_long, i_long = run_cached(toks_l, [l0], [1], 2 * s)
+    np.testing.assert_array_equal(g1[0], g_long[0, :s])
+    k = min(4, i_long - s) if i_long > s else 0
+    if k > 0:
+        np.testing.assert_array_equal(g2[0, :k], g_long[0, s:s + k])
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(1, 4),
+    l=st.sampled_from([8, 16]),
+    s=st.sampled_from([4, 8]),
+    seed=st.integers(0, 1000),
+    data=st.data(),
+)
+def test_hypothesis_cached_vs_ref(n, l, s, seed, data):
+    lengths = data.draw(st.lists(st.integers(1, l), min_size=n, max_size=n))
+    toks = make_batch(lengths, l, seed=seed)
+    active = np.ones(n, np.int32)
+    gen, iters = run_cached(toks, lengths, active, s)
+    ref, ref_iters = M.generate_ref(
+        PARAMS, toks, np.asarray(lengths, np.int32), active, cfg=CFG, slice_len=s
+    )
+    assert iters == ref_iters
+    np.testing.assert_array_equal(gen, ref)
+
+
+def test_kv_bytes_per_token():
+    # 2 layers * 2 (K+V) * 128 dims * 4 bytes = 2048 B/token
+    assert CFG.kv_bytes_per_token == 2048

@@ -1,0 +1,49 @@
+//! §7 extension — SCLS over continuous batching ("we are working on
+//! implementing SCLS on top of vllm to integrate with continuous
+//! batching"). Compares DS-ILS (conservative cap, round-robin) against
+//! SCLS-CB (slice-capped schedules, precise per-slice memory admission,
+//! memory-balanced offloading) and the static-batching SCLS, across
+//! arrival rates, then times the extension's DES cost and a slice-length
+//! sensitivity row.
+
+use scls::bench::figures::{run_cell, FigureConfig};
+use scls::bench::harness::{bench, report_header};
+use scls::engine::presets::EngineKind;
+
+fn main() {
+    let fc = FigureConfig::quick(0.1);
+    println!("== ext — §7: SCLS × continuous batching (DS, 8 workers)");
+    println!(
+        "   {:<8} {:>5} {:>9} {:>9} {:>9} {:>8}",
+        "cell", "rate", "thpt", "avgRT", "p95RT", "CTstd"
+    );
+    for &rate in &[12.0, 20.0, 28.0] {
+        for which in ["ILS", "SCLS", "SCLS-CB"] {
+            let s = run_cell(&fc, EngineKind::Ds, which, rate, fc.slice_len);
+            println!(
+                "   {:<8} {:>5.0} {:>9.2} {:>9.1} {:>9.1} {:>8.1}",
+                which, rate, s.throughput, s.avg_response_time, s.p95_response_time, s.ct_std
+            );
+        }
+    }
+    println!();
+
+    println!("== ext — SCLS-CB slice-length sensitivity (rate 20)");
+    for s_len in [32u32, 128, 512] {
+        let s = run_cell(&fc, EngineKind::Ds, "SCLS-CB", 20.0, s_len);
+        println!(
+            "   S={s_len:<4} thpt {:>6.2}  avgRT {:>7.1}  slices[1,2,3,4+] {:?}",
+            s.throughput, s.avg_response_time, s.slice_histogram
+        );
+    }
+    println!();
+
+    println!("{}", report_header());
+    let small = FigureConfig::quick(0.05);
+    for which in ["ILS", "SCLS-CB"] {
+        let r = bench(&format!("cell DS-{which} @ rate 20 (30 s trace)"), || {
+            run_cell(&small, EngineKind::Ds, which, 20.0, small.slice_len)
+        });
+        println!("{}", r.report());
+    }
+}

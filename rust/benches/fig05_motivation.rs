@@ -1,0 +1,21 @@
+//! Fig. 5 — motivation experiment: throughput, invalid tokens, batch size,
+//! pad tokens and completion-time STD for SLS vs ILS vs SCLS on DS at
+//! rate 20. Prints the reproduced table, then times one cell run.
+
+use scls::bench::figures::{fig05, run_cell, FigureConfig};
+use scls::bench::harness::{bench, report_header};
+use scls::engine::presets::EngineKind;
+
+fn main() {
+    let fc = FigureConfig::quick(0.1);
+    fig05(&fc).print();
+
+    println!("{}", report_header());
+    let small = FigureConfig::quick(0.05);
+    for which in ["SLS", "ILS", "SCLS"] {
+        let r = bench(&format!("fig05 cell DS-{which} (30 s trace)"), || {
+            run_cell(&small, EngineKind::Ds, which, 20.0, small.slice_len)
+        });
+        println!("{}", r.report());
+    }
+}

@@ -1,0 +1,32 @@
+//! Fig. 6 — generation-length PDF/CDF of the synthetic CodeFuse and
+//! ShareGPT workload models (the paper's motivation: the vast majority of
+//! generations are < 512 tokens). Prints the distributions, then times
+//! sampling and the empirical-CDF construction.
+
+use scls::bench::figures::{fig06, FigureConfig};
+use scls::bench::harness::{bench, report_header};
+use scls::util::rng::Rng;
+use scls::workload::distributions::WorkloadKind;
+
+fn main() {
+    let fc = FigureConfig::default();
+    fig06(&fc).print();
+
+    println!("{}", report_header());
+    for (name, kind) in [
+        ("codefuse", WorkloadKind::CodeFuse),
+        ("sharegpt", WorkloadKind::ShareGpt),
+    ] {
+        let dist = kind.gen_dist(1024);
+        let mut rng = Rng::new(9);
+        let r = bench(&format!("{name} gen-length sample"), || dist.sample(&mut rng));
+        println!("{}", r.report());
+    }
+    let dist = WorkloadKind::CodeFuse.gen_dist(1024);
+    let at: Vec<f64> = (0..=16).map(|i| (i * 64) as f64).collect();
+    let r = bench("empirical_cdf(10k samples, 17 pts)", || {
+        let mut rng = Rng::new(11);
+        dist.empirical_cdf(&mut rng, 10_000, &at)
+    });
+    println!("{}", r.report());
+}

@@ -1,0 +1,33 @@
+//! Figs. 8 & 9 — the prefill-latency and per-iteration decode-latency
+//! profiles of the calibrated DS/HF engine models (the grids §4.2 fits
+//! Eq. (3)/(4) against). Prints both engines' grids, then times the
+//! individual latency queries and a full profile pass.
+
+use scls::bench::figures::{fig08_09, FigureConfig};
+use scls::bench::harness::{bench, report_header};
+use scls::engine::presets::{EngineKind, EnginePreset};
+use scls::estimator::profiler::{profile_and_fit, LatencySource, ProfileGrid};
+
+fn main() {
+    let fc = FigureConfig::default();
+    fig08_09(&fc, EngineKind::Ds).print();
+    fig08_09(&fc, EngineKind::Hf).print();
+
+    println!("{}", report_header());
+    for kind in [EngineKind::Ds, EngineKind::Hf] {
+        let mut lat = EnginePreset::paper(kind).latency(5);
+        let r = bench(&format!("{} measure_prefill(8, 1024)", kind.name()), || {
+            lat.measure_prefill(8, 1024)
+        });
+        println!("{}", r.report());
+        let r = bench(&format!("{} measure_decode_iter(1536, 12)", kind.name()), || {
+            lat.measure_decode_iter(1536, 12)
+        });
+        println!("{}", r.report());
+        let r = bench(&format!("{} profile_and_fit(default grid)", kind.name()), || {
+            let mut src = EnginePreset::paper(kind).latency(6);
+            profile_and_fit(&mut src, &ProfileGrid::default())
+        });
+        println!("{}", r.report());
+    }
+}

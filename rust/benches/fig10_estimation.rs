@@ -1,0 +1,39 @@
+//! Fig. 10 — serving-time estimation error: per-phase RMSE of the fitted
+//! Eq. (3)/(4) surfaces and the accumulated error over 128 decode
+//! iterations, for both engines. Prints the reproduced errors, then times
+//! the fit and the closed-form multi-iteration estimate.
+
+use scls::bench::figures::{fig10, FigureConfig};
+use scls::bench::harness::{bench, report_header};
+use scls::engine::presets::{EngineKind, EnginePreset};
+use scls::estimator::profiler::{profile_and_fit, ProfileGrid};
+use scls::sim::driver::fitted_estimator;
+
+fn main() {
+    fig10(&FigureConfig::default()).print();
+
+    println!("{}", report_header());
+    let r = bench("profile_and_fit DS (full grid)", || {
+        let mut src = EnginePreset::paper(EngineKind::Ds).latency(13);
+        profile_and_fit(&mut src, &ProfileGrid::default())
+    });
+    println!("{}", r.report());
+
+    let est = fitted_estimator(&EnginePreset::paper(EngineKind::Ds), 13);
+    // black_box the inputs so the constant-folded answer isn't benched.
+    let r = bench("estimator.serve closed-form (128 iters)", || {
+        let (n, l, s) = std::hint::black_box((12u32, 512u32, 128u32));
+        est.serve(n, l, s)
+    });
+    println!("{}", r.report());
+    // The naive per-iteration loop the closed form replaces:
+    let r = bench("estimator decode loop (128 iters, naive)", || {
+        let (n, l0) = std::hint::black_box((12u32, 512u32));
+        let mut acc = est.prefill(n, l0);
+        for l in l0 + 1..=l0 + 128 {
+            acc += est.decode_iter(l, n);
+        }
+        acc
+    });
+    println!("{}", r.report());
+}

@@ -1,0 +1,44 @@
+//! Fig. 11 — the batching example that motivates Algorithm 1: batching 15
+//! short requests with 1 long one costs far more than separating them.
+//! Prints the reproduced comparison, then times Algorithm 1 on exactly the
+//! paper's 16-request scenario and on larger pools.
+
+use scls::batcher::{dp_batch, DpBatcherConfig};
+use scls::bench::figures::{fig11, FigureConfig};
+use scls::bench::harness::{bench, report_header};
+use scls::core::Request;
+use scls::engine::presets::{EngineKind, EnginePreset};
+use scls::sim::driver::fitted_estimator;
+
+fn main() {
+    fig11(&FigureConfig::default()).print();
+
+    let preset = EnginePreset::paper(EngineKind::Hf);
+    let est = fitted_estimator(&preset, 3);
+    let mem = preset.memory_estimator();
+    let cfg = DpBatcherConfig {
+        slice_len: 128,
+        max_batch_size: None,
+    };
+
+    // The paper's exact scenario: 15 × len-10 + 1 × len-1024.
+    let mut reqs: Vec<Request> = (0..15).map(|i| Request::new(i, 0.0, 10, 50)).collect();
+    reqs.push(Request::new(15, 0.0, 1024, 50));
+
+    let batches = dp_batch(reqs.clone(), &est, &mem, &cfg);
+    println!(
+        "Algorithm 1 splits the paper's scenario into {} batches: {:?}\n",
+        batches.len(),
+        batches
+            .iter()
+            .map(|b| (b.size(), b.input_len()))
+            .collect::<Vec<_>>()
+    );
+    assert!(batches.len() >= 2, "DP must separate the long request");
+
+    println!("{}", report_header());
+    let r = bench("dp_batch(paper fig-11 scenario, 16 reqs)", || {
+        dp_batch(reqs.clone(), &est, &mem, &cfg)
+    });
+    println!("{}", r.report());
+}

@@ -1,0 +1,29 @@
+//! Figs. 12/13/14 — overall performance vs arrival rate: throughput,
+//! average and tail response times, plus the dive-in counters (invalid
+//! tokens, batch size, pad tokens, slice distribution, early-return ratio)
+//! for the five (engine, scheduler) cells. Prints the reproduced sweep,
+//! then times the heaviest cell.
+
+use scls::bench::figures::{fig12_13_14, run_cell, FigureConfig};
+use scls::bench::harness::{bench, report_header};
+use scls::engine::presets::EngineKind;
+
+fn main() {
+    // Shapes stabilize well below the paper's full 10-minute traces.
+    let fc = FigureConfig::quick(0.1);
+    fig12_13_14(&fc, &[12.0, 16.0, 20.0, 24.0, 28.0]).print();
+
+    println!("{}", report_header());
+    let small = FigureConfig::quick(0.05);
+    for (kind, which) in [
+        (EngineKind::Hf, "SCLS"),
+        (EngineKind::Ds, "SCLS"),
+        (EngineKind::Ds, "SLS"),
+    ] {
+        let r = bench(
+            &format!("cell {}-{which} @ rate 28 (30 s trace)", kind.name()),
+            || run_cell(&small, kind, which, 28.0, small.slice_len),
+        );
+        println!("{}", r.report());
+    }
+}

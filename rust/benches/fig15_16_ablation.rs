@@ -1,0 +1,22 @@
+//! Figs. 15/16 — the SO/PM/AB/LB ablation ladder at rate 20: each SCLS
+//! design feature added one at a time on top of SLS. Prints the reproduced
+//! ladder for both engines, then times one rung per axis change.
+
+use scls::bench::figures::{fig15_16, run_cell, FigureConfig};
+use scls::bench::harness::{bench, report_header};
+use scls::engine::presets::EngineKind;
+
+fn main() {
+    let fc = FigureConfig::quick(0.1);
+    fig15_16(&fc, EngineKind::Ds).print();
+    fig15_16(&fc, EngineKind::Hf).print();
+
+    println!("{}", report_header());
+    let small = FigureConfig::quick(0.05);
+    for which in ["SO", "PM", "AB", "LB", "SCLS"] {
+        let r = bench(&format!("ablation rung DS-{which} (30 s trace)"), || {
+            run_cell(&small, EngineKind::Ds, which, 20.0, small.slice_len)
+        });
+        println!("{}", r.report());
+    }
+}

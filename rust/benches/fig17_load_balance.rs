@@ -1,0 +1,63 @@
+//! Fig. 17 — load imbalance: the standard deviation of per-instance
+//! completion times vs arrival rate, for all five cells. Prints the
+//! reproduced series, then times the max-min offloader against its
+//! round-robin baseline at tick scale.
+
+use scls::batcher::{dp_batch, DpBatcherConfig};
+use scls::bench::figures::{fig17, FigureConfig};
+use scls::bench::harness::{bench, report_header};
+use scls::core::{Batch, Request};
+use scls::engine::presets::{EngineKind, EnginePreset};
+use scls::offloader::{LoadLedger, MaxMinOffloader, RoundRobin};
+use scls::sim::driver::fitted_estimator;
+use scls::util::rng::Rng;
+
+fn main() {
+    let fc = FigureConfig::quick(0.1);
+    fig17(&fc, &[12.0, 16.0, 20.0, 24.0, 28.0]).print();
+
+    // One tick's worth of batches for the offloader micro-bench.
+    let preset = EnginePreset::paper(EngineKind::Ds);
+    let est = fitted_estimator(&preset, 7);
+    let mem = preset.memory_estimator();
+    let mut rng = Rng::new(21);
+    let reqs: Vec<Request> = (0..128)
+        .map(|i| {
+            Request::new(
+                i,
+                0.0,
+                1 + (rng.next_u64() % 1024) as u32,
+                1 + (rng.next_u64() % 1024) as u32,
+            )
+        })
+        .collect();
+    let batches: Vec<Batch> = dp_batch(
+        reqs,
+        &est,
+        &mem,
+        &DpBatcherConfig {
+            slice_len: 128,
+            max_batch_size: None,
+        },
+    );
+    println!("{}", report_header());
+    let r = bench(
+        &format!("maxmin offload ({} batches → 8 workers)", batches.len()),
+        || {
+            let mut ledger = LoadLedger::new(8);
+            MaxMinOffloader.offload(batches.clone(), &mut ledger)
+        },
+    );
+    println!("{}", r.report());
+    let r = bench(
+        &format!("round-robin offload ({} batches → 8 workers)", batches.len()),
+        || {
+            let mut rr = RoundRobin::new(8);
+            batches
+                .iter()
+                .map(|b| (rr.next_worker(), b.size()))
+                .collect::<Vec<_>>()
+        },
+    );
+    println!("{}", r.report());
+}

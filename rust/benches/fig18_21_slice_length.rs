@@ -1,0 +1,24 @@
+//! Figs. 18–21 — the slice-length sweep: throughput/response time (18),
+//! dive-in counters (19), reschedule distribution + early-return ratio
+//! (20) and load imbalance (21) as S goes from 32 to 512. Prints the
+//! reproduced sweep for both engines, then times the extremes (S controls
+//! how many reschedules the DES must simulate).
+
+use scls::bench::figures::{fig18_21, run_cell, FigureConfig};
+use scls::bench::harness::{bench, report_header};
+use scls::engine::presets::EngineKind;
+
+fn main() {
+    let fc = FigureConfig::quick(0.1);
+    fig18_21(&fc, EngineKind::Ds, &[32, 64, 128, 256, 512]).print();
+    fig18_21(&fc, EngineKind::Hf, &[32, 64, 128, 256, 512]).print();
+
+    println!("{}", report_header());
+    let small = FigureConfig::quick(0.05);
+    for s_len in [32u32, 128, 512] {
+        let r = bench(&format!("SCLS DS @ S={s_len} (30 s trace)"), || {
+            run_cell(&small, EngineKind::Ds, "SCLS", 20.0, s_len)
+        });
+        println!("{}", r.report());
+    }
+}

@@ -1,0 +1,45 @@
+//! Fig. 22 — scalability: SCLS throughput vs number of workers (1–8) for
+//! both engines; the paper reports linear scaling. Prints the reproduced
+//! series and checks linearity, then times the DES as cluster size grows
+//! (the simulator itself must scale too).
+
+use scls::bench::figures::{fig22, run_cell, FigureConfig};
+use scls::bench::harness::{bench, report_header};
+use scls::engine::presets::EngineKind;
+
+fn main() {
+    let fc = FigureConfig::quick(0.1);
+    let r = fig22(&fc, &[1, 2, 4, 8]);
+    r.print();
+
+    // Linearity check on the printed series (DS rows).
+    let ds: Vec<(f64, f64)> = r
+        .rows
+        .iter()
+        .filter(|row| row[0] == "DS")
+        .map(|row| (row[1].parse().unwrap(), row[2].parse().unwrap()))
+        .collect();
+    if let (Some(first), Some(last)) = (ds.first(), ds.last()) {
+        let speedup = last.1 / first.1;
+        let ideal = last.0 / first.0;
+        println!(
+            "DS speedup {}→{} workers: {speedup:.2}× (ideal {ideal:.0}×, {:.0}% efficiency)\n",
+            first.0 as u32,
+            last.0 as u32,
+            100.0 * speedup / ideal
+        );
+    }
+
+    println!("{}", report_header());
+    let small = FigureConfig::quick(0.05);
+    for w in [1usize, 4, 8] {
+        let fcw = FigureConfig {
+            workers: w,
+            ..small.clone()
+        };
+        let r = bench(&format!("SCLS DS, {w} workers (30 s trace)"), || {
+            run_cell(&fcw, EngineKind::Ds, "SCLS", 20.0, fcw.slice_len)
+        });
+        println!("{}", r.report());
+    }
+}

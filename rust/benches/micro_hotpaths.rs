@@ -1,0 +1,120 @@
+//! Micro-benchmarks of the coordinator hot paths (`cargo bench`):
+//! the DP batcher (Alg. 1), the O(1) serving-time estimate, the max-min
+//! offloader, the DES engine slice, the event queue, and — when artifacts
+//! are present — one real PJRT slice execution.
+//!
+//! These are the paths on the schedule tick: at rate 20 with Γ≈3 s a tick
+//! batches ~60 requests and the DP is O(n·N_max); everything here must be
+//! far below the tick interval.
+
+use scls::batcher::{dp_batch, DpBatcherConfig};
+use scls::bench::harness::{bench, report_header};
+use scls::core::{Batch, Request};
+use scls::engine::presets::{EngineKind, EnginePreset};
+use scls::engine::sim::SimEngine;
+use scls::estimator::serving_time::ServeEstimate;
+use scls::offloader::{LoadLedger, MaxMinOffloader};
+use scls::sim::EventQueue;
+use scls::sim::driver::fitted_estimator;
+use scls::util::rng::Rng;
+
+fn requests(n: usize, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let li = 1 + (rng.next_u64() % 1024) as u32;
+            let gl = 1 + (rng.next_u64() % 1024) as u32;
+            Request::new(i as u64, 0.0, li, gl)
+        })
+        .collect()
+}
+
+fn main() {
+    let preset = EnginePreset::paper(EngineKind::Ds);
+    let est = fitted_estimator(&preset, 7);
+    let mem = preset.memory_estimator();
+    let cfg = DpBatcherConfig {
+        slice_len: 128,
+        max_batch_size: None,
+    };
+
+    println!("{}", report_header());
+
+    // Serving-time estimate: called O(n·N_max) per DP run.
+    let r = bench("estimator::serve(12, 512, 128)", || {
+        est.serve_est(12, 512, 128)
+    });
+    println!("{}", r.report());
+
+    // DP batcher at the per-tick scales the paper's rates produce.
+    for &n in &[16usize, 64, 256, 1024] {
+        let reqs = requests(n, 42);
+        let r = bench(&format!("dp_batch({n} requests)"), || {
+            dp_batch(reqs.clone(), &est, &mem, &cfg)
+        });
+        println!("{}", r.report());
+    }
+
+    // Max-min offloading of a tick's worth of batches onto 8 workers.
+    {
+        let batches: Vec<Batch> = dp_batch(requests(256, 1), &est, &mem, &cfg);
+        let r = bench(&format!("maxmin_offload({} batches, 8 workers)", batches.len()), || {
+            let mut ledger = LoadLedger::new(8);
+            MaxMinOffloader.offload(batches.clone(), &mut ledger)
+        });
+        println!("{}", r.report());
+    }
+
+    // One simulated slice serving (the per-event DES cost).
+    {
+        let mut engine = SimEngine::new(preset.latency(3), 1024);
+        let batch = Batch::new(requests(12, 5));
+        let r = bench("sim_engine::serve_slice(N=12, S=128)", || {
+            engine.serve_slice(&batch, 128)
+        });
+        println!("{}", r.report());
+    }
+
+    // Event queue churn at DES scale.
+    {
+        let r = bench("event_queue push+pop x1000", || {
+            let mut q: EventQueue<u32> = EventQueue::new();
+            for i in 0..1000u32 {
+                q.push((i as f64 * 1.37) % 97.0, i);
+            }
+            let mut acc = 0u64;
+            while let Some((_, v)) = q.pop() {
+                acc += v as u64;
+            }
+            acc
+        });
+        println!("{}", r.report());
+    }
+
+    // Real PJRT slice execution, when artifacts exist (the L3→runtime hot
+    // call; everything else in a real deployment hides behind this).
+    let art = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if art.join("manifest.json").exists() {
+        use scls::engine::real::RealEngine;
+        let mut engine = RealEngine::new(&art, 16, 64).expect("load artifacts");
+        engine.warmup().expect("warmup");
+        for &(n, l) in &[(1usize, 8usize), (4, 24), (8, 56)] {
+            let reqs: Vec<Request> = (0..n)
+                .map(|i| {
+                    Request::with_tokens(
+                        i as u64,
+                        0.0,
+                        (0..l).map(|k| 3 + ((i * 31 + k) % 400) as i32).collect(),
+                    )
+                })
+                .collect();
+            let batch = Batch::new(reqs);
+            let r = bench(&format!("pjrt_slice(N={n}, L_in={l}, S=16)"), || {
+                engine.serve_slice(&batch).unwrap()
+            });
+            println!("{}", r.report());
+        }
+    } else {
+        println!("(skipping PJRT benches: run `make artifacts` first)");
+    }
+}

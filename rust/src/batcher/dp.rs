@@ -1,0 +1,258 @@
+//! Serving-time-oriented batching — the paper's Algorithm 1.
+//!
+//! Sort requests ascending by input length; dynamic programming over
+//! prefixes with state
+//!
+//!   T[i] = min_{0<j≤i} ( T[j−1] + T_serve(i−j+1, L_i, S) )        (10)
+//!
+//! where L_i is the i-th (sorted) request's input length — the batch input
+//! length of any batch ending at i — and the inner loop is bounded by the
+//! memory rule's maximal feasible batch at (L_i, S) (Eq. 8; feasibility is
+//! monotone in batch size), making the DP O(n·N_max). By minimizing total
+//! estimated serving time the DP trades padding waste against batch-size
+//! gains (Fig. 11).
+
+use crate::core::{Batch, Request};
+use crate::estimator::serving_time::ServeEstimate;
+use crate::estimator::MemoryEstimator;
+
+/// Knobs for Algorithm 1.
+#[derive(Debug, Clone)]
+pub struct DpBatcherConfig {
+    /// Slice length S (the iteration limit per schedule).
+    pub slice_len: u32,
+    /// Optional hard cap on batch size (the PM ablation limits this to the
+    /// engine's fixed SLS batch size; full AB/SCLS leaves it None).
+    pub max_batch_size: Option<u32>,
+}
+
+/// Partition `requests` into batches minimizing total estimated serving
+/// time. Returns batches with `est_serve_time` filled in.
+///
+/// Requests are consumed. Batches preserve the sorted order (each batch is
+/// a contiguous run of the sorted request list).
+pub fn dp_batch(
+    mut requests: Vec<Request>,
+    est: &dyn ServeEstimate,
+    mem: &MemoryEstimator,
+    cfg: &DpBatcherConfig,
+) -> Vec<Batch> {
+    if requests.is_empty() {
+        return Vec::new();
+    }
+    let s = cfg.slice_len;
+    // Line 1: sort ascending by current input length (stable: equal-length
+    // requests keep arrival order — FCFS among ties).
+    requests.sort_by_key(|r| r.input_len);
+    let n = requests.len();
+
+    // T[i]: minimal total serving time of the first i requests; P[i]: split.
+    let mut t = vec![0.0f64; n + 1];
+    let mut p = vec![0usize; n + 1];
+
+    for i in 1..=n {
+        let l_i = requests[i - 1].input_len;
+        // Feasibility is monotone in batch size (Eq. 8), so the inner-loop
+        // bound is known up front: the memory rule's max batch at (L_i, S)
+        // intersected with the PM cap — one rule query per i instead of one
+        // per (i, j) step.
+        let mut n_max = mem.max_batch(l_i, s).max(1);
+        if let Some(cap) = cfg.max_batch_size {
+            n_max = n_max.min(cap.max(1));
+        }
+        // At fixed (L_i, S) both fitted estimators are affine in N, so the
+        // candidate cost is one fma per step instead of a full surface
+        // evaluation (falls back to serve_est if the clamp could fire).
+        let affine = est.serve_affine(l_i, s);
+
+        // Lines 6–8: request i alone as a batch.
+        p[i] = i - 1;
+        t[i] = t[i - 1] + est.serve_est(1, l_i, s);
+        // Lines 9–15: grow the batch backwards while memory allows.
+        let mut j = i - 1;
+        while j > 0 {
+            let size = (i - j + 1) as u32;
+            if size > n_max {
+                break;
+            }
+            let serve = match affine {
+                Some((a, b)) => a * size as f64 + b,
+                None => est.serve_est(size, l_i, s),
+            };
+            let cand = t[j - 1] + serve;
+            if cand < t[i] {
+                t[i] = cand;
+                p[i] = j - 1;
+            }
+            j -= 1;
+        }
+    }
+
+    // Lines 16–20: walk the split positions backwards.
+    let mut cuts = Vec::new();
+    let mut i = n;
+    while i > 0 {
+        let start = p[i];
+        cuts.push((start, i));
+        i = start;
+    }
+    cuts.reverse();
+
+    // Materialize batches (preserve sorted order).
+    let mut batches = Vec::with_capacity(cuts.len());
+    let mut rest = requests;
+    for &(start, end) in cuts.iter().rev() {
+        let tail = rest.split_off(start);
+        debug_assert_eq!(tail.len(), end - start);
+        let mut b = Batch::new(tail);
+        b.est_serve_time = est.serve_est(b.size() as u32, b.input_len(), s);
+        batches.push(b);
+    }
+    batches.reverse();
+    batches
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimator::serving_time::{LinearLatency, ServingTimeEstimator};
+
+    fn est() -> ServingTimeEstimator {
+        // HF-like magnitudes so padding costs are visible.
+        ServingTimeEstimator {
+            prefill: LinearLatency {
+                c1: 3.8e-4,
+                c2: 1.7e-3,
+                c3: 3.5e-4,
+                c4: 0.029,
+            },
+            decode: LinearLatency {
+                c1: 1.3e-6,
+                c2: 1.8e-3,
+                c3: 6.5e-6,
+                c4: 0.05,
+            },
+        }
+    }
+
+    fn mem_loose() -> MemoryEstimator {
+        MemoryEstimator::analytic(800 * 1024, 48 << 30, 0.9)
+    }
+
+    fn reqs(lens: &[u32]) -> Vec<Request> {
+        lens.iter()
+            .enumerate()
+            .map(|(i, &l)| Request::new(i as u64, 0.0, l, 100))
+            .collect()
+    }
+
+    fn cfg(s: u32) -> DpBatcherConfig {
+        DpBatcherConfig {
+            slice_len: s,
+            max_batch_size: None,
+        }
+    }
+
+    #[test]
+    fn partition_is_complete_and_disjoint() {
+        let batches = dp_batch(reqs(&[10, 1024, 30, 500, 10, 80]), &est(), &mem_loose(), &cfg(128));
+        let mut ids: Vec<u64> = batches
+            .iter()
+            .flat_map(|b| b.requests.iter().map(|r| r.id))
+            .collect();
+        ids.sort();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn paper_fig11_separates_long_straggler() {
+        // 15 requests of length 10 + 1 of length 1024 (paper Fig. 11):
+        // separate batching beats together-batching, so the DP must split.
+        let mut lens = vec![10u32; 15];
+        lens.push(1024);
+        let batches = dp_batch(reqs(&lens), &est(), &mem_loose(), &cfg(128));
+        assert_eq!(batches.len(), 2, "straggler must be isolated");
+        let sizes: Vec<usize> = batches.iter().map(|b| b.size()).collect();
+        assert!(sizes.contains(&15) && sizes.contains(&1));
+
+        // and the DP total beats the single-batch alternative:
+        let dp_total: f64 = batches.iter().map(|b| b.est_serve_time).sum();
+        let together = est().serve(16, 1024, 128);
+        assert!(dp_total < together, "{dp_total} !< {together}");
+    }
+
+    #[test]
+    fn homogeneous_requests_batch_together() {
+        let batches = dp_batch(reqs(&[64; 20]), &est(), &mem_loose(), &cfg(128));
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].size(), 20);
+    }
+
+    #[test]
+    fn respects_memory_limit() {
+        // Tight memory: max 4 requests of (64 + 128) tokens.
+        let delta = 1u64 << 20;
+        let budget = (4 * (64 + 128)) as u64 * delta;
+        let mem = MemoryEstimator::analytic(delta, budget, 1.0);
+        let batches = dp_batch(reqs(&[64; 20]), &est(), &mem, &cfg(128));
+        assert!(batches.iter().all(|b| b.size() <= 4));
+        assert_eq!(batches.iter().map(|b| b.size()).sum::<usize>(), 20);
+    }
+
+    #[test]
+    fn respects_batch_cap() {
+        let batches = dp_batch(
+            reqs(&[64; 20]),
+            &est(),
+            &mem_loose(),
+            &DpBatcherConfig {
+                slice_len: 128,
+                max_batch_size: Some(6),
+            },
+        );
+        assert!(batches.iter().all(|b| b.size() <= 6));
+    }
+
+    #[test]
+    fn single_request() {
+        let batches = dp_batch(reqs(&[100]), &est(), &mem_loose(), &cfg(128));
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].size(), 1);
+        assert!(batches[0].est_serve_time > 0.0);
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(dp_batch(vec![], &est(), &mem_loose(), &cfg(128)).is_empty());
+    }
+
+    #[test]
+    fn est_serve_time_consistent() {
+        let e = est();
+        let batches = dp_batch(reqs(&[10, 20, 900]), &e, &mem_loose(), &cfg(64));
+        for b in &batches {
+            let expect = e.serve(b.size() as u32, b.input_len(), 64);
+            assert!((b.est_serve_time - expect).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn dp_never_worse_than_naive_splits() {
+        // DP total must be <= both all-singletons and one-big-batch
+        // (when feasible) — it optimizes over all contiguous partitions.
+        let e = est();
+        let mem = mem_loose();
+        let lens = [5u32, 17, 40, 64, 64, 128, 300, 700];
+        let batches = dp_batch(reqs(&lens), &e, &mem, &cfg(128));
+        let dp_total: f64 = batches.iter().map(|b| b.est_serve_time).sum();
+
+        let singles: f64 = lens.iter().map(|&l| e.serve(1, l, 128)).sum();
+        assert!(dp_total <= singles + 1e-9);
+
+        let max_len = *lens.iter().max().unwrap();
+        if !mem.would_oom(lens.len() as u32, max_len, 128) {
+            let together = e.serve(lens.len() as u32, max_len, 128);
+            assert!(dp_total <= together + 1e-9);
+        }
+    }
+}

@@ -1,0 +1,95 @@
+//! FCFS fixed-batch-size batching — the conventional SLS policy (§1, §5.1):
+//! requests are grouped in arrival order into chunks of `batch_size`.
+
+use crate::core::{Batch, Request};
+use crate::estimator::serving_time::ServeEstimate;
+
+/// Chunk requests in arrival order into fixed-size batches. The final
+/// partial chunk is emitted too (workers don't wait to fill a batch once
+/// they are idle). `est`/`slice_len` fill in `est_serve_time` so offloaders
+/// can keep load ledgers even for the baseline.
+pub fn fcfs_batches(
+    requests: Vec<Request>,
+    batch_size: u32,
+    est: &dyn ServeEstimate,
+    slice_len: u32,
+) -> Vec<Batch> {
+    assert!(batch_size > 0);
+    let mut batches = Vec::new();
+    let mut cur: Vec<Request> = Vec::with_capacity(batch_size as usize);
+    for r in requests {
+        cur.push(r);
+        if cur.len() == batch_size as usize {
+            batches.push(std::mem::take(&mut cur));
+        }
+    }
+    if !cur.is_empty() {
+        batches.push(cur);
+    }
+    batches
+        .into_iter()
+        .map(|reqs| {
+            let mut b = Batch::new(reqs);
+            b.est_serve_time = est.serve_est(b.size() as u32, b.input_len(), slice_len);
+            b
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimator::serving_time::{LinearLatency, ServingTimeEstimator};
+
+    fn est() -> ServingTimeEstimator {
+        ServingTimeEstimator {
+            prefill: LinearLatency {
+                c1: 1e-4,
+                c2: 0.0,
+                c3: 0.0,
+                c4: 0.0,
+            },
+            decode: LinearLatency {
+                c1: 0.0,
+                c2: 0.0,
+                c3: 0.0,
+                c4: 1e-3,
+            },
+        }
+    }
+
+    fn reqs(n: usize) -> Vec<Request> {
+        (0..n)
+            .map(|i| Request::new(i as u64, i as f64, 10 + i as u32, 100))
+            .collect()
+    }
+
+    #[test]
+    fn chunks_preserve_arrival_order() {
+        let batches = fcfs_batches(reqs(10), 4, &est(), 128);
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[0].size(), 4);
+        assert_eq!(batches[1].size(), 4);
+        assert_eq!(batches[2].size(), 2);
+        assert_eq!(batches[0].requests[0].id, 0);
+        assert_eq!(batches[2].requests[1].id, 9);
+    }
+
+    #[test]
+    fn exact_multiple() {
+        let batches = fcfs_batches(reqs(8), 4, &est(), 128);
+        assert_eq!(batches.len(), 2);
+        assert!(batches.iter().all(|b| b.size() == 4));
+    }
+
+    #[test]
+    fn empty() {
+        assert!(fcfs_batches(vec![], 4, &est(), 128).is_empty());
+    }
+
+    #[test]
+    fn est_filled() {
+        let batches = fcfs_batches(reqs(3), 4, &est(), 128);
+        assert!(batches[0].est_serve_time > 0.0);
+    }
+}

@@ -1,0 +1,8 @@
+//! Batching policies: the paper's DP adaptive batcher (Alg. 1) and the
+//! FCFS fixed-size baseline used by SLS/SO/PM.
+
+pub mod dp;
+pub mod fcfs;
+
+pub use dp::{dp_batch, DpBatcherConfig};
+pub use fcfs::fcfs_batches;

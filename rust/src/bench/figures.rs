@@ -1,0 +1,619 @@
+//! Figure/table regeneration drivers — one function per figure of the
+//! paper's evaluation (§3 motivation + §5). Each returns the series the
+//! paper plots, as printable rows and JSON; `scls-repro figures` writes
+//! them under `results/`, and the `rust/benches/fig*` targets print them
+//! under `cargo bench`.
+//!
+//! Absolute numbers come from the calibrated DES (DESIGN.md §Calibration);
+//! the claims under reproduction are the *shapes*: who wins, by what
+//! factor, where the crossovers fall.
+
+use crate::engine::presets::{EngineKind, EnginePreset};
+use crate::engine::EngineLatency;
+use crate::estimator::profiler::{profile_and_fit, validate_serving_time, LatencySource, ProfileGrid};
+use crate::metrics::Summary;
+use crate::scheduler::spec::SchedulerSpec;
+use crate::sim::driver::{fitted_estimator, run_ils, run_scls_cb, run_sliced, SimConfig};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::workload::distributions::WorkloadKind;
+use crate::workload::{Trace, TraceConfig};
+
+/// A printable experiment output: header + rows + JSON payload.
+#[derive(Debug, Clone)]
+pub struct FigureResult {
+    pub id: String,
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub json: Json,
+}
+
+impl FigureResult {
+    pub fn print(&self) {
+        println!("== {} — {}", self.id, self.title);
+        println!("   {}", self.header.join(" | "));
+        for r in &self.rows {
+            println!("   {}", r.join(" | "));
+        }
+        println!();
+    }
+}
+
+fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+/// Shared experiment defaults (paper §5.1). `duration` is shortened for
+/// quick runs via `scale` (1.0 = the paper's full 10 minutes).
+#[derive(Debug, Clone)]
+pub struct FigureConfig {
+    pub workers: usize,
+    pub duration: f64,
+    pub seed: u64,
+    pub slice_len: u32,
+    pub max_len: u32,
+    pub workload: WorkloadKind,
+}
+
+impl Default for FigureConfig {
+    fn default() -> Self {
+        FigureConfig {
+            workers: 8,
+            duration: 600.0,
+            seed: 42,
+            slice_len: 128,
+            max_len: 1024,
+            workload: WorkloadKind::CodeFuse,
+        }
+    }
+}
+
+impl FigureConfig {
+    /// Scale the trace duration (0.1 ⇒ 1 minute instead of 10).
+    pub fn quick(scale: f64) -> FigureConfig {
+        FigureConfig {
+            duration: (600.0 * scale).max(20.0),
+            ..Default::default()
+        }
+    }
+
+    fn trace(&self, rate: f64) -> Trace {
+        Trace::generate(&TraceConfig {
+            kind: self.workload,
+            rate,
+            duration: self.duration,
+            max_input_len: self.max_len,
+            max_gen_len: self.max_len,
+            seed: self.seed,
+        })
+    }
+
+    fn sim(&self, kind: EngineKind) -> SimConfig {
+        SimConfig::new(
+            self.workers,
+            EnginePreset::paper(kind),
+            self.max_len,
+            self.seed,
+        )
+    }
+}
+
+/// Run one (engine, scheduler) cell and summarize.
+pub fn run_cell(
+    fc: &FigureConfig,
+    kind: EngineKind,
+    which: &str,
+    rate: f64,
+    slice_len: u32,
+) -> Summary {
+    let trace = fc.trace(rate);
+    let sim = fc.sim(kind);
+    let preset = EnginePreset::paper(kind);
+    let m = match which {
+        "ILS" => run_ils(&trace, &sim),
+        // §7 extension: slice-level scheduling over continuous batching.
+        "SCLS-CB" => run_scls_cb(&trace, &sim, slice_len),
+        "SLS" => run_sliced(&trace, &SchedulerSpec::sls(&preset, fc.max_len), &sim),
+        "SO" => run_sliced(&trace, &SchedulerSpec::slice_only(&preset, slice_len), &sim),
+        "PM" => run_sliced(
+            &trace,
+            &SchedulerSpec::padding_mitigating(&preset, slice_len),
+            &sim,
+        ),
+        "AB" => run_sliced(
+            &trace,
+            &SchedulerSpec::adaptive_batching(&preset, slice_len),
+            &sim,
+        ),
+        "LB" => run_sliced(
+            &trace,
+            &SchedulerSpec::load_balancing(&preset, slice_len),
+            &sim,
+        ),
+        "SCLS" => run_sliced(&trace, &SchedulerSpec::scls(&preset, slice_len), &sim),
+        other => panic!("unknown scheduler {other}"),
+    };
+    m.summarize()
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 5 — motivation: SLS vs ILS vs SCLS at rate 20 on DS
+// ---------------------------------------------------------------------------
+
+pub fn fig05(fc: &FigureConfig) -> FigureResult {
+    let mut rows = Vec::new();
+    let mut json = Json::obj();
+    for which in ["SLS", "ILS", "SCLS"] {
+        let s = run_cell(fc, EngineKind::Ds, which, 20.0, fc.slice_len);
+        rows.push(vec![
+            which.to_string(),
+            f2(s.throughput),
+            f2(s.avg_invalid_tokens),
+            f2(s.avg_batch_size),
+            f2(s.avg_pad_tokens),
+            f2(s.ct_std),
+        ]);
+        json.set(which, s.to_json());
+    }
+    FigureResult {
+        id: "fig5".into(),
+        title: "Motivation: inefficiency and load imbalance of SLS/ILS (DS, rate 20)".into(),
+        header: vec![
+            "scheduler".into(),
+            "throughput (req/s)".into(),
+            "invalid tok/req".into(),
+            "batch size".into(),
+            "pad tok/req".into(),
+            "CT STD (s)".into(),
+        ],
+        rows,
+        json,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 6 — generation-length distributions (PDF / CDF)
+// ---------------------------------------------------------------------------
+
+pub fn fig06(fc: &FigureConfig) -> FigureResult {
+    let at: Vec<f64> = (0..=16).map(|i| (i * 64) as f64).collect();
+    let mut rows = Vec::new();
+    let mut json = Json::obj();
+    for (name, kind) in [("CodeFuse", WorkloadKind::CodeFuse), ("ShareGPT", WorkloadKind::ShareGpt)] {
+        let dist = kind.gen_dist(fc.max_len);
+        let mut rng = Rng::new(fc.seed);
+        let cdf = dist.empirical_cdf(&mut rng, 400_000, &at);
+        let pdf: Vec<f64> = at.iter().map(|&x| dist.pdf(x.max(1.0))).collect();
+        for (i, &x) in at.iter().enumerate() {
+            rows.push(vec![
+                name.to_string(),
+                format!("{x:.0}"),
+                format!("{:.5}", pdf[i]),
+                f3(cdf[i]),
+            ]);
+        }
+        let mut o = Json::obj();
+        o.set("at", at.clone()).set("pdf", pdf).set("cdf", cdf.clone());
+        json.set(name, o);
+        // The paper's observation: vast majority < 512.
+        let idx512 = at.iter().position(|&x| x == 512.0).unwrap();
+        log::info!("{name}: P(len < 512) = {:.3}", cdf[idx512]);
+    }
+    FigureResult {
+        id: "fig6".into(),
+        title: "Generation-length PDF/CDF (synthetic CodeFuse/ShareGPT models)".into(),
+        header: vec!["dataset".into(), "len".into(), "pdf".into(), "cdf".into()],
+        rows,
+        json,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 8 / Fig. 9 — prefill and per-iteration decode latency profiles
+// ---------------------------------------------------------------------------
+
+pub fn fig08_09(_fc: &FigureConfig, kind: EngineKind) -> FigureResult {
+    let mut lat = EnginePreset::paper(kind).latency(7);
+    let mut rows = Vec::new();
+    let mut json = Json::obj();
+
+    let input_lens = [16u32, 64, 128, 256, 512, 1024];
+    let batch_sizes = [1u32, 2, 4, 8, 12, 16];
+    let mut prefill = Vec::new();
+    for &n in &batch_sizes {
+        for &l in &input_lens {
+            let t = lat.measure_prefill(n, l);
+            rows.push(vec![
+                "prefill".into(),
+                n.to_string(),
+                l.to_string(),
+                f3(t),
+            ]);
+            let mut o = Json::obj();
+            o.set("n", n).set("l", l).set("t", t);
+            prefill.push(o);
+        }
+    }
+    let cached = [64u32, 256, 512, 1024, 1536, 2048];
+    let mut decode = Vec::new();
+    for &n in &batch_sizes {
+        for &l in &cached {
+            let t = lat.measure_decode_iter(l, n);
+            rows.push(vec![
+                "decode".into(),
+                n.to_string(),
+                l.to_string(),
+                format!("{:.4}", t),
+            ]);
+            let mut o = Json::obj();
+            o.set("n", n).set("l", l).set("t", t);
+            decode.push(o);
+        }
+    }
+    json.set("prefill", Json::Arr(prefill))
+        .set("decode", Json::Arr(decode));
+    FigureResult {
+        id: "fig8_9".into(),
+        title: format!(
+            "Prefill latency T_prefill(N,L_i) and decode latency τ(l,N) — {} profile",
+            kind.name()
+        ),
+        header: vec!["phase".into(), "N".into(), "len".into(), "latency (s)".into()],
+        rows,
+        json,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 10 — serving-time estimation error (RMSE, 1 iter and 128 iters)
+// ---------------------------------------------------------------------------
+
+pub fn fig10(_fc: &FigureConfig) -> FigureResult {
+    let mut rows = Vec::new();
+    let mut json = Json::obj();
+    for kind in [EngineKind::Hf, EngineKind::Ds] {
+        let preset = EnginePreset::paper(kind);
+        let mut src: EngineLatency = preset.latency(11);
+        let res = profile_and_fit(&mut src, &ProfileGrid::default());
+        // Holdout: fresh jitter stream, off-grid points.
+        let mut holdout = preset.latency(12345);
+        let rmse1p = {
+            // per-phase single-iteration errors on holdout measurements
+            let mut pred = Vec::new();
+            let mut act = Vec::new();
+            for &n in &[3u32, 6, 10, 14] {
+                for &l in &[48u32, 200, 400, 800, 1600] {
+                    pred.push(res.estimator.decode_iter(l, n));
+                    act.push(holdout.measure_decode_iter(l, n));
+                }
+            }
+            crate::util::stats::rmse(&pred, &act)
+        };
+        let rmse128 = validate_serving_time(
+            &mut holdout,
+            &res.estimator,
+            &[2, 6, 10, 14],
+            &[48, 200, 400, 800],
+            128,
+        );
+        rows.push(vec![
+            kind.name().into(),
+            format!("{:.4}", res.prefill_rmse),
+            format!("{:.4}", rmse1p),
+            f3(rmse128),
+        ]);
+        let mut o = Json::obj();
+        o.set("prefill_rmse", res.prefill_rmse)
+            .set("decode_iter_rmse", rmse1p)
+            .set("serve128_rmse", rmse128);
+        json.set(kind.name(), o);
+    }
+    FigureResult {
+        id: "fig10".into(),
+        title: "Estimation error: fit RMSE per phase and accumulated over 128 iters".into(),
+        header: vec![
+            "engine".into(),
+            "prefill RMSE (s)".into(),
+            "decode-iter RMSE (s)".into(),
+            "128-iter RMSE (s)".into(),
+        ],
+        rows,
+        json,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 11 — together- vs separate-batching example
+// ---------------------------------------------------------------------------
+
+pub fn fig11(_fc: &FigureConfig) -> FigureResult {
+    // Paper: 15 requests of input 10 + 1 of input 1024, slice 128, HF.
+    let est = fitted_estimator(&EnginePreset::paper(EngineKind::Hf), 3);
+    let together = est.serve(16, 1024, 128);
+    let separate = est.serve(15, 10, 128) + est.serve(1, 1024, 128);
+    let mut json = Json::obj();
+    json.set("together", together).set("separate", separate);
+    FigureResult {
+        id: "fig11".into(),
+        title: "Batching example (HF, S=128): 15×len-10 + 1×len-1024".into(),
+        header: vec!["strategy".into(), "estimated serving time (s)".into()],
+        rows: vec![
+            vec!["together".into(), f2(together)],
+            vec!["separate".into(), f2(separate)],
+        ],
+        json,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 12/13/14 — overall performance vs arrival rate
+// ---------------------------------------------------------------------------
+
+pub fn fig12_13_14(fc: &FigureConfig, rates: &[f64]) -> FigureResult {
+    let cells: Vec<(EngineKind, &str)> = vec![
+        (EngineKind::Hf, "SLS"),
+        (EngineKind::Hf, "SCLS"),
+        (EngineKind::Ds, "SLS"),
+        (EngineKind::Ds, "ILS"),
+        (EngineKind::Ds, "SCLS"),
+    ];
+    let mut rows = Vec::new();
+    let mut arr = Vec::new();
+    for &rate in rates {
+        for &(kind, which) in &cells {
+            let s = run_cell(fc, kind, which, rate, fc.slice_len);
+            rows.push(vec![
+                format!("{}-{}", kind.name(), which),
+                format!("{rate:.0}"),
+                f2(s.throughput),
+                f2(s.avg_response_time),
+                f2(s.p95_response_time),
+                f2(s.avg_invalid_tokens),
+                f2(s.avg_batch_size),
+                f2(s.avg_pad_tokens),
+                format!("{:?}", s.slice_histogram),
+                format!("{:.4}", s.early_return_ratio),
+            ]);
+            let mut o = s.to_json();
+            o.set("engine", kind.name())
+                .set("scheduler", which)
+                .set("rate", rate);
+            arr.push(o);
+        }
+    }
+    FigureResult {
+        id: "fig12_13_14".into(),
+        title: "Overall: throughput / response times / dive-in counters vs arrival rate".into(),
+        header: vec![
+            "cell".into(),
+            "rate".into(),
+            "thpt".into(),
+            "avg RT".into(),
+            "p95 RT".into(),
+            "invalid".into(),
+            "batch".into(),
+            "pads".into(),
+            "slices[1,2,3,4+]".into(),
+            "early".into(),
+        ],
+        rows,
+        json: Json::Arr(arr),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 15/16 — ablation ladder at rate 20
+// ---------------------------------------------------------------------------
+
+pub fn fig15_16(fc: &FigureConfig, kind: EngineKind) -> FigureResult {
+    let mut rows = Vec::new();
+    let mut arr = Vec::new();
+    for which in ["SLS", "SO", "PM", "AB", "LB", "SCLS"] {
+        let s = run_cell(fc, kind, which, 20.0, fc.slice_len);
+        rows.push(vec![
+            which.to_string(),
+            f2(s.throughput),
+            f2(s.avg_response_time),
+            f2(s.p95_response_time),
+            f2(s.avg_invalid_tokens),
+            f2(s.avg_batch_size),
+            f2(s.avg_pad_tokens),
+        ]);
+        let mut o = s.to_json();
+        o.set("strategy", which);
+        arr.push(o);
+    }
+    FigureResult {
+        id: "fig15_16".into(),
+        title: format!("Ablation ladder ({}, rate 20)", kind.name()),
+        header: vec![
+            "strategy".into(),
+            "thpt".into(),
+            "avg RT".into(),
+            "p95 RT".into(),
+            "invalid".into(),
+            "batch".into(),
+            "pads".into(),
+        ],
+        rows,
+        json: Json::Arr(arr),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 17 — load imbalance (CT STD) vs arrival rate
+// ---------------------------------------------------------------------------
+
+pub fn fig17(fc: &FigureConfig, rates: &[f64]) -> FigureResult {
+    let cells: Vec<(EngineKind, &str)> = vec![
+        (EngineKind::Hf, "SLS"),
+        (EngineKind::Hf, "SCLS"),
+        (EngineKind::Ds, "SLS"),
+        (EngineKind::Ds, "ILS"),
+        (EngineKind::Ds, "SCLS"),
+    ];
+    let mut rows = Vec::new();
+    let mut arr = Vec::new();
+    for &rate in rates {
+        for &(kind, which) in &cells {
+            let s = run_cell(fc, kind, which, rate, fc.slice_len);
+            rows.push(vec![
+                format!("{}-{}", kind.name(), which),
+                format!("{rate:.0}"),
+                f2(s.ct_std),
+            ]);
+            let mut o = Json::obj();
+            o.set("engine", kind.name())
+                .set("scheduler", which)
+                .set("rate", rate)
+                .set("ct_std", s.ct_std);
+            arr.push(o);
+        }
+    }
+    FigureResult {
+        id: "fig17".into(),
+        title: "Load imbalance: STD of instance completion times vs rate".into(),
+        header: vec!["cell".into(), "rate".into(), "CT STD (s)".into()],
+        rows,
+        json: Json::Arr(arr),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 18–21 — impact of slice length
+// ---------------------------------------------------------------------------
+
+pub fn fig18_21(fc: &FigureConfig, kind: EngineKind, slice_lens: &[u32]) -> FigureResult {
+    let mut rows = Vec::new();
+    let mut arr = Vec::new();
+    for &s_len in slice_lens {
+        let s = run_cell(fc, kind, "SCLS", 20.0, s_len);
+        rows.push(vec![
+            s_len.to_string(),
+            f2(s.throughput),
+            f2(s.avg_response_time),
+            f2(s.p95_response_time),
+            f2(s.avg_invalid_tokens),
+            f2(s.avg_batch_size),
+            f2(s.avg_pad_tokens),
+            format!("{:?}", s.slice_histogram),
+            format!("{:.4}", s.early_return_ratio),
+            f2(s.ct_std),
+        ]);
+        let mut o = s.to_json();
+        o.set("slice_len", s_len);
+        arr.push(o);
+    }
+    FigureResult {
+        id: "fig18_21".into(),
+        title: format!("Slice-length sweep (SCLS, {}, rate 20)", kind.name()),
+        header: vec![
+            "S".into(),
+            "thpt".into(),
+            "avg RT".into(),
+            "p95 RT".into(),
+            "invalid".into(),
+            "batch".into(),
+            "pads".into(),
+            "slices[1,2,3,4+]".into(),
+            "early".into(),
+            "CT STD".into(),
+        ],
+        rows,
+        json: Json::Arr(arr),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 22 — scalability: throughput vs number of workers
+// ---------------------------------------------------------------------------
+
+pub fn fig22(fc: &FigureConfig, worker_counts: &[usize]) -> FigureResult {
+    let mut rows = Vec::new();
+    let mut arr = Vec::new();
+    for kind in [EngineKind::Hf, EngineKind::Ds] {
+        for &w in worker_counts {
+            let fcw = FigureConfig {
+                workers: w,
+                ..fc.clone()
+            };
+            let s = run_cell(&fcw, kind, "SCLS", 20.0, fc.slice_len);
+            rows.push(vec![
+                kind.name().into(),
+                w.to_string(),
+                f2(s.throughput),
+            ]);
+            let mut o = Json::obj();
+            o.set("engine", kind.name())
+                .set("workers", w)
+                .set("throughput", s.throughput);
+            arr.push(o);
+        }
+    }
+    FigureResult {
+        id: "fig22".into(),
+        title: "Scalability: SCLS throughput vs worker count (rate 20)".into(),
+        header: vec!["engine".into(), "workers".into(), "throughput (req/s)".into()],
+        rows,
+        json: Json::Arr(arr),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> FigureConfig {
+        FigureConfig::quick(0.05) // 30-second traces
+    }
+
+    #[test]
+    fn fig06_shapes() {
+        let r = fig06(&quick());
+        assert!(!r.rows.is_empty());
+        // CDF at 512 must show "vast majority" for both datasets
+        let cf = r.json.at(&["CodeFuse", "cdf"]).unwrap().as_arr().unwrap();
+        let at = r.json.at(&["CodeFuse", "at"]).unwrap().as_arr().unwrap();
+        let idx = at.iter().position(|x| x.as_f64() == Some(512.0)).unwrap();
+        assert!(cf[idx].as_f64().unwrap() > 0.85);
+    }
+
+    #[test]
+    fn fig11_separate_wins() {
+        let r = fig11(&quick());
+        let together = r.json.get("together").unwrap().as_f64().unwrap();
+        let separate = r.json.get("separate").unwrap().as_f64().unwrap();
+        assert!(separate < together, "{separate} !< {together}");
+    }
+
+    #[test]
+    fn fig10_errors_small_and_ordered() {
+        let r = fig10(&quick());
+        for kind in ["HF", "DS"] {
+            let o = r.json.get(kind).unwrap();
+            let d1 = o.get("decode_iter_rmse").unwrap().as_f64().unwrap();
+            let d128 = o.get("serve128_rmse").unwrap().as_f64().unwrap();
+            assert!(d1 < 0.05, "{kind} decode RMSE {d1}");
+            assert!(d128 < 3.0, "{kind} 128-iter RMSE {d128}");
+        }
+        // HF (noisier, bigger bases) > DS, as in the paper
+        let hf = r.json.at(&["HF", "serve128_rmse"]).unwrap().as_f64().unwrap();
+        let ds = r.json.at(&["DS", "serve128_rmse"]).unwrap().as_f64().unwrap();
+        assert!(hf > ds, "HF {hf} !> DS {ds}");
+    }
+
+    #[test]
+    fn fig05_scls_wins_motivation() {
+        let fc = quick();
+        let r = fig05(&fc);
+        let get = |w: &str, k: &str| r.json.at(&[w, k]).unwrap().as_f64().unwrap();
+        assert!(get("SCLS", "throughput") > get("SLS", "throughput"));
+        assert!(get("SCLS", "throughput") > get("ILS", "throughput"));
+        assert!(get("SCLS", "avg_invalid_tokens") < get("SLS", "avg_invalid_tokens"));
+        assert!(get("SCLS", "avg_batch_size") > get("SLS", "avg_batch_size"));
+    }
+}

@@ -1,0 +1,126 @@
+//! Criterion-style micro-bench harness: warmup, calibrated iteration
+//! counts, and robust summary statistics, driven by `cargo bench` targets
+//! with `harness = false`.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats;
+
+/// Summary of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub std_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12} {:>12} {:>12}  ({} samples)",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+            self.samples
+        )
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Column header matching `BenchResult::report`.
+pub fn report_header() -> String {
+    format!(
+        "{:<44} {:>12} {:>12} {:>12}",
+        "benchmark", "mean", "p50", "p95"
+    )
+}
+
+/// Run `f` under the harness: ~0.5 s warmup, then sample batches sized so
+/// each batch takes ≳1 ms, for ~2 s of measurement (tunable via
+/// SCLS_BENCH_SECS). Prevents the optimizer from discarding work via
+/// `std::hint::black_box` at the call sites.
+pub fn bench<R>(name: &str, mut f: impl FnMut() -> R) -> BenchResult {
+    let budget = std::env::var("SCLS_BENCH_SECS")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .unwrap_or(2.0);
+
+    // Warmup + batch-size calibration.
+    let warm_until = Instant::now() + Duration::from_secs_f64(budget.min(0.5));
+    let mut one = Duration::ZERO;
+    let mut warm_iters = 0u64;
+    while Instant::now() < warm_until || warm_iters == 0 {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        one += t0.elapsed();
+        warm_iters += 1;
+    }
+    let per_call = one.as_secs_f64() / warm_iters as f64;
+    let batch = ((1e-3 / per_call.max(1e-9)).ceil() as u64).clamp(1, 1_000_000);
+
+    // Measurement.
+    let mut samples_ns = Vec::new();
+    let deadline = Instant::now() + Duration::from_secs_f64(budget);
+    while Instant::now() < deadline || samples_ns.len() < 5 {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            std::hint::black_box(f());
+        }
+        samples_ns.push(t0.elapsed().as_nanos() as f64 / batch as f64);
+        if samples_ns.len() >= 200 {
+            break;
+        }
+    }
+
+    BenchResult {
+        name: name.to_string(),
+        samples: samples_ns.len(),
+        mean_ns: stats::mean(&samples_ns),
+        p50_ns: stats::percentile(&samples_ns, 50.0),
+        p95_ns: stats::percentile(&samples_ns, 95.0),
+        std_ns: stats::std_dev(&samples_ns),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        std::env::set_var("SCLS_BENCH_SECS", "0.05");
+        let r = bench("noop-ish", || {
+            let mut acc = 0u64;
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.samples >= 5);
+        assert!(r.p95_ns >= r.p50_ns * 0.5);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

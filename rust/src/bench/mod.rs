@@ -1,0 +1,8 @@
+//! Benchmark infrastructure: a criterion-style micro harness (criterion is
+//! not in the offline registry) and the figure-regeneration drivers that
+//! back `cargo bench`, `scls-repro figures`, and EXPERIMENTS.md.
+
+pub mod figures;
+pub mod harness;
+
+pub use harness::{bench, BenchResult};

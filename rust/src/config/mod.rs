@@ -1,0 +1,162 @@
+//! Experiment configuration: defaults = the paper's §5.1 settings,
+//! overridable from a simple `key = value` config file and/or CLI flags
+//! (the offline registry has no serde/toml, so the file format is a
+//! flat TOML subset: comments with `#`, bare keys, numbers/strings/bools).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::engine::presets::EngineKind;
+use crate::workload::distributions::WorkloadKind;
+
+/// Flat key-value config file.
+#[derive(Debug, Clone, Default)]
+pub struct ConfigFile {
+    values: BTreeMap<String, String>,
+}
+
+impl ConfigFile {
+    pub fn parse(text: &str) -> Result<ConfigFile> {
+        let mut values = BTreeMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() || line.starts_with('[') {
+                continue; // section headers are cosmetic
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("config line {}: expected key = value", lineno + 1))?;
+            values.insert(
+                k.trim().to_string(),
+                v.trim().trim_matches('"').to_string(),
+            );
+        }
+        Ok(ConfigFile { values })
+    }
+
+    pub fn load(path: &Path) -> Result<ConfigFile> {
+        ConfigFile::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn f64(&self, key: &str) -> Result<Option<f64>> {
+        self.get(key)
+            .map(|s| s.parse::<f64>().map_err(|_| anyhow!("config {key}: bad number '{s}'")))
+            .transpose()
+    }
+
+    pub fn u32(&self, key: &str) -> Result<Option<u32>> {
+        self.get(key)
+            .map(|s| s.parse::<u32>().map_err(|_| anyhow!("config {key}: bad integer '{s}'")))
+            .transpose()
+    }
+}
+
+/// One experiment's full configuration (paper defaults).
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub engine: EngineKind,
+    pub workload: WorkloadKind,
+    pub workers: usize,
+    pub rate: f64,
+    pub duration: f64,
+    pub slice_len: u32,
+    pub max_input_len: u32,
+    pub max_gen_len: u32,
+    pub seed: u64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            engine: EngineKind::Ds,
+            workload: WorkloadKind::CodeFuse,
+            workers: 8,
+            rate: 20.0,
+            duration: 600.0,
+            slice_len: 128,
+            max_input_len: 1024,
+            max_gen_len: 1024,
+            seed: 42,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Apply overrides from a config file.
+    pub fn apply_file(&mut self, f: &ConfigFile) -> Result<()> {
+        if let Some(s) = f.get("engine") {
+            self.engine =
+                EngineKind::parse(s).ok_or_else(|| anyhow!("config engine: unknown '{s}'"))?;
+        }
+        if let Some(s) = f.get("workload") {
+            self.workload =
+                WorkloadKind::parse(s).ok_or_else(|| anyhow!("config workload: unknown '{s}'"))?;
+        }
+        if let Some(x) = f.u32("workers")? {
+            self.workers = x as usize;
+        }
+        if let Some(x) = f.f64("rate")? {
+            self.rate = x;
+        }
+        if let Some(x) = f.f64("duration")? {
+            self.duration = x;
+        }
+        if let Some(x) = f.u32("slice_len")? {
+            self.slice_len = x;
+        }
+        if let Some(x) = f.u32("max_input_len")? {
+            self.max_input_len = x;
+        }
+        if let Some(x) = f.u32("max_gen_len")? {
+            self.max_gen_len = x;
+        }
+        if let Some(x) = f.u32("seed")? {
+            self.seed = x as u64;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_toml_subset() {
+        let f = ConfigFile::parse(
+            "# paper defaults\n[experiment]\nengine = \"hf\"\nrate = 24\nslice_len = 256\n",
+        )
+        .unwrap();
+        assert_eq!(f.get("engine"), Some("hf"));
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_file(&f).unwrap();
+        assert_eq!(cfg.engine, EngineKind::Hf);
+        assert_eq!(cfg.rate, 24.0);
+        assert_eq!(cfg.slice_len, 256);
+        // untouched defaults survive
+        assert_eq!(cfg.workers, 8);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(ConfigFile::parse("not a config").is_err());
+        let f = ConfigFile::parse("rate = abc").unwrap();
+        let mut cfg = ExperimentConfig::default();
+        assert!(cfg.apply_file(&f).is_err());
+    }
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.workers, 8);
+        assert_eq!(c.duration, 600.0);
+        assert_eq!(c.slice_len, 128);
+        assert_eq!(c.max_gen_len, 1024);
+    }
+}

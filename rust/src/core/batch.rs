@@ -1,0 +1,97 @@
+//! Batches under static batching (paper §2.4).
+
+use super::request::Request;
+
+/// A group of requests served together with static batching.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub requests: Vec<Request>,
+    /// Estimated serving time assigned by the batcher (Eq. 1). Used by the
+    /// max-min offloader and the worker-load ledger.
+    pub est_serve_time: f64,
+}
+
+impl Batch {
+    pub fn new(requests: Vec<Request>) -> Batch {
+        Batch {
+            requests,
+            est_serve_time: 0.0,
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.requests.len()
+    }
+
+    /// Batch input length: the longest raw input in the batch — every other
+    /// request is padded up to it (paper §2.4).
+    pub fn input_len(&self) -> u32 {
+        self.requests.iter().map(|r| r.input_len).max().unwrap_or(0)
+    }
+
+    /// Total pad tokens this batch introduces at this schedule.
+    pub fn pad_tokens(&self) -> u64 {
+        let li = self.input_len() as u64;
+        self.requests
+            .iter()
+            .map(|r| li - r.input_len as u64)
+            .sum()
+    }
+}
+
+/// Per-request result of serving one slice.
+#[derive(Debug, Clone)]
+pub struct RequestOutcome {
+    pub id: super::request::RequestId,
+    /// Valid tokens generated this slice (up to and including EOS).
+    pub new_tokens: u32,
+    /// Invalid tokens generated after EOS while the batch kept running.
+    pub invalid_tokens: u32,
+    /// True if the request completed (EOS emitted, or the max-generation
+    /// limit was reached).
+    pub finished: bool,
+}
+
+/// Result of serving one batch for one slice.
+#[derive(Debug, Clone)]
+pub struct BatchOutcome {
+    /// Wall/virtual duration of the slice service.
+    pub duration: f64,
+    /// Decode iterations actually executed (< slice_len on early return).
+    pub iters: u32,
+    /// True if every request finished before the iteration limit — the
+    /// paper's "early return" case (§4.2), which makes the time estimate
+    /// inaccurate.
+    pub early_return: bool,
+    pub per_request: Vec<RequestOutcome>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, input_len: u32) -> Request {
+        Request::new(id, 0.0, input_len, 10)
+    }
+
+    #[test]
+    fn input_len_is_max() {
+        let b = Batch::new(vec![req(1, 10), req(2, 100), req(3, 55)]);
+        assert_eq!(b.input_len(), 100);
+        assert_eq!(b.size(), 3);
+    }
+
+    #[test]
+    fn pad_tokens_sum() {
+        let b = Batch::new(vec![req(1, 10), req(2, 100), req(3, 55)]);
+        // pads: 90 + 0 + 45
+        assert_eq!(b.pad_tokens(), 135);
+    }
+
+    #[test]
+    fn empty_batch() {
+        let b = Batch::new(vec![]);
+        assert_eq!(b.input_len(), 0);
+        assert_eq!(b.pad_tokens(), 0);
+    }
+}

@@ -1,0 +1,7 @@
+//! Core domain types: requests, batches, engine outcomes.
+
+pub mod batch;
+pub mod request;
+
+pub use batch::{Batch, BatchOutcome, RequestOutcome};
+pub use request::{Request, RequestId};

@@ -1,0 +1,120 @@
+//! The request model (paper §2.1).
+//!
+//! A request arrives with a raw input of `input_len` tokens and an
+//! *unpredictable* generation length. The scheduler never observes the
+//! generation length; engines do — the sim engine consumes the trace's
+//! `target_gen_len` as its EOS oracle, the real engine discovers EOS from
+//! the model's actual output tokens.
+
+pub type RequestId = u64;
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    /// Arrival time (seconds, virtual or wall-relative).
+    pub arrival: f64,
+    /// Raw input length at arrival (tokens), after truncation to the limit.
+    pub orig_input_len: u32,
+    /// Current input length: grows on each SCLS reschedule because the
+    /// prefill is recomputed over input + previously generated tokens.
+    pub input_len: u32,
+    /// EOS oracle for the SIM engine: total tokens this request generates
+    /// before emitting EOS (uncapped; the max-generation limit applies at
+    /// serving time). The scheduler MUST NOT read this — it is the paper's
+    /// central premise that generation lengths are unknown a priori.
+    pub target_gen_len: u32,
+    /// Tokens generated so far across all slices.
+    pub generated: u32,
+    /// Number of times this request has been scheduled (slice count).
+    pub slices: u32,
+    /// Accumulated pad tokens across all schedules (Fig. 13c accounting:
+    /// the paper sums pads over every reschedule).
+    pub pad_tokens: u64,
+    /// Accumulated invalid tokens (generated after this request's EOS while
+    /// waiting for the rest of its batch).
+    pub invalid_tokens: u64,
+    /// Set when the response is returned to the user.
+    pub finished_at: Option<f64>,
+    /// Real-engine only: concrete token ids of the current input (original
+    /// prompt + generated so far, in order). Empty in sim mode.
+    pub tokens: Vec<i32>,
+    /// Real-engine only: whether EOS has been observed in the output.
+    pub eos_seen: bool,
+}
+
+impl Request {
+    pub fn new(id: RequestId, arrival: f64, input_len: u32, target_gen_len: u32) -> Request {
+        Request {
+            id,
+            arrival,
+            orig_input_len: input_len,
+            input_len,
+            target_gen_len,
+            generated: 0,
+            slices: 0,
+            pad_tokens: 0,
+            invalid_tokens: 0,
+            finished_at: None,
+            tokens: Vec::new(),
+            eos_seen: false,
+        }
+    }
+
+    /// Real-mode constructor carrying concrete token ids.
+    pub fn with_tokens(id: RequestId, arrival: f64, tokens: Vec<i32>) -> Request {
+        let len = tokens.len() as u32;
+        let mut r = Request::new(id, arrival, len, u32::MAX);
+        r.tokens = tokens;
+        r
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.finished_at.is_some()
+    }
+
+    /// Response time (paper's metric: send → receive generated results).
+    pub fn response_time(&self) -> Option<f64> {
+        self.finished_at.map(|f| f - self.arrival)
+    }
+
+    /// Tokens remaining until the sim-mode EOS oracle fires.
+    pub fn remaining_to_eos(&self) -> u32 {
+        self.target_gen_len.saturating_sub(self.generated)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_request_defaults() {
+        let r = Request::new(1, 2.5, 100, 40);
+        assert_eq!(r.input_len, 100);
+        assert_eq!(r.orig_input_len, 100);
+        assert!(!r.is_finished());
+        assert_eq!(r.response_time(), None);
+        assert_eq!(r.remaining_to_eos(), 40);
+    }
+
+    #[test]
+    fn response_time_after_finish() {
+        let mut r = Request::new(1, 2.0, 10, 5);
+        r.finished_at = Some(7.5);
+        assert_eq!(r.response_time(), Some(5.5));
+    }
+
+    #[test]
+    fn remaining_saturates() {
+        let mut r = Request::new(1, 0.0, 10, 5);
+        r.generated = 9;
+        assert_eq!(r.remaining_to_eos(), 0);
+    }
+
+    #[test]
+    fn with_tokens_sets_len() {
+        let r = Request::with_tokens(3, 0.0, vec![5, 6, 7]);
+        assert_eq!(r.input_len, 3);
+        assert_eq!(r.tokens, vec![5, 6, 7]);
+    }
+}

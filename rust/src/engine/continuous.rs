@@ -1,0 +1,201 @@
+//! Continuous-batching worker model — the ILS baseline's engine substrate
+//! (DeepSpeed-FastGen-like, §5.1).
+//!
+//! Iteration-level semantics: at every iteration boundary the worker admits
+//! waiting requests (up to the conservative parallel cap and a KV-memory
+//! check), then runs one decode iteration for the whole running set. There
+//! is no padding and no invalid-token generation — requests exit the moment
+//! they finish — but the cap limits GPU utilization, which is exactly the
+//! inefficiency the paper attributes to ILS (§3.1).
+
+use std::collections::VecDeque;
+
+use crate::core::Request;
+
+use super::latency::EngineLatency;
+
+/// A request in the running set.
+#[derive(Debug)]
+pub struct Running {
+    pub req: Request,
+    /// Cached length so far (input + generated).
+    pub cached: u32,
+    /// Tokens still to generate (to EOS oracle or the max-gen cap).
+    pub remaining: u32,
+}
+
+/// One continuous-batching LLM instance.
+pub struct ContinuousWorker {
+    pub waiting: VecDeque<Request>,
+    pub running: Vec<Running>,
+    pub engine: EngineLatency,
+    /// Conservative cap on parallel-processing requests.
+    pub max_parallel: u32,
+    /// KV budget in bytes and per-token KV size.
+    pub kv_budget: u64,
+    pub kv_delta: u64,
+    pub max_gen_len: u32,
+}
+
+impl ContinuousWorker {
+    pub fn new(
+        engine: EngineLatency,
+        max_parallel: u32,
+        kv_budget: u64,
+        kv_delta: u64,
+        max_gen_len: u32,
+    ) -> ContinuousWorker {
+        ContinuousWorker {
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            engine,
+            max_parallel: max_parallel.max(1),
+            kv_budget,
+            kv_delta,
+            max_gen_len,
+        }
+    }
+
+    pub fn kv_in_use(&self) -> u64 {
+        self.running
+            .iter()
+            .map(|r| r.cached as u64 * self.kv_delta)
+            .sum()
+    }
+
+    /// Begin the next iteration: admit what fits, then return the duration
+    /// of one decode iteration over the running set (including the prefill
+    /// cost of the requests admitted at this boundary). `None` = idle.
+    pub fn begin_iteration(&mut self) -> Option<f64> {
+        let mut admit_prefill = 0.0;
+        while !self.waiting.is_empty() && (self.running.len() as u32) < self.max_parallel {
+            let kv_now = self.kv_in_use();
+            let cand_kv = self.waiting.front().unwrap().input_len as u64 * self.kv_delta;
+            if kv_now + cand_kv > self.kv_budget {
+                break;
+            }
+            let mut req = self.waiting.pop_front().unwrap();
+            req.slices = 1; // continuous batching: one (and only) schedule
+            admit_prefill += self.engine.prefill_mean(1, req.input_len);
+            let remaining = req.target_gen_len.min(self.max_gen_len).max(1);
+            self.running.push(Running {
+                cached: req.input_len,
+                remaining,
+                req,
+            });
+        }
+        if self.running.is_empty() {
+            return None;
+        }
+        // τ(l̄, N): with the bilinear form, the mean cached length scales
+        // exactly as the true total-token cost d1·Σ l_i + …
+        let n = self.running.len() as u32;
+        let mean_l =
+            (self.running.iter().map(|r| r.cached as u64).sum::<u64>() / n as u64) as u32;
+        Some(admit_prefill + self.engine.decode_iter_mean(mean_l, n))
+    }
+
+    /// Complete the iteration begun by `begin_iteration`: every running
+    /// request gains one token; finished requests exit and are returned.
+    pub fn finish_iteration(&mut self, now: f64) -> Vec<Request> {
+        for r in &mut self.running {
+            r.cached += 1;
+            r.remaining -= 1;
+            r.req.generated += 1;
+        }
+        let mut exited = Vec::new();
+        let mut k = 0;
+        while k < self.running.len() {
+            if self.running[k].remaining == 0 {
+                let mut done = self.running.swap_remove(k);
+                done.req.finished_at = Some(now);
+                exited.push(done.req);
+            } else {
+                k += 1;
+            }
+        }
+        exited
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn worker(max_parallel: u32) -> ContinuousWorker {
+        let mut lat = EngineLatency::ds(1);
+        lat.jitter = 0.0;
+        ContinuousWorker::new(lat, max_parallel, 48 << 30, 800 * 1024, 1024)
+    }
+
+    fn req(id: u64, input: u32, gen: u32) -> Request {
+        Request::new(id, 0.0, input, gen)
+    }
+
+    #[test]
+    fn admits_up_to_cap() {
+        let mut w = worker(2);
+        for i in 0..5 {
+            w.waiting.push_back(req(i, 100, 10));
+        }
+        let d = w.begin_iteration().unwrap();
+        assert!(d > 0.0);
+        assert_eq!(w.running.len(), 2);
+        assert_eq!(w.waiting.len(), 3);
+    }
+
+    #[test]
+    fn kv_budget_blocks_admission() {
+        let mut w = worker(100);
+        w.kv_budget = 150 * w.kv_delta; // room for one 100-token prompt
+        w.waiting.push_back(req(0, 100, 10));
+        w.waiting.push_back(req(1, 100, 10));
+        w.begin_iteration().unwrap();
+        assert_eq!(w.running.len(), 1);
+    }
+
+    #[test]
+    fn requests_exit_at_eos_without_invalid_tokens() {
+        let mut w = worker(8);
+        w.waiting.push_back(req(0, 10, 2));
+        w.waiting.push_back(req(1, 10, 5));
+        w.begin_iteration().unwrap();
+        assert!(w.finish_iteration(1.0).is_empty());
+        w.begin_iteration().unwrap();
+        let done = w.finish_iteration(2.0);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, 0);
+        assert_eq!(done[0].generated, 2);
+        assert_eq!(done[0].invalid_tokens, 0);
+        // the other request keeps running and a freed slot admits nothing
+        assert_eq!(w.running.len(), 1);
+    }
+
+    #[test]
+    fn idle_when_empty() {
+        let mut w = worker(4);
+        assert!(w.begin_iteration().is_none());
+    }
+
+    #[test]
+    fn iteration_cost_grows_with_parallelism() {
+        let mut w1 = worker(1);
+        w1.waiting.push_back(req(0, 100, 10));
+        let d1 = w1.begin_iteration().unwrap();
+        let mut w2 = worker(16);
+        for i in 0..16 {
+            w2.waiting.push_back(req(i, 100, 10));
+        }
+        let d16 = w2.begin_iteration().unwrap();
+        assert!(d16 > d1);
+    }
+
+    #[test]
+    fn max_gen_cap_bounds_remaining() {
+        let mut w = worker(1);
+        w.max_gen_len = 8;
+        w.waiting.push_back(req(0, 10, 10_000));
+        w.begin_iteration().unwrap();
+        assert_eq!(w.running[0].remaining, 8);
+    }
+}

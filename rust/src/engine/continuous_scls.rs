@@ -1,0 +1,260 @@
+//! Slice-level scheduling **on top of continuous batching** — the paper's
+//! §7 extension ("Integration with continuous batching"), which the
+//! authors describe as work in progress on vLLM. This module implements
+//! that design in the DES:
+//!
+//! * per-iteration joins/exits as in ILS (no padding, no invalid tokens);
+//! * each *schedule* is capped at S generated tokens — a request that hits
+//!   the cap exits the instance, releases its KV memory, and goes back to
+//!   the coordinator pool to be **rescheduled to the instance with the
+//!   most free memory** (the §7 long-request fix);
+//! * admission is *precise* instead of conservative: a request is admitted
+//!   iff the KV it can grow to within this slice — (cached + S)·Δ — fits
+//!   alongside the slice-projected KV of everything already running. No
+//!   fixed parallel-request cap (§7: "serve as many requests in parallel
+//!   as possible without causing OOM errors").
+//!
+//! The rescheduling cost is faithful: re-admission pays a fresh prefill
+//! over input + everything generated so far (the KV cache does not move
+//! between instances), exactly like static-batching SCLS's reschedule.
+
+use std::collections::VecDeque;
+
+use crate::core::Request;
+
+use super::latency::EngineLatency;
+
+/// A request in the running set.
+#[derive(Debug)]
+struct SlicedRunning {
+    req: Request,
+    /// Cached length (input + all generated tokens).
+    cached: u32,
+    /// Tokens still to generate (EOS oracle or the max-gen cap).
+    remaining: u32,
+    /// Tokens generated within the current schedule (slice).
+    gen_this_slice: u32,
+}
+
+/// What `finish_iteration` hands back to the coordinator.
+#[derive(Debug, Default)]
+pub struct SliceExits {
+    /// Finished: EOS (oracle) or the maximal generation length.
+    pub done: Vec<Request>,
+    /// Hit the slice cap; must be rescheduled (pool → some instance).
+    pub rescheduled: Vec<Request>,
+}
+
+/// One slice-capped continuous-batching LLM instance.
+pub struct SlicedContinuousWorker {
+    pub waiting: VecDeque<Request>,
+    running: Vec<SlicedRunning>,
+    pub engine: EngineLatency,
+    /// Slice length S: per-schedule generated-token cap.
+    pub slice_len: u32,
+    /// KV budget in bytes and per-token KV size.
+    pub kv_budget: u64,
+    pub kv_delta: u64,
+    pub max_gen_len: u32,
+}
+
+impl SlicedContinuousWorker {
+    pub fn new(
+        engine: EngineLatency,
+        slice_len: u32,
+        kv_budget: u64,
+        kv_delta: u64,
+        max_gen_len: u32,
+    ) -> SlicedContinuousWorker {
+        SlicedContinuousWorker {
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            engine,
+            slice_len: slice_len.max(1),
+            kv_budget,
+            kv_delta,
+            max_gen_len,
+        }
+    }
+
+    pub fn running_len(&self) -> usize {
+        self.running.len()
+    }
+
+    /// Precise per-slice KV projection (§4.3 logic applied per schedule):
+    /// every running request may grow to `cached + (S − generated_in_slice)`
+    /// tokens before it exits this instance.
+    pub fn kv_projected(&self) -> u64 {
+        self.running
+            .iter()
+            .map(|r| {
+                let growth = self
+                    .slice_len
+                    .saturating_sub(r.gen_this_slice)
+                    .min(r.remaining);
+                (r.cached as u64 + growth as u64) * self.kv_delta
+            })
+            .sum()
+    }
+
+    /// Begin the next iteration: admit whatever provably fits, then return
+    /// the duration of one decode iteration over the running set (plus the
+    /// prefill cost of requests admitted at this boundary; rescheduled
+    /// requests re-prefill over input + generated). `None` = idle.
+    pub fn begin_iteration(&mut self) -> Option<f64> {
+        let mut admit_prefill = 0.0;
+        while let Some(front) = self.waiting.front() {
+            // Worst-case KV this candidate reaches within the slice.
+            let cand_need =
+                (front.input_len as u64 + self.slice_len as u64) * self.kv_delta;
+            if self.kv_projected() + cand_need > self.kv_budget {
+                break;
+            }
+            let mut req = self.waiting.pop_front().unwrap();
+            req.slices += 1;
+            admit_prefill += self.engine.prefill_mean(1, req.input_len);
+            let remaining = self
+                .max_gen_len
+                .saturating_sub(req.generated)
+                .min(req.remaining_to_eos())
+                .max(1);
+            self.running.push(SlicedRunning {
+                cached: req.input_len,
+                remaining,
+                gen_this_slice: 0,
+                req,
+            });
+        }
+        if self.running.is_empty() {
+            return None;
+        }
+        let n = self.running.len() as u32;
+        let mean_l =
+            (self.running.iter().map(|r| r.cached as u64).sum::<u64>() / n as u64) as u32;
+        Some(admit_prefill + self.engine.decode_iter_mean(mean_l, n))
+    }
+
+    /// Complete the iteration: every running request gains one token;
+    /// finished requests exit as `done`, slice-capped ones as
+    /// `rescheduled` (with `input_len` advanced so the next prefill covers
+    /// the full context).
+    pub fn finish_iteration(&mut self, now: f64) -> SliceExits {
+        for r in &mut self.running {
+            r.cached += 1;
+            r.remaining -= 1;
+            r.gen_this_slice += 1;
+            r.req.generated += 1;
+        }
+        let mut out = SliceExits::default();
+        let mut k = 0;
+        while k < self.running.len() {
+            if self.running[k].remaining == 0 {
+                let mut fin = self.running.swap_remove(k);
+                fin.req.finished_at = Some(now);
+                out.done.push(fin.req);
+            } else if self.running[k].gen_this_slice >= self.slice_len {
+                let mut res = self.running.swap_remove(k);
+                // Next schedule re-prefills over everything so far (§7:
+                // the KV cache is dropped on exit).
+                res.req.input_len = res.cached;
+                out.rescheduled.push(res.req);
+            } else {
+                k += 1;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn worker(slice: u32) -> SlicedContinuousWorker {
+        let mut lat = EngineLatency::ds(1);
+        lat.jitter = 0.0;
+        SlicedContinuousWorker::new(lat, slice, 48 << 30, 800 * 1024, 1024)
+    }
+
+    fn req(id: u64, input: u32, gen: u32) -> Request {
+        Request::new(id, 0.0, input, gen)
+    }
+
+    #[test]
+    fn no_fixed_parallel_cap() {
+        // 64 requests all fit the precise-memory admission at once.
+        let mut w = worker(128);
+        for i in 0..64 {
+            w.waiting.push_back(req(i, 100, 10));
+        }
+        w.begin_iteration().unwrap();
+        assert_eq!(w.running_len(), 64);
+    }
+
+    #[test]
+    fn precise_admission_blocks_on_projected_kv() {
+        let mut w = worker(128);
+        // Budget: exactly one request's worst case (100 + 128 tokens).
+        w.kv_budget = 228 * w.kv_delta;
+        w.waiting.push_back(req(0, 100, 500));
+        w.waiting.push_back(req(1, 100, 500));
+        w.begin_iteration().unwrap();
+        assert_eq!(w.running_len(), 1);
+        // ... but a short-remaining request projects less and still fits
+        // after the first one's slice budget shrinks by generation.
+        for t in 0..64 {
+            w.finish_iteration(t as f64);
+            w.begin_iteration().unwrap();
+        }
+        // First request generated 64, projects cached+64 more: still 228.
+        assert_eq!(w.running_len(), 1, "projection must stay at worst case");
+    }
+
+    #[test]
+    fn slice_cap_evicts_and_marks_reschedule() {
+        let mut w = worker(8);
+        w.waiting.push_back(req(0, 10, 20)); // needs 20 > slice 8
+        w.begin_iteration().unwrap();
+        let mut resched = None;
+        for t in 0..8 {
+            let out = w.finish_iteration(t as f64);
+            assert!(out.done.is_empty());
+            if !out.rescheduled.is_empty() {
+                resched = Some(out.rescheduled.into_iter().next().unwrap());
+                break;
+            }
+            w.begin_iteration().unwrap();
+        }
+        let r = resched.expect("slice cap never fired");
+        assert_eq!(r.generated, 8);
+        assert_eq!(r.input_len, 18, "next prefill covers input+generated");
+        assert_eq!(r.slices, 1);
+        assert_eq!(w.running_len(), 0, "KV released at slice exit");
+    }
+
+    #[test]
+    fn finishes_inside_slice_without_reschedule() {
+        let mut w = worker(128);
+        w.waiting.push_back(req(0, 10, 3));
+        w.begin_iteration().unwrap();
+        w.finish_iteration(1.0);
+        w.begin_iteration().unwrap();
+        w.finish_iteration(2.0);
+        w.begin_iteration().unwrap();
+        let out = w.finish_iteration(3.0);
+        assert_eq!(out.done.len(), 1);
+        assert_eq!(out.done[0].generated, 3);
+        assert!(out.rescheduled.is_empty());
+    }
+
+    #[test]
+    fn kv_projection_counts_slice_growth() {
+        let mut w = worker(16);
+        w.waiting.push_back(req(0, 100, 1000));
+        w.begin_iteration().unwrap();
+        assert_eq!(w.kv_projected(), (100 + 16) * w.kv_delta);
+        w.finish_iteration(1.0);
+        // cached grew to 101, slice growth left 15 → same worst case.
+        assert_eq!(w.kv_projected(), (101 + 15) * w.kv_delta);
+    }
+}

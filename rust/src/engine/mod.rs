@@ -1,0 +1,25 @@
+//! Engines: the LLM-instance substrates the scheduler serves against.
+//!
+//! * `latency` — the calibrated A100/LLaMA2-13B latency surfaces (Eq. 3/4
+//!   forms) for the HF- and DS-like engines.
+//! * `presets` — per-engine bundles: latency + memory rule + the paper's
+//!   experimental constants (fixed SLS batch size, Γ).
+//! * `sim` — virtual-time static-batching engine driven by the latency
+//!   model and the trace's generation-length oracle.
+//! * `continuous` — iteration-level continuous-batching engine used by the
+//!   ILS baseline (DeepSpeed-FastGen-like).
+//! * `continuous_scls` — slice-capped continuous batching with precise
+//!   per-slice memory admission: the paper's §7 extension (SCLS on a
+//!   vLLM-style engine).
+//! * `real` — PJRT-backed execution of the AOT tiny-GPT artifacts.
+
+pub mod continuous;
+pub mod continuous_scls;
+pub mod latency;
+pub mod presets;
+pub mod real;
+pub mod sim;
+
+pub use latency::EngineLatency;
+pub use presets::{EngineKind, EnginePreset};
+pub use sim::SimEngine;

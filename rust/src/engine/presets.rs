@@ -1,0 +1,141 @@
+//! Per-engine experiment presets mirroring the paper's §5.1 settings.
+
+use crate::estimator::memory::MemoryEstimator;
+
+use super::latency::EngineLatency;
+
+/// Which inference engine a worker runs (paper: HF v4.35.0, DS v0.13.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// huggingface-transformers: flexible batch sizes, analytic memory rule
+    /// with fragmentation coefficient ζ (Eq. 9).
+    Hf,
+    /// deepspeed-inference: fast kernels, inflexible memory management →
+    /// profiled rule table (Algorithm 2).
+    Ds,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Option<EngineKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "hf" | "huggingface" => Some(EngineKind::Hf),
+            "ds" | "deepspeed" => Some(EngineKind::Ds),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Hf => "HF",
+            EngineKind::Ds => "DS",
+        }
+    }
+}
+
+/// Everything the schedulers need to know about an engine deployment.
+#[derive(Debug, Clone)]
+pub struct EnginePreset {
+    pub kind: EngineKind,
+    /// Fixed batch size SLS uses to avoid OOM (paper: HF 16, DS 12).
+    pub sls_batch_size: u32,
+    /// Minimal schedule interval Γ (paper: HF 6 s, DS 3 s).
+    pub gamma: f64,
+    /// Adaptive-interval factor λ (paper: 0.5).
+    pub lambda: f64,
+    /// Per-token KV bytes Δ (Eq. 5). LLaMA2-13B fp16: 2 (K+V) × 40 layers
+    /// × 5120 dim × 2 B = 800 KiB/token.
+    pub kv_delta: u64,
+    /// KV-cache budget M_ava (Eq. 6): 80 GB − 26 GB weights − engine state.
+    pub m_ava: u64,
+    /// ILS *effective* parallel-decode cap (DS/FastGen only).
+    ///
+    /// The paper attributes FastGen's low throughput to "a conservative
+    /// memory management mechanism that limits the number of
+    /// parallel-processing requests" (§3.1) but does not report the
+    /// configuration; its measured numbers imply FastGen's throughput was
+    /// only slightly above fixed-batch-12 SLS. This constant is therefore
+    /// calibrated so the reproduced SCLS/ILS throughput ratio falls inside
+    /// the paper's reported +61.6%..+171.0% band across rates 12–28
+    /// (see EXPERIMENTS.md §Fig12); with the Eq. (4) latency surface that
+    /// lands at an effective parallelism of 3.
+    pub ils_max_parallel: u32,
+}
+
+const GIB: u64 = 1 << 30;
+
+impl EnginePreset {
+    pub fn paper(kind: EngineKind) -> EnginePreset {
+        match kind {
+            EngineKind::Hf => EnginePreset {
+                kind,
+                sls_batch_size: 16,
+                gamma: 6.0,
+                lambda: 0.5,
+                kv_delta: 800 * 1024,
+                m_ava: 48 * GIB,
+                ils_max_parallel: 0, // paper only runs ILS on DS
+            },
+            EngineKind::Ds => EnginePreset {
+                kind,
+                sls_batch_size: 12,
+                gamma: 3.0,
+                lambda: 0.5,
+                kv_delta: 800 * 1024,
+                m_ava: 48 * GIB,
+                ils_max_parallel: 3,
+            },
+        }
+    }
+
+    /// The engine's OOM-feasibility rule (paper §4.3).
+    pub fn memory_estimator(&self) -> MemoryEstimator {
+        match self.kind {
+            EngineKind::Hf => MemoryEstimator::analytic(self.kv_delta, self.m_ava, 0.9),
+            EngineKind::Ds => MemoryEstimator::ds_rules(),
+        }
+    }
+
+    /// Ground-truth latency model for one worker (`seed` decorrelates
+    /// per-worker jitter streams).
+    pub fn latency(&self, seed: u64) -> EngineLatency {
+        match self.kind {
+            EngineKind::Hf => EngineLatency::hf(seed),
+            EngineKind::Ds => EngineLatency::ds(seed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_constants() {
+        let hf = EnginePreset::paper(EngineKind::Hf);
+        assert_eq!(hf.sls_batch_size, 16);
+        assert_eq!(hf.gamma, 6.0);
+        let ds = EnginePreset::paper(EngineKind::Ds);
+        assert_eq!(ds.sls_batch_size, 12);
+        assert_eq!(ds.gamma, 3.0);
+    }
+
+    #[test]
+    fn sls_fixed_batch_is_oom_safe_at_max_lengths() {
+        // The paper chose 16/12 to avoid OOM at L_i = L_o = 1024.
+        for kind in [EngineKind::Hf, EngineKind::Ds] {
+            let p = EnginePreset::paper(kind);
+            let mem = p.memory_estimator();
+            assert!(
+                !mem.would_oom(p.sls_batch_size, 1024, 1024),
+                "{kind:?} SLS batch size OOMs"
+            );
+        }
+    }
+
+    #[test]
+    fn parse_kind() {
+        assert_eq!(EngineKind::parse("hf"), Some(EngineKind::Hf));
+        assert_eq!(EngineKind::parse("DS"), Some(EngineKind::Ds));
+        assert_eq!(EngineKind::parse("vllm"), None);
+    }
+}

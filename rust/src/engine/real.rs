@@ -1,0 +1,228 @@
+//! Real engine: serve static batches by executing the AOT tiny-GPT
+//! artifacts through PJRT (the full three-layer path: Rust → HLO → Pallas).
+//!
+//! Semantics mirror `SimEngine` exactly — padding, slice iteration limit,
+//! EOS, invalid tokens, early return — except that EOS is *discovered* from
+//! the model's actual output stream instead of the trace oracle, and the
+//! duration is measured wall clock.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::core::{Batch, BatchOutcome, RequestOutcome};
+use crate::runtime::{Bucket, ModelRuntime};
+
+/// Per-request result of a real slice, with the concrete tokens.
+#[derive(Debug, Clone)]
+pub struct RealSliceResult {
+    pub outcome: BatchOutcome,
+    /// Valid new tokens per request (up to and including EOS when present).
+    pub new_tokens: Vec<Vec<i32>>,
+}
+
+pub struct RealEngine {
+    pub runtime: ModelRuntime,
+    pub slice_len: u32,
+    pub max_gen_len: u32,
+}
+
+impl RealEngine {
+    pub fn new(artifacts_dir: &Path, slice_len: u32, max_gen_len: u32) -> Result<RealEngine> {
+        let runtime = ModelRuntime::new(artifacts_dir)?;
+        if !runtime.manifest.slice_lens().contains(&slice_len) {
+            return Err(anyhow!(
+                "no artifacts for slice length {slice_len}; available: {:?} \
+                 (re-run aot.py with --slice-lens)",
+                runtime.manifest.slice_lens()
+            ));
+        }
+        Ok(RealEngine {
+            runtime,
+            slice_len,
+            max_gen_len,
+        })
+    }
+
+    /// Compile all buckets for this slice length up front.
+    pub fn warmup(&mut self) -> Result<()> {
+        self.runtime.warmup()
+    }
+
+    /// Serve one slice for a batch of requests carrying concrete tokens.
+    pub fn serve_slice(&mut self, batch: &Batch) -> Result<RealSliceResult> {
+        let n = batch.size() as u32;
+        anyhow::ensure!(n > 0, "empty batch");
+        let l_i = batch.input_len();
+        let s = self.slice_len;
+        let bucket: Bucket = self
+            .runtime
+            .manifest
+            .pick(n, l_i, s)
+            .ok_or_else(|| anyhow!("no bucket for n={n} l={l_i} s={s}"))?
+            .clone();
+
+        // Build the left-padded (bucket.n × bucket.l) input.
+        let (bn, bl) = (bucket.n as usize, bucket.l as usize);
+        let pad = self.runtime.manifest.model.pad_id;
+        let bos = self.runtime.manifest.model.bos_id;
+        let eos = self.runtime.manifest.model.eos_id;
+        let mut tokens = vec![pad; bn * bl];
+        let mut lengths = vec![1i32; bn];
+        let mut active = vec![0i32; bn];
+        let mut gen_offset = vec![0i32; bn];
+        for (i, r) in batch.requests.iter().enumerate() {
+            let toks = &r.tokens;
+            anyhow::ensure!(
+                !toks.is_empty() && toks.len() <= bl,
+                "request {} tokens ({}) exceed bucket l={bl}",
+                r.id,
+                toks.len()
+            );
+            let start = bl - toks.len();
+            tokens[i * bl + start..(i + 1) * bl].copy_from_slice(toks);
+            lengths[i] = toks.len() as i32;
+            active[i] = 1;
+            gen_offset[i] = r.generated as i32;
+        }
+        // Filler rows: single BOS token, inactive.
+        for i in batch.size()..bn {
+            tokens[(i + 1) * bl - 1] = bos;
+        }
+
+        let res = self
+            .runtime
+            .execute_slice(&bucket, &tokens, &lengths, &active, &gen_offset)?;
+        let iters = res.iters;
+
+        let mut per_request = Vec::with_capacity(batch.size());
+        let mut new_tokens = Vec::with_capacity(batch.size());
+        for (i, r) in batch.requests.iter().enumerate() {
+            let row = &res.gen[i][..iters as usize];
+            // Valid tokens end at (and include) the first EOS.
+            let eos_pos = row.iter().position(|&t| t == eos);
+            let mut valid = eos_pos.map(|p| p as u32 + 1).unwrap_or(iters);
+            // Maximal-generation-length cap (paper §5.1 Settings).
+            let cap_left = self.max_gen_len.saturating_sub(r.generated);
+            let capped = valid >= cap_left;
+            valid = valid.min(cap_left).max(0);
+            let finished = eos_pos.map(|p| (p as u32) < valid.max(1)).unwrap_or(false)
+                && !row.is_empty()
+                || capped;
+            per_request.push(RequestOutcome {
+                id: r.id,
+                new_tokens: valid,
+                invalid_tokens: iters - valid,
+                finished,
+            });
+            new_tokens.push(row[..valid as usize].to_vec());
+        }
+
+        Ok(RealSliceResult {
+            outcome: BatchOutcome {
+                duration: res.wall,
+                iters,
+                early_return: iters < s,
+                per_request,
+            },
+            new_tokens,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Request;
+    use std::path::PathBuf;
+
+    fn art_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        art_dir().join("manifest.json").exists()
+    }
+
+    fn engine() -> RealEngine {
+        RealEngine::new(&art_dir(), 16, 64).unwrap()
+    }
+
+    fn req(id: u64, toks: Vec<i32>) -> Request {
+        Request::with_tokens(id, 0.0, toks)
+    }
+
+    #[test]
+    fn serves_single_request() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut e = engine();
+        let b = Batch::new(vec![req(1, vec![7, 8, 9, 10, 11])]);
+        let r = e.serve_slice(&b).unwrap();
+        assert_eq!(r.outcome.per_request.len(), 1);
+        let o = &r.outcome.per_request[0];
+        assert!(o.new_tokens >= 1);
+        assert_eq!(o.new_tokens + o.invalid_tokens, r.outcome.iters);
+        assert_eq!(r.new_tokens[0].len(), o.new_tokens as usize);
+        assert!(r.outcome.duration > 0.0);
+    }
+
+    #[test]
+    fn mixed_lengths_batch() {
+        if !have_artifacts() {
+            return;
+        }
+        let mut e = engine();
+        let b = Batch::new(vec![
+            req(1, vec![5; 3]),
+            req(2, (3..40).collect()),
+            req(3, vec![100, 101]),
+        ]);
+        let r = e.serve_slice(&b).unwrap();
+        assert_eq!(r.outcome.per_request.len(), 3);
+        for (o, toks) in r.outcome.per_request.iter().zip(&r.new_tokens) {
+            assert_eq!(o.new_tokens as usize, toks.len());
+        }
+    }
+
+    #[test]
+    fn finished_requests_end_with_eos_or_cap() {
+        if !have_artifacts() {
+            return;
+        }
+        let mut e = engine();
+        // Serve the same request repeatedly (the reschedule path) until done.
+        let mut r = req(1, vec![42, 43, 44, 45]);
+        let eos = e.runtime.manifest.model.eos_id;
+        for _ in 0..8 {
+            let b = Batch::new(vec![r.clone()]);
+            let out = e.serve_slice(&b).unwrap();
+            let o = &out.outcome.per_request[0];
+            r.generated += o.new_tokens;
+            r.tokens.extend_from_slice(&out.new_tokens[0]);
+            r.input_len = r.tokens.len() as u32;
+            if o.finished {
+                let last = *r.tokens.last().unwrap();
+                assert!(
+                    last == eos || r.generated >= 64,
+                    "finished without EOS or cap: last={last} gen={}",
+                    r.generated
+                );
+                return;
+            }
+        }
+        panic!("request never finished in 8 slices (cap is 64 = 4 slices)");
+    }
+
+    #[test]
+    fn rejects_oversized_input() {
+        if !have_artifacts() {
+            return;
+        }
+        let mut e = engine();
+        let b = Batch::new(vec![req(1, vec![5; 1000])]);
+        assert!(e.serve_slice(&b).is_err());
+    }
+}

@@ -1,0 +1,197 @@
+//! Virtual-time static-batching engine (the DES worker substrate).
+//!
+//! Implements the exact serving semantics of §2.4 against the calibrated
+//! latency model: padding to the batch input length, an iteration limit
+//! (the slice length under SCLS; the maximal generation length under SLS),
+//! early return when every request emits EOS, and invalid-token generation
+//! for requests that finish while the batch keeps running.
+//!
+//! The trace's `target_gen_len` is the EOS oracle — the engine knows it,
+//! the scheduler never does.
+
+use crate::core::{Batch, BatchOutcome, RequestOutcome};
+
+use super::latency::EngineLatency;
+
+/// One simulated LLM instance.
+#[derive(Debug, Clone)]
+pub struct SimEngine {
+    pub latency: EngineLatency,
+    /// Serving-time cap on total generated tokens per request (paper: 1024).
+    pub max_gen_len: u32,
+}
+
+impl SimEngine {
+    pub fn new(latency: EngineLatency, max_gen_len: u32) -> SimEngine {
+        SimEngine {
+            latency,
+            max_gen_len,
+        }
+    }
+
+    /// Serve one batch for at most `iter_limit` iterations; returns the
+    /// virtual duration and per-request outcomes. Does not mutate requests
+    /// (the driver applies outcomes so that it can also track metrics).
+    pub fn serve_slice(&mut self, batch: &Batch, iter_limit: u32) -> BatchOutcome {
+        let n = batch.size() as u32;
+        assert!(n > 0, "serve_slice on empty batch");
+        let l_i = batch.input_len();
+
+        // Per-request: iterations it still *needs* (to EOS or the cap).
+        let needs: Vec<u32> = batch
+            .requests
+            .iter()
+            .map(|r| {
+                let to_eos = r.remaining_to_eos();
+                let to_cap = self.max_gen_len.saturating_sub(r.generated);
+                to_eos.min(to_cap).max(1) // even an already-capped row burns ≥1 iter
+            })
+            .collect();
+
+        // Batch generation length (§2.4): min(iteration limit, longest
+        // remaining generation among batched requests).
+        let longest = *needs.iter().max().unwrap();
+        let iters = longest.min(iter_limit).max(1);
+        let early_return = iters < iter_limit;
+
+        let per_request: Vec<RequestOutcome> = batch
+            .requests
+            .iter()
+            .zip(&needs)
+            .map(|(r, &need)| {
+                let new_tokens = need.min(iters);
+                let finished = need <= iters;
+                // Tokens ground out after this request's EOS while the batch
+                // kept running (§2.4 "invalid tokens").
+                let invalid = iters - new_tokens;
+                RequestOutcome {
+                    id: r.id,
+                    new_tokens,
+                    invalid_tokens: invalid,
+                    finished,
+                }
+            })
+            .collect();
+
+        let duration = self.latency.serve_sample(n, l_i, iters);
+        BatchOutcome {
+            duration,
+            iters,
+            early_return,
+            per_request,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Request;
+
+    fn engine() -> SimEngine {
+        let mut lat = EngineLatency::ds(1);
+        lat.jitter = 0.0;
+        SimEngine::new(lat, 1024)
+    }
+
+    fn batch(specs: &[(u32, u32, u32)]) -> Batch {
+        // (input_len, target_gen, already_generated)
+        Batch::new(
+            specs
+                .iter()
+                .enumerate()
+                .map(|(i, &(li, tg, g))| {
+                    let mut r = Request::new(i as u64, 0.0, li, tg);
+                    r.generated = g;
+                    r
+                })
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn full_slice_when_any_request_unfinished() {
+        let mut e = engine();
+        let b = batch(&[(10, 5, 0), (10, 500, 0)]);
+        let out = e.serve_slice(&b, 128);
+        assert_eq!(out.iters, 128);
+        assert!(!out.early_return);
+        // short request: 5 valid + 123 invalid
+        assert_eq!(out.per_request[0].new_tokens, 5);
+        assert_eq!(out.per_request[0].invalid_tokens, 123);
+        assert!(out.per_request[0].finished);
+        // long request: 128 valid, unfinished
+        assert_eq!(out.per_request[1].new_tokens, 128);
+        assert!(!out.per_request[1].finished);
+    }
+
+    #[test]
+    fn early_return_when_all_finish() {
+        let mut e = engine();
+        let b = batch(&[(10, 5, 0), (10, 9, 0)]);
+        let out = e.serve_slice(&b, 128);
+        assert_eq!(out.iters, 9);
+        assert!(out.early_return);
+        assert!(out.per_request.iter().all(|o| o.finished));
+        assert_eq!(out.per_request[0].invalid_tokens, 4);
+    }
+
+    #[test]
+    fn max_gen_cap_finishes_request() {
+        let mut e = engine();
+        // already generated 1000, target 2000 -> capped at 1024: needs 24
+        let b = batch(&[(10, 2000, 1000)]);
+        let out = e.serve_slice(&b, 128);
+        assert_eq!(out.iters, 24);
+        assert!(out.per_request[0].finished);
+        assert_eq!(out.per_request[0].new_tokens, 24);
+    }
+
+    #[test]
+    fn sls_mode_iteration_limit_is_max_gen() {
+        // SLS sets the iteration limit to the maximal generation length:
+        // every request completes in one serving.
+        let mut e = engine();
+        let b = batch(&[(10, 5, 0), (10, 900, 0)]);
+        let out = e.serve_slice(&b, 1024);
+        assert_eq!(out.iters, 900);
+        assert!(out.per_request.iter().all(|o| o.finished));
+        assert_eq!(out.per_request[0].invalid_tokens, 895);
+    }
+
+    #[test]
+    fn duration_grows_with_padding() {
+        // Same work, but one long-input straggler forces padding: slower.
+        // With the calibrated DS constants the per-iteration base (c4)
+        // dominates at N=2, so the padding penalty at 128 iterations is
+        // ~1.3×; the penalty grows with batch size (Fig. 11's point).
+        let mut e = engine();
+        let small = batch(&[(10, 50, 0), (10, 50, 0)]);
+        let padded = batch(&[(10, 50, 0), (1024, 50, 0)]);
+        let d_small = e.serve_slice(&small, 128).duration;
+        let d_padded = e.serve_slice(&padded, 128).duration;
+        assert!(d_padded > d_small * 1.2, "{d_padded} vs {d_small}");
+
+        // At N=16 the N·l cross term makes padding much more expensive.
+        let mut wide_small: Vec<(u32, u32, u32)> = vec![(10, 50, 0); 16];
+        let wide_padded = {
+            let mut v = wide_small.clone();
+            v[15] = (1024, 50, 0);
+            v
+        };
+        wide_small[15] = (10, 50, 0);
+        let d_ws = e.serve_slice(&batch(&wide_small), 128).duration;
+        let d_wp = e.serve_slice(&batch(&wide_padded), 128).duration;
+        assert!(d_wp > d_ws * 1.8, "{d_wp} vs {d_ws}");
+    }
+
+    #[test]
+    fn rescheduled_request_keeps_progress() {
+        let mut e = engine();
+        // target 300, already generated 256 in two prior slices
+        let b = batch(&[(10 + 256, 300, 256)]);
+        let out = e.serve_slice(&b, 128);
+        assert_eq!(out.iters, 44);
+        assert!(out.per_request[0].finished);
+    }
+}

@@ -1,0 +1,124 @@
+//! Least-squares fitting of the Eq. (3)/(4) latency surfaces from profiled
+//! data (the paper uses `scipy.curve_fit`; we solve the normal equations).
+
+use crate::util::linalg::least_squares;
+use crate::util::stats::rmse;
+
+use super::serving_time::LinearLatency;
+
+/// One profiled observation of a bilinear surface: (N, x) → latency.
+#[derive(Debug, Clone, Copy)]
+pub struct Obs {
+    pub n: f64,
+    pub x: f64,
+    pub latency: f64,
+}
+
+/// Fit `c1·N·x + c2·N + c3·x + c4` to the observations.
+pub fn fit_bilinear(obs: &[Obs]) -> Option<LinearLatency> {
+    if obs.len() < 4 {
+        return None;
+    }
+    let rows: Vec<Vec<f64>> = obs
+        .iter()
+        .map(|o| vec![o.n * o.x, o.n, o.x, 1.0])
+        .collect();
+    let y: Vec<f64> = obs.iter().map(|o| o.latency).collect();
+    least_squares(&rows, &y).map(|b| LinearLatency::from_slice(&b))
+}
+
+/// RMSE of a fitted surface against observations (Fig. 10's metric).
+pub fn fit_rmse(fit: &LinearLatency, obs: &[Obs]) -> f64 {
+    let pred: Vec<f64> = obs.iter().map(|o| fit.eval(o.n, o.x)).collect();
+    let actual: Vec<f64> = obs.iter().map(|o| o.latency).collect();
+    rmse(&pred, &actual)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn surface(n: f64, x: f64) -> f64 {
+        1.5e-4 * n * x + 2e-3 * n + 1e-4 * x + 0.011
+    }
+
+    #[test]
+    fn recovers_exact_surface() {
+        let mut obs = Vec::new();
+        for n in [1.0, 2.0, 4.0, 8.0, 16.0] {
+            for x in [16.0, 64.0, 256.0, 1024.0] {
+                obs.push(Obs {
+                    n,
+                    x,
+                    latency: surface(n, x),
+                });
+            }
+        }
+        let fit = fit_bilinear(&obs).unwrap();
+        assert!((fit.c1 - 1.5e-4).abs() < 1e-10);
+        assert!((fit.c2 - 2e-3).abs() < 1e-8);
+        assert!((fit.c3 - 1e-4).abs() < 1e-8);
+        assert!((fit.c4 - 0.011).abs() < 1e-8);
+        assert!(fit_rmse(&fit, &obs) < 1e-9);
+    }
+
+    #[test]
+    fn robust_to_noise() {
+        let mut rng = Rng::new(99);
+        let mut obs = Vec::new();
+        for n in [1.0, 2.0, 4.0, 8.0, 12.0, 16.0] {
+            for x in [16.0, 32.0, 64.0, 128.0, 256.0, 512.0, 1024.0] {
+                let base = surface(n, x);
+                obs.push(Obs {
+                    n,
+                    x,
+                    latency: base * (1.0 + 0.02 * rng.normal()),
+                });
+            }
+        }
+        let fit = fit_bilinear(&obs).unwrap();
+        // relative error of the dominant coefficient stays small
+        assert!((fit.c1 - 1.5e-4).abs() / 1.5e-4 < 0.1, "c1 = {}", fit.c1);
+        // and the fit predicts the clean surface well
+        let clean: Vec<Obs> = obs
+            .iter()
+            .map(|o| Obs {
+                n: o.n,
+                x: o.x,
+                latency: surface(o.n, o.x),
+            })
+            .collect();
+        assert!(fit_rmse(&fit, &clean) < 0.05);
+    }
+
+    #[test]
+    fn too_few_points_none() {
+        let obs = vec![
+            Obs {
+                n: 1.0,
+                x: 1.0,
+                latency: 1.0,
+            };
+            3
+        ];
+        assert!(fit_bilinear(&obs).is_none());
+    }
+
+    #[test]
+    fn degenerate_design_falls_back() {
+        // All observations at the same (n, x): rank-1 design. The ridge
+        // fallback must still return something finite.
+        let obs = vec![
+            Obs {
+                n: 2.0,
+                x: 8.0,
+                latency: 1.0,
+            };
+            8
+        ];
+        if let Some(fit) = fit_bilinear(&obs) {
+            assert!(fit.eval(2.0, 8.0).is_finite());
+        }
+    }
+}

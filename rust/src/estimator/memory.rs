@@ -1,0 +1,187 @@
+//! Memory-usage estimator (paper §4.3, Eq. 5–9 + Algorithm 2).
+//!
+//! KV-cache memory for a static batch:
+//!
+//!   M_kv(N, L_i, L_o) = (L_i + L_o) · N · Δ                  (5)
+//!   M_ava = M_cap − M_model − M_engine                        (6)
+//!
+//! Feasibility under slice length S:
+//!
+//!   M_kv(N, L_i, S) ≤ ζ · M_ava                               (7)/(9)
+//!
+//! HF-like engines take the analytic rule with a fragmentation coefficient
+//! ζ < 1 (paper: ζ = 0.9). DS-like engines have opaque memory management,
+//! so the paper falls back to a profiled rule table (Algorithm 2) keyed on
+//! total token count L = L_i + S; we implement both verbatim and a
+//! generalization that accepts any profiled (threshold → max batch) table.
+
+/// Engine-specific OOM-feasibility rule.
+#[derive(Debug, Clone)]
+pub enum MemoryRule {
+    /// Analytic Eq. (9): M_kv ≤ ζ·M_ava.
+    Analytic {
+        /// Per-token KV bytes (Δ in Eq. 5).
+        delta: u64,
+        /// Available bytes for KV cache (Eq. 6).
+        m_ava: u64,
+        /// Fragmentation coefficient ζ ∈ (0, 1].
+        zeta: f64,
+    },
+    /// Profiled rule table (Algorithm 2 generalized): thresholds on total
+    /// token count L = L_i + S, descending, each with the max batch size.
+    /// The last entry's threshold must be 0 (catch-all).
+    Table(Vec<(u32, u32)>),
+}
+
+/// The estimator the batcher queries at every DP step.
+#[derive(Debug, Clone)]
+pub struct MemoryEstimator {
+    pub rule: MemoryRule,
+}
+
+impl MemoryEstimator {
+    /// Paper's HF configuration (Eq. 9 with ζ = 0.9).
+    pub fn analytic(delta: u64, m_ava: u64, zeta: f64) -> MemoryEstimator {
+        assert!(zeta > 0.0 && zeta <= 1.0);
+        MemoryEstimator {
+            rule: MemoryRule::Analytic { delta, m_ava, zeta },
+        }
+    }
+
+    /// Paper's Algorithm 2 verbatim (DS under the experimental settings:
+    /// L ≤ 2048): L > 1024 → N ≤ 12; L > 512 → N ≤ 22; else N ≤ 28.
+    pub fn ds_rules() -> MemoryEstimator {
+        MemoryEstimator {
+            rule: MemoryRule::Table(vec![(1024, 12), (512, 22), (0, 28)]),
+        }
+    }
+
+    /// Eq. (5): KV bytes for a batch (analytic rule only; 0 for tables).
+    pub fn m_kv(&self, n: u32, l_i: u32, l_o: u32) -> u64 {
+        match &self.rule {
+            MemoryRule::Analytic { delta, .. } => {
+                (l_i as u64 + l_o as u64) * n as u64 * delta
+            }
+            MemoryRule::Table(_) => 0,
+        }
+    }
+
+    /// Would serving (N, L_i) for S iterations OOM? (Eq. 7/9 or Alg. 2.)
+    pub fn would_oom(&self, n: u32, l_i: u32, s: u32) -> bool {
+        match &self.rule {
+            MemoryRule::Analytic { delta, m_ava, zeta } => {
+                let need = (l_i as u64 + s as u64) * n as u64 * delta;
+                (need as f64) > zeta * *m_ava as f64
+            }
+            MemoryRule::Table(table) => {
+                let l = l_i + s;
+                for &(thresh, max_n) in table {
+                    if l > thresh {
+                        return n > max_n;
+                    }
+                }
+                // unreachable when the table ends with (0, _) and l >= 1,
+                // but be conservative for l == 0:
+                n > table.last().map(|&(_, m)| m).unwrap_or(0)
+            }
+        }
+    }
+
+    /// Eq. (8): largest feasible batch size for (L_i, S).
+    pub fn max_batch(&self, l_i: u32, s: u32) -> u32 {
+        match &self.rule {
+            MemoryRule::Analytic { delta, m_ava, zeta } => {
+                let per_req = (l_i as u64 + s as u64) * delta;
+                if per_req == 0 {
+                    return u32::MAX;
+                }
+                ((zeta * *m_ava as f64) / per_req as f64).floor() as u32
+            }
+            MemoryRule::Table(table) => {
+                let l = l_i + s;
+                for &(thresh, max_n) in table {
+                    if l > thresh {
+                        return max_n;
+                    }
+                }
+                table.last().map(|&(_, m)| m).unwrap_or(0)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MIB: u64 = 1 << 20;
+    const GIB: u64 = 1 << 30;
+
+    /// LLaMA2-13B-ish: Δ = 800 KiB/token, 48 GiB available for KV.
+    fn hf() -> MemoryEstimator {
+        MemoryEstimator::analytic(800 * 1024, 48 * GIB, 0.9)
+    }
+
+    #[test]
+    fn eq5_m_kv() {
+        let e = MemoryEstimator::analytic(100, 1_000_000, 1.0);
+        assert_eq!(e.m_kv(4, 10, 6), 16 * 4 * 100);
+    }
+
+    #[test]
+    fn analytic_feasibility_boundary() {
+        // budget = 0.9 * 48 GiB; per request = (1024+128)*800KiB
+        let e = hf();
+        let n_max = e.max_batch(1024, 128);
+        assert!(!e.would_oom(n_max, 1024, 128));
+        assert!(e.would_oom(n_max + 1, 1024, 128));
+    }
+
+    #[test]
+    fn eq8_shrinks_with_slice_length() {
+        // The paper's key claim: larger S ⇒ smaller N_max; small S ⇒ big
+        // batches. Setting S to the full max-generation limit degenerates
+        // SCLS into SLS.
+        let e = hf();
+        assert!(e.max_batch(256, 64) > e.max_batch(256, 128));
+        assert!(e.max_batch(256, 128) > e.max_batch(256, 1024));
+    }
+
+    #[test]
+    fn ds_rule_table_verbatim() {
+        // Algorithm 2: L>1024 -> N>12 OOMs; L>512 -> N>22; else N>28.
+        let e = MemoryEstimator::ds_rules();
+        // L = 1025
+        assert!(!e.would_oom(12, 1000, 25));
+        assert!(e.would_oom(13, 1000, 25));
+        // L = 1024 falls to the >512 branch
+        assert!(!e.would_oom(22, 896, 128));
+        assert!(e.would_oom(23, 896, 128));
+        // L = 512 falls to the else branch
+        assert!(!e.would_oom(28, 384, 128));
+        assert!(e.would_oom(29, 384, 128));
+    }
+
+    #[test]
+    fn ds_max_batch_matches_would_oom() {
+        let e = MemoryEstimator::ds_rules();
+        for &(li, s) in &[(1000u32, 128u32), (500, 128), (100, 128), (10, 16)] {
+            let m = e.max_batch(li, s);
+            assert!(!e.would_oom(m, li, s));
+            assert!(e.would_oom(m + 1, li, s));
+        }
+    }
+
+    #[test]
+    fn zeta_tightens_budget() {
+        let loose = MemoryEstimator::analytic(MIB, GIB, 1.0);
+        let tight = MemoryEstimator::analytic(MIB, GIB, 0.5);
+        assert!(loose.max_batch(100, 28) >= tight.max_batch(100, 28));
+    }
+
+    #[test]
+    fn single_request_always_fits_in_sane_config() {
+        let e = hf();
+        assert!(!e.would_oom(1, 1024, 1024));
+    }
+}

@@ -1,0 +1,10 @@
+//! The two estimators at the heart of SCLS (paper §4.2, §4.3) plus the
+//! profiling/fitting machinery that calibrates them.
+
+pub mod fit;
+pub mod memory;
+pub mod profiler;
+pub mod serving_time;
+
+pub use memory::{MemoryEstimator, MemoryRule};
+pub use serving_time::{LinearLatency, ServingTimeEstimator};

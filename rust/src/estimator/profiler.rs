@@ -1,0 +1,181 @@
+//! Grid profiler (paper §4.2): measures prefill latency and per-iteration
+//! decode latency over a (batch size × length) grid, producing the
+//! observations `fit` turns into Eq. (3)/(4) coefficients.
+//!
+//! The profiler is generic over a measurement source so it works against
+//! both the DES latency model (figure regeneration, where the paper's
+//! A100 numbers are simulated) and the real PJRT engine (where timings are
+//! wall-clock). Measurement sources expose the two primitive latencies;
+//! composite serving times are checked by `validate_serving_time`.
+
+use super::fit::{fit_bilinear, fit_rmse, Obs};
+use super::serving_time::{LinearLatency, ServingTimeEstimator};
+
+/// Anything that can be timed for one prefill / one decode iteration.
+pub trait LatencySource {
+    /// Measured latency of a prefill over (batch n, input length l_i).
+    fn measure_prefill(&mut self, n: u32, l_i: u32) -> f64;
+    /// Measured latency of one decode iteration at cached length l, batch n.
+    fn measure_decode_iter(&mut self, l: u32, n: u32) -> f64;
+}
+
+/// The profiling grid. Defaults mirror the paper's Fig. 8/9 axes.
+#[derive(Debug, Clone)]
+pub struct ProfileGrid {
+    pub batch_sizes: Vec<u32>,
+    pub input_lens: Vec<u32>,
+    pub cached_lens: Vec<u32>,
+}
+
+impl Default for ProfileGrid {
+    fn default() -> Self {
+        ProfileGrid {
+            batch_sizes: vec![1, 2, 4, 8, 12, 16],
+            input_lens: vec![16, 32, 64, 128, 256, 512, 1024],
+            cached_lens: vec![64, 128, 256, 512, 1024, 1536, 2048],
+        }
+    }
+}
+
+/// Raw profile data plus the fitted estimator.
+#[derive(Debug, Clone)]
+pub struct ProfileResult {
+    pub prefill_obs: Vec<Obs>,
+    pub decode_obs: Vec<Obs>,
+    pub estimator: ServingTimeEstimator,
+    /// Fig. 10a's metric: per-phase fit RMSE (seconds).
+    pub prefill_rmse: f64,
+    pub decode_rmse: f64,
+}
+
+/// Run the grid and fit both surfaces.
+pub fn profile_and_fit(src: &mut dyn LatencySource, grid: &ProfileGrid) -> ProfileResult {
+    let mut prefill_obs = Vec::new();
+    for &n in &grid.batch_sizes {
+        for &l in &grid.input_lens {
+            prefill_obs.push(Obs {
+                n: n as f64,
+                x: l as f64,
+                latency: src.measure_prefill(n, l),
+            });
+        }
+    }
+    let mut decode_obs = Vec::new();
+    for &n in &grid.batch_sizes {
+        for &l in &grid.cached_lens {
+            decode_obs.push(Obs {
+                n: n as f64,
+                x: l as f64,
+                latency: src.measure_decode_iter(l, n),
+            });
+        }
+    }
+    let prefill = fit_bilinear(&prefill_obs).unwrap_or(LinearLatency {
+        c1: 0.0,
+        c2: 0.0,
+        c3: 0.0,
+        c4: 0.0,
+    });
+    let decode = fit_bilinear(&decode_obs).unwrap_or(LinearLatency {
+        c1: 0.0,
+        c2: 0.0,
+        c3: 0.0,
+        c4: 0.0,
+    });
+    let estimator = ServingTimeEstimator { prefill, decode };
+    ProfileResult {
+        prefill_rmse: fit_rmse(&prefill, &prefill_obs),
+        decode_rmse: fit_rmse(&decode, &decode_obs),
+        prefill_obs,
+        decode_obs,
+        estimator,
+    }
+}
+
+/// Fig. 10b's experiment: estimate whole serving times for `iters`
+/// iterations across a holdout grid and report the RMSE against the
+/// measured total (prefill + summed decode iterations).
+pub fn validate_serving_time(
+    src: &mut dyn LatencySource,
+    est: &ServingTimeEstimator,
+    batch_sizes: &[u32],
+    input_lens: &[u32],
+    iters: u32,
+) -> f64 {
+    let mut pred = Vec::new();
+    let mut actual = Vec::new();
+    for &n in batch_sizes {
+        for &li in input_lens {
+            pred.push(est.serve(n, li, iters));
+            let mut total = src.measure_prefill(n, li);
+            for l in (li + 1)..=(li + iters) {
+                total += src.measure_decode_iter(l, n);
+            }
+            actual.push(total);
+        }
+    }
+    crate::util::stats::rmse(&pred, &actual)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Synthetic source: bilinear truth + multiplicative noise.
+    struct Synth {
+        rng: Rng,
+        noise: f64,
+    }
+
+    impl LatencySource for Synth {
+        fn measure_prefill(&mut self, n: u32, l: u32) -> f64 {
+            let t = 1.5e-4 * (n as f64) * (l as f64) + 2e-3 * n as f64 + 1e-4 * l as f64 + 0.01;
+            t * (1.0 + self.noise * self.rng.normal())
+        }
+
+        fn measure_decode_iter(&mut self, l: u32, n: u32) -> f64 {
+            let t = 5e-7 * (n as f64) * (l as f64) + 7e-4 * n as f64 + 2.5e-6 * l as f64 + 0.02;
+            t * (1.0 + self.noise * self.rng.normal())
+        }
+    }
+
+    #[test]
+    fn profile_fit_recovers_noiseless() {
+        let mut src = Synth {
+            rng: Rng::new(1),
+            noise: 0.0,
+        };
+        let res = profile_and_fit(&mut src, &ProfileGrid::default());
+        assert!(res.prefill_rmse < 1e-9, "{}", res.prefill_rmse);
+        assert!(res.decode_rmse < 1e-9, "{}", res.decode_rmse);
+    }
+
+    #[test]
+    fn profile_fit_small_rmse_with_noise() {
+        // Mirrors the paper's finding: per-iteration error negligible,
+        // 128-iteration error small but accumulated.
+        let mut src = Synth {
+            rng: Rng::new(2),
+            noise: 0.03,
+        };
+        let res = profile_and_fit(&mut src, &ProfileGrid::default());
+        assert!(res.prefill_rmse < 0.05, "{}", res.prefill_rmse);
+        assert!(res.decode_rmse < 0.01, "{}", res.decode_rmse);
+
+        let mut holdout = Synth {
+            rng: Rng::new(3),
+            noise: 0.03,
+        };
+        let e128 = validate_serving_time(
+            &mut holdout,
+            &res.estimator,
+            &[1, 4, 8],
+            &[32, 128, 512],
+            128,
+        );
+        // accumulated error stays bounded (paper: 0.4 s DS / 2.3 s HF)
+        assert!(e128 < 1.0, "128-iter RMSE {e128}");
+        assert!(e128 > res.decode_rmse, "accumulation should grow error");
+    }
+}

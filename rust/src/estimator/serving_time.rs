@@ -1,0 +1,242 @@
+//! Serving-time estimator (paper §4.2, Eq. 1–4).
+//!
+//! Static-batching serving time decomposes as
+//!
+//!   T_serve(N, L_i, L_o) = T_prefill(N, L_i) + T_decode(N, L_i, L_o)   (1)
+//!   T_decode(N, L_i, L_o) = Σ_{l=1}^{L_o} τ_decode(L_i + l, N)          (2)
+//!
+//! with both phases fitted as bilinear functions:
+//!
+//!   T_prefill(N, L_i) = p1·N·L_i + p2·N + p3·L_i + p4                   (3)
+//!   τ_decode(l, N)    = d1·N·l  + d2·N + d3·l  + d4                     (4)
+//!
+//! Because Eq. (4) is linear in `l`, the sum in Eq. (2) has a closed form
+//! (arithmetic series), so estimating a batch is O(1) — that matters
+//! because the DP batcher (Alg. 1) calls `serve()` O(n²) times per
+//! schedule tick.
+
+/// Anything that can estimate T_serve(N, L_i, S). The DP batcher and the
+/// offloaders are generic over this: the DES path uses the two-surface
+/// `ServingTimeEstimator` (Eq. 1–4); the real-engine path uses a single
+/// whole-slice surface fitted at fixed S (per-phase timings are not
+/// separable once the slice is one fused AOT program).
+pub trait ServeEstimate {
+    fn serve_est(&self, n: u32, l_i: u32, s: u32) -> f64;
+
+    /// Fast path for the DP batcher's inner loop: if
+    /// `serve_est(n, l_i, s) = a·n + b` exactly for every `n ≥ 1`, return
+    /// `Some((a, b))`. Both fitted estimators are bilinear, so at fixed
+    /// (L_i, S) the surface is affine in N — unless a negative fitted
+    /// coefficient would activate the `max(0, ·)` clamp, in which case the
+    /// implementation must return `None` and callers fall back to
+    /// `serve_est`. Default: `None`.
+    fn serve_affine(&self, _l_i: u32, _s: u32) -> Option<(f64, f64)> {
+        None
+    }
+}
+
+/// `(a, b)` of an affine-in-N latency `max(0, a·n + b)`, or `None` when the
+/// clamp could fire for some `n ≥ 1` (i.e. unless `a ≥ 0` and `a + b ≥ 0`).
+fn affine_unclamped(a: f64, b: f64) -> Option<(f64, f64)> {
+    if a >= 0.0 && a + b >= 0.0 {
+        Some((a, b))
+    } else {
+        None
+    }
+}
+
+/// One bilinear latency surface: `c1·N·x + c2·N + c3·x + c4` (seconds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinearLatency {
+    pub c1: f64,
+    pub c2: f64,
+    pub c3: f64,
+    pub c4: f64,
+}
+
+impl LinearLatency {
+    pub fn eval(&self, n: f64, x: f64) -> f64 {
+        self.c1 * n * x + self.c2 * n + self.c3 * x + self.c4
+    }
+
+    pub fn as_vec(&self) -> [f64; 4] {
+        [self.c1, self.c2, self.c3, self.c4]
+    }
+
+    pub fn from_slice(v: &[f64]) -> LinearLatency {
+        LinearLatency {
+            c1: v[0],
+            c2: v[1],
+            c3: v[2],
+            c4: v[3],
+        }
+    }
+}
+
+/// The estimator: Eq. (3) for prefill and Eq. (4) for per-iteration decode.
+#[derive(Debug, Clone, Copy)]
+pub struct ServingTimeEstimator {
+    pub prefill: LinearLatency,
+    pub decode: LinearLatency,
+}
+
+impl ServingTimeEstimator {
+    /// T_prefill(N, L_i) — Eq. (3).
+    pub fn prefill(&self, n: u32, l_i: u32) -> f64 {
+        self.prefill.eval(n as f64, l_i as f64).max(0.0)
+    }
+
+    /// τ_decode(l, N) — Eq. (4); `l` is the cached length at this iteration.
+    pub fn decode_iter(&self, l: u32, n: u32) -> f64 {
+        self.decode.eval(n as f64, l as f64).max(0.0)
+    }
+
+    /// T_decode(N, L_i, L_o) — Eq. (2), closed form.
+    ///
+    /// Σ_{l=L_i+1}^{L_i+L_o} (d1·N·l + d2·N + d3·l + d4)
+    ///   = (d1·N + d3)·Σl + (d2·N + d4)·L_o
+    /// with Σl = L_o·(2·L_i + L_o + 1)/2.
+    pub fn decode(&self, n: u32, l_i: u32, l_o: u32) -> f64 {
+        if l_o == 0 {
+            return 0.0;
+        }
+        let (nf, li, lo) = (n as f64, l_i as f64, l_o as f64);
+        let sum_l = lo * (2.0 * li + lo + 1.0) / 2.0;
+        let d = &self.decode;
+        ((d.c1 * nf + d.c3) * sum_l + (d.c2 * nf + d.c4) * lo).max(0.0)
+    }
+
+    /// T_serve(N, L_i, L_o) — Eq. (1). Under SCLS, L_o is the slice length S.
+    pub fn serve(&self, n: u32, l_i: u32, l_o: u32) -> f64 {
+        self.prefill(n, l_i) + self.decode(n, l_i, l_o)
+    }
+}
+
+impl ServeEstimate for ServingTimeEstimator {
+    fn serve_est(&self, n: u32, l_i: u32, s: u32) -> f64 {
+        self.serve(n, l_i, s)
+    }
+
+    fn serve_affine(&self, l_i: u32, s: u32) -> Option<(f64, f64)> {
+        let li = l_i as f64;
+        // Prefill (Eq. 3): (p1·L + p2)·N + (p3·L + p4).
+        let p = affine_unclamped(
+            self.prefill.c1 * li + self.prefill.c2,
+            self.prefill.c3 * li + self.prefill.c4,
+        )?;
+        // Decode (Eq. 2 closed form): (d1·Σl + d2·S)·N + (d3·Σl + d4·S).
+        let lo = s as f64;
+        let sum_l = lo * (2.0 * li + lo + 1.0) / 2.0;
+        let d = affine_unclamped(
+            self.decode.c1 * sum_l + self.decode.c2 * lo,
+            self.decode.c3 * sum_l + self.decode.c4 * lo,
+        )?;
+        Some((p.0 + d.0, p.1 + d.1))
+    }
+}
+
+/// A single whole-slice bilinear surface T_slice(N, L_i) fitted at fixed S
+/// (the real-engine estimator; S baked in at fit time).
+#[derive(Debug, Clone, Copy)]
+pub struct SliceTimeEstimator {
+    pub surface: LinearLatency,
+}
+
+impl ServeEstimate for SliceTimeEstimator {
+    fn serve_est(&self, n: u32, l_i: u32, _s: u32) -> f64 {
+        self.surface.eval(n as f64, l_i as f64).max(0.0)
+    }
+
+    fn serve_affine(&self, l_i: u32, _s: u32) -> Option<(f64, f64)> {
+        let li = l_i as f64;
+        affine_unclamped(
+            self.surface.c1 * li + self.surface.c2,
+            self.surface.c3 * li + self.surface.c4,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn est() -> ServingTimeEstimator {
+        ServingTimeEstimator {
+            prefill: LinearLatency {
+                c1: 1e-4,
+                c2: 1e-3,
+                c3: 1e-4,
+                c4: 1e-2,
+            },
+            decode: LinearLatency {
+                c1: 5e-7,
+                c2: 7e-4,
+                c3: 2.5e-6,
+                c4: 2e-2,
+            },
+        }
+    }
+
+    #[test]
+    fn prefill_matches_formula() {
+        let e = est();
+        let t = e.prefill(8, 1024);
+        let expect = 1e-4 * 8.0 * 1024.0 + 1e-3 * 8.0 + 1e-4 * 1024.0 + 1e-2;
+        assert!((t - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn decode_closed_form_equals_loop() {
+        let e = est();
+        for &(n, li, lo) in &[(1u32, 10u32, 5u32), (8, 1024, 128), (12, 300, 1), (4, 0, 64)] {
+            let closed = e.decode(n, li, lo);
+            let mut acc = 0.0;
+            for l in (li + 1)..=(li + lo) {
+                acc += e.decode_iter(l, n);
+            }
+            assert!(
+                (closed - acc).abs() < 1e-9 * acc.max(1.0),
+                "n={n} li={li} lo={lo}: {closed} vs {acc}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_iterations_costs_nothing() {
+        assert_eq!(est().decode(8, 100, 0), 0.0);
+    }
+
+    #[test]
+    fn serve_is_sum() {
+        let e = est();
+        let t = e.serve(4, 256, 128);
+        assert!((t - (e.prefill(4, 256) + e.decode(4, 256, 128))).abs() < 1e-12);
+    }
+
+    #[test]
+    fn monotone_in_batch_size_and_lengths() {
+        let e = est();
+        assert!(e.serve(8, 256, 128) > e.serve(4, 256, 128));
+        assert!(e.serve(8, 512, 128) > e.serve(8, 256, 128));
+        assert!(e.serve(8, 256, 256) > e.serve(8, 256, 128));
+    }
+
+    #[test]
+    fn negative_fits_clamped() {
+        let e = ServingTimeEstimator {
+            prefill: LinearLatency {
+                c1: 0.0,
+                c2: 0.0,
+                c3: 0.0,
+                c4: -5.0,
+            },
+            decode: LinearLatency {
+                c1: 0.0,
+                c2: 0.0,
+                c3: 0.0,
+                c4: -5.0,
+            },
+        };
+        assert_eq!(e.serve(1, 1, 1), 0.0);
+    }
+}

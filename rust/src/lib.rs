@@ -1,0 +1,34 @@
+//! # SCLS — Slice-Level Scheduling for LLM Serving
+//!
+//! A production-shaped reproduction of *"Slice-Level Scheduling for High
+//! Throughput and Load Balanced LLM Serving"* as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the scheduling system: serving-time estimator
+//!   (Eq. 1–4), memory estimator (Eq. 5–9 / Alg. 2), DP adaptive batcher
+//!   (Alg. 1), max-min offloader, adaptive schedule interval (Eq. 12), plus
+//!   the SLS/ILS baselines and the SO/PM/AB/LB ablations.
+//! * **L2/L1 (python/compile, build-time only)** — a tiny-GPT decoder with
+//!   Pallas attention kernels, AOT-lowered to HLO text per (N, L, S)
+//!   bucket; `runtime` loads and executes them via PJRT. Python never runs
+//!   on the request path.
+//!
+//! Start at [`sim::driver::run_sliced`] (virtual-time, paper-scale
+//! experiments) or [`worker::real_driver::run_real`] (wall-clock serving of
+//! the real model). `examples/quickstart.rs` is the five-minute tour.
+
+pub mod batcher;
+pub mod bench;
+pub mod config;
+pub mod core;
+pub mod engine;
+pub mod estimator;
+pub mod metrics;
+pub mod offloader;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod testprop;
+pub mod util;
+pub mod worker;
+pub mod workload;

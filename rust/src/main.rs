@@ -1,0 +1,421 @@
+//! `scls-repro` — leader entrypoint / CLI for the SCLS reproduction.
+//!
+//! Subcommands:
+//!
+//! * `figures`    — regenerate every paper figure (DES-backed) into
+//!                  `results/` and print the tables.
+//! * `figure ID`  — regenerate one figure (fig5, fig6, fig8, fig10, fig11,
+//!                  fig12, fig15, fig17, fig18, fig22).
+//! * `simulate`   — run one (engine, scheduler, rate) experiment cell and
+//!                  print the summary.
+//! * `serve`      — wall-clock serving of the real tiny-GPT model through
+//!                  PJRT (requires `make artifacts`).
+//! * `profile`    — print the engine latency profile grid and the fitted
+//!                  Eq. (3)/(4) coefficients.
+//! * `trace`      — generate a synthetic CodeFuse/ShareGPT trace to JSON.
+//!
+//! Run `scls-repro help` for flags.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Result};
+
+use scls::bench::figures::{self, FigureConfig, FigureResult};
+use scls::config::{ConfigFile, ExperimentConfig};
+use scls::engine::presets::{EngineKind, EnginePreset};
+use scls::estimator::profiler::{profile_and_fit, ProfileGrid};
+use scls::scheduler::spec::SchedulerSpec;
+use scls::sim::driver::{run_ils, run_scls_cb, run_sliced, SimConfig};
+use scls::util::cli::Args;
+use scls::util::logging;
+use scls::worker::real_driver::{run_real, RealClusterConfig};
+use scls::workload::distributions::WorkloadKind;
+use scls::workload::{Trace, TraceConfig};
+
+const USAGE: &str = r#"scls-repro — Slice-Level Scheduling reproduction
+
+USAGE:
+  scls-repro <subcommand> [flags]
+
+SUBCOMMANDS:
+  figures     Regenerate all paper figures (writes results/<id>.json)
+      --out-dir DIR      output directory            [results]
+      --quick SCALE      trace-duration scale, 1.0 = paper's 10 min [0.2]
+      --only IDS         comma list, e.g. fig5,fig12
+  figure ID   Regenerate one figure (same flags as `figures`)
+  simulate    Run one experiment cell on the calibrated DES
+      --engine hf|ds     inference engine            [ds]
+      --scheduler NAME   SLS|ILS|SO|PM|AB|LB|SCLS|SCLS-CB  [SCLS]
+      --rate R           arrival rate req/s          [20]
+      --workers W        LLM instances               [8]
+      --duration SECS    trace duration              [600]
+      --slice-len S      slice length                [128]
+      --workload NAME    codefuse|sharegpt           [codefuse]
+      --seed N           RNG seed                    [42]
+      --config FILE      key=value config file overriding defaults
+  serve       Serve a scaled trace on the real PJRT cluster
+      --artifacts DIR    AOT artifact dir            [artifacts]
+      --workers W        worker threads              [2]
+      --slice-len S      slice length (must be an exported bucket) [16]
+      --max-gen N        generation cap              [64]
+      --requests N       request count               [24]
+      --rate R           arrival rate req/s          [4]
+      --scheduler NAME   SLS|SO|PM|AB|LB|SCLS        [SCLS]
+      --seed N           RNG seed                    [42]
+  profile     Profile + fit an engine latency surface
+      --engine hf|ds     engine                      [ds]
+  trace       Generate a synthetic trace to JSON
+      --out FILE         output path                 [trace.json]
+      --workload NAME    codefuse|sharegpt           [codefuse]
+      --rate R --duration SECS --seed N
+  help        Print this text
+"#;
+
+fn main() {
+    logging::init();
+    let args = Args::from_env();
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand() {
+        Some("figures") => cmd_figures(args, None),
+        Some("figure") => {
+            let id = args
+                .positional
+                .get(1)
+                .ok_or_else(|| anyhow!("figure: missing id (e.g. `figure fig12`)"))?
+                .clone();
+            cmd_figures(args, Some(id))
+        }
+        Some("simulate") => cmd_simulate(args),
+        Some("serve") => cmd_serve(args),
+        Some("profile") => cmd_profile(args),
+        Some("trace") => cmd_trace(args),
+        Some("help") | None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand '{other}' (try `help`)"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// figures
+// ---------------------------------------------------------------------------
+
+/// All figure ids in paper order, with their drivers.
+fn figure_ids() -> Vec<&'static str> {
+    vec![
+        "fig5", "fig6", "fig8", "fig10", "fig11", "fig12", "fig15", "fig17", "fig18", "fig22",
+    ]
+}
+
+fn run_figure(id: &str, fc: &FigureConfig) -> Result<Vec<FigureResult>> {
+    let rates = [12.0, 16.0, 20.0, 24.0, 28.0];
+    let slice_lens = [32u32, 64, 128, 256, 512];
+    let workers = [1usize, 2, 4, 8];
+    Ok(match id {
+        "fig5" => vec![figures::fig05(fc)],
+        "fig6" => vec![figures::fig06(fc)],
+        // Fig. 8 and Fig. 9 come from the same profiling grid.
+        "fig8" | "fig9" => vec![
+            figures::fig08_09(fc, EngineKind::Ds),
+            figures::fig08_09(fc, EngineKind::Hf),
+        ],
+        "fig10" => vec![figures::fig10(fc)],
+        "fig11" => vec![figures::fig11(fc)],
+        // Figs. 12/13/14 are one sweep; 17 shares it but we keep the paper's
+        // separate id.
+        "fig12" | "fig13" | "fig14" => vec![figures::fig12_13_14(fc, &rates)],
+        "fig15" | "fig16" => vec![
+            figures::fig15_16(fc, EngineKind::Ds),
+            figures::fig15_16(fc, EngineKind::Hf),
+        ],
+        "fig17" => vec![figures::fig17(fc, &rates)],
+        "fig18" | "fig19" | "fig20" | "fig21" => vec![
+            figures::fig18_21(fc, EngineKind::Ds, &slice_lens),
+            figures::fig18_21(fc, EngineKind::Hf, &slice_lens),
+        ],
+        "fig22" => vec![figures::fig22(fc, &workers)],
+        other => bail!("unknown figure id '{other}' (known: {:?})", figure_ids()),
+    })
+}
+
+fn cmd_figures(args: &Args, only_pos: Option<String>) -> Result<()> {
+    let out_dir = PathBuf::from(args.str_or("out-dir", "results"));
+    let scale = args.f64_or("quick", 0.2);
+    let fc = FigureConfig::quick(scale);
+    std::fs::create_dir_all(&out_dir)?;
+
+    let ids: Vec<String> = if let Some(id) = only_pos {
+        vec![id]
+    } else if let Some(only) = args.str_opt("only") {
+        only.split(',').map(|s| s.trim().to_string()).collect()
+    } else {
+        figure_ids().into_iter().map(String::from).collect()
+    };
+
+    for id in &ids {
+        log::info!("running {id} (duration scale {scale})");
+        for (i, r) in run_figure(id, &fc)?.into_iter().enumerate() {
+            r.print();
+            let suffix = if i == 0 { String::new() } else { format!("_{i}") };
+            let path = out_dir.join(format!("{}{suffix}.json", r.id));
+            std::fs::write(&path, r.json.to_string_pretty())?;
+            log::info!("wrote {}", path.display());
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// simulate
+// ---------------------------------------------------------------------------
+
+fn experiment_config(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = ExperimentConfig::default();
+    if let Some(path) = args.str_opt("config") {
+        cfg.apply_file(&ConfigFile::load(Path::new(path))?)?;
+    }
+    if let Some(s) = args.str_opt("engine") {
+        cfg.engine = EngineKind::parse(s).ok_or_else(|| anyhow!("bad --engine '{s}'"))?;
+    }
+    if let Some(s) = args.str_opt("workload") {
+        cfg.workload = WorkloadKind::parse(s).ok_or_else(|| anyhow!("bad --workload '{s}'"))?;
+    }
+    cfg.workers = args.usize_or("workers", cfg.workers);
+    cfg.rate = args.f64_or("rate", cfg.rate);
+    cfg.duration = args.f64_or("duration", cfg.duration);
+    cfg.slice_len = args.u32_or("slice-len", cfg.slice_len);
+    cfg.max_input_len = args.u32_or("max-input-len", cfg.max_input_len);
+    cfg.max_gen_len = args.u32_or("max-gen-len", cfg.max_gen_len);
+    cfg.seed = args.u64_or("seed", cfg.seed);
+    Ok(cfg)
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let cfg = experiment_config(args)?;
+    let which = args.str_or("scheduler", "SCLS").to_uppercase();
+    let trace = Trace::generate(&TraceConfig {
+        kind: cfg.workload,
+        rate: cfg.rate,
+        duration: cfg.duration,
+        max_input_len: cfg.max_input_len,
+        max_gen_len: cfg.max_gen_len,
+        seed: cfg.seed,
+    });
+    let sim = SimConfig::new(
+        cfg.workers,
+        EnginePreset::paper(cfg.engine),
+        cfg.max_gen_len,
+        cfg.seed,
+    );
+    let preset = EnginePreset::paper(cfg.engine);
+    log::info!(
+        "simulate: {} requests, {} workers, engine {}, scheduler {}",
+        trace.len(),
+        cfg.workers,
+        cfg.engine.name(),
+        which
+    );
+    let metrics = match which.as_str() {
+        "ILS" => run_ils(&trace, &sim),
+        "SCLS-CB" | "SCLSCB" => run_scls_cb(&trace, &sim, cfg.slice_len),
+        "SLS" => run_sliced(&trace, &SchedulerSpec::sls(&preset, cfg.max_gen_len), &sim),
+        "SO" => run_sliced(
+            &trace,
+            &SchedulerSpec::slice_only(&preset, cfg.slice_len),
+            &sim,
+        ),
+        "PM" => run_sliced(
+            &trace,
+            &SchedulerSpec::padding_mitigating(&preset, cfg.slice_len),
+            &sim,
+        ),
+        "AB" => run_sliced(
+            &trace,
+            &SchedulerSpec::adaptive_batching(&preset, cfg.slice_len),
+            &sim,
+        ),
+        "LB" => run_sliced(
+            &trace,
+            &SchedulerSpec::load_balancing(&preset, cfg.slice_len),
+            &sim,
+        ),
+        "SCLS" => run_sliced(&trace, &SchedulerSpec::scls(&preset, cfg.slice_len), &sim),
+        other => bail!("unknown --scheduler '{other}'"),
+    };
+    let s = metrics.summarize();
+    println!("engine            {}", cfg.engine.name());
+    println!("scheduler         {which}");
+    println!("requests          {} (completed {})", trace.len(), s.completed);
+    println!("throughput        {:.3} req/s", s.throughput);
+    println!("avg response      {:.2} s", s.avg_response_time);
+    println!("p95 response      {:.2} s", s.p95_response_time);
+    println!("avg batch size    {:.2}", s.avg_batch_size);
+    println!("invalid tok/req   {:.2}", s.avg_invalid_tokens);
+    println!("pad tok/req       {:.2}", s.avg_pad_tokens);
+    println!("CT std            {:.2} s", s.ct_std);
+    println!("early-return      {:.4}", s.early_return_ratio);
+    println!("slices [1,2,3,4+] {:?}", s.slice_histogram);
+    if let Some(out) = args.str_opt("out") {
+        std::fs::write(out, s.to_json().to_string_pretty())?;
+        log::info!("wrote {out}");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// serve (real PJRT cluster)
+// ---------------------------------------------------------------------------
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let artifacts_dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    if !artifacts_dir.join("manifest.json").exists() {
+        bail!(
+            "no artifacts at {} — run `make artifacts` first",
+            artifacts_dir.display()
+        );
+    }
+    let cfg = RealClusterConfig {
+        artifacts_dir,
+        workers: args.usize_or("workers", 2),
+        slice_len: args.u32_or("slice-len", 16),
+        max_gen_len: args.u32_or("max-gen", 64),
+        skip_profiling: args.bool_or("skip-profiling", false),
+        warmup: args.bool_or("warmup", true),
+    };
+    let n = args.usize_or("requests", 24);
+    let rate = args.f64_or("rate", 4.0);
+    let seed = args.u64_or("seed", 42);
+    let which = args.str_or("scheduler", "SCLS").to_uppercase();
+
+    // Synthesize token-bearing requests with Poisson arrivals; lengths from
+    // the CodeFuse-shaped input distribution scaled to the bucket budget.
+    let mut rng = scls::util::rng::Rng::new(seed);
+    let max_in = 48u32;
+    let mut reqs = Vec::with_capacity(n);
+    let mut t = 0.0f64;
+    for id in 0..n as u64 {
+        t += rng.exponential(rate);
+        let len = 3 + (rng.next_u64() % (max_in as u64 - 3)) as usize;
+        let tokens: Vec<i32> = (0..len).map(|_| 3 + (rng.next_u64() % 400) as i32).collect();
+        reqs.push(scls::core::Request::with_tokens(id, t, tokens));
+    }
+
+    let preset = EnginePreset::paper(EngineKind::Hf);
+    let mut spec = match which.as_str() {
+        "SLS" => SchedulerSpec::sls(&preset, cfg.max_gen_len),
+        "SO" => SchedulerSpec::slice_only(&preset, cfg.slice_len),
+        // (fixed batch sizes are clamped to the largest exported N bucket
+        // below — the real cluster's OOM limit is bucket capacity)
+        "PM" => SchedulerSpec::padding_mitigating(&preset, cfg.slice_len),
+        "AB" => SchedulerSpec::adaptive_batching(&preset, cfg.slice_len),
+        "LB" => SchedulerSpec::load_balancing(&preset, cfg.slice_len),
+        "SCLS" => SchedulerSpec::scls(&preset, cfg.slice_len),
+        other => bail!("unknown --scheduler '{other}' (real mode has no ILS)"),
+    };
+    // Real mode slices are bucket-bound; scale the tick interval Γ down to
+    // the small model's speed (paper: Γ tuned per engine, §5.1).
+    spec.slice_len = cfg.slice_len;
+    if let scls::scheduler::spec::BatchingSpec::WorkerFcfs { batch_size } = spec.batching {
+        spec.batching = scls::scheduler::spec::BatchingSpec::WorkerFcfs {
+            batch_size: batch_size.min(8),
+        };
+    }
+    let gamma = args.f64_or("gamma", 0.5);
+    if let scls::scheduler::spec::IntervalSpec::Adaptive { lambda, .. } = spec.interval {
+        spec.interval = scls::scheduler::spec::IntervalSpec::Adaptive { lambda, gamma };
+    } else if let scls::scheduler::spec::IntervalSpec::Fixed(_) = spec.interval {
+        spec.interval = scls::scheduler::spec::IntervalSpec::Fixed(gamma);
+    }
+
+    log::info!(
+        "serving {n} requests on {} real workers (slice {}, scheduler {which})",
+        cfg.workers,
+        cfg.slice_len
+    );
+    let t0 = std::time::Instant::now();
+    let m = run_real(reqs, &spec, &cfg)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let s = m.summarize();
+    println!("completed         {}/{n} in {wall:.2} s wall", s.completed);
+    println!("throughput        {:.3} req/s", s.throughput);
+    println!("avg response      {:.3} s", s.avg_response_time);
+    println!("p95 response      {:.3} s", s.p95_response_time);
+    println!("avg batch size    {:.2}", s.avg_batch_size);
+    println!("pad tok/req       {:.2}", s.avg_pad_tokens);
+    println!("invalid tok/req   {:.2}", s.avg_invalid_tokens);
+    println!("CT std            {:.3} s", s.ct_std);
+    if let Some(out) = args.str_opt("out") {
+        std::fs::write(out, s.to_json().to_string_pretty())?;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// profile
+// ---------------------------------------------------------------------------
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    let kind = EngineKind::parse(args.str_or("engine", "ds"))
+        .ok_or_else(|| anyhow!("bad --engine"))?;
+    let preset = EnginePreset::paper(kind);
+    let mut lat = preset.latency(args.u64_or("seed", 7));
+    let res = profile_and_fit(&mut lat, &ProfileGrid::default());
+    println!("engine {}", kind.name());
+    println!(
+        "prefill  T(N,L) = {:.3e}·N·L + {:.3e}·N + {:.3e}·L + {:.3e}   (RMSE {:.4} s)",
+        res.estimator.prefill.c1,
+        res.estimator.prefill.c2,
+        res.estimator.prefill.c3,
+        res.estimator.prefill.c4,
+        res.prefill_rmse
+    );
+    println!(
+        "decode   τ(l,N) = {:.3e}·N·l + {:.3e}·N + {:.3e}·l + {:.3e}   (RMSE {:.4} s)",
+        res.estimator.decode.c1,
+        res.estimator.decode.c2,
+        res.estimator.decode.c3,
+        res.estimator.decode.c4,
+        res.decode_rmse
+    );
+    // A few example estimates mirroring the paper's anchors.
+    for (n, l, s) in [(1u32, 64u32, 128u32), (8, 1024, 128), (12, 512, 128), (16, 1024, 128)] {
+        println!(
+            "T_serve(N={n:<2} L={l:<4} S={s}) = {:.2} s",
+            res.estimator.serve(n, l, s)
+        );
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// trace
+// ---------------------------------------------------------------------------
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let kind = WorkloadKind::parse(args.str_or("workload", "codefuse"))
+        .ok_or_else(|| anyhow!("bad --workload"))?;
+    let cfg = TraceConfig {
+        kind,
+        rate: args.f64_or("rate", 20.0),
+        duration: args.f64_or("duration", 600.0),
+        max_input_len: args.u32_or("max-input-len", 1024),
+        max_gen_len: args.u32_or("max-gen-len", 1024),
+        seed: args.u64_or("seed", 42),
+    };
+    let trace = Trace::generate(&cfg);
+    let out = PathBuf::from(args.str_or("out", "trace.json"));
+    trace.save(&out)?;
+    println!("wrote {} requests to {}", trace.len(), out.display());
+    Ok(())
+}

@@ -1,0 +1,217 @@
+//! Run metrics: everything the paper's figures report (§5.1 Metrics plus
+//! the dive-in counters of Figs. 13/14/16/19/20).
+
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// Per-request record at completion.
+#[derive(Debug, Clone)]
+pub struct CompletedRequest {
+    pub id: u64,
+    pub arrival: f64,
+    pub finished: f64,
+    pub generated: u32,
+    /// Schedule count == slice count (Fig. 14a / 20a).
+    pub slices: u32,
+    pub pad_tokens: u64,
+    pub invalid_tokens: u64,
+}
+
+/// Per-batch-serving record.
+#[derive(Debug, Clone)]
+pub struct BatchRecord {
+    pub start: f64,
+    pub worker: usize,
+    pub size: u32,
+    pub input_len: u32,
+    pub pad_tokens: u64,
+    pub est_serve_time: f64,
+    pub actual_serve_time: f64,
+    pub early_return: bool,
+}
+
+/// Raw event log of one experiment run.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    pub completed: Vec<CompletedRequest>,
+    pub batches: Vec<BatchRecord>,
+    /// Per-worker completion time: when each instance finished its last
+    /// batch (CT in Figs. 5e/17/21).
+    pub worker_completion: Vec<f64>,
+    /// Wall/virtual time when the last request completed.
+    pub makespan: f64,
+    /// Total requests injected (completed + any stragglers).
+    pub total_requests: usize,
+}
+
+/// Headline summary of a run.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    /// Requests per second (completed / makespan).
+    pub throughput: f64,
+    pub avg_response_time: f64,
+    pub p95_response_time: f64,
+    /// Standard deviation of worker completion times (load-balance metric).
+    pub ct_std: f64,
+    pub avg_batch_size: f64,
+    /// Mean invalid tokens per completed request (Fig. 13a).
+    pub avg_invalid_tokens: f64,
+    /// Mean pad tokens per completed request, summed over reschedules
+    /// (Fig. 13c).
+    pub avg_pad_tokens: f64,
+    /// Fraction of batch servings that early-returned (Fig. 14b).
+    pub early_return_ratio: f64,
+    /// Distribution of per-request slice counts: counts for 1, 2, 3, ≥4
+    /// (Fig. 14a).
+    pub slice_histogram: [u64; 4],
+    pub completed: usize,
+}
+
+impl RunMetrics {
+    pub fn record_completion(&mut self, req: &crate::core::Request, now: f64) {
+        self.completed.push(CompletedRequest {
+            id: req.id,
+            arrival: req.arrival,
+            finished: now,
+            generated: req.generated,
+            slices: req.slices,
+            pad_tokens: req.pad_tokens,
+            invalid_tokens: req.invalid_tokens,
+        });
+        self.makespan = self.makespan.max(now);
+    }
+
+    pub fn summarize(&self) -> Summary {
+        let rts: Vec<f64> = self
+            .completed
+            .iter()
+            .map(|c| c.finished - c.arrival)
+            .collect();
+        let mut slice_histogram = [0u64; 4];
+        for c in &self.completed {
+            let idx = (c.slices.max(1) as usize - 1).min(3);
+            slice_histogram[idx] += 1;
+        }
+        let early = self.batches.iter().filter(|b| b.early_return).count();
+        let n_batches = self.batches.len().max(1);
+        Summary {
+            throughput: if self.makespan > 0.0 {
+                self.completed.len() as f64 / self.makespan
+            } else {
+                0.0
+            },
+            avg_response_time: stats::mean(&rts),
+            p95_response_time: stats::percentile(&rts, 95.0),
+            ct_std: stats::std_dev(&self.worker_completion),
+            avg_batch_size: stats::mean(
+                &self.batches.iter().map(|b| b.size as f64).collect::<Vec<_>>(),
+            ),
+            avg_invalid_tokens: stats::mean(
+                &self
+                    .completed
+                    .iter()
+                    .map(|c| c.invalid_tokens as f64)
+                    .collect::<Vec<_>>(),
+            ),
+            avg_pad_tokens: stats::mean(
+                &self
+                    .completed
+                    .iter()
+                    .map(|c| c.pad_tokens as f64)
+                    .collect::<Vec<_>>(),
+            ),
+            early_return_ratio: early as f64 / n_batches as f64,
+            slice_histogram,
+            completed: self.completed.len(),
+        }
+    }
+}
+
+impl Summary {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("throughput", self.throughput)
+            .set("avg_response_time", self.avg_response_time)
+            .set("p95_response_time", self.p95_response_time)
+            .set("ct_std", self.ct_std)
+            .set("avg_batch_size", self.avg_batch_size)
+            .set("avg_invalid_tokens", self.avg_invalid_tokens)
+            .set("avg_pad_tokens", self.avg_pad_tokens)
+            .set("early_return_ratio", self.early_return_ratio)
+            .set(
+                "slice_histogram",
+                Json::Arr(self.slice_histogram.iter().map(|&x| Json::from(x)).collect()),
+            )
+            .set("completed", self.completed);
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Request;
+
+    #[test]
+    fn summary_basic() {
+        let mut m = RunMetrics::default();
+        let mut r1 = Request::new(1, 0.0, 10, 5);
+        r1.slices = 1;
+        r1.invalid_tokens = 3;
+        r1.pad_tokens = 7;
+        m.record_completion(&r1, 2.0);
+        let mut r2 = Request::new(2, 1.0, 10, 5);
+        r2.slices = 4;
+        m.record_completion(&r2, 5.0);
+        m.worker_completion = vec![4.0, 6.0];
+        m.batches.push(BatchRecord {
+            start: 0.0,
+            worker: 0,
+            size: 2,
+            input_len: 10,
+            pad_tokens: 0,
+            est_serve_time: 1.0,
+            actual_serve_time: 1.1,
+            early_return: true,
+        });
+        m.batches.push(BatchRecord {
+            start: 1.0,
+            worker: 1,
+            size: 4,
+            input_len: 12,
+            pad_tokens: 5,
+            est_serve_time: 2.0,
+            actual_serve_time: 2.2,
+            early_return: false,
+        });
+
+        let s = m.summarize();
+        assert_eq!(s.completed, 2);
+        assert!((s.throughput - 2.0 / 5.0).abs() < 1e-12);
+        assert!((s.avg_response_time - 3.0).abs() < 1e-12); // (2 + 4) / 2
+        assert!((s.ct_std - 1.0).abs() < 1e-12);
+        assert!((s.avg_batch_size - 3.0).abs() < 1e-12);
+        assert!((s.early_return_ratio - 0.5).abs() < 1e-12);
+        assert_eq!(s.slice_histogram, [1, 0, 0, 1]);
+        assert!((s.avg_invalid_tokens - 1.5).abs() < 1e-12);
+        assert!((s.avg_pad_tokens - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_run_summary_is_zeroes() {
+        let s = RunMetrics::default().summarize();
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.throughput, 0.0);
+        assert_eq!(s.avg_response_time, 0.0);
+    }
+
+    #[test]
+    fn summary_json_roundtrips() {
+        let mut m = RunMetrics::default();
+        m.record_completion(&Request::new(1, 0.0, 10, 5), 1.0);
+        let j = m.summarize().to_json();
+        let s = j.to_string_pretty();
+        let back = Json::parse(&s).unwrap();
+        assert_eq!(back.get("completed").unwrap().as_i64(), Some(1));
+    }
+}

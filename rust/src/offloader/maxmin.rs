@@ -1,0 +1,99 @@
+//! Max-min offloading (paper §4.5): offload batches one by one, longest
+//! estimated serving time first, each to the currently least-loaded worker
+//! — the classic LPT (longest processing time) list-scheduling rule, which
+//! guarantees a makespan within 4/3 of optimal.
+
+use crate::core::Batch;
+
+use super::LoadLedger;
+
+#[derive(Debug, Default)]
+pub struct MaxMinOffloader;
+
+impl MaxMinOffloader {
+    /// Assign each batch a worker; returns (worker, batch) pairs in the
+    /// order they were assigned (longest first). Updates the ledger.
+    pub fn offload(&self, mut batches: Vec<Batch>, ledger: &mut LoadLedger) -> Vec<(usize, Batch)> {
+        // Longest estimated serving time first.
+        batches.sort_by(|a, b| b.est_serve_time.total_cmp(&a.est_serve_time));
+        let mut out = Vec::with_capacity(batches.len());
+        for b in batches {
+            let w = ledger.argmin();
+            ledger.add(w, b.est_serve_time);
+            out.push((w, b));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Request;
+
+    fn batch(id_base: u64, est: f64) -> Batch {
+        let mut b = Batch::new(vec![Request::new(id_base, 0.0, 10, 10)]);
+        b.est_serve_time = est;
+        b
+    }
+
+    #[test]
+    fn longest_goes_to_least_loaded() {
+        let mut ledger = LoadLedger::new(2);
+        ledger.add(0, 5.0);
+        let out = MaxMinOffloader.offload(vec![batch(1, 9.0), batch(2, 1.0)], &mut ledger);
+        // 9.0 -> worker 1 (load 0), then 1.0 -> worker 1? loads: w0=5, w1=9
+        assert_eq!(out[0].0, 1);
+        assert_eq!(out[1].0, 0);
+    }
+
+    #[test]
+    fn balances_better_than_naive_order() {
+        // Classic LPT adversary: jobs 5,4,3,3,3 on 2 workers. Optimal
+        // makespan is 9 (5+4 | 3+3+3); LPT gives 10 — within its 4/3·OPT
+        // guarantee — while arrival-order list scheduling gives 10 as well
+        // on this instance, and LPT can never be worse.
+        let jobs = [3.0, 3.0, 5.0, 4.0, 3.0];
+        let mut ledger = LoadLedger::new(2);
+        let batches = jobs.iter().enumerate().map(|(i, &t)| batch(i as u64, t)).collect();
+        MaxMinOffloader.offload(batches, &mut ledger);
+        let lpt_makespan = ledger.max();
+        assert!(lpt_makespan <= 4.0 / 3.0 * 9.0 + 1e-9, "{lpt_makespan}");
+
+        // Arrival-order (no sort) list scheduling for comparison.
+        let mut naive = LoadLedger::new(2);
+        for &t in &jobs {
+            let w = naive.argmin();
+            naive.add(w, t);
+        }
+        assert!(
+            lpt_makespan <= naive.max() + 1e-9,
+            "LPT {lpt_makespan} worse than naive {}",
+            naive.max()
+        );
+
+        // An instance where LPT balances exactly: 4,3,3,2,2,2 → 8 | 8.
+        let mut ledger = LoadLedger::new(2);
+        let batches = [2.0, 4.0, 2.0, 3.0, 3.0, 2.0]
+            .iter()
+            .enumerate()
+            .map(|(i, &t)| batch(i as u64, t))
+            .collect();
+        MaxMinOffloader.offload(batches, &mut ledger);
+        assert!((ledger.max() - ledger.min()).abs() <= 1e-9);
+    }
+
+    #[test]
+    fn single_worker_takes_all() {
+        let mut ledger = LoadLedger::new(1);
+        let out = MaxMinOffloader.offload(vec![batch(1, 2.0), batch(2, 3.0)], &mut ledger);
+        assert!(out.iter().all(|(w, _)| *w == 0));
+        assert_eq!(ledger.load(0), 5.0);
+    }
+
+    #[test]
+    fn empty_batches() {
+        let mut ledger = LoadLedger::new(4);
+        assert!(MaxMinOffloader.offload(vec![], &mut ledger).is_empty());
+    }
+}

@@ -1,0 +1,95 @@
+//! Offloading policies: the paper's max-min load balancer (§4.5) and the
+//! round-robin baseline used by SLS/ILS and the SO/PM/AB ablations.
+
+pub mod maxmin;
+pub mod roundrobin;
+
+pub use maxmin::MaxMinOffloader;
+pub use roundrobin::RoundRobin;
+
+/// A worker-load ledger shared by offloaders and the scheduler (Eq. 11):
+/// the load of a worker is the estimated time to serve everything in its
+/// local queue (plus the batch it is currently serving).
+#[derive(Debug, Clone)]
+pub struct LoadLedger {
+    loads: Vec<f64>,
+}
+
+impl LoadLedger {
+    pub fn new(workers: usize) -> LoadLedger {
+        LoadLedger {
+            loads: vec![0.0; workers],
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.loads.len()
+    }
+
+    pub fn load(&self, w: usize) -> f64 {
+        self.loads[w]
+    }
+
+    /// Eq. (11): add an offloaded batch's estimated time.
+    pub fn add(&mut self, w: usize, est: f64) {
+        self.loads[w] += est;
+    }
+
+    /// §4.5: after a worker finishes a batch, subtract its estimate so
+    /// estimation error does not accumulate in the ledger.
+    pub fn complete(&mut self, w: usize, est: f64) {
+        self.loads[w] = (self.loads[w] - est).max(0.0);
+    }
+
+    /// Index of the least-loaded worker (ties → lowest index).
+    pub fn argmin(&self) -> usize {
+        let mut best = 0;
+        for (i, &l) in self.loads.iter().enumerate() {
+            if l < self.loads[best] {
+                best = i;
+            }
+        }
+        best
+    }
+
+    pub fn min(&self) -> f64 {
+        self.loads.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.loads.iter().cloned().fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_add_complete() {
+        let mut l = LoadLedger::new(3);
+        l.add(0, 5.0);
+        l.add(1, 2.0);
+        assert_eq!(l.argmin(), 2);
+        l.add(2, 10.0);
+        assert_eq!(l.argmin(), 1);
+        l.complete(2, 10.0);
+        assert_eq!(l.load(2), 0.0);
+    }
+
+    #[test]
+    fn complete_clamps_at_zero() {
+        let mut l = LoadLedger::new(1);
+        l.add(0, 1.0);
+        l.complete(0, 5.0); // over-subtraction from estimation error
+        assert_eq!(l.load(0), 0.0);
+    }
+
+    #[test]
+    fn min_max() {
+        let mut l = LoadLedger::new(2);
+        l.add(0, 3.0);
+        assert_eq!(l.min(), 0.0);
+        assert_eq!(l.max(), 3.0);
+    }
+}

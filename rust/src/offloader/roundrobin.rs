@@ -1,0 +1,41 @@
+//! Round-robin offloading — the policy existing SLS/ILS schedulers use
+//! (§3.2), which the paper shows causes load imbalance.
+
+/// Cyclic worker assignment.
+#[derive(Debug, Clone)]
+pub struct RoundRobin {
+    next: usize,
+    workers: usize,
+}
+
+impl RoundRobin {
+    pub fn new(workers: usize) -> RoundRobin {
+        assert!(workers > 0);
+        RoundRobin { next: 0, workers }
+    }
+
+    pub fn next_worker(&mut self) -> usize {
+        let w = self.next;
+        self.next = (self.next + 1) % self.workers;
+        w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycles() {
+        let mut rr = RoundRobin::new(3);
+        let seq: Vec<usize> = (0..7).map(|_| rr.next_worker()).collect();
+        assert_eq!(seq, vec![0, 1, 2, 0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn single_worker() {
+        let mut rr = RoundRobin::new(1);
+        assert_eq!(rr.next_worker(), 0);
+        assert_eq!(rr.next_worker(), 0);
+    }
+}

@@ -1,0 +1,195 @@
+//! Artifact discovery: parse `artifacts/manifest.json` (written by
+//! `python -m compile.aot`) and map a concrete (batch, padded-length) onto
+//! the nearest exported bucket.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// One exported (N, L, S) bucket.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Bucket {
+    pub n: u32,
+    pub l: u32,
+    pub s: u32,
+    pub file: String,
+}
+
+/// Model metadata baked into the artifacts.
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub vocab: u32,
+    pub d_model: u32,
+    pub n_heads: u32,
+    pub n_layers: u32,
+    pub max_pos: u32,
+    pub kv_bytes_per_token: u64,
+    pub pad_id: i32,
+    pub eos_id: i32,
+    pub bos_id: i32,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelInfo,
+    pub buckets: Vec<Bucket>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+
+        let geti = |path: &[&str]| -> Result<i64> {
+            j.at(path)
+                .and_then(Json::as_i64)
+                .ok_or_else(|| anyhow!("manifest: missing {}", path.join(".")))
+        };
+        let model = ModelInfo {
+            vocab: geti(&["model", "vocab"])? as u32,
+            d_model: geti(&["model", "d_model"])? as u32,
+            n_heads: geti(&["model", "n_heads"])? as u32,
+            n_layers: geti(&["model", "n_layers"])? as u32,
+            max_pos: geti(&["model", "max_pos"])? as u32,
+            kv_bytes_per_token: geti(&["model", "kv_bytes_per_token"])? as u64,
+            pad_id: geti(&["tokens", "pad"])? as i32,
+            eos_id: geti(&["tokens", "eos"])? as i32,
+            bos_id: geti(&["tokens", "bos"])? as i32,
+        };
+
+        let mut buckets = Vec::new();
+        for b in j
+            .get("buckets")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest: missing buckets"))?
+        {
+            let get = |k: &str| -> Result<i64> {
+                b.get(k)
+                    .and_then(Json::as_i64)
+                    .ok_or_else(|| anyhow!("bucket: missing {k}"))
+            };
+            buckets.push(Bucket {
+                n: get("n")? as u32,
+                l: get("l")? as u32,
+                s: get("s")? as u32,
+                file: b
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("bucket: missing file"))?
+                    .to_string(),
+            });
+        }
+        if buckets.is_empty() {
+            return Err(anyhow!("manifest has no buckets"));
+        }
+        buckets.sort_by_key(|b| (b.s, b.l, b.n));
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            model,
+            buckets,
+        })
+    }
+
+    /// Slice lengths available in the artifact set.
+    pub fn slice_lens(&self) -> Vec<u32> {
+        let mut v: Vec<u32> = self.buckets.iter().map(|b| b.s).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Smallest bucket with bucket.n ≥ n, bucket.l ≥ l, bucket.s == s.
+    pub fn pick(&self, n: u32, l: u32, s: u32) -> Option<&Bucket> {
+        self.buckets
+            .iter()
+            .filter(|b| b.s == s && b.n >= n && b.l >= l)
+            .min_by_key(|b| (b.l, b.n))
+    }
+
+    /// Largest batch size servable at padded length `l` with slice `s` —
+    /// the real engine's bucket-capacity constraint (feeds the memory
+    /// estimator's table rule).
+    pub fn max_batch_for(&self, l: u32, s: u32) -> Option<u32> {
+        self.buckets
+            .iter()
+            .filter(|b| b.s == s && b.l >= l)
+            .map(|b| b.n)
+            .max()
+    }
+
+    pub fn bucket_path(&self, b: &Bucket) -> PathBuf {
+        self.dir.join(&b.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn art_dir() -> PathBuf {
+        // CARGO_MANIFEST_DIR = repo root (workspace layout keeps rust/ inside)
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        art_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&art_dir()).unwrap();
+        assert_eq!(m.model.pad_id, 0);
+        assert_eq!(m.model.eos_id, 1);
+        assert!(m.model.kv_bytes_per_token > 0);
+        assert!(!m.buckets.is_empty());
+        for b in &m.buckets {
+            assert!(m.bucket_path(b).exists(), "missing {:?}", b.file);
+        }
+    }
+
+    #[test]
+    fn pick_rounds_up() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(&art_dir()).unwrap();
+        let s = m.slice_lens()[0];
+        // exact hit
+        let b = m.pick(1, 16, s).unwrap();
+        assert_eq!((b.n, b.l), (1, 16));
+        // round up both dims
+        let b = m.pick(3, 17, s).unwrap();
+        assert!(b.n >= 3 && b.l >= 17);
+        assert_eq!(b.n, 4, "smallest n-bucket >= 3");
+        assert_eq!(b.l, 32, "smallest l-bucket >= 17");
+        // unsatisfiable
+        assert!(m.pick(1000, 16, s).is_none());
+        assert!(m.pick(1, 100_000, s).is_none());
+    }
+
+    #[test]
+    fn max_batch_for_caps() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(&art_dir()).unwrap();
+        let s = m.slice_lens()[0];
+        assert_eq!(m.max_batch_for(16, s), Some(8));
+        assert_eq!(m.max_batch_for(100_000, s), None);
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(Manifest::load(Path::new("/nonexistent-dir-xyz")).is_err());
+    }
+}

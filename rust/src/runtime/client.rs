@@ -1,0 +1,235 @@
+//! PJRT execution of the AOT slice-serving programs.
+//!
+//! One `ModelRuntime` owns a PJRT CPU client plus lazily-compiled
+//! executables per bucket (compile once, run many). The HLO-text →
+//! HloModuleProto → XlaComputation → compile path follows
+//! /opt/xla-example/load_hlo (text is the id-safe interchange format).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifacts::{Bucket, Manifest};
+
+/// Output of one slice execution.
+#[derive(Debug, Clone)]
+pub struct SliceResult {
+    /// Generated tokens, one row per bucket row (N × S; rows past the real
+    /// batch are filler). Columns ≥ `iters` are PAD.
+    pub gen: Vec<Vec<i32>>,
+    /// Decode iterations actually executed (< S ⇒ early return).
+    pub iters: u32,
+    /// Wall-clock seconds of the PJRT execution.
+    pub wall: f64,
+}
+
+/// PJRT client + compiled executable cache for one worker.
+pub struct ModelRuntime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    compiled: HashMap<(u32, u32, u32), xla::PjRtLoadedExecutable>,
+}
+
+impl ModelRuntime {
+    /// Create a runtime over an artifact directory (loads the manifest;
+    /// compiles lazily on first use of each bucket).
+    pub fn new(artifacts_dir: &Path) -> Result<ModelRuntime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(ModelRuntime {
+            manifest,
+            client,
+            compiled: HashMap::new(),
+        })
+    }
+
+    /// Pre-compile every bucket (startup cost instead of first-request
+    /// latency — what a production deployment does).
+    pub fn warmup(&mut self) -> Result<()> {
+        let buckets: Vec<Bucket> = self.manifest.buckets.clone();
+        for b in &buckets {
+            self.ensure_compiled(b)?;
+        }
+        Ok(())
+    }
+
+    fn ensure_compiled(&mut self, b: &Bucket) -> Result<()> {
+        let key = (b.n, b.l, b.s);
+        if self.compiled.contains_key(&key) {
+            return Ok(());
+        }
+        let path = self.manifest.bucket_path(b);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {path:?}: {e:?}"))?;
+        self.compiled.insert(key, exe);
+        Ok(())
+    }
+
+    /// Execute one slice on a bucket.
+    ///
+    /// * `tokens`: row-major (bucket.n × bucket.l) LEFT-padded token ids.
+    /// * `lengths`: true length per row (filler rows: 1).
+    /// * `active`: 1 for real requests, 0 for filler rows.
+    /// * `gen_offset`: tokens generated in prior slices per row.
+    pub fn execute_slice(
+        &mut self,
+        bucket: &Bucket,
+        tokens: &[i32],
+        lengths: &[i32],
+        active: &[i32],
+        gen_offset: &[i32],
+    ) -> Result<SliceResult> {
+        let (n, l, s) = (bucket.n as usize, bucket.l as usize, bucket.s as usize);
+        anyhow::ensure!(tokens.len() == n * l, "tokens must be n*l");
+        anyhow::ensure!(lengths.len() == n && active.len() == n && gen_offset.len() == n);
+        self.ensure_compiled(bucket)?;
+        let exe = self
+            .compiled
+            .get(&(bucket.n, bucket.l, bucket.s))
+            .expect("just compiled");
+
+        let tok_lit = xla::Literal::vec1(tokens)
+            .reshape(&[n as i64, l as i64])
+            .map_err(|e| anyhow!("reshape tokens: {e:?}"))?;
+        let len_lit = xla::Literal::vec1(lengths);
+        let act_lit = xla::Literal::vec1(active);
+        let off_lit = xla::Literal::vec1(gen_offset);
+
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(&[tok_lit, len_lit, act_lit, off_lit])
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let wall = t0.elapsed().as_secs_f64();
+
+        // aot.py lowers with return_tuple=True: (gen (N,S) i32, iters i32).
+        let (gen_lit, iters_lit) = result
+            .to_tuple2()
+            .map_err(|e| anyhow!("tuple2: {e:?}"))?;
+        let flat: Vec<i32> = gen_lit
+            .to_vec::<i32>()
+            .map_err(|e| anyhow!("gen to_vec: {e:?}"))?;
+        anyhow::ensure!(flat.len() == n * s, "gen shape mismatch");
+        let iters: u32 = iters_lit
+            .to_vec::<i32>()
+            .map_err(|e| anyhow!("iters to_vec: {e:?}"))?
+            .first()
+            .copied()
+            .context("empty iters literal")? as u32;
+
+        let gen = flat.chunks(s).map(|c| c.to_vec()).collect();
+        Ok(SliceResult { gen, iters, wall })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn art_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        art_dir().join("manifest.json").exists()
+    }
+
+    /// Build a left-padded row batch for the smallest bucket.
+    fn padded(rows: &[&[i32]], l: usize) -> (Vec<i32>, Vec<i32>) {
+        let mut toks = Vec::new();
+        let mut lens = Vec::new();
+        for r in rows {
+            let mut row = vec![0i32; l - r.len()];
+            row.extend_from_slice(r);
+            toks.extend(row);
+            lens.push(r.len() as i32);
+        }
+        (toks, lens)
+    }
+
+    #[test]
+    fn executes_smallest_bucket() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut rt = ModelRuntime::new(&art_dir()).unwrap();
+        let s = rt.manifest.slice_lens()[0];
+        let bucket = rt.manifest.pick(1, 16, s).unwrap().clone();
+        let (toks, lens) = padded(&[&[5, 6, 7, 8]], bucket.l as usize);
+        let res = rt
+            .execute_slice(&bucket, &toks, &lens, &[1], &[0])
+            .unwrap();
+        assert_eq!(res.gen.len(), 1);
+        assert_eq!(res.gen[0].len(), bucket.s as usize);
+        assert!(res.iters >= 1 && res.iters <= bucket.s);
+        assert!(res.wall > 0.0);
+        // generated tokens in-range, no PAD/BOS before the iters cut
+        for &t in &res.gen[0][..res.iters as usize] {
+            assert!(t >= 1 && t < rt.manifest.model.vocab as i32);
+            assert_ne!(t, rt.manifest.model.bos_id);
+        }
+    }
+
+    #[test]
+    fn deterministic_across_calls() {
+        if !have_artifacts() {
+            return;
+        }
+        let mut rt = ModelRuntime::new(&art_dir()).unwrap();
+        let s = rt.manifest.slice_lens()[0];
+        let bucket = rt.manifest.pick(2, 16, s).unwrap().clone();
+        let (toks, lens) = padded(&[&[10, 11, 12], &[20, 21, 22, 23, 24]], bucket.l as usize);
+        let a = rt
+            .execute_slice(&bucket, &toks, &lens, &[1, 1], &[0, 0])
+            .unwrap();
+        let b = rt
+            .execute_slice(&bucket, &toks, &lens, &[1, 1], &[0, 0])
+            .unwrap();
+        assert_eq!(a.gen, b.gen);
+        assert_eq!(a.iters, b.iters);
+    }
+
+    #[test]
+    fn filler_rows_do_not_change_active_rows() {
+        if !have_artifacts() {
+            return;
+        }
+        let mut rt = ModelRuntime::new(&art_dir()).unwrap();
+        let s = rt.manifest.slice_lens()[0];
+        let b1 = rt.manifest.pick(1, 16, s).unwrap().clone();
+        let (t1, l1) = padded(&[&[9, 8, 7, 6, 5]], b1.l as usize);
+        let solo = rt.execute_slice(&b1, &t1, &l1, &[1], &[0]).unwrap();
+
+        let b2 = rt.manifest.pick(2, 16, s).unwrap().clone();
+        let (t2, l2) = padded(&[&[9, 8, 7, 6, 5], &[3]], b2.l as usize);
+        let dual = rt
+            .execute_slice(&b2, &t2, &l2, &[1, 0], &[0, 0])
+            .unwrap();
+        // Row 0's stream must be identical whether or not filler rides along.
+        let k = solo.iters.min(dual.iters) as usize;
+        assert_eq!(solo.gen[0][..k], dual.gen[0][..k]);
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        if !have_artifacts() {
+            return;
+        }
+        let mut rt = ModelRuntime::new(&art_dir()).unwrap();
+        let s = rt.manifest.slice_lens()[0];
+        let bucket = rt.manifest.pick(1, 16, s).unwrap().clone();
+        assert!(rt
+            .execute_slice(&bucket, &[1, 2, 3], &[3], &[1], &[0])
+            .is_err());
+    }
+}

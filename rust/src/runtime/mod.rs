@@ -1,0 +1,9 @@
+//! PJRT runtime: load the AOT HLO-text artifacts and execute them from the
+//! Rust hot path. Python never runs here — `make artifacts` is the only
+//! compile-path step (see python/compile/aot.py and DESIGN.md).
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{Bucket, Manifest};
+pub use client::{ModelRuntime, SliceResult};

@@ -1,0 +1,79 @@
+//! Adaptive schedule-interval update (paper §4.6, Eq. 12):
+//!
+//!   T ← max( λ · min_w T_load(w), Γ )
+//!
+//! Light cluster load ⇒ short interval (requests don't linger in the
+//! pool); deep worker queues ⇒ long interval (more requests accumulate per
+//! tick, bigger batches). λ < 1 hedges against over-estimated load; Γ
+//! prevents starving the batcher when load is under-estimated.
+
+use crate::offloader::LoadLedger;
+
+#[derive(Debug, Clone)]
+pub enum IntervalController {
+    /// Fixed interval (the PM/AB/LB ablations use Γ).
+    Fixed(f64),
+    /// Eq. (12) (full SCLS).
+    Adaptive { lambda: f64, gamma: f64 },
+}
+
+impl IntervalController {
+    /// Next schedule interval given the current worker-load ledger.
+    pub fn next_interval(&self, ledger: &LoadLedger) -> f64 {
+        match self {
+            IntervalController::Fixed(t) => *t,
+            IntervalController::Adaptive { lambda, gamma } => {
+                (lambda * ledger.min()).max(*gamma)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_is_constant() {
+        let c = IntervalController::Fixed(3.0);
+        let mut l = LoadLedger::new(2);
+        assert_eq!(c.next_interval(&l), 3.0);
+        l.add(0, 100.0);
+        assert_eq!(c.next_interval(&l), 3.0);
+    }
+
+    #[test]
+    fn adaptive_floors_at_gamma() {
+        let c = IntervalController::Adaptive {
+            lambda: 0.5,
+            gamma: 6.0,
+        };
+        let l = LoadLedger::new(2); // all idle -> min load 0
+        assert_eq!(c.next_interval(&l), 6.0);
+    }
+
+    #[test]
+    fn adaptive_grows_with_min_load() {
+        let c = IntervalController::Adaptive {
+            lambda: 0.5,
+            gamma: 6.0,
+        };
+        let mut l = LoadLedger::new(2);
+        l.add(0, 40.0);
+        l.add(1, 20.0); // min = 20 -> T = 10
+        assert_eq!(c.next_interval(&l), 10.0);
+    }
+
+    #[test]
+    fn adaptive_tracks_min_not_max() {
+        let c = IntervalController::Adaptive {
+            lambda: 0.5,
+            gamma: 1.0,
+        };
+        let mut l = LoadLedger::new(3);
+        l.add(0, 100.0);
+        l.add(1, 100.0);
+        // worker 2 idle -> interval = gamma, keeping the idle worker fed
+        assert_eq!(c.next_interval(&l), 1.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! Scheduling policies: SCLS (the paper's contribution, §4), the SLS and
+//! ILS baselines (§5.1), and the SO/PM/AB/LB ablation ladder (§5.4).
+//!
+//! The policies are expressed as pure configuration over four orthogonal
+//! axes (`SchedulerSpec`); the DES driver (`sim::driver`) and the real-mode
+//! driver (`worker::real_driver`) interpret them. ILS is structurally
+//! different (continuous batching) and has its own driver path.
+
+pub mod interval;
+pub mod pool;
+pub mod spec;
+
+pub use interval::IntervalController;
+pub use pool::RequestPool;
+pub use spec::{BatchingSpec, IntervalSpec, OffloadSpec, SchedulerSpec};

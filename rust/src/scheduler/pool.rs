@@ -1,0 +1,75 @@
+//! The request pool (paper Fig. 7): newly arrived requests and uncompleted
+//! rescheduled requests wait here between schedule ticks.
+
+use crate::core::Request;
+
+#[derive(Debug, Default)]
+pub struct RequestPool {
+    requests: Vec<Request>,
+}
+
+impl RequestPool {
+    pub fn new() -> RequestPool {
+        RequestPool {
+            requests: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, r: Request) {
+        self.requests.push(r);
+    }
+
+    /// Drain everything (SCLS "periodically fetches all requests", §4.1).
+    pub fn fetch_all(&mut self) -> Vec<Request> {
+        std::mem::take(&mut self.requests)
+    }
+
+    /// Drain at most `n`, in arrival order of insertion (FCFS baselines).
+    pub fn fetch_up_to(&mut self, n: usize) -> Vec<Request> {
+        if n >= self.requests.len() {
+            return self.fetch_all();
+        }
+        let rest = self.requests.split_off(n);
+        std::mem::replace(&mut self.requests, rest)
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> Request {
+        Request::new(id, 0.0, 10, 10)
+    }
+
+    #[test]
+    fn fetch_all_drains() {
+        let mut p = RequestPool::new();
+        p.push(req(1));
+        p.push(req(2));
+        let all = p.fetch_all();
+        assert_eq!(all.len(), 2);
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn fetch_up_to_preserves_order() {
+        let mut p = RequestPool::new();
+        for i in 0..5 {
+            p.push(req(i));
+        }
+        let first = p.fetch_up_to(2);
+        assert_eq!(first.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(p.len(), 3);
+        let rest = p.fetch_up_to(10);
+        assert_eq!(rest.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 3, 4]);
+    }
+}

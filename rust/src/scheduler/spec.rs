@@ -1,0 +1,198 @@
+//! Declarative scheduler specifications.
+//!
+//! Every sliced-family policy in the paper is a point in a 4-axis space:
+//!
+//! | policy | slice len | batching            | offload     | interval  |
+//! |--------|-----------|---------------------|-------------|-----------|
+//! | SLS    | max_gen   | worker FCFS (fixed) | round-robin | immediate |
+//! | SO     | S         | worker FCFS (fixed) | round-robin | immediate |
+//! | PM     | S         | DP, capped          | round-robin | fixed Γ   |
+//! | AB     | S         | DP, uncapped        | round-robin | fixed Γ   |
+//! | LB     | S         | DP, uncapped        | max-min     | fixed Γ   |
+//! | SCLS   | S         | DP, uncapped        | max-min     | Eq. (12)  |
+//!
+//! ILS (continuous batching) is structurally different and carried as its
+//! own variant.
+
+use crate::engine::presets::EnginePreset;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum BatchingSpec {
+    /// Requests are offloaded individually; each *worker* forms FCFS
+    /// batches of `batch_size` from its local queue (SLS/SO).
+    WorkerFcfs { batch_size: u32 },
+    /// The coordinator runs Algorithm 1 over the pool each tick.
+    Dp { max_batch_size: Option<u32> },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OffloadSpec {
+    RoundRobin,
+    MaxMin,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum IntervalSpec {
+    /// Dispatch on arrival / completion (no pooling) — SLS/SO.
+    Immediate,
+    /// Fixed tick of Γ seconds — PM/AB/LB.
+    Fixed(f64),
+    /// Eq. (12) — SCLS.
+    Adaptive { lambda: f64, gamma: f64 },
+}
+
+/// A fully specified sliced-family scheduler.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedulerSpec {
+    pub name: &'static str,
+    /// Iteration limit per schedule (S; == max_gen_len for SLS).
+    pub slice_len: u32,
+    pub batching: BatchingSpec,
+    pub offload: OffloadSpec,
+    pub interval: IntervalSpec,
+}
+
+impl SchedulerSpec {
+    /// Conventional sequence-level scheduling (§5.1 baseline).
+    pub fn sls(preset: &EnginePreset, max_gen_len: u32) -> SchedulerSpec {
+        SchedulerSpec {
+            name: "SLS",
+            slice_len: max_gen_len,
+            batching: BatchingSpec::WorkerFcfs {
+                batch_size: preset.sls_batch_size,
+            },
+            offload: OffloadSpec::RoundRobin,
+            interval: IntervalSpec::Immediate,
+        }
+    }
+
+    /// Ablation: Slice-Only (§5.4).
+    pub fn slice_only(preset: &EnginePreset, slice_len: u32) -> SchedulerSpec {
+        SchedulerSpec {
+            name: "SO",
+            slice_len,
+            batching: BatchingSpec::WorkerFcfs {
+                batch_size: preset.sls_batch_size,
+            },
+            offload: OffloadSpec::RoundRobin,
+            interval: IntervalSpec::Immediate,
+        }
+    }
+
+    /// Ablation: Padding-Mitigating (§5.4) — capped DP, fixed Γ, RR.
+    pub fn padding_mitigating(preset: &EnginePreset, slice_len: u32) -> SchedulerSpec {
+        SchedulerSpec {
+            name: "PM",
+            slice_len,
+            batching: BatchingSpec::Dp {
+                max_batch_size: Some(preset.sls_batch_size),
+            },
+            offload: OffloadSpec::RoundRobin,
+            interval: IntervalSpec::Fixed(preset.gamma),
+        }
+    }
+
+    /// Ablation: Adaptive-Batching (§5.4) — uncapped DP, fixed Γ, RR.
+    pub fn adaptive_batching(preset: &EnginePreset, slice_len: u32) -> SchedulerSpec {
+        SchedulerSpec {
+            name: "AB",
+            slice_len,
+            batching: BatchingSpec::Dp {
+                max_batch_size: None,
+            },
+            offload: OffloadSpec::RoundRobin,
+            interval: IntervalSpec::Fixed(preset.gamma),
+        }
+    }
+
+    /// Ablation: Load-Balancing (§5.4) — AB + max-min.
+    pub fn load_balancing(preset: &EnginePreset, slice_len: u32) -> SchedulerSpec {
+        SchedulerSpec {
+            name: "LB",
+            slice_len,
+            batching: BatchingSpec::Dp {
+                max_batch_size: None,
+            },
+            offload: OffloadSpec::MaxMin,
+            interval: IntervalSpec::Fixed(preset.gamma),
+        }
+    }
+
+    /// Full SCLS (§4).
+    pub fn scls(preset: &EnginePreset, slice_len: u32) -> SchedulerSpec {
+        SchedulerSpec {
+            name: "SCLS",
+            slice_len,
+            batching: BatchingSpec::Dp {
+                max_batch_size: None,
+            },
+            offload: OffloadSpec::MaxMin,
+            interval: IntervalSpec::Adaptive {
+                lambda: preset.lambda,
+                gamma: preset.gamma,
+            },
+        }
+    }
+
+    /// The §5.4 ablation ladder in paper order.
+    pub fn ablation_ladder(preset: &EnginePreset, slice_len: u32, max_gen: u32) -> Vec<SchedulerSpec> {
+        vec![
+            SchedulerSpec::sls(preset, max_gen),
+            SchedulerSpec::slice_only(preset, slice_len),
+            SchedulerSpec::padding_mitigating(preset, slice_len),
+            SchedulerSpec::adaptive_batching(preset, slice_len),
+            SchedulerSpec::load_balancing(preset, slice_len),
+            SchedulerSpec::scls(preset, slice_len),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::presets::{EngineKind, EnginePreset};
+
+    #[test]
+    fn ladder_matches_paper_axes() {
+        let p = EnginePreset::paper(EngineKind::Ds);
+        let ladder = SchedulerSpec::ablation_ladder(&p, 128, 1024);
+        let names: Vec<&str> = ladder.iter().map(|s| s.name).collect();
+        assert_eq!(names, vec!["SLS", "SO", "PM", "AB", "LB", "SCLS"]);
+
+        // SLS: slice == max gen, fixed batching.
+        assert_eq!(ladder[0].slice_len, 1024);
+        assert!(matches!(
+            ladder[0].batching,
+            BatchingSpec::WorkerFcfs { batch_size: 12 }
+        ));
+        // PM caps DP at the engine's fixed batch size.
+        assert!(matches!(
+            ladder[2].batching,
+            BatchingSpec::Dp {
+                max_batch_size: Some(12)
+            }
+        ));
+        // LB switches offload to max-min.
+        assert_eq!(ladder[4].offload, OffloadSpec::MaxMin);
+        assert_eq!(ladder[3].offload, OffloadSpec::RoundRobin);
+        // SCLS switches interval to adaptive.
+        assert!(matches!(
+            ladder[5].interval,
+            IntervalSpec::Adaptive { .. }
+        ));
+    }
+
+    #[test]
+    fn hf_uses_batch_16_gamma_6() {
+        let p = EnginePreset::paper(EngineKind::Hf);
+        let sls = SchedulerSpec::sls(&p, 1024);
+        assert!(matches!(
+            sls.batching,
+            BatchingSpec::WorkerFcfs { batch_size: 16 }
+        ));
+        let scls = SchedulerSpec::scls(&p, 128);
+        assert!(
+            matches!(scls.interval, IntervalSpec::Adaptive { lambda, gamma } if lambda == 0.5 && gamma == 6.0)
+        );
+    }
+}

@@ -1,0 +1,6 @@
+//! Discrete-event simulation substrate.
+
+pub mod driver;
+pub mod events;
+
+pub use events::EventQueue;

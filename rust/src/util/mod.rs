@@ -1,0 +1,9 @@
+//! Substrate utilities hand-rolled for the offline environment (no serde,
+//! rand, clap, or criterion in the vendored registry — see DESIGN.md).
+
+pub mod cli;
+pub mod json;
+pub mod linalg;
+pub mod logging;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,227 @@
+//! Descriptive statistics + histograms for the metrics layer and the bench
+//! harness (offline registry has no statistics crates).
+
+/// Mean of a slice; 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation; 0.0 for len < 2.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Linear-interpolated percentile (p in [0, 100]). Sorts a copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, p)
+}
+
+/// Percentile over an already-sorted slice.
+pub fn percentile_sorted(v: &[f64], p: f64) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = rank - lo as f64;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+/// Root-mean-square error between predictions and observations.
+pub fn rmse(pred: &[f64], obs: &[f64]) -> f64 {
+    assert_eq!(pred.len(), obs.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let se: f64 = pred
+        .iter()
+        .zip(obs)
+        .map(|(p, o)| (p - o) * (p - o))
+        .sum();
+    (se / pred.len() as f64).sqrt()
+}
+
+/// Fixed-bin histogram over [lo, hi); out-of-range values clamp to edge bins.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub bins: Vec<u64>,
+    pub count: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, n_bins: usize) -> Self {
+        assert!(hi > lo && n_bins > 0);
+        Histogram {
+            lo,
+            hi,
+            bins: vec![0; n_bins],
+            count: 0,
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        let n = self.bins.len();
+        let idx = ((x - self.lo) / (self.hi - self.lo) * n as f64).floor();
+        let idx = idx.clamp(0.0, (n - 1) as f64) as usize;
+        self.bins[idx] += 1;
+        self.count += 1;
+    }
+
+    /// Probability density per bin (integrates to ~1 over the range).
+    pub fn pdf(&self) -> Vec<f64> {
+        let w = (self.hi - self.lo) / self.bins.len() as f64;
+        let n = self.count.max(1) as f64;
+        self.bins.iter().map(|&c| c as f64 / n / w).collect()
+    }
+
+    /// Cumulative distribution at each bin's right edge.
+    pub fn cdf(&self) -> Vec<f64> {
+        let n = self.count.max(1) as f64;
+        let mut acc = 0u64;
+        self.bins
+            .iter()
+            .map(|&c| {
+                acc += c;
+                acc as f64 / n
+            })
+            .collect()
+    }
+
+    pub fn bin_centers(&self) -> Vec<f64> {
+        let w = (self.hi - self.lo) / self.bins.len() as f64;
+        (0..self.bins.len())
+            .map(|i| self.lo + w * (i as f64 + 0.5))
+            .collect()
+    }
+}
+
+/// Streaming accumulator: count/mean/min/max/std without storing samples.
+#[derive(Debug, Clone, Default)]
+pub struct Accum {
+    pub n: u64,
+    mean: f64,
+    m2: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Accum {
+    pub fn new() -> Self {
+        Accum {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Welford online update.
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.mean
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / self.n as f64).sqrt()
+        }
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.mean * self.n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basic() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rmse_zero_for_exact() {
+        assert_eq!(rmse(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        assert!((rmse(&[0.0, 0.0], &[3.0, 4.0]) - (12.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_pdf_cdf() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..10 {
+            h.add(i as f64 + 0.5);
+        }
+        let pdf = h.pdf();
+        assert!(pdf.iter().all(|&p| (p - 0.1).abs() < 1e-12));
+        let cdf = h.cdf();
+        assert!((cdf[9] - 1.0).abs() < 1e-12);
+        assert!((cdf[4] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_clamps() {
+        let mut h = Histogram::new(0.0, 1.0, 2);
+        h.add(-5.0);
+        h.add(5.0);
+        assert_eq!(h.bins, vec![1, 1]);
+    }
+
+    #[test]
+    fn accum_matches_batch() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.5];
+        let mut a = Accum::new();
+        for &x in &xs {
+            a.add(x);
+        }
+        assert!((a.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((a.std() - std_dev(&xs)).abs() < 1e-12);
+        assert_eq!(a.min, 1.0);
+        assert_eq!(a.max, 5.5);
+    }
+}

@@ -1,0 +1,6 @@
+//! Real-mode cluster: OS-thread workers executing the PJRT engine, driven
+//! by the same scheduler specs as the DES (wall clock instead of virtual).
+
+pub mod real_driver;
+
+pub use real_driver::{run_real, RealClusterConfig};

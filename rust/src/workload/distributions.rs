@@ -1,0 +1,244 @@
+//! Request length distributions calibrated to the paper's Fig. 6.
+//!
+//! The paper analyzes two sources: the CodeFuse production trace (code
+//! assistant: generation lengths mode ≈ 100–300, "vast majority < 512") and
+//! ~400k ShareGPT conversations (chat: heavier mid-range mass). Neither
+//! dataset is available offline, so we model each as a clipped lognormal
+//! mixture whose PDF/CDF reproduce Fig. 6's qualitative shape; Fig. 6 is
+//! regenerated from these models by `figure fig6`.
+//!
+//! Input lengths are likewise mixtures (short questions + long
+//! code/context pastes), truncated at the configured maximum (paper: 1024).
+
+use crate::util::rng::Rng;
+
+/// One mixture component: lognormal(mu, sigma) with weight `w`.
+#[derive(Debug, Clone, Copy)]
+pub struct LogNormalComp {
+    pub w: f64,
+    pub mu: f64,
+    pub sigma: f64,
+}
+
+/// A clipped lognormal mixture over token counts.
+#[derive(Debug, Clone)]
+pub struct LengthDistribution {
+    pub comps: Vec<LogNormalComp>,
+    /// Inclusive lower clip (lengths are at least 1 token).
+    pub min: u32,
+    /// Inclusive upper clip (the paper's maximal length limit, 1024).
+    pub max: u32,
+}
+
+impl LengthDistribution {
+    pub fn sample(&self, rng: &mut Rng) -> u32 {
+        let ws: Vec<f64> = self.comps.iter().map(|c| c.w).collect();
+        let c = &self.comps[rng.weighted_index(&ws)];
+        let x = rng.lognormal(c.mu, c.sigma);
+        (x.round() as i64).clamp(self.min as i64, self.max as i64) as u32
+    }
+
+    /// Analytic PDF of the clipped mixture (mass at the clip bounds is
+    /// folded into the edge, matching how `sample` clamps).
+    pub fn pdf(&self, x: f64) -> f64 {
+        if x < self.min as f64 || x > self.max as f64 || x <= 0.0 {
+            return 0.0;
+        }
+        let wsum: f64 = self.comps.iter().map(|c| c.w).sum();
+        self.comps
+            .iter()
+            .map(|c| {
+                let z = (x.ln() - c.mu) / c.sigma;
+                c.w / wsum * (-0.5 * z * z).exp()
+                    / (x * c.sigma * (2.0 * std::f64::consts::PI).sqrt())
+            })
+            .sum()
+    }
+
+    /// Empirical CDF from `n` samples (used by Fig. 6).
+    pub fn empirical_cdf(&self, rng: &mut Rng, n: usize, at: &[f64]) -> Vec<f64> {
+        let mut xs: Vec<u32> = (0..n).map(|_| self.sample(rng)).collect();
+        xs.sort_unstable();
+        at.iter()
+            .map(|&t| {
+                let cnt = xs.partition_point(|&x| (x as f64) <= t);
+                cnt as f64 / n as f64
+            })
+            .collect()
+    }
+}
+
+/// Sampled lengths for one request.
+#[derive(Debug, Clone, Copy)]
+pub struct LengthSample {
+    pub input_len: u32,
+    pub gen_len: u32,
+}
+
+/// CodeFuse-like generation lengths (Fig. 6a): code-assistant answers —
+/// strong mode around 100–250 tokens, thin tail, almost everything < 512.
+pub fn codefuse_gen(max: u32) -> LengthDistribution {
+    LengthDistribution {
+        comps: vec![
+            // short confirmations / snippets
+            LogNormalComp { w: 0.35, mu: 3.6, sigma: 0.7 },  // median ~37
+            // typical code answers
+            LogNormalComp { w: 0.55, mu: 5.1, sigma: 0.55 }, // median ~164
+            // long generations (rare)
+            LogNormalComp { w: 0.10, mu: 6.3, sigma: 0.5 },  // median ~545
+        ],
+        min: 1,
+        max,
+    }
+}
+
+/// CodeFuse-like input lengths: short prompts plus pasted code/context.
+pub fn codefuse_input(max: u32) -> LengthDistribution {
+    LengthDistribution {
+        comps: vec![
+            LogNormalComp { w: 0.5, mu: 4.0, sigma: 0.8 },  // median ~55
+            LogNormalComp { w: 0.4, mu: 5.5, sigma: 0.7 },  // median ~245
+            LogNormalComp { w: 0.1, mu: 6.7, sigma: 0.4 },  // median ~812
+        ],
+        min: 1,
+        max,
+    }
+}
+
+/// ShareGPT-like generation lengths (Fig. 6b): chat — heavier mid-range
+/// mass than CodeFuse, still predominantly < 512.
+pub fn sharegpt_gen(max: u32) -> LengthDistribution {
+    LengthDistribution {
+        comps: vec![
+            LogNormalComp { w: 0.30, mu: 3.2, sigma: 0.9 },  // short replies
+            LogNormalComp { w: 0.55, mu: 5.3, sigma: 0.6 },  // typical answers
+            LogNormalComp { w: 0.15, mu: 6.2, sigma: 0.45 }, // long answers
+        ],
+        min: 1,
+        max,
+    }
+}
+
+/// ShareGPT-like input lengths.
+pub fn sharegpt_input(max: u32) -> LengthDistribution {
+    LengthDistribution {
+        comps: vec![
+            LogNormalComp { w: 0.6, mu: 3.8, sigma: 0.9 },
+            LogNormalComp { w: 0.4, mu: 5.6, sigma: 0.8 },
+        ],
+        min: 1,
+        max,
+    }
+}
+
+/// Named workload presets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkloadKind {
+    CodeFuse,
+    ShareGpt,
+}
+
+impl WorkloadKind {
+    pub fn parse(s: &str) -> Option<WorkloadKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "codefuse" => Some(WorkloadKind::CodeFuse),
+            "sharegpt" => Some(WorkloadKind::ShareGpt),
+            _ => None,
+        }
+    }
+
+    pub fn gen_dist(&self, max: u32) -> LengthDistribution {
+        match self {
+            WorkloadKind::CodeFuse => codefuse_gen(max),
+            WorkloadKind::ShareGpt => sharegpt_gen(max),
+        }
+    }
+
+    pub fn input_dist(&self, max: u32) -> LengthDistribution {
+        match self {
+            WorkloadKind::CodeFuse => codefuse_input(max),
+            WorkloadKind::ShareGpt => sharegpt_input(max),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_within_clip() {
+        let mut rng = Rng::new(1);
+        let d = codefuse_gen(1024);
+        for _ in 0..5000 {
+            let x = d.sample(&mut rng);
+            assert!((1..=1024).contains(&x));
+        }
+    }
+
+    #[test]
+    fn codefuse_majority_below_512() {
+        // The paper's central observation (§3.3): "the vast majority of
+        // requests have a small generation length of less than 512".
+        let mut rng = Rng::new(2);
+        let d = codefuse_gen(1024);
+        let n = 50_000;
+        let below = (0..n).filter(|_| d.sample(&mut rng) < 512).count();
+        let frac = below as f64 / n as f64;
+        assert!(frac > 0.85, "only {frac:.3} below 512");
+    }
+
+    #[test]
+    fn sharegpt_majority_below_512() {
+        let mut rng = Rng::new(3);
+        let d = sharegpt_gen(1024);
+        let n = 50_000;
+        let below = (0..n).filter(|_| d.sample(&mut rng) < 512).count();
+        let frac = below as f64 / n as f64;
+        assert!(frac > 0.80, "only {frac:.3} below 512");
+    }
+
+    #[test]
+    fn long_requests_rare_but_exist() {
+        let mut rng = Rng::new(4);
+        let d = codefuse_gen(1024);
+        let n = 50_000;
+        let long = (0..n).filter(|_| d.sample(&mut rng) >= 512).count();
+        assert!(long > 0, "tail must exist");
+        assert!((long as f64) / (n as f64) < 0.15);
+    }
+
+    #[test]
+    fn pdf_integrates_to_about_one() {
+        let d = sharegpt_gen(1024);
+        // trapezoid over [1, 1024]
+        let steps = 4096;
+        let mut acc = 0.0;
+        for i in 0..steps {
+            let x0 = 1.0 + (1023.0 * i as f64) / steps as f64;
+            let x1 = 1.0 + (1023.0 * (i + 1) as f64) / steps as f64;
+            acc += 0.5 * (d.pdf(x0) + d.pdf(x1)) * (x1 - x0);
+        }
+        // clipping moves some mass to the bounds, so < 1 but close
+        assert!(acc > 0.85 && acc <= 1.001, "integral {acc}");
+    }
+
+    #[test]
+    fn empirical_cdf_monotone() {
+        let mut rng = Rng::new(5);
+        let d = codefuse_gen(1024);
+        let at: Vec<f64> = (0..=16).map(|i| (i * 64) as f64).collect();
+        let cdf = d.empirical_cdf(&mut rng, 20_000, &at);
+        for w in cdf.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+        assert!((cdf[at.len() - 1] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kind_parse() {
+        assert_eq!(WorkloadKind::parse("codefuse"), Some(WorkloadKind::CodeFuse));
+        assert_eq!(WorkloadKind::parse("ShareGPT"), Some(WorkloadKind::ShareGpt));
+        assert_eq!(WorkloadKind::parse("x"), None);
+    }
+}

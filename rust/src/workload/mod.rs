@@ -1,0 +1,7 @@
+//! Workload generation: the paper's request traces (§3.3, §5.1).
+
+pub mod distributions;
+pub mod trace;
+
+pub use distributions::{LengthDistribution, LengthSample};
+pub use trace::{Trace, TraceConfig};

@@ -1,0 +1,238 @@
+//! Request trace generation and (de)serialization.
+//!
+//! The paper sends requests "in the order they actually arrived" from the
+//! CodeFuse trace, with Poisson arrival times at various rates for 10
+//! minutes (§5.1 Workflow). We generate the equivalent synthetic trace:
+//! exponential inter-arrivals at `rate` req/s for `duration` seconds, with
+//! input/generation lengths drawn from the workload distributions.
+
+use crate::core::Request;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::distributions::WorkloadKind;
+
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    pub kind: WorkloadKind,
+    /// Mean arrival rate, requests/second.
+    pub rate: f64,
+    /// Trace duration in seconds (paper: 600).
+    pub duration: f64,
+    /// Maximal raw input length; longer inputs are truncated (paper: 1024).
+    pub max_input_len: u32,
+    /// Maximal generation length limit (paper: 1024). Used as the length
+    /// distribution clip; the serving-time cap is enforced by the engine.
+    pub max_gen_len: u32,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            kind: WorkloadKind::CodeFuse,
+            rate: 20.0,
+            duration: 600.0,
+            max_input_len: 1024,
+            max_gen_len: 1024,
+            seed: 42,
+        }
+    }
+}
+
+/// A generated request trace.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub requests: Vec<Request>,
+    pub config_rate: f64,
+    pub duration: f64,
+}
+
+impl Trace {
+    /// Poisson-process trace with lengths from the workload distributions.
+    pub fn generate(cfg: &TraceConfig) -> Trace {
+        let mut rng = Rng::new(cfg.seed);
+        let input_dist = cfg.kind.input_dist(cfg.max_input_len);
+        let gen_dist = cfg.kind.gen_dist(cfg.max_gen_len);
+
+        let mut requests = Vec::new();
+        let mut t = 0.0;
+        let mut id = 0u64;
+        loop {
+            t += rng.exponential(cfg.rate);
+            if t >= cfg.duration {
+                break;
+            }
+            let input_len = input_dist.sample(&mut rng);
+            let gen_len = gen_dist.sample(&mut rng);
+            requests.push(Request::new(id, t, input_len, gen_len));
+            id += 1;
+        }
+        Trace {
+            requests,
+            config_rate: cfg.rate,
+            duration: cfg.duration,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    // ---- persistence (JSON) ------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let reqs: Vec<Json> = self
+            .requests
+            .iter()
+            .map(|r| {
+                let mut o = Json::obj();
+                o.set("id", r.id)
+                    .set("arrival", r.arrival)
+                    .set("input_len", r.input_len)
+                    .set("gen_len", r.target_gen_len);
+                o
+            })
+            .collect();
+        let mut o = Json::obj();
+        o.set("rate", self.config_rate)
+            .set("duration", self.duration)
+            .set("requests", Json::Arr(reqs));
+        o
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Trace> {
+        let rate = j
+            .get("rate")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow::anyhow!("trace: missing rate"))?;
+        let duration = j
+            .get("duration")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow::anyhow!("trace: missing duration"))?;
+        let arr = j
+            .get("requests")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("trace: missing requests"))?;
+        let mut requests = Vec::with_capacity(arr.len());
+        for r in arr {
+            let get_u32 = |k: &str| -> anyhow::Result<u32> {
+                r.get(k)
+                    .and_then(Json::as_i64)
+                    .map(|x| x as u32)
+                    .ok_or_else(|| anyhow::anyhow!("trace request: missing {k}"))
+            };
+            requests.push(Request::new(
+                r.get("id")
+                    .and_then(Json::as_i64)
+                    .ok_or_else(|| anyhow::anyhow!("trace request: missing id"))?
+                    as u64,
+                r.get("arrival")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow::anyhow!("trace request: missing arrival"))?,
+                get_u32("input_len")?,
+                get_u32("gen_len")?,
+            ));
+        }
+        Ok(Trace {
+            requests,
+            config_rate: rate,
+            duration,
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_string_compact())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Trace> {
+        let s = std::fs::read_to_string(path)?;
+        Trace::from_json(&Json::parse(&s)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> TraceConfig {
+        TraceConfig {
+            duration: 60.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn arrivals_sorted_and_bounded() {
+        let t = Trace::generate(&cfg());
+        for w in t.requests.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+        assert!(t.requests.iter().all(|r| r.arrival < 60.0));
+    }
+
+    #[test]
+    fn rate_approximately_respected() {
+        let t = Trace::generate(&TraceConfig {
+            duration: 600.0,
+            rate: 20.0,
+            ..cfg()
+        });
+        let n = t.len() as f64;
+        // Poisson(12000): ±4 sigma ≈ ±440
+        assert!((n - 12_000.0).abs() < 500.0, "n = {n}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = Trace::generate(&cfg());
+        let b = Trace::generate(&cfg());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.input_len, y.input_len);
+            assert_eq!(x.target_gen_len, y.target_gen_len);
+        }
+        let c = Trace::generate(&TraceConfig {
+            seed: 7,
+            ..cfg()
+        });
+        assert_ne!(
+            a.requests.iter().map(|r| r.input_len).collect::<Vec<_>>(),
+            c.requests.iter().map(|r| r.input_len).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn lengths_respect_limits() {
+        let t = Trace::generate(&TraceConfig {
+            max_input_len: 128,
+            max_gen_len: 64,
+            ..cfg()
+        });
+        assert!(t.requests.iter().all(|r| r.input_len <= 128));
+        assert!(t.requests.iter().all(|r| r.target_gen_len <= 64));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = Trace::generate(&TraceConfig {
+            duration: 5.0,
+            ..cfg()
+        });
+        let j = t.to_json();
+        let back = Trace::from_json(&j).unwrap();
+        assert_eq!(back.len(), t.len());
+        for (x, y) in t.requests.iter().zip(&back.requests) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.input_len, y.input_len);
+            assert_eq!(x.target_gen_len, y.target_gen_len);
+            assert!((x.arrival - y.arrival).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,288 @@
+//! Integration tests: full DES experiments exercising the pool → batcher →
+//! offloader → worker pipeline across schedulers, engines, workloads and
+//! rates, checking the cross-module invariants the paper's design relies
+//! on (request conservation, token accounting, scheduling semantics, and
+//! the headline performance orderings).
+
+use scls::engine::presets::{EngineKind, EnginePreset};
+use scls::metrics::RunMetrics;
+use scls::scheduler::spec::SchedulerSpec;
+use scls::sim::driver::{run_ils, run_sliced, SimConfig};
+use scls::workload::distributions::WorkloadKind;
+use scls::workload::{Trace, TraceConfig};
+
+fn trace(kind: WorkloadKind, rate: f64, duration: f64, seed: u64) -> Trace {
+    Trace::generate(&TraceConfig {
+        kind,
+        rate,
+        duration,
+        max_input_len: 1024,
+        max_gen_len: 1024,
+        seed,
+    })
+}
+
+fn sim(workers: usize, kind: EngineKind, seed: u64) -> SimConfig {
+    SimConfig::new(workers, EnginePreset::paper(kind), 1024, seed)
+}
+
+/// Every request injected must complete exactly once, with plausible
+/// token counts and non-negative response times.
+fn assert_conservation(trace: &Trace, m: &RunMetrics) {
+    assert_eq!(m.completed.len(), trace.len(), "requests lost or duplicated");
+    let mut seen = vec![false; trace.len()];
+    for c in &m.completed {
+        assert!(!seen[c.id as usize], "request {} completed twice", c.id);
+        seen[c.id as usize] = true;
+        assert!(c.finished >= c.arrival, "finished before arrival");
+        assert!(c.generated >= 1 && c.generated <= 1024);
+    }
+    // Generated tokens are capped by the request's own oracle + limit.
+    for c in &m.completed {
+        let want = trace.requests[c.id as usize].target_gen_len.min(1024);
+        assert_eq!(c.generated, want, "request {} token count", c.id);
+    }
+}
+
+#[test]
+fn all_schedulers_conserve_requests_on_both_engines() {
+    for kind in [EngineKind::Hf, EngineKind::Ds] {
+        let preset = EnginePreset::paper(kind);
+        let t = trace(WorkloadKind::CodeFuse, 6.0, 40.0, 101);
+        for spec in SchedulerSpec::ablation_ladder(&preset, 128, 1024) {
+            let m = run_sliced(&t, &spec, &sim(4, kind, 101));
+            assert_conservation(&t, &m);
+        }
+    }
+}
+
+#[test]
+fn ils_conserves_requests() {
+    let t = trace(WorkloadKind::CodeFuse, 6.0, 40.0, 102);
+    let m = run_ils(&t, &sim(4, EngineKind::Ds, 102));
+    assert_conservation(&t, &m);
+    // Continuous batching never pads and never generates invalid tokens.
+    assert!(m.completed.iter().all(|c| c.pad_tokens == 0));
+    assert!(m.completed.iter().all(|c| c.invalid_tokens == 0));
+    // Exactly one schedule per request.
+    assert!(m.completed.iter().all(|c| c.slices == 1));
+}
+
+#[test]
+fn sharegpt_workload_also_served() {
+    let preset = EnginePreset::paper(EngineKind::Ds);
+    let t = trace(WorkloadKind::ShareGpt, 6.0, 40.0, 103);
+    let m = run_sliced(&t, &SchedulerSpec::scls(&preset, 128), &sim(4, EngineKind::Ds, 103));
+    assert_conservation(&t, &m);
+}
+
+#[test]
+fn sls_serves_each_request_exactly_once() {
+    // SLS's iteration limit equals the max generation length, so no
+    // request is ever rescheduled (paper Fig. 1a).
+    let preset = EnginePreset::paper(EngineKind::Ds);
+    let t = trace(WorkloadKind::CodeFuse, 4.0, 30.0, 104);
+    let m = run_sliced(&t, &SchedulerSpec::sls(&preset, 1024), &sim(4, EngineKind::Ds, 104));
+    assert!(m.completed.iter().all(|c| c.slices == 1));
+    // ... and therefore batches never exceed the fixed batch size.
+    assert!(m.batches.iter().all(|b| b.size <= preset.sls_batch_size));
+}
+
+#[test]
+fn scls_slice_counts_cover_generation() {
+    // ceil(generated / S) ≤ slices (a request may also ride along in
+    // batches whose other members cut the slice short — early returns —
+    // so equality need not hold, but coverage must).
+    let preset = EnginePreset::paper(EngineKind::Ds);
+    let t = trace(WorkloadKind::CodeFuse, 4.0, 30.0, 105);
+    for s_len in [64u32, 128, 256] {
+        let m = run_sliced(&t, &SchedulerSpec::scls(&preset, s_len), &sim(4, EngineKind::Ds, 105));
+        for c in &m.completed {
+            let min_slices = (c.generated as f64 / s_len as f64).ceil() as u32;
+            assert!(
+                c.slices >= min_slices,
+                "S={s_len} req {}: {} slices for {} tokens",
+                c.id,
+                c.slices,
+                c.generated
+            );
+        }
+    }
+}
+
+#[test]
+fn scls_batches_respect_memory_rules() {
+    // Every batch the DP forms must be feasible under Algorithm 2 (DS).
+    let preset = EnginePreset::paper(EngineKind::Ds);
+    let mem = preset.memory_estimator();
+    let t = trace(WorkloadKind::CodeFuse, 10.0, 60.0, 106);
+    let m = run_sliced(&t, &SchedulerSpec::scls(&preset, 128), &sim(4, EngineKind::Ds, 106));
+    for b in &m.batches {
+        assert!(
+            !mem.would_oom(b.size, b.input_len, 128),
+            "batch (N={}, L={}) violates Algorithm 2",
+            b.size,
+            b.input_len
+        );
+    }
+}
+
+#[test]
+fn batch_input_len_is_max_member_and_pads_consistent() {
+    let preset = EnginePreset::paper(EngineKind::Hf);
+    let t = trace(WorkloadKind::CodeFuse, 6.0, 40.0, 107);
+    let m = run_sliced(&t, &SchedulerSpec::scls(&preset, 128), &sim(4, EngineKind::Hf, 107));
+    // Pad accounting: per-batch pad counter equals Σ (L_batch − L_req).
+    // We can't see members here, but the total per-request pad sum across
+    // completions must equal the per-batch records' total.
+    let batch_pads: u64 = m.batches.iter().map(|b| b.pad_tokens).sum();
+    let req_pads: u64 = m.completed.iter().map(|c| c.pad_tokens).sum();
+    assert_eq!(batch_pads, req_pads, "pad token books disagree");
+}
+
+#[test]
+fn headline_orderings_hold_at_saturation() {
+    // Fig. 5 / Fig. 12 shapes at modest scale: SCLS beats SLS and ILS on
+    // throughput; ILS beats SLS (continuous batching helps); SCLS has the
+    // lowest completion-time spread.
+    let t = trace(WorkloadKind::CodeFuse, 16.0, 90.0, 108);
+    let preset = EnginePreset::paper(EngineKind::Ds);
+    let cfg = sim(8, EngineKind::Ds, 108);
+    let scls = run_sliced(&t, &SchedulerSpec::scls(&preset, 128), &cfg).summarize();
+    let sls = run_sliced(&t, &SchedulerSpec::sls(&preset, 1024), &cfg).summarize();
+    let ils = run_ils(&t, &cfg).summarize();
+    assert!(scls.throughput > sls.throughput);
+    assert!(scls.throughput > ils.throughput);
+    assert!(ils.throughput > sls.throughput);
+    assert!(scls.avg_response_time < sls.avg_response_time);
+    assert!(scls.ct_std <= sls.ct_std, "{} > {}", scls.ct_std, sls.ct_std);
+}
+
+#[test]
+fn ablation_ladder_improves_monotonically_ish() {
+    // Each added feature should not collapse throughput; the full ladder
+    // end-to-end must strictly improve on its start (Fig. 15).
+    let t = trace(WorkloadKind::CodeFuse, 16.0, 90.0, 109);
+    let preset = EnginePreset::paper(EngineKind::Ds);
+    let cfg = sim(8, EngineKind::Ds, 109);
+    let ladder = SchedulerSpec::ablation_ladder(&preset, 128, 1024);
+    let thpt: Vec<f64> = ladder
+        .iter()
+        .map(|spec| run_sliced(&t, spec, &cfg).summarize().throughput)
+        .collect();
+    let names: Vec<&str> = ladder.iter().map(|s| s.name).collect();
+    // SLS -> SCLS strictly better.
+    assert!(
+        thpt[5] > 1.5 * thpt[0],
+        "ladder {names:?} throughput {thpt:?}"
+    );
+    // AB (uncapped DP) ≥ PM (capped): larger batches can only help here.
+    assert!(thpt[3] > 0.9 * thpt[2], "AB vs PM: {thpt:?}");
+    // LB (max-min) must not hurt throughput relative to AB.
+    assert!(thpt[4] > 0.9 * thpt[3], "LB vs AB: {thpt:?}");
+}
+
+#[test]
+fn throughput_scales_with_workers() {
+    // Fig. 22: linear-ish scaling while saturated.
+    let t = trace(WorkloadKind::CodeFuse, 24.0, 60.0, 110);
+    let preset = EnginePreset::paper(EngineKind::Ds);
+    let t1 = run_sliced(&t, &SchedulerSpec::scls(&preset, 128), &sim(1, EngineKind::Ds, 110))
+        .summarize()
+        .throughput;
+    let t4 = run_sliced(&t, &SchedulerSpec::scls(&preset, 128), &sim(4, EngineKind::Ds, 110))
+        .summarize()
+        .throughput;
+    assert!(t4 > 2.5 * t1, "4 workers {t4} vs 1 worker {t1}");
+}
+
+#[test]
+fn empty_trace_is_a_noop() {
+    let t = Trace {
+        requests: vec![],
+        config_rate: 0.0,
+        duration: 0.0,
+    };
+    let preset = EnginePreset::paper(EngineKind::Ds);
+    let m = run_sliced(&t, &SchedulerSpec::scls(&preset, 128), &sim(2, EngineKind::Ds, 1));
+    assert_eq!(m.completed.len(), 0);
+    assert!(m.batches.is_empty());
+    let m = run_ils(&t, &sim(2, EngineKind::Ds, 1));
+    assert_eq!(m.completed.len(), 0);
+}
+
+#[test]
+fn single_request_burst_and_tail_arrival() {
+    // A burst of identical arrivals at t=0 plus one straggler arriving
+    // long after the burst drains.
+    let mut requests: Vec<scls::core::Request> = (0..20)
+        .map(|i| scls::core::Request::new(i, 0.0, 100, 50))
+        .collect();
+    requests.push(scls::core::Request::new(20, 500.0, 100, 50));
+    let t = Trace {
+        requests,
+        config_rate: 0.0,
+        duration: 501.0,
+    };
+    let preset = EnginePreset::paper(EngineKind::Ds);
+    let m = run_sliced(&t, &SchedulerSpec::scls(&preset, 128), &sim(2, EngineKind::Ds, 7));
+    assert_eq!(m.completed.len(), 21);
+    let straggler = m.completed.iter().find(|c| c.id == 20).unwrap();
+    assert!(straggler.finished > 500.0);
+    // The straggler should not have waited for the burst (system idle).
+    assert!(straggler.finished - straggler.arrival < 60.0);
+}
+
+#[test]
+fn deterministic_across_runs_all_schedulers() {
+    let t = trace(WorkloadKind::CodeFuse, 6.0, 30.0, 112);
+    for kind in [EngineKind::Hf, EngineKind::Ds] {
+        let preset = EnginePreset::paper(kind);
+        for spec in SchedulerSpec::ablation_ladder(&preset, 128, 1024) {
+            let a = run_sliced(&t, &spec, &sim(3, kind, 112));
+            let b = run_sliced(&t, &spec, &sim(3, kind, 112));
+            assert_eq!(a.batches.len(), b.batches.len(), "{}", spec.name);
+            assert_eq!(
+                a.summarize().avg_response_time,
+                b.summarize().avg_response_time,
+                "{}",
+                spec.name
+            );
+        }
+    }
+}
+
+#[test]
+fn adaptive_interval_outperforms_na_fixed_interval_on_response_time() {
+    // Eq. (12)'s purpose: when load is light, shrink T so requests don't
+    // sit in the pool. Compare SCLS (adaptive) against LB with a very long
+    // fixed interval at a light rate.
+    use scls::scheduler::spec::IntervalSpec;
+    let t = trace(WorkloadKind::CodeFuse, 2.0, 60.0, 113);
+    let preset = EnginePreset::paper(EngineKind::Ds);
+    let cfg = sim(4, EngineKind::Ds, 113);
+    let scls = run_sliced(&t, &SchedulerSpec::scls(&preset, 128), &cfg).summarize();
+    let mut slow = SchedulerSpec::load_balancing(&preset, 128);
+    slow.interval = IntervalSpec::Fixed(12.0);
+    let fixed = run_sliced(&t, &slow, &cfg).summarize();
+    assert!(
+        scls.avg_response_time < fixed.avg_response_time,
+        "adaptive {} !< fixed-12s {}",
+        scls.avg_response_time,
+        fixed.avg_response_time
+    );
+}
+
+#[test]
+fn early_returns_are_rare_at_paper_settings() {
+    // Fig. 14b: < 1% of batch servings early-return at S=128.
+    let t = trace(WorkloadKind::CodeFuse, 16.0, 90.0, 114);
+    let preset = EnginePreset::paper(EngineKind::Ds);
+    let m = run_sliced(&t, &SchedulerSpec::scls(&preset, 128), &sim(8, EngineKind::Ds, 114));
+    let s = m.summarize();
+    assert!(
+        s.early_return_ratio < 0.05,
+        "early-return ratio {}",
+        s.early_return_ratio
+    );
+}

@@ -1,0 +1,321 @@
+//! Property-based tests of the coordinator invariants (via `testprop`,
+//! the in-tree property framework): the DP batcher (Alg. 1), the max-min
+//! offloader (Eq. 11), the memory rules (Eq. 5–9 / Alg. 2), the
+//! serving-time estimator (Eq. 1–4), and the interval controller (Eq. 12).
+
+use scls::batcher::{dp_batch, fcfs_batches, DpBatcherConfig};
+use scls::core::{Batch, Request};
+use scls::engine::presets::{EngineKind, EnginePreset};
+use scls::estimator::serving_time::ServeEstimate;
+use scls::offloader::{LoadLedger, MaxMinOffloader};
+use scls::scheduler::IntervalController;
+use scls::sim::driver::fitted_estimator;
+use scls::testprop::{check, Gen};
+use scls::{prop_assert, prop_assert_eq};
+
+fn gen_requests(g: &mut Gen, max_n: usize) -> Vec<Request> {
+    g.vec(1, max_n, |g| {
+        Request::new(g.u64(), 0.0, g.u32(1, 1024), g.u32(1, 1024))
+    })
+    .into_iter()
+    .enumerate()
+    .map(|(i, mut r)| {
+        r.id = i as u64; // unique ids
+        r
+    })
+    .collect()
+}
+
+fn preset_for(g: &mut Gen) -> EnginePreset {
+    if g.bool() {
+        EnginePreset::paper(EngineKind::Hf)
+    } else {
+        EnginePreset::paper(EngineKind::Ds)
+    }
+}
+
+#[test]
+fn dp_batch_partitions_without_loss_or_duplication() {
+    check("dp-partition", 200, |g| {
+        let preset = preset_for(g);
+        let est = fitted_estimator(&preset, 3);
+        let mem = preset.memory_estimator();
+        let slice_len = *g.pick(&[32u32, 64, 128, 256]);
+        let reqs = gen_requests(g, 80);
+        let n = reqs.len();
+        let mut ids: Vec<u64> = reqs.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+
+        let batches = dp_batch(
+            reqs,
+            &est,
+            &mem,
+            &DpBatcherConfig {
+                slice_len,
+                max_batch_size: if g.bool() { Some(g.u32(1, 16)) } else { None },
+            },
+        );
+        let mut got: Vec<u64> = batches.iter().flat_map(|b| b.requests.iter().map(|r| r.id)).collect();
+        got.sort_unstable();
+        prop_assert_eq!(got.len(), n, "request count changed");
+        prop_assert_eq!(got, ids, "request set changed");
+        Ok(())
+    });
+}
+
+#[test]
+fn dp_batches_are_contiguous_in_sorted_order_and_feasible() {
+    check("dp-feasible", 200, |g| {
+        let preset = preset_for(g);
+        let est = fitted_estimator(&preset, 4);
+        let mem = preset.memory_estimator();
+        let slice_len = *g.pick(&[64u32, 128]);
+        let cap = if g.bool() { Some(g.u32(1, 20)) } else { None };
+        let reqs = gen_requests(g, 60);
+        let batches = dp_batch(
+            reqs,
+            &est,
+            &mem,
+            &DpBatcherConfig {
+                slice_len,
+                max_batch_size: cap,
+            },
+        );
+        let mut last_max = 0u32;
+        for b in &batches {
+            let bmax = b.input_len();
+            let bmin = b.requests.iter().map(|r| r.input_len).min().unwrap();
+            // Contiguity in the sorted order: this batch's min ≥ previous
+            // batch's max.
+            prop_assert!(bmin >= last_max, "batches interleave: {bmin} < {last_max}");
+            last_max = bmax;
+            // Feasibility: memory rule and optional cap.
+            let n = b.size() as u32;
+            prop_assert!(
+                n == 1 || !mem.would_oom(n, bmax, slice_len),
+                "infeasible batch N={n} L={bmax} S={slice_len}"
+            );
+            if let Some(c) = cap {
+                prop_assert!(n <= c.max(1), "cap {c} violated by N={n}");
+            }
+            // est_serve_time was filled with the batch's own estimate.
+            let want = est.serve_est(n, bmax, slice_len);
+            prop_assert!(
+                (b.est_serve_time - want).abs() < 1e-9,
+                "stale est_serve_time"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn dp_total_time_never_worse_than_fcfs_or_singletons() {
+    check("dp-optimal-vs-baselines", 120, |g| {
+        let preset = preset_for(g);
+        let est = fitted_estimator(&preset, 5);
+        let mem = preset.memory_estimator();
+        let slice_len = 128;
+        let reqs = gen_requests(g, 40);
+
+        let total = |bs: &[Batch]| -> f64 { bs.iter().map(|b| b.est_serve_time).sum() };
+
+        let dp = dp_batch(
+            reqs.clone(),
+            &est,
+            &mem,
+            &DpBatcherConfig {
+                slice_len,
+                max_batch_size: None,
+            },
+        );
+        // Baseline 1: every request its own batch.
+        let singletons: f64 = reqs
+            .iter()
+            .map(|r| est.serve_est(1, r.input_len, slice_len))
+            .sum();
+        // Baseline 2: FCFS fixed-size batching (the SLS batcher).
+        let fcfs = fcfs_batches(reqs.clone(), preset.sls_batch_size, &est, slice_len);
+
+        prop_assert!(
+            total(&dp) <= singletons + 1e-9,
+            "DP {} worse than singletons {}",
+            total(&dp),
+            singletons
+        );
+        prop_assert!(
+            total(&dp) <= total(&fcfs) + 1e-9,
+            "DP {} worse than FCFS {}",
+            total(&dp),
+            total(&fcfs)
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn dp_respects_algorithm2_feasibility_exactly() {
+    // The DS table rule: N ≤ 28 (L ≤ 512), N ≤ 22 (≤1024), N ≤ 12 (else).
+    check("dp-alg2", 150, |g| {
+        let preset = EnginePreset::paper(EngineKind::Ds);
+        let est = fitted_estimator(&preset, 6);
+        let mem = preset.memory_estimator();
+        let s = 128;
+        let reqs = gen_requests(g, 100);
+        for b in dp_batch(
+            reqs,
+            &est,
+            &mem,
+            &DpBatcherConfig {
+                slice_len: s,
+                max_batch_size: None,
+            },
+        ) {
+            let l = b.input_len() + s;
+            let n = b.size() as u32;
+            let cap = if l > 1024 {
+                12
+            } else if l > 512 {
+                22
+            } else {
+                28
+            };
+            prop_assert!(n <= cap.max(1), "Alg2: N={n} for L={l}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn maxmin_is_lpt_list_scheduling() {
+    check("maxmin-lpt", 200, |g| {
+        let workers = g.usize(1, 12);
+        let batches: Vec<Batch> = g.vec(1, 40, |g| {
+            let mut b = Batch::new(vec![Request::new(g.u64(), 0.0, 10, 10)]);
+            b.est_serve_time = g.f64(0.01, 30.0);
+            b
+        });
+        let times: Vec<f64> = batches.iter().map(|b| b.est_serve_time).collect();
+        let total: f64 = times.iter().sum();
+        let tmax = times.iter().cloned().fold(0.0, f64::max);
+
+        let mut ledger = LoadLedger::new(workers);
+        let out = MaxMinOffloader.offload(batches, &mut ledger);
+
+        // Ledger bookkeeping: per-worker sums match the assignment.
+        let mut sums = vec![0.0f64; workers];
+        for (w, b) in &out {
+            sums[*w] += b.est_serve_time;
+        }
+        for w in 0..workers {
+            prop_assert!((sums[w] - ledger.load(w)).abs() < 1e-9, "ledger drift");
+        }
+        // LPT guarantee: makespan ≤ 4/3·OPT, with OPT ≥ max(total/m, t_max).
+        let opt_lb = (total / workers as f64).max(tmax);
+        prop_assert!(
+            ledger.max() <= 4.0 / 3.0 * opt_lb + 1e-9,
+            "makespan {} > 4/3 × {}",
+            ledger.max(),
+            opt_lb
+        );
+        // Longest-first order.
+        for pair in out.windows(2) {
+            prop_assert!(
+                pair[0].1.est_serve_time >= pair[1].1.est_serve_time - 1e-12,
+                "not longest-first"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn memory_rules_monotone_in_batch_and_length() {
+    check("mem-monotone", 200, |g| {
+        let preset = preset_for(g);
+        let mem = preset.memory_estimator();
+        let n = g.u32(1, 64);
+        let l = g.u32(1, 1024);
+        let s = *g.pick(&[32u32, 128, 512]);
+        if mem.would_oom(n, l, s) {
+            // Monotone: more requests / longer inputs can only stay OOM.
+            prop_assert!(mem.would_oom(n + 1, l, s), "N-monotonicity");
+            prop_assert!(mem.would_oom(n, l + 64, s), "L-monotonicity");
+        }
+        if !mem.would_oom(n, l, s) && n > 1 {
+            prop_assert!(!mem.would_oom(n - 1, l, s), "N-anti-monotonicity");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn estimator_closed_form_matches_iteration_sum() {
+    check("estimator-closed-form", 150, |g| {
+        let preset = preset_for(g);
+        let est = fitted_estimator(&preset, 8);
+        let n = g.u32(1, 32);
+        let li = g.u32(1, 1024);
+        let lo = g.u32(1, 512);
+        let closed = est.decode(n, li, lo);
+        let mut acc = 0.0;
+        for l in (li + 1)..=(li + lo) {
+            acc += est.decode_iter(l, n);
+        }
+        prop_assert!(
+            (closed - acc).abs() <= 1e-6 * acc.max(1.0),
+            "closed {closed} vs sum {acc} (n={n} li={li} lo={lo})"
+        );
+        // Monotonicity in every argument.
+        prop_assert!(est.serve(n + 1, li, lo) >= est.serve(n, li, lo), "N mono");
+        prop_assert!(est.serve(n, li + 1, lo) >= est.serve(n, li, lo), "L mono");
+        prop_assert!(est.serve(n, li, lo + 1) >= est.serve(n, li, lo), "S mono");
+        Ok(())
+    });
+}
+
+#[test]
+fn interval_controller_bounds() {
+    check("interval-eq12", 200, |g| {
+        let lambda = g.f64(0.1, 0.9);
+        let gamma = g.f64(0.5, 6.0);
+        let ctrl = IntervalController::Adaptive { lambda, gamma };
+        let workers = g.usize(1, 8);
+        let mut ledger = LoadLedger::new(workers);
+        for w in 0..workers {
+            ledger.add(w, g.f64(0.0, 100.0));
+        }
+        let t = ctrl.next_interval(&ledger);
+        // Eq. (12): T = max(λ·min_w load, Γ).
+        let want = (lambda * ledger.min()).max(gamma);
+        prop_assert!((t - want).abs() < 1e-12, "T={t} want {want}");
+        prop_assert!(t >= gamma, "below Γ");
+        Ok(())
+    });
+}
+
+#[test]
+fn fcfs_batches_preserve_arrival_order_and_size() {
+    check("fcfs-order", 150, |g| {
+        let preset = preset_for(g);
+        let est = fitted_estimator(&preset, 9);
+        let bs = g.u32(1, 16);
+        let reqs: Vec<Request> = (0..g.usize(1, 50))
+            .map(|i| Request::new(i as u64, i as f64, g.u32(1, 1024), 10))
+            .collect();
+        let n = reqs.len();
+        let batches = fcfs_batches(reqs, bs, &est, 128);
+        // Sizes: all full except possibly the last.
+        for (i, b) in batches.iter().enumerate() {
+            if i + 1 < batches.len() {
+                prop_assert_eq!(b.size(), bs as usize, "non-final batch not full");
+            }
+            prop_assert!(b.size() <= bs as usize, "over-size");
+        }
+        // Order: ids strictly increasing across the concatenation.
+        let ids: Vec<u64> = batches.iter().flat_map(|b| b.requests.iter().map(|r| r.id)).collect();
+        prop_assert_eq!(ids.len(), n, "loss");
+        prop_assert!(ids.windows(2).all(|w| w[0] < w[1]), "order broken");
+        Ok(())
+    });
+}
