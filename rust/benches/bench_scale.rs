@@ -1,0 +1,94 @@
+//! Scale benchmark: drain a paper-shaped 1M-request trace on a 64-worker
+//! SCLS cluster and record the coordinator's real cost (`cargo bench
+//! --bench bench_scale`).
+//!
+//! This is the perf trajectory anchor for the coordinator hot paths: the
+//! DP batcher, the schedule-tick loop, and the DES driver all run at
+//! production pool sizes here (the adaptive interval stretches under
+//! backlog, so late ticks batch hundreds of thousands of pooled requests
+//! at once). Writes `BENCH_scale.json` with events/sec, wall time, and the
+//! peak pool size so future PRs can regress against it.
+//!
+//! Knobs (env): SCLS_SCALE_REQUESTS [1000000], SCLS_SCALE_WORKERS [64],
+//! SCLS_SCALE_RATE [2000], SCLS_SCALE_SLICE [128].
+
+use std::time::Instant;
+
+use scls::engine::presets::{EngineKind, EnginePreset};
+use scls::scheduler::spec::SchedulerSpec;
+use scls::sim::driver::{run_sliced, SimConfig};
+use scls::util::json::Json;
+use scls::workload::distributions::WorkloadKind;
+use scls::workload::{Trace, TraceConfig};
+
+fn env_u64(key: &str, default: u64) -> u64 {
+    std::env::var(key)
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let n_requests = env_u64("SCLS_SCALE_REQUESTS", 1_000_000) as usize;
+    let workers = env_u64("SCLS_SCALE_WORKERS", 64) as usize;
+    let rate = env_u64("SCLS_SCALE_RATE", 2000) as f64;
+    let slice_len = env_u64("SCLS_SCALE_SLICE", 128) as u32;
+
+    // Paper-shaped workload: CodeFuse length distributions, Poisson
+    // arrivals. Generate slightly long, then truncate to the exact count so
+    // the headline number is stable across RNG drift.
+    let gen_start = Instant::now();
+    let mut trace = Trace::generate(&TraceConfig {
+        kind: WorkloadKind::CodeFuse,
+        rate,
+        duration: (n_requests as f64 / rate) * 1.05 + 1.0,
+        max_input_len: 1024,
+        max_gen_len: 1024,
+        seed: 42,
+    });
+    trace.requests.truncate(n_requests);
+    let n = trace.len();
+    println!(
+        "bench_scale: {} requests generated in {:.2} s ({} workers, rate {rate}, S={slice_len})",
+        n,
+        gen_start.elapsed().as_secs_f64(),
+        workers
+    );
+
+    let preset = EnginePreset::paper(EngineKind::Ds);
+    let spec = SchedulerSpec::scls(&preset, slice_len);
+    let sim = SimConfig::new(workers, preset.clone(), 1024, 42);
+
+    let t0 = Instant::now();
+    let m = run_sliced(&trace, &spec, &sim);
+    let wall = t0.elapsed().as_secs_f64();
+
+    assert_eq!(m.completed.len(), n, "scale drain lost requests");
+    let events_per_sec = m.events as f64 / wall.max(1e-9);
+    let s = m.summarize();
+
+    println!("drained {} requests in {wall:.3} s wall", s.completed);
+    println!("events            {}", m.events);
+    println!("events/sec        {events_per_sec:.0}");
+    println!("peak pool size    {}", m.peak_pool);
+    println!("batches served    {}", m.batches.len());
+    println!("virtual makespan  {:.1} s", m.makespan);
+    println!("virtual thpt      {:.2} req/s", s.throughput);
+
+    let mut j = Json::obj();
+    j.set("requests", n as u64)
+        .set("workers", workers as u64)
+        .set("rate", rate)
+        .set("slice_len", slice_len)
+        .set("wall_seconds", wall)
+        .set("events", m.events)
+        .set("events_per_sec", events_per_sec)
+        .set("peak_pool", m.peak_pool as u64)
+        .set("batches", m.batches.len() as u64)
+        .set("virtual_makespan", m.makespan)
+        .set("virtual_throughput", s.throughput)
+        .set("completed", s.completed as u64);
+    let path = "BENCH_scale.json";
+    std::fs::write(path, j.to_string_pretty()).expect("write BENCH_scale.json");
+    println!("wrote {path}");
+}

@@ -8,13 +8,79 @@
 //! where L_i is the i-th (sorted) request's input length — the batch input
 //! length of any batch ending at i — and the inner loop is bounded by the
 //! memory rule's maximal feasible batch at (L_i, S) (Eq. 8; feasibility is
-//! monotone in batch size), making the DP O(n·N_max). By minimizing total
-//! estimated serving time the DP trades padding waste against batch-size
-//! gains (Fig. 11).
+//! monotone in batch size), making the naive DP O(n·N_max). By minimizing
+//! total estimated serving time the DP trades padding waste against
+//! batch-size gains (Fig. 11).
+//!
+//! ## Optimized plan (`dp_plan`)
+//!
+//! The coordinator re-runs this DP on every schedule tick, so the inner
+//! minimization is the hottest loop in the system. [`dp_plan`] computes
+//! **bit-identical** `T[·]`, split positions, and cuts to the retained
+//! naive implementation ([`dp_plan_reference`] / [`dp_batch_reference`]),
+//! but much faster:
+//!
+//! * **Monomorphized estimator calls** — generic over `E: ServeEstimate +
+//!   ?Sized`, so concrete-estimator call sites inline the whole affine
+//!   surface instead of paying a virtual call per DP cell.
+//! * **Per-distinct-length caching** — sorted order puts equal `L_i` next
+//!   to each other; `(N_max, serve_affine, serve_est(1,·,·))` are pure
+//!   functions of `L_i`, computed once per run of equal lengths.
+//! * **Certified branch-and-bound over the window** — when the estimator
+//!   is affine in N at fixed `(L_i, S)` with slope `a ≥ 0` (guaranteed by
+//!   `serve_affine`'s contract), the candidate for start position `j` is
+//!   `c(j) = t[j−1] + A(size_j)` with `A(k) = fl(fl(a·k)+b)` and `size_j`
+//!   *decreasing* in `j`. The scan starts at the largest feasible batch
+//!   (where amortizing the batch-constant cost usually puts the optimum)
+//!   and walks up towards smaller batches, skipping ranges `[j_a, j_hi]`
+//!   wholesale via the certificate
+//!
+//!     c(j') ≥ t[j_a−1] + A(size_{j_hi}) + (j_hi − j_a)·min(γ, a_dn)
+//!
+//!   for every `j'` in the range, where γ is a rounded-down suffix
+//!   minimum of the `T[·]` steps (maintained by a monotone deque over the
+//!   sliding window — valid while the window's left edge only moves
+//!   right, which is verified cell by cell since a user-constructed
+//!   `MemoryRule::Table` may grow capacity with length) and `a_dn` is a
+//!   rounded-down lower bound on the real per-size increment of `A`. The
+//!   `T`-side gains at
+//!   least γ per index while the serve side loses at most the increment,
+//!   so the range's left end minimizes the bound; `T[·]` monotonicity is
+//!   *verified* cell by cell (one comparison each), float rounding is
+//!   monotone, and the computed bound subtracts 4 ulps to absorb its own
+//!   roundings — making it a true lower bound *in float arithmetic*, not
+//!   just in exact math.
+//!
+//! Exactness of the result: every *evaluated* candidate uses bit-for-bit
+//! the reference's expression; the minimum over the evaluated set equals
+//! the minimum over all candidates (skipped ranges are certified strictly
+//! worse than an already-seen candidate, so they can neither lower the
+//! minimum nor win a tie); and ties resolve to the largest `j`, exactly
+//! like the reference's descending scan with strict `<`. If `T[·]` is
+//! ever observed non-monotone (pathological estimator), skipping is
+//! disabled and the scan degenerates to the reference's full window.
+//! Estimators whose `serve_affine` returns `None` (clamp could fire, or a
+//! custom opaque estimator) take the reference scalar loop verbatim.
+//!
+//! `ServeEstimate` implementations must be pure (same inputs → same
+//! outputs); the caching above relies on it, as does the paper's premise
+//! that estimates are a deterministic function of `(N, L_i, S)`.
 
 use crate::core::{Batch, Request};
 use crate::estimator::serving_time::ServeEstimate;
 use crate::estimator::MemoryEstimator;
+
+/// Step a positive finite float down by `k` ulps — a cheap directed-rounding
+/// lower bound (non-positive, infinite, and NaN inputs pass through, which
+/// is conservative everywhere this is used).
+#[inline]
+fn down_ulps(x: f64, k: u64) -> f64 {
+    if x > 0.0 && x.is_finite() {
+        f64::from_bits(x.to_bits().saturating_sub(k))
+    } else {
+        x
+    }
+}
 
 /// Knobs for Algorithm 1.
 #[derive(Debug, Clone)]
@@ -26,12 +92,344 @@ pub struct DpBatcherConfig {
     pub max_batch_size: Option<u32>,
 }
 
+/// Reusable workspace for [`dp_plan`] / [`dp_batch_into`]: the DP tables
+/// and the resulting cuts. Holding one of these across schedule ticks
+/// makes the planner allocation-free in steady state.
+#[derive(Debug, Default)]
+pub struct DpScratch {
+    /// T[i]: minimal total serving time of the first i (sorted) requests.
+    t: Vec<f64>,
+    /// P[i]: split position (start index of the batch ending at i).
+    p: Vec<usize>,
+    /// Monotone deque over T[·] steps (index, step): ascending in both,
+    /// giving O(1) sliding-window *suffix* minima for the skip certificate.
+    steps: Vec<(usize, f64)>,
+    /// The optimal partition as `(start, end)` half-open index pairs into
+    /// the sorted request slice, in ascending order.
+    cuts: Vec<(usize, usize)>,
+}
+
+impl DpScratch {
+    pub fn new() -> DpScratch {
+        DpScratch::default()
+    }
+
+    /// The cuts produced by the most recent plan.
+    pub fn cuts(&self) -> &[(usize, usize)] {
+        &self.cuts
+    }
+}
+
 /// Partition `requests` into batches minimizing total estimated serving
 /// time. Returns batches with `est_serve_time` filled in.
 ///
 /// Requests are consumed. Batches preserve the sorted order (each batch is
 /// a contiguous run of the sorted request list).
-pub fn dp_batch(
+pub fn dp_batch<E: ServeEstimate + ?Sized>(
+    mut requests: Vec<Request>,
+    est: &E,
+    mem: &MemoryEstimator,
+    cfg: &DpBatcherConfig,
+) -> Vec<Batch> {
+    let mut scratch = DpScratch::new();
+    let mut out = Vec::new();
+    dp_batch_into(&mut requests, est, mem, cfg, &mut scratch, &mut out);
+    out
+}
+
+/// Allocation-lean variant of [`dp_batch`] for per-tick callers: drains
+/// `requests` (leaving its capacity intact for reuse), reuses `scratch`,
+/// and pushes the batches into `out` (cleared first).
+pub fn dp_batch_into<E: ServeEstimate + ?Sized>(
+    requests: &mut Vec<Request>,
+    est: &E,
+    mem: &MemoryEstimator,
+    cfg: &DpBatcherConfig,
+    scratch: &mut DpScratch,
+    out: &mut Vec<Batch>,
+) {
+    out.clear();
+    if requests.is_empty() {
+        // Keep the scratch's public cuts() consistent with this run.
+        scratch.cuts.clear();
+        return;
+    }
+    // Line 1: sort ascending by current input length (stable: equal-length
+    // requests keep arrival order — FCFS among ties).
+    requests.sort_by_key(|r| r.input_len);
+    dp_plan(requests, est, mem, cfg, scratch);
+    materialize_into(requests, &scratch.cuts, est, cfg.slice_len, out);
+}
+
+/// Run the optimized DP over an already-sorted request slice, leaving the
+/// optimal cuts in `scratch` (see module docs for the exactness argument).
+pub fn dp_plan<E: ServeEstimate + ?Sized>(
+    sorted: &[Request],
+    est: &E,
+    mem: &MemoryEstimator,
+    cfg: &DpBatcherConfig,
+    scratch: &mut DpScratch,
+) {
+    debug_assert!(sorted.windows(2).all(|w| w[0].input_len <= w[1].input_len));
+    let n = sorted.len();
+    let s = cfg.slice_len;
+    scratch.cuts.clear();
+    if n == 0 {
+        return;
+    }
+    scratch.t.clear();
+    scratch.t.resize(n + 1, 0.0);
+    scratch.p.clear();
+    scratch.p.resize(n + 1, 0);
+    scratch.steps.clear();
+    let t = &mut scratch.t;
+    let p = &mut scratch.p;
+    let dq = &mut scratch.steps;
+    let mut dq_head = 0usize;
+
+    // Verified cell by cell; the skip certificate relies on it (see
+    // module docs).
+    let mut t_monotone = true;
+    // The deque window only slides right when N_max is non-increasing
+    // along the sorted order (true for the analytic rule and descending
+    // tables, but `MemoryRule::Table` is user-constructible with growing
+    // capacities). Once j_lo ever moves left, dropped deque entries
+    // cannot be recovered, so skipping shuts off for good.
+    let mut j_lo_monotone = true;
+    let mut last_j_lo = 0usize;
+
+    // (N_max, affine surface, singleton cost, A-increment lower bound)
+    // are pure functions of L_i; sorted order makes equal lengths
+    // adjacent, so cache per run.
+    let mut have_cache = false;
+    let mut cached_l = 0u32;
+    let mut cached_n_max = 1u32;
+    let mut cached_affine: Option<(f64, f64)> = None;
+    let mut cached_single = 0.0f64;
+    let mut cached_a_dn = 0.0f64;
+
+    for i in 1..=n {
+        let l_i = sorted[i - 1].input_len;
+        if !have_cache || l_i != cached_l {
+            // Feasibility is monotone in batch size (Eq. 8), so the window
+            // bound is known up front: the memory rule's max batch at
+            // (L_i, S) intersected with the PM cap.
+            let mut n_max = mem.max_batch(l_i, s).max(1);
+            if let Some(cap) = cfg.max_batch_size {
+                n_max = n_max.min(cap.max(1));
+            }
+            cached_l = l_i;
+            cached_n_max = n_max;
+            // At fixed (L_i, S) both fitted estimators are affine in N, so
+            // the candidate cost is one mul-add per step instead of a full
+            // surface evaluation (None if the clamp could fire).
+            cached_affine = est.serve_affine(l_i, s);
+            cached_single = est.serve_est(1, l_i, s);
+            cached_a_dn = 0.0;
+            if let Some((a, b)) = cached_affine {
+                // Conservative lower bound on the real per-size increment
+                // of A(k) = fl(fl(a·k)+b): the rounding error of each A is
+                // below ulp(|a|·K + |b|), so an 8·ε·magnitude slack is a
+                // safe under-estimate of every real increment.
+                let slack = (a.abs() * n_max as f64 + b.abs()) * (f64::EPSILON * 8.0);
+                let a_dn = a - slack;
+                if a_dn > 0.0 {
+                    cached_a_dn = a_dn;
+                }
+            }
+            have_cache = true;
+        }
+        let n_max = cached_n_max;
+
+        // Lines 6–8: request i alone as a batch (wins ties against every
+        // multi-request candidate, as in the reference's strict `<`).
+        p[i] = i - 1;
+        t[i] = t[i - 1] + cached_single;
+
+        // Candidate batches end at i and start at j ∈ [j_lo, i−1]; the
+        // candidate with start j has size i−j+1 ≤ N_max.
+        let j_lo = if (n_max as usize) >= i {
+            1
+        } else {
+            i + 1 - n_max as usize
+        };
+        if j_lo < last_j_lo {
+            j_lo_monotone = false;
+        }
+        last_j_lo = j_lo;
+
+        // Maintain the monotone step deque over indices [j_lo, i−1]: the
+        // entry values ascend, so the suffix minimum of steps from any x
+        // is the first entry with index ≥ x. The two-pointer slide is
+        // valid only while j_lo is non-decreasing (j_lo_monotone above).
+        // A NaN step means T[·] went through inf−inf; certificates shut
+        // off for good in that case.
+        if t_monotone && i >= 2 {
+            let v = t[i - 1] - t[i - 2];
+            if v.is_nan() {
+                t_monotone = false;
+            } else {
+                while dq.len() > dq_head && dq[dq.len() - 1].1 >= v {
+                    dq.pop();
+                }
+                dq.push((i - 1, v));
+            }
+        }
+        while dq.len() > dq_head && dq[dq_head].0 < j_lo {
+            dq_head += 1;
+        }
+
+        if j_lo < i {
+            match cached_affine {
+                Some((a, b)) => {
+                    // Scan upward from the largest feasible batch (j = j_lo)
+                    // towards size 2, tracking the exact running minimum
+                    // (ties → larger j, like the reference's descending
+                    // strict `<`). Between evaluations, try to certify and
+                    // skip ranges [j, hi] wholesale: every candidate there
+                    // costs at least
+                    //   t[j−1] + (a·size_hi + b) + (hi−j)·min(γ, a_dn)
+                    // where γ under-estimates every T-step in the range
+                    // (suffix minimum from the deque, rounded down) and
+                    // a_dn under-estimates every real A-increment — the
+                    // T-side gains at least γ per index while the serve
+                    // side loses at most the increment, so the range's
+                    // left end minimizes the bound. Computed with 4 ulps
+                    // of downward slack to absorb the three roundings, it
+                    // is a true lower bound in float arithmetic; skipped
+                    // candidates are strictly worse than an already-seen
+                    // one, so they can neither lower the minimum nor win
+                    // a tie (ties prefer the largest j, i.e. ranges
+                    // already passed).
+                    let mut m = f64::INFINITY;
+                    let mut jb = 0usize;
+                    let mut j = j_lo;
+                    let mut next_try = j_lo + 1;
+                    let mut ptr = dq_head;
+                    // `serve_affine`'s contract guarantees a ≥ 0, but the
+                    // certificate depends on it, so gate defensively.
+                    let can_skip = t_monotone && j_lo_monotone && a >= 0.0;
+                    while j < i {
+                        if can_skip && m < f64::INFINITY && j >= next_try {
+                            while ptr < dq.len() && dq[ptr].0 < j {
+                                ptr += 1;
+                            }
+                            let gamma = if ptr < dq.len() {
+                                down_ulps(dq[ptr].1, 2)
+                            } else {
+                                0.0
+                            };
+                            let mut coef = if gamma < cached_a_dn {
+                                gamma
+                            } else {
+                                cached_a_dn
+                            };
+                            if coef < 0.0 {
+                                coef = 0.0;
+                            }
+                            // Attempt the whole remainder, then half of it;
+                            // on failure back off until the distance from
+                            // j_lo doubles (keeps worst-case probes within
+                            // a constant factor of the reference).
+                            let hi = i - 1;
+                            let extra = (hi - j) as f64 * coef;
+                            let bound =
+                                down_ulps(t[j - 1] + (a * ((i - hi + 1) as f64) + b) + extra, 4);
+                            if bound > m {
+                                break;
+                            }
+                            if hi > j + 1 {
+                                let hi = j + (hi - j) / 2;
+                                let extra = (hi - j) as f64 * coef;
+                                let bound = down_ulps(
+                                    t[j - 1] + (a * ((i - hi + 1) as f64) + b) + extra,
+                                    4,
+                                );
+                                if bound > m {
+                                    j = hi + 1;
+                                    next_try = j;
+                                    continue;
+                                }
+                            }
+                            next_try = j + (j - j_lo).max(1);
+                        }
+                        let c = t[j - 1] + (a * ((i - j + 1) as f64) + b);
+                        if c < m || (c == m && j > jb) {
+                            m = c;
+                            jb = j;
+                        }
+                        j += 1;
+                    }
+                    // Strict `<`: the singleton wins exact ties, as in the
+                    // reference.
+                    if m < t[i] {
+                        t[i] = m;
+                        p[i] = jb - 1;
+                    }
+                }
+                None => {
+                    // Opaque estimator: the reference scalar loop verbatim
+                    // (lines 9–15; grow the batch backwards while memory
+                    // allows).
+                    let mut j = i - 1;
+                    while j >= j_lo {
+                        let size = (i - j + 1) as u32;
+                        let serve = est.serve_est(size, l_i, s);
+                        let cand = t[j - 1] + serve;
+                        if cand < t[i] {
+                            t[i] = cand;
+                            p[i] = j - 1;
+                        }
+                        j -= 1;
+                    }
+                }
+            }
+        }
+        // NaN enters t[·] only through its own cell, so checking the new
+        // cell for NaN keeps the flag sound without negated comparisons.
+        if t[i] < t[i - 1] || t[i].is_nan() {
+            t_monotone = false;
+        }
+    }
+
+    // Lines 16–20: walk the split positions backwards.
+    let mut i = n;
+    while i > 0 {
+        let start = p[i];
+        scratch.cuts.push((start, i));
+        i = start;
+    }
+    scratch.cuts.reverse();
+}
+
+/// Materialize batches from cuts by draining the sorted request buffer in
+/// one pass (buffer keeps its capacity for reuse by per-tick callers).
+fn materialize_into<E: ServeEstimate + ?Sized>(
+    requests: &mut Vec<Request>,
+    cuts: &[(usize, usize)],
+    est: &E,
+    slice_len: u32,
+    out: &mut Vec<Batch>,
+) {
+    out.reserve(cuts.len());
+    let mut drain = requests.drain(..);
+    for &(start, end) in cuts {
+        let members: Vec<Request> = drain.by_ref().take(end - start).collect();
+        debug_assert_eq!(members.len(), end - start);
+        let mut b = Batch::new(members);
+        b.est_serve_time = est.serve_est(b.size() as u32, b.input_len(), slice_len);
+        out.push(b);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Retained naive reference (the seed's quadratic implementation, verbatim)
+// ---------------------------------------------------------------------------
+
+/// The original O(n·N_max) DP, retained as the differential-testing and
+/// benchmarking baseline. [`dp_batch`] must produce bit-identical cuts and
+/// `est_serve_time` values to this function on every input.
+pub fn dp_batch_reference(
     mut requests: Vec<Request>,
     est: &dyn ServeEstimate,
     mem: &MemoryEstimator,
@@ -40,35 +438,49 @@ pub fn dp_batch(
     if requests.is_empty() {
         return Vec::new();
     }
-    let s = cfg.slice_len;
-    // Line 1: sort ascending by current input length (stable: equal-length
-    // requests keep arrival order — FCFS among ties).
     requests.sort_by_key(|r| r.input_len);
-    let n = requests.len();
+    let cuts = dp_plan_reference(&requests, est, mem, cfg);
 
-    // T[i]: minimal total serving time of the first i requests; P[i]: split.
+    // Materialize batches (preserve sorted order).
+    let mut batches = Vec::with_capacity(cuts.len());
+    let mut rest = requests;
+    for &(start, end) in cuts.iter().rev() {
+        let tail = rest.split_off(start);
+        debug_assert_eq!(tail.len(), end - start);
+        let mut b = Batch::new(tail);
+        b.est_serve_time = est.serve_est(b.size() as u32, b.input_len(), cfg.slice_len);
+        batches.push(b);
+    }
+    batches.reverse();
+    batches
+}
+
+/// The seed's quadratic planning loop over an already-sorted slice,
+/// allocating its tables per call exactly as the original did.
+pub fn dp_plan_reference(
+    sorted: &[Request],
+    est: &dyn ServeEstimate,
+    mem: &MemoryEstimator,
+    cfg: &DpBatcherConfig,
+) -> Vec<(usize, usize)> {
+    let n = sorted.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let s = cfg.slice_len;
     let mut t = vec![0.0f64; n + 1];
     let mut p = vec![0usize; n + 1];
 
     for i in 1..=n {
-        let l_i = requests[i - 1].input_len;
-        // Feasibility is monotone in batch size (Eq. 8), so the inner-loop
-        // bound is known up front: the memory rule's max batch at (L_i, S)
-        // intersected with the PM cap — one rule query per i instead of one
-        // per (i, j) step.
+        let l_i = sorted[i - 1].input_len;
         let mut n_max = mem.max_batch(l_i, s).max(1);
         if let Some(cap) = cfg.max_batch_size {
             n_max = n_max.min(cap.max(1));
         }
-        // At fixed (L_i, S) both fitted estimators are affine in N, so the
-        // candidate cost is one fma per step instead of a full surface
-        // evaluation (falls back to serve_est if the clamp could fire).
         let affine = est.serve_affine(l_i, s);
 
-        // Lines 6–8: request i alone as a batch.
         p[i] = i - 1;
         t[i] = t[i - 1] + est.serve_est(1, l_i, s);
-        // Lines 9–15: grow the batch backwards while memory allows.
         let mut j = i - 1;
         while j > 0 {
             let size = (i - j + 1) as u32;
@@ -88,7 +500,6 @@ pub fn dp_batch(
         }
     }
 
-    // Lines 16–20: walk the split positions backwards.
     let mut cuts = Vec::new();
     let mut i = n;
     while i > 0 {
@@ -97,19 +508,7 @@ pub fn dp_batch(
         i = start;
     }
     cuts.reverse();
-
-    // Materialize batches (preserve sorted order).
-    let mut batches = Vec::with_capacity(cuts.len());
-    let mut rest = requests;
-    for &(start, end) in cuts.iter().rev() {
-        let tail = rest.split_off(start);
-        debug_assert_eq!(tail.len(), end - start);
-        let mut b = Batch::new(tail);
-        b.est_serve_time = est.serve_est(b.size() as u32, b.input_len(), s);
-        batches.push(b);
-    }
-    batches.reverse();
-    batches
+    cuts
 }
 
 #[cfg(test)]
@@ -150,6 +549,29 @@ mod tests {
         DpBatcherConfig {
             slice_len: s,
             max_batch_size: None,
+        }
+    }
+
+    /// Optimized and reference plans must agree bit-for-bit on cuts and
+    /// estimated serving times.
+    fn assert_matches_reference(
+        lens: &[u32],
+        e: &ServingTimeEstimator,
+        mem: &MemoryEstimator,
+        c: &DpBatcherConfig,
+    ) {
+        let fast = dp_batch(reqs(lens), e, mem, c);
+        let slow = dp_batch_reference(reqs(lens), e, mem, c);
+        assert_eq!(fast.len(), slow.len(), "batch count differs");
+        for (f, s) in fast.iter().zip(&slow) {
+            let fi: Vec<u64> = f.requests.iter().map(|r| r.id).collect();
+            let si: Vec<u64> = s.requests.iter().map(|r| r.id).collect();
+            assert_eq!(fi, si, "cut membership differs");
+            assert_eq!(
+                f.est_serve_time.to_bits(),
+                s.est_serve_time.to_bits(),
+                "est_serve_time differs"
+            );
         }
     }
 
@@ -254,5 +676,98 @@ mod tests {
             let together = e.serve(lens.len() as u32, max_len, 128);
             assert!(dp_total <= together + 1e-9);
         }
+    }
+
+    #[test]
+    fn optimized_matches_reference_on_shapes() {
+        let e = est();
+        let mem = mem_loose();
+        // Fig. 11 shape, homogeneous, strictly increasing, duplicates,
+        // window-straddling sizes.
+        let mut fig11 = vec![10u32; 15];
+        fig11.push(1024);
+        let shapes: Vec<Vec<u32>> = vec![
+            fig11,
+            vec![64; 20],
+            (1..=64).collect(),
+            vec![5, 5, 5, 900, 900, 900, 5, 5],
+            vec![1],
+            vec![1, 1024],
+            (1..=200).map(|x| (x * 37) % 1024 + 1).collect(),
+        ];
+        for lens in &shapes {
+            for s in [32u32, 128, 512] {
+                assert_matches_reference(lens, &e, &mem, &cfg(s));
+                assert_matches_reference(
+                    lens,
+                    &e,
+                    &mem,
+                    &DpBatcherConfig {
+                        slice_len: s,
+                        max_batch_size: Some(6),
+                    },
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn optimized_matches_reference_with_ascending_capacity_table() {
+        // Capacity growing with length moves the window's left edge left
+        // mid-scan; skipping must shut off rather than mis-certify.
+        use crate::estimator::MemoryRule;
+        let e = est();
+        let mem = MemoryEstimator {
+            rule: MemoryRule::Table(vec![(512, 28), (0, 2)]),
+        };
+        let lens: Vec<u32> = (0..120).map(|x| (x * 17) % 1024 + 1).collect();
+        for s in [16u32, 64, 128] {
+            assert_matches_reference(&lens, &e, &mem, &cfg(s));
+        }
+    }
+
+    #[test]
+    fn optimized_matches_reference_under_tight_memory() {
+        let e = est();
+        let delta = 1u64 << 20;
+        for cap_reqs in [1u64, 2, 4, 7] {
+            let budget = cap_reqs * (64 + 128) * delta;
+            let mem = MemoryEstimator::analytic(delta, budget, 1.0);
+            let lens: Vec<u32> = (0..40).map(|x| (x * 13) % 64 + 1).collect();
+            assert_matches_reference(&lens, &e, &mem, &cfg(128));
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_stateless() {
+        // Repeated dp_batch_into calls with one scratch must match fresh
+        // calls exactly.
+        let e = est();
+        let mem = mem_loose();
+        let c = cfg(128);
+        let mut scratch = DpScratch::new();
+        let mut out = Vec::new();
+        for round in 0..4u64 {
+            let lens: Vec<u32> = (0..50u64)
+                .map(|x| ((x * 29 + round * 7) % 800 + 1) as u32)
+                .collect();
+            let mut buf = reqs(&lens);
+            dp_batch_into(&mut buf, &e, &mem, &c, &mut scratch, &mut out);
+            assert!(buf.is_empty(), "input buffer must be drained");
+            let fresh = dp_batch(reqs(&lens), &e, &mem, &c);
+            assert_eq!(out.len(), fresh.len());
+            for (a, b) in out.iter().zip(&fresh) {
+                assert_eq!(
+                    a.requests.iter().map(|r| r.id).collect::<Vec<_>>(),
+                    b.requests.iter().map(|r| r.id).collect::<Vec<_>>()
+                );
+                assert_eq!(a.est_serve_time.to_bits(), b.est_serve_time.to_bits());
+            }
+        }
+        // An empty tick must not leak the previous run's cuts.
+        let mut empty: Vec<Request> = Vec::new();
+        dp_batch_into(&mut empty, &e, &mem, &c, &mut scratch, &mut out);
+        assert!(out.is_empty());
+        assert!(scratch.cuts().is_empty());
     }
 }

@@ -4,5 +4,8 @@
 pub mod dp;
 pub mod fcfs;
 
-pub use dp::{dp_batch, DpBatcherConfig};
+pub use dp::{
+    dp_batch, dp_batch_into, dp_batch_reference, dp_plan, dp_plan_reference, DpBatcherConfig,
+    DpScratch,
+};
 pub use fcfs::fcfs_batches;

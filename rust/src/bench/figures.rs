@@ -14,6 +14,7 @@ use crate::estimator::profiler::{profile_and_fit, validate_serving_time, Latency
 use crate::metrics::Summary;
 use crate::scheduler::spec::SchedulerSpec;
 use crate::sim::driver::{fitted_estimator, run_ils, run_scls_cb, run_sliced, SimConfig};
+use crate::util::jobs::parallel_map;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::workload::distributions::WorkloadKind;
@@ -57,6 +58,11 @@ pub struct FigureConfig {
     pub slice_len: u32,
     pub max_len: u32,
     pub workload: WorkloadKind,
+    /// Worker threads for fanning out independent simulation cells
+    /// (`--jobs`). Every cell is a pure function of its arguments, and
+    /// results are reassembled in input order, so any value produces
+    /// byte-identical tables and JSON to `jobs = 1`.
+    pub jobs: usize,
 }
 
 impl Default for FigureConfig {
@@ -68,6 +74,7 @@ impl Default for FigureConfig {
             slice_len: 128,
             max_len: 1024,
             workload: WorkloadKind::CodeFuse,
+            jobs: 1,
         }
     }
 }
@@ -145,10 +152,13 @@ pub fn run_cell(
 // ---------------------------------------------------------------------------
 
 pub fn fig05(fc: &FigureConfig) -> FigureResult {
+    let cells = vec!["SLS", "ILS", "SCLS"];
+    let sums = parallel_map(fc.jobs, cells, |which| {
+        (which, run_cell(fc, EngineKind::Ds, which, 20.0, fc.slice_len))
+    });
     let mut rows = Vec::new();
     let mut json = Json::obj();
-    for which in ["SLS", "ILS", "SCLS"] {
-        let s = run_cell(fc, EngineKind::Ds, which, 20.0, fc.slice_len);
+    for (which, s) in sums {
         rows.push(vec![
             which.to_string(),
             f2(s.throughput),
@@ -361,29 +371,35 @@ pub fn fig12_13_14(fc: &FigureConfig, rates: &[f64]) -> FigureResult {
         (EngineKind::Ds, "ILS"),
         (EngineKind::Ds, "SCLS"),
     ];
-    let mut rows = Vec::new();
-    let mut arr = Vec::new();
+    let mut items: Vec<(f64, EngineKind, &str)> = Vec::new();
     for &rate in rates {
         for &(kind, which) in &cells {
-            let s = run_cell(fc, kind, which, rate, fc.slice_len);
-            rows.push(vec![
-                format!("{}-{}", kind.name(), which),
-                format!("{rate:.0}"),
-                f2(s.throughput),
-                f2(s.avg_response_time),
-                f2(s.p95_response_time),
-                f2(s.avg_invalid_tokens),
-                f2(s.avg_batch_size),
-                f2(s.avg_pad_tokens),
-                format!("{:?}", s.slice_histogram),
-                format!("{:.4}", s.early_return_ratio),
-            ]);
-            let mut o = s.to_json();
-            o.set("engine", kind.name())
-                .set("scheduler", which)
-                .set("rate", rate);
-            arr.push(o);
+            items.push((rate, kind, which));
         }
+    }
+    let sums = parallel_map(fc.jobs, items, |(rate, kind, which)| {
+        (rate, kind, which, run_cell(fc, kind, which, rate, fc.slice_len))
+    });
+    let mut rows = Vec::new();
+    let mut arr = Vec::new();
+    for (rate, kind, which, s) in sums {
+        rows.push(vec![
+            format!("{}-{}", kind.name(), which),
+            format!("{rate:.0}"),
+            f2(s.throughput),
+            f2(s.avg_response_time),
+            f2(s.p95_response_time),
+            f2(s.avg_invalid_tokens),
+            f2(s.avg_batch_size),
+            f2(s.avg_pad_tokens),
+            format!("{:?}", s.slice_histogram),
+            format!("{:.4}", s.early_return_ratio),
+        ]);
+        let mut o = s.to_json();
+        o.set("engine", kind.name())
+            .set("scheduler", which)
+            .set("rate", rate);
+        arr.push(o);
     }
     FigureResult {
         id: "fig12_13_14".into(),
@@ -410,10 +426,13 @@ pub fn fig12_13_14(fc: &FigureConfig, rates: &[f64]) -> FigureResult {
 // ---------------------------------------------------------------------------
 
 pub fn fig15_16(fc: &FigureConfig, kind: EngineKind) -> FigureResult {
+    let ladder = vec!["SLS", "SO", "PM", "AB", "LB", "SCLS"];
+    let sums = parallel_map(fc.jobs, ladder, |which| {
+        (which, run_cell(fc, kind, which, 20.0, fc.slice_len))
+    });
     let mut rows = Vec::new();
     let mut arr = Vec::new();
-    for which in ["SLS", "SO", "PM", "AB", "LB", "SCLS"] {
-        let s = run_cell(fc, kind, which, 20.0, fc.slice_len);
+    for (which, s) in sums {
         rows.push(vec![
             which.to_string(),
             f2(s.throughput),
@@ -456,23 +475,29 @@ pub fn fig17(fc: &FigureConfig, rates: &[f64]) -> FigureResult {
         (EngineKind::Ds, "ILS"),
         (EngineKind::Ds, "SCLS"),
     ];
-    let mut rows = Vec::new();
-    let mut arr = Vec::new();
+    let mut items: Vec<(f64, EngineKind, &str)> = Vec::new();
     for &rate in rates {
         for &(kind, which) in &cells {
-            let s = run_cell(fc, kind, which, rate, fc.slice_len);
-            rows.push(vec![
-                format!("{}-{}", kind.name(), which),
-                format!("{rate:.0}"),
-                f2(s.ct_std),
-            ]);
-            let mut o = Json::obj();
-            o.set("engine", kind.name())
-                .set("scheduler", which)
-                .set("rate", rate)
-                .set("ct_std", s.ct_std);
-            arr.push(o);
+            items.push((rate, kind, which));
         }
+    }
+    let sums = parallel_map(fc.jobs, items, |(rate, kind, which)| {
+        (rate, kind, which, run_cell(fc, kind, which, rate, fc.slice_len))
+    });
+    let mut rows = Vec::new();
+    let mut arr = Vec::new();
+    for (rate, kind, which, s) in sums {
+        rows.push(vec![
+            format!("{}-{}", kind.name(), which),
+            format!("{rate:.0}"),
+            f2(s.ct_std),
+        ]);
+        let mut o = Json::obj();
+        o.set("engine", kind.name())
+            .set("scheduler", which)
+            .set("rate", rate)
+            .set("ct_std", s.ct_std);
+        arr.push(o);
     }
     FigureResult {
         id: "fig17".into(),
@@ -488,10 +513,12 @@ pub fn fig17(fc: &FigureConfig, rates: &[f64]) -> FigureResult {
 // ---------------------------------------------------------------------------
 
 pub fn fig18_21(fc: &FigureConfig, kind: EngineKind, slice_lens: &[u32]) -> FigureResult {
+    let sums = parallel_map(fc.jobs, slice_lens.to_vec(), |s_len| {
+        (s_len, run_cell(fc, kind, "SCLS", 20.0, s_len))
+    });
     let mut rows = Vec::new();
     let mut arr = Vec::new();
-    for &s_len in slice_lens {
-        let s = run_cell(fc, kind, "SCLS", 20.0, s_len);
+    for (s_len, s) in sums {
         rows.push(vec![
             s_len.to_string(),
             f2(s.throughput),
@@ -533,26 +560,32 @@ pub fn fig18_21(fc: &FigureConfig, kind: EngineKind, slice_lens: &[u32]) -> Figu
 // ---------------------------------------------------------------------------
 
 pub fn fig22(fc: &FigureConfig, worker_counts: &[usize]) -> FigureResult {
-    let mut rows = Vec::new();
-    let mut arr = Vec::new();
+    let mut items: Vec<(EngineKind, usize)> = Vec::new();
     for kind in [EngineKind::Hf, EngineKind::Ds] {
         for &w in worker_counts {
-            let fcw = FigureConfig {
-                workers: w,
-                ..fc.clone()
-            };
-            let s = run_cell(&fcw, kind, "SCLS", 20.0, fc.slice_len);
-            rows.push(vec![
-                kind.name().into(),
-                w.to_string(),
-                f2(s.throughput),
-            ]);
-            let mut o = Json::obj();
-            o.set("engine", kind.name())
-                .set("workers", w)
-                .set("throughput", s.throughput);
-            arr.push(o);
+            items.push((kind, w));
         }
+    }
+    let sums = parallel_map(fc.jobs, items, |(kind, w)| {
+        let fcw = FigureConfig {
+            workers: w,
+            ..fc.clone()
+        };
+        (kind, w, run_cell(&fcw, kind, "SCLS", 20.0, fc.slice_len))
+    });
+    let mut rows = Vec::new();
+    let mut arr = Vec::new();
+    for (kind, w, s) in sums {
+        rows.push(vec![
+            kind.name().into(),
+            w.to_string(),
+            f2(s.throughput),
+        ]);
+        let mut o = Json::obj();
+        o.set("engine", kind.name())
+            .set("workers", w)
+            .set("throughput", s.throughput);
+        arr.push(o);
     }
     FigureResult {
         id: "fig22".into(),
@@ -615,5 +648,23 @@ mod tests {
         assert!(get("SCLS", "throughput") > get("ILS", "throughput"));
         assert!(get("SCLS", "avg_invalid_tokens") < get("SLS", "avg_invalid_tokens"));
         assert!(get("SCLS", "avg_batch_size") > get("SLS", "avg_batch_size"));
+    }
+
+    #[test]
+    fn parallel_jobs_output_byte_identical() {
+        // The acceptance bar for `--jobs N`: tables and JSON must match the
+        // sequential run byte for byte.
+        let seq = quick();
+        let par = FigureConfig { jobs: 4, ..quick() };
+        for (a, b) in [
+            (fig05(&seq), fig05(&par)),
+            (
+                fig18_21(&seq, EngineKind::Ds, &[64, 128]),
+                fig18_21(&par, EngineKind::Ds, &[64, 128]),
+            ),
+        ] {
+            assert_eq!(a.rows, b.rows);
+            assert_eq!(a.json.to_string_pretty(), b.json.to_string_pretty());
+        }
     }
 }

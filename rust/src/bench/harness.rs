@@ -54,12 +54,21 @@ pub fn report_header() -> String {
 /// each batch takes ≳1 ms, for ~2 s of measurement (tunable via
 /// SCLS_BENCH_SECS). Prevents the optimizer from discarding work via
 /// `std::hint::black_box` at the call sites.
-pub fn bench<R>(name: &str, mut f: impl FnMut() -> R) -> BenchResult {
+///
+/// The environment variable is read only here, at the public entry point;
+/// everything below takes the budget as a parameter so tests never mutate
+/// process-global state (mutating env vars races under the parallel test
+/// runner).
+pub fn bench<R>(name: &str, f: impl FnMut() -> R) -> BenchResult {
     let budget = std::env::var("SCLS_BENCH_SECS")
         .ok()
         .and_then(|s| s.parse::<f64>().ok())
         .unwrap_or(2.0);
+    bench_with_budget(name, budget, f)
+}
 
+/// [`bench`] with an explicit measurement budget in seconds.
+pub fn bench_with_budget<R>(name: &str, budget: f64, mut f: impl FnMut() -> R) -> BenchResult {
     // Warmup + batch-size calibration.
     let warm_until = Instant::now() + Duration::from_secs_f64(budget.min(0.5));
     let mut one = Duration::ZERO;
@@ -103,8 +112,9 @@ mod tests {
 
     #[test]
     fn measures_something() {
-        std::env::set_var("SCLS_BENCH_SECS", "0.05");
-        let r = bench("noop-ish", || {
+        // Budget threaded as a parameter — no process-global env mutation,
+        // which raced with other tests under the parallel runner.
+        let r = bench_with_budget("noop-ish", 0.05, || {
             let mut acc = 0u64;
             for i in 0..100u64 {
                 acc = acc.wrapping_add(i * i);
@@ -114,6 +124,12 @@ mod tests {
         assert!(r.mean_ns > 0.0);
         assert!(r.samples >= 5);
         assert!(r.p95_ns >= r.p50_ns * 0.5);
+    }
+
+    #[test]
+    fn tiny_budget_still_yields_minimum_samples() {
+        let r = bench_with_budget("tiny", 0.001, || std::hint::black_box(1u64) + 1);
+        assert!(r.samples >= 5);
     }
 
     #[test]

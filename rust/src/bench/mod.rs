@@ -5,4 +5,4 @@
 pub mod figures;
 pub mod harness;
 
-pub use harness::{bench, BenchResult};
+pub use harness::{bench, bench_with_budget, BenchResult};

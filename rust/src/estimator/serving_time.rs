@@ -55,6 +55,7 @@ pub struct LinearLatency {
 }
 
 impl LinearLatency {
+    #[inline]
     pub fn eval(&self, n: f64, x: f64) -> f64 {
         self.c1 * n * x + self.c2 * n + self.c3 * x + self.c4
     }
@@ -82,11 +83,13 @@ pub struct ServingTimeEstimator {
 
 impl ServingTimeEstimator {
     /// T_prefill(N, L_i) — Eq. (3).
+    #[inline]
     pub fn prefill(&self, n: u32, l_i: u32) -> f64 {
         self.prefill.eval(n as f64, l_i as f64).max(0.0)
     }
 
     /// τ_decode(l, N) — Eq. (4); `l` is the cached length at this iteration.
+    #[inline]
     pub fn decode_iter(&self, l: u32, n: u32) -> f64 {
         self.decode.eval(n as f64, l as f64).max(0.0)
     }
@@ -96,6 +99,7 @@ impl ServingTimeEstimator {
     /// Σ_{l=L_i+1}^{L_i+L_o} (d1·N·l + d2·N + d3·l + d4)
     ///   = (d1·N + d3)·Σl + (d2·N + d4)·L_o
     /// with Σl = L_o·(2·L_i + L_o + 1)/2.
+    #[inline]
     pub fn decode(&self, n: u32, l_i: u32, l_o: u32) -> f64 {
         if l_o == 0 {
             return 0.0;
@@ -107,16 +111,19 @@ impl ServingTimeEstimator {
     }
 
     /// T_serve(N, L_i, L_o) — Eq. (1). Under SCLS, L_o is the slice length S.
+    #[inline]
     pub fn serve(&self, n: u32, l_i: u32, l_o: u32) -> f64 {
         self.prefill(n, l_i) + self.decode(n, l_i, l_o)
     }
 }
 
 impl ServeEstimate for ServingTimeEstimator {
+    #[inline]
     fn serve_est(&self, n: u32, l_i: u32, s: u32) -> f64 {
         self.serve(n, l_i, s)
     }
 
+    #[inline]
     fn serve_affine(&self, l_i: u32, s: u32) -> Option<(f64, f64)> {
         let li = l_i as f64;
         // Prefill (Eq. 3): (p1·L + p2)·N + (p3·L + p4).
@@ -143,10 +150,12 @@ pub struct SliceTimeEstimator {
 }
 
 impl ServeEstimate for SliceTimeEstimator {
+    #[inline]
     fn serve_est(&self, n: u32, l_i: u32, _s: u32) -> f64 {
         self.surface.eval(n as f64, l_i as f64).max(0.0)
     }
 
+    #[inline]
     fn serve_affine(&self, l_i: u32, _s: u32) -> Option<(f64, f64)> {
         let li = l_i as f64;
         affine_unclamped(

@@ -42,6 +42,8 @@ SUBCOMMANDS:
       --out-dir DIR      output directory            [results]
       --quick SCALE      trace-duration scale, 1.0 = paper's 10 min [0.2]
       --only IDS         comma list, e.g. fig5,fig12
+      --jobs N           parallel simulation cells (output is byte-identical
+                         to --jobs 1; cells are independent sims)  [1]
   figure ID   Regenerate one figure (same flags as `figures`)
   simulate    Run one experiment cell on the calibrated DES
       --engine hf|ds     inference engine            [ds]
@@ -152,7 +154,8 @@ fn run_figure(id: &str, fc: &FigureConfig) -> Result<Vec<FigureResult>> {
 fn cmd_figures(args: &Args, only_pos: Option<String>) -> Result<()> {
     let out_dir = PathBuf::from(args.str_or("out-dir", "results"));
     let scale = args.f64_or("quick", 0.2);
-    let fc = FigureConfig::quick(scale);
+    let mut fc = FigureConfig::quick(scale);
+    fc.jobs = args.usize_or("jobs", 1).max(1);
     std::fs::create_dir_all(&out_dir)?;
 
     let ids: Vec<String> = if let Some(id) = only_pos {

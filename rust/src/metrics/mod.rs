@@ -42,6 +42,12 @@ pub struct RunMetrics {
     pub makespan: f64,
     /// Total requests injected (completed + any stragglers).
     pub total_requests: usize,
+    /// DES events processed (arrivals + ticks + worker completions) — the
+    /// denominator of the scale benchmark's events/sec figure.
+    pub events: u64,
+    /// Largest pool size observed at a schedule tick (coordinator paths
+    /// only) — the scale benchmark's memory high-water mark.
+    pub peak_pool: usize,
 }
 
 /// Headline summary of a run.
@@ -68,6 +74,19 @@ pub struct Summary {
 }
 
 impl RunMetrics {
+    /// Pre-sized log for a trace of `total_requests` requests: completion
+    /// records never reallocate, and the batch log starts with a workload-
+    /// shaped guess (roughly one serving per few requests at paper batch
+    /// sizes; it grows if the run slices more).
+    pub fn with_capacity(total_requests: usize) -> RunMetrics {
+        RunMetrics {
+            completed: Vec::with_capacity(total_requests),
+            batches: Vec::with_capacity(total_requests / 4 + 16),
+            total_requests,
+            ..RunMetrics::default()
+        }
+    }
+
     pub fn record_completion(&mut self, req: &crate::core::Request, now: f64) {
         self.completed.push(CompletedRequest {
             id: req.id,
@@ -82,47 +101,65 @@ impl RunMetrics {
     }
 
     pub fn summarize(&self) -> Summary {
-        let rts: Vec<f64> = self
-            .completed
-            .iter()
-            .map(|c| c.finished - c.arrival)
-            .collect();
+        // Single pass over the logs; f64 sums accumulate in record order,
+        // so the averages are bit-identical to the former collect-then-mean
+        // formulation (figure JSON stays byte-stable across this change).
+        let n_completed = self.completed.len();
+        let mut rts: Vec<f64> = Vec::with_capacity(n_completed);
         let mut slice_histogram = [0u64; 4];
+        let mut invalid_sum = 0.0f64;
+        let mut pad_sum = 0.0f64;
         for c in &self.completed {
+            rts.push(c.finished - c.arrival);
             let idx = (c.slices.max(1) as usize - 1).min(3);
             slice_histogram[idx] += 1;
+            invalid_sum += c.invalid_tokens as f64;
+            pad_sum += c.pad_tokens as f64;
         }
-        let early = self.batches.iter().filter(|b| b.early_return).count();
+        let avg_response_time = stats::mean(&rts);
+        // percentile() sorts a copy; sort in place instead (mean above
+        // already consumed the arrival-order sum).
+        rts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p95_response_time = if rts.is_empty() {
+            0.0
+        } else {
+            stats::percentile_sorted(&rts, 95.0)
+        };
+
+        let mut early = 0usize;
+        let mut size_sum = 0.0f64;
+        for b in &self.batches {
+            early += b.early_return as usize;
+            size_sum += b.size as f64;
+        }
         let n_batches = self.batches.len().max(1);
         Summary {
             throughput: if self.makespan > 0.0 {
-                self.completed.len() as f64 / self.makespan
+                n_completed as f64 / self.makespan
             } else {
                 0.0
             },
-            avg_response_time: stats::mean(&rts),
-            p95_response_time: stats::percentile(&rts, 95.0),
+            avg_response_time,
+            p95_response_time,
             ct_std: stats::std_dev(&self.worker_completion),
-            avg_batch_size: stats::mean(
-                &self.batches.iter().map(|b| b.size as f64).collect::<Vec<_>>(),
-            ),
-            avg_invalid_tokens: stats::mean(
-                &self
-                    .completed
-                    .iter()
-                    .map(|c| c.invalid_tokens as f64)
-                    .collect::<Vec<_>>(),
-            ),
-            avg_pad_tokens: stats::mean(
-                &self
-                    .completed
-                    .iter()
-                    .map(|c| c.pad_tokens as f64)
-                    .collect::<Vec<_>>(),
-            ),
+            avg_batch_size: if self.batches.is_empty() {
+                0.0
+            } else {
+                size_sum / self.batches.len() as f64
+            },
+            avg_invalid_tokens: if n_completed == 0 {
+                0.0
+            } else {
+                invalid_sum / n_completed as f64
+            },
+            avg_pad_tokens: if n_completed == 0 {
+                0.0
+            } else {
+                pad_sum / n_completed as f64
+            },
             early_return_ratio: early as f64 / n_batches as f64,
             slice_histogram,
-            completed: self.completed.len(),
+            completed: n_completed,
         }
     }
 }
@@ -203,6 +240,18 @@ mod tests {
         assert_eq!(s.completed, 0);
         assert_eq!(s.throughput, 0.0);
         assert_eq!(s.avg_response_time, 0.0);
+        assert_eq!(s.p95_response_time, 0.0);
+        assert_eq!(s.avg_batch_size, 0.0);
+    }
+
+    #[test]
+    fn with_capacity_presizes_and_defaults() {
+        let m = RunMetrics::with_capacity(1000);
+        assert!(m.completed.capacity() >= 1000);
+        assert_eq!(m.total_requests, 1000);
+        assert_eq!(m.events, 0);
+        assert_eq!(m.peak_pool, 0);
+        assert_eq!(m.summarize().completed, 0);
     }
 
     #[test]

@@ -14,15 +14,29 @@ impl MaxMinOffloader {
     /// Assign each batch a worker; returns (worker, batch) pairs in the
     /// order they were assigned (longest first). Updates the ledger.
     pub fn offload(&self, mut batches: Vec<Batch>, ledger: &mut LoadLedger) -> Vec<(usize, Batch)> {
+        let mut out = Vec::with_capacity(batches.len());
+        self.offload_into(&mut batches, ledger, &mut out);
+        out
+    }
+
+    /// Allocation-lean variant for per-tick callers: drains `batches`
+    /// (keeping its capacity) and pushes assignments into `out` (cleared
+    /// first). Identical policy and ordering to [`Self::offload`].
+    pub fn offload_into(
+        &self,
+        batches: &mut Vec<Batch>,
+        ledger: &mut LoadLedger,
+        out: &mut Vec<(usize, Batch)>,
+    ) {
+        out.clear();
         // Longest estimated serving time first.
         batches.sort_by(|a, b| b.est_serve_time.total_cmp(&a.est_serve_time));
-        let mut out = Vec::with_capacity(batches.len());
-        for b in batches {
+        out.reserve(batches.len());
+        for b in batches.drain(..) {
             let w = ledger.argmin();
             ledger.add(w, b.est_serve_time);
             out.push((w, b));
         }
-        out
     }
 }
 

@@ -15,6 +15,14 @@ impl RequestPool {
         }
     }
 
+    /// Pre-size the pool for a known workload (per-tick drains then never
+    /// reallocate in steady state).
+    pub fn with_capacity(n: usize) -> RequestPool {
+        RequestPool {
+            requests: Vec::with_capacity(n),
+        }
+    }
+
     pub fn push(&mut self, r: Request) {
         self.requests.push(r);
     }
@@ -22,6 +30,14 @@ impl RequestPool {
     /// Drain everything (SCLS "periodically fetches all requests", §4.1).
     pub fn fetch_all(&mut self) -> Vec<Request> {
         std::mem::take(&mut self.requests)
+    }
+
+    /// Buffer-swap drain: `out` is cleared and swapped with the pool's
+    /// backing store, so a tick-loop caller cycles two buffers and the
+    /// drain allocates nothing in steady state.
+    pub fn fetch_all_into(&mut self, out: &mut Vec<Request>) {
+        out.clear();
+        std::mem::swap(&mut self.requests, out);
     }
 
     /// Drain at most `n`, in arrival order of insertion (FCFS baselines).
@@ -58,6 +74,21 @@ mod tests {
         let all = p.fetch_all();
         assert_eq!(all.len(), 2);
         assert!(p.is_empty());
+    }
+
+    #[test]
+    fn fetch_all_into_swaps_buffers() {
+        let mut p = RequestPool::with_capacity(8);
+        p.push(req(1));
+        p.push(req(2));
+        let mut buf = Vec::with_capacity(16);
+        p.fetch_all_into(&mut buf);
+        assert_eq!(buf.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
+        assert!(p.is_empty());
+        // The pool inherited the (cleared) caller buffer's capacity.
+        p.push(req(3));
+        p.fetch_all_into(&mut buf);
+        assert_eq!(buf.iter().map(|r| r.id).collect::<Vec<_>>(), vec![3]);
     }
 
     #[test]

@@ -8,7 +8,7 @@
 
 use std::collections::VecDeque;
 
-use crate::batcher::{dp_batch, fcfs_batches, DpBatcherConfig};
+use crate::batcher::{dp_batch_into, fcfs_batches, DpBatcherConfig, DpScratch};
 use crate::core::{Batch, Request};
 use crate::engine::presets::EnginePreset;
 use crate::engine::sim::SimEngine;
@@ -89,17 +89,24 @@ pub fn run_sliced(trace: &Trace, spec: &SchedulerSpec, cfg: &SimConfig) -> RunMe
         })
         .collect();
 
-    let mut pool = RequestPool::new();
+    let mut pool = RequestPool::with_capacity(trace.len().min(1 << 16));
     let mut ledger = LoadLedger::new(cfg.workers);
     let mut rr = RoundRobin::new(cfg.workers);
-    let mut metrics = RunMetrics::default();
-    metrics.total_requests = trace.len();
+    let mut metrics = RunMetrics::with_capacity(trace.len());
 
-    let mut q: EventQueue<Ev> = EventQueue::new();
+    let mut q: EventQueue<Ev> = EventQueue::with_capacity(trace.len() + cfg.workers + 2);
     for (i, r) in trace.requests.iter().enumerate() {
         q.push(r.arrival, Ev::Arrival(i));
     }
-    let coordinator_batching = matches!(spec.batching, BatchingSpec::Dp { .. });
+    // Hoisted batcher config: `Some` exactly for coordinator (DP) batching.
+    let dp_cfg = match spec.batching {
+        BatchingSpec::Dp { max_batch_size } => Some(DpBatcherConfig {
+            slice_len: spec.slice_len,
+            max_batch_size,
+        }),
+        BatchingSpec::WorkerFcfs { .. } => None,
+    };
+    let coordinator_batching = dp_cfg.is_some();
     let interval = match spec.interval {
         IntervalSpec::Immediate => None,
         IntervalSpec::Fixed(t) => Some(IntervalController::Fixed(t)),
@@ -177,7 +184,17 @@ pub fn run_sliced(trace: &Trace, spec: &SchedulerSpec, cfg: &SimConfig) -> RunMe
         q.push(done_at, Ev::WorkerDone(w));
     }
 
+    // Per-tick scratch, reused across the whole drain: the request drain
+    // buffer swaps with the pool, the batch/assignment buffers and the DP
+    // tables keep their high-water capacity — the schedule tick allocates
+    // only the per-batch member vectors in steady state.
+    let mut tick_reqs: Vec<Request> = Vec::new();
+    let mut batch_buf: Vec<Batch> = Vec::new();
+    let mut assign_buf: Vec<(usize, Batch)> = Vec::new();
+    let mut dp_scratch = DpScratch::new();
+
     while let Some((now, ev)) = q.pop() {
+        metrics.events += 1;
         match ev {
             Ev::Arrival(i) => {
                 arrivals_left -= 1;
@@ -193,34 +210,36 @@ pub fn run_sliced(trace: &Trace, spec: &SchedulerSpec, cfg: &SimConfig) -> RunMe
             }
             Ev::Tick => {
                 let Some(ctrl) = &interval else { continue };
-                let reqs = pool.fetch_all();
-                if !reqs.is_empty() {
-                    let batches = match &spec.batching {
-                        BatchingSpec::Dp { max_batch_size } => dp_batch(
-                            reqs,
-                            &est,
-                            &mem,
-                            &DpBatcherConfig {
-                                slice_len: spec.slice_len,
-                                max_batch_size: *max_batch_size,
-                            },
+                pool.fetch_all_into(&mut tick_reqs);
+                if !tick_reqs.is_empty() {
+                    metrics.peak_pool = metrics.peak_pool.max(tick_reqs.len());
+                    let dp_cfg = dp_cfg
+                        .as_ref()
+                        .expect("ticks only exist under coordinator batching");
+                    dp_batch_into(
+                        &mut tick_reqs,
+                        &est,
+                        &mem,
+                        dp_cfg,
+                        &mut dp_scratch,
+                        &mut batch_buf,
+                    );
+                    match spec.offload {
+                        OffloadSpec::MaxMin => MaxMinOffloader.offload_into(
+                            &mut batch_buf,
+                            &mut ledger,
+                            &mut assign_buf,
                         ),
-                        BatchingSpec::WorkerFcfs { .. } => {
-                            unreachable!("worker-locus batching has no ticks")
-                        }
-                    };
-                    let assignments: Vec<(usize, Batch)> = match spec.offload {
-                        OffloadSpec::MaxMin => MaxMinOffloader.offload(batches, &mut ledger),
-                        OffloadSpec::RoundRobin => batches
-                            .into_iter()
-                            .map(|b| {
+                        OffloadSpec::RoundRobin => {
+                            assign_buf.clear();
+                            for b in batch_buf.drain(..) {
                                 let w = rr.next_worker();
                                 ledger.add(w, b.est_serve_time);
-                                (w, b)
-                            })
-                            .collect(),
-                    };
-                    for (w, b) in assignments {
+                                assign_buf.push((w, b));
+                            }
+                        }
+                    }
+                    for (w, b) in assign_buf.drain(..) {
                         workers[w].batch_queue.push_back(b);
                         try_start(w, now, &mut workers, spec, &est, &mut metrics, &mut q);
                     }
@@ -291,20 +310,20 @@ pub fn run_ils(trace: &Trace, cfg: &SimConfig) -> RunMetrics {
     let mut last_done = vec![0.0f64; cfg.workers];
 
     let mut rr = RoundRobin::new(cfg.workers);
-    let mut metrics = RunMetrics::default();
-    metrics.total_requests = trace.len();
+    let mut metrics = RunMetrics::with_capacity(trace.len());
 
     enum IEv {
         Arrival(usize),
         IterDone(usize),
     }
 
-    let mut q: EventQueue<IEv> = EventQueue::new();
+    let mut q: EventQueue<IEv> = EventQueue::with_capacity(trace.len() + cfg.workers + 2);
     for (i, r) in trace.requests.iter().enumerate() {
         q.push(r.arrival, IEv::Arrival(i));
     }
 
     while let Some((now, ev)) = q.pop() {
+        metrics.events += 1;
         match ev {
             IEv::Arrival(i) => {
                 let r = trace.requests[i].clone();
@@ -366,15 +385,14 @@ pub fn run_scls_cb(trace: &Trace, cfg: &SimConfig, slice_len: u32) -> RunMetrics
         .collect();
     let mut looping = vec![false; cfg.workers];
     let mut last_done = vec![0.0f64; cfg.workers];
-    let mut metrics = RunMetrics::default();
-    metrics.total_requests = trace.len();
+    let mut metrics = RunMetrics::with_capacity(trace.len());
 
     enum CEv {
         Arrival(usize),
         IterDone(usize),
     }
 
-    let mut q: EventQueue<CEv> = EventQueue::new();
+    let mut q: EventQueue<CEv> = EventQueue::with_capacity(trace.len() + cfg.workers + 2);
     for (i, r) in trace.requests.iter().enumerate() {
         q.push(r.arrival, CEv::Arrival(i));
     }
@@ -406,6 +424,7 @@ pub fn run_scls_cb(trace: &Trace, cfg: &SimConfig, slice_len: u32) -> RunMetrics
     }
 
     while let Some((now, ev)) = q.pop() {
+        metrics.events += 1;
         match ev {
             CEv::Arrival(i) => {
                 let r = trace.requests[i].clone();
@@ -500,6 +519,24 @@ mod tests {
         assert_eq!(a.completed.len(), b.completed.len());
         assert_eq!(a.summarize().throughput, b.summarize().throughput);
         assert_eq!(a.batches.len(), b.batches.len());
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.peak_pool, b.peak_pool);
+    }
+
+    #[test]
+    fn event_and_pool_counters_populated() {
+        let trace = small_trace(4.0, 30.0, 31);
+        let preset = EnginePreset::paper(EngineKind::Ds);
+        let spec = SchedulerSpec::scls(&preset, 128);
+        let m = run_sliced(&trace, &spec, &cfg(EngineKind::Ds));
+        // At least one event per arrival, plus ticks and completions.
+        assert!(m.events as usize > trace.len(), "events {} ", m.events);
+        assert!(m.peak_pool >= 1);
+        assert!(m.peak_pool <= trace.len());
+        // ILS counts its events too (no pool ticks there).
+        let ils = run_ils(&trace, &cfg(EngineKind::Ds));
+        assert!(ils.events as usize >= trace.len());
+        assert_eq!(ils.peak_pool, 0);
     }
 
     #[test]

@@ -54,6 +54,15 @@ impl<T> EventQueue<T> {
         }
     }
 
+    /// Pre-size the heap (drivers know the trace length up front, so the
+    /// heap never reallocates mid-simulation).
+    pub fn with_capacity(n: usize) -> Self {
+        EventQueue {
+            heap: BinaryHeap::with_capacity(n),
+            seq: 0,
+        }
+    }
+
     pub fn push(&mut self, t: f64, payload: T) {
         debug_assert!(t.is_finite(), "event time must be finite");
         self.heap.push(Entry {

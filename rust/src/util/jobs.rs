@@ -1,0 +1,85 @@
+//! Std-only scoped-thread job pool (the offline registry has no rayon).
+//!
+//! [`parallel_map`] fans independent work items out over N worker threads
+//! and returns results **in input order**, so callers that assemble output
+//! sequentially from the results are byte-identical to a sequential run —
+//! the property the figure suite's `--jobs` flag relies on.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Map `f` over `items` on up to `jobs` scoped threads, preserving input
+/// order in the returned vector. `jobs <= 1` (or a single item) runs
+/// inline with no threads spawned, guaranteeing the parallel and
+/// sequential paths produce identical results for deterministic `f`.
+///
+/// Work is claimed from a shared atomic cursor (dynamic load balancing:
+/// simulation cells vary widely in cost).
+pub fn parallel_map<T, R, F>(jobs: usize, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    if jobs <= 1 || n <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let work: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let cursor = AtomicUsize::new(0);
+    let f = &f;
+    let work = &work;
+    let results = &results;
+    let cursor = &cursor;
+    std::thread::scope(|scope| {
+        for _ in 0..jobs.min(n) {
+            scope.spawn(move || loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = work[i].lock().unwrap().take().expect("item claimed twice");
+                let r = f(item);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    results
+        .iter()
+        .map(|m| m.lock().unwrap().take().expect("worker died before finishing"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let items: Vec<usize> = (0..100).collect();
+        let out = parallel_map(4, items, |x| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sequential_and_parallel_agree() {
+        let items: Vec<u64> = (0..37).collect();
+        let seq = parallel_map(1, items.clone(), |x| x.wrapping_mul(0x9E37).rotate_left(7));
+        let par = parallel_map(8, items, |x| x.wrapping_mul(0x9E37).rotate_left(7));
+        assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn more_jobs_than_items() {
+        let out = parallel_map(16, vec![1, 2, 3], |x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(parallel_map(4, empty, |x| x).is_empty());
+        assert_eq!(parallel_map(4, vec![9], |x| x * x), vec![81]);
+    }
+}

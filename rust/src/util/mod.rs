@@ -2,6 +2,7 @@
 //! rand, clap, or criterion in the vendored registry — see DESIGN.md).
 
 pub mod cli;
+pub mod jobs;
 pub mod json;
 pub mod linalg;
 pub mod logging;

@@ -220,8 +220,7 @@ pub fn run_real(
     let mut pool = RequestPool::new();
     let mut ledger = LoadLedger::new(cfg.workers);
     let mut rr = RoundRobin::new(cfg.workers);
-    let mut metrics = RunMetrics::default();
-    metrics.total_requests = incoming.len();
+    let mut metrics = RunMetrics::with_capacity(incoming.len());
     let mut worker_last_done = vec![0.0f64; cfg.workers];
     // Worker-locus FCFS state:
     let mut worker_req_q: Vec<Vec<Request>> = vec![Vec::new(); cfg.workers];

@@ -1,0 +1,231 @@
+//! Differential property tests: the optimized DP batcher must be
+//! bit-exact against the retained naive quadratic reference — identical
+//! batch cuts (membership and order) and bit-identical `est_serve_time`
+//! on every batch — across random pools, random estimator surfaces,
+//! `max_batch_size` caps, tight-memory configurations, and the
+//! `serve_affine == None` fallback path.
+
+use scls::batcher::{dp_batch, dp_batch_reference, DpBatcherConfig};
+use scls::core::{Batch, Request};
+use scls::engine::presets::{EngineKind, EnginePreset};
+use scls::estimator::serving_time::{LinearLatency, ServeEstimate, ServingTimeEstimator};
+use scls::estimator::{MemoryEstimator, MemoryRule};
+use scls::prop_assert;
+use scls::sim::driver::fitted_estimator;
+use scls::testprop::{check, Gen};
+
+/// Wrap an estimator so `serve_affine` always reports `None`, forcing the
+/// opaque fallback path through both implementations.
+struct Opaque(ServingTimeEstimator);
+
+impl ServeEstimate for Opaque {
+    fn serve_est(&self, n: u32, l_i: u32, s: u32) -> f64 {
+        self.0.serve_est(n, l_i, s)
+    }
+}
+
+fn gen_pool(g: &mut Gen, max_n: usize) -> Vec<Request> {
+    (0..g.usize(1, max_n))
+        .map(|i| Request::new(i as u64, 0.0, g.u32(1, 1024), g.u32(1, 1024)))
+        .collect()
+}
+
+/// Random bilinear surfaces around fitted magnitudes; occasionally negative
+/// constants so the `max(0, ·)` clamp can fire and `serve_affine` returns
+/// `None` for some (or all) lengths.
+fn gen_estimator(g: &mut Gen) -> ServingTimeEstimator {
+    let mut coeff = |scale: f64| {
+        let x = g.f64(0.0, scale);
+        if g.u32(0, 9) == 0 {
+            -x * 0.25
+        } else {
+            x
+        }
+    };
+    ServingTimeEstimator {
+        prefill: LinearLatency {
+            c1: coeff(5e-4),
+            c2: coeff(2e-3),
+            c3: coeff(5e-4),
+            c4: coeff(0.05),
+        },
+        decode: LinearLatency {
+            c1: coeff(2e-6),
+            c2: coeff(1e-3),
+            c3: coeff(5e-6),
+            c4: coeff(0.05),
+        },
+    }
+}
+
+fn gen_memory(g: &mut Gen) -> MemoryEstimator {
+    match g.u32(0, 2) {
+        0 => MemoryEstimator::ds_rules(),
+        1 => MemoryEstimator::analytic(800 * 1024, 48 << 30, 0.9),
+        _ => {
+            // Tight analytic budgets: N_max anywhere from 1 to a handful.
+            let delta = 1u64 << 20;
+            let cap = g.u32(1, 12) as u64;
+            MemoryEstimator::analytic(delta, cap * (1024 + 512) * delta, 1.0)
+        }
+    }
+}
+
+fn gen_cfg(g: &mut Gen) -> DpBatcherConfig {
+    DpBatcherConfig {
+        slice_len: *g.pick(&[16u32, 32, 64, 128, 256, 512]),
+        max_batch_size: if g.bool() { Some(g.u32(1, 24)) } else { None },
+    }
+}
+
+fn assert_bit_exact(
+    fast: &[Batch],
+    slow: &[Batch],
+    ctx: &str,
+) -> Result<(), scls::testprop::PropFail> {
+    prop_assert!(
+        fast.len() == slow.len(),
+        "{ctx}: batch count {} vs {}",
+        fast.len(),
+        slow.len()
+    );
+    for (idx, (f, s)) in fast.iter().zip(slow).enumerate() {
+        let fi: Vec<u64> = f.requests.iter().map(|r| r.id).collect();
+        let si: Vec<u64> = s.requests.iter().map(|r| r.id).collect();
+        prop_assert!(fi == si, "{ctx}: batch {idx} members {fi:?} vs {si:?}");
+        prop_assert!(
+            f.est_serve_time.to_bits() == s.est_serve_time.to_bits(),
+            "{ctx}: batch {idx} est {} vs {}",
+            f.est_serve_time,
+            s.est_serve_time
+        );
+    }
+    Ok(())
+}
+
+#[test]
+fn optimized_dp_matches_reference_on_random_surfaces() {
+    check("dp-differential-random", 200, |g| {
+        let est = gen_estimator(g);
+        let mem = gen_memory(g);
+        let cfg = gen_cfg(g);
+        let pool = gen_pool(g, 200);
+        let fast = dp_batch(pool.clone(), &est, &mem, &cfg);
+        let slow = dp_batch_reference(pool, &est, &mem, &cfg);
+        assert_bit_exact(&fast, &slow, "random-surface")
+    });
+}
+
+#[test]
+fn optimized_dp_matches_reference_with_fitted_estimators() {
+    check("dp-differential-fitted", 200, |g| {
+        let kind = if g.bool() { EngineKind::Hf } else { EngineKind::Ds };
+        let preset = EnginePreset::paper(kind);
+        let est = fitted_estimator(&preset, g.u64());
+        let mem = preset.memory_estimator();
+        let cfg = gen_cfg(g);
+        let pool = gen_pool(g, 200);
+        let fast = dp_batch(pool.clone(), &est, &mem, &cfg);
+        let slow = dp_batch_reference(pool, &est, &mem, &cfg);
+        assert_bit_exact(&fast, &slow, "fitted")
+    });
+}
+
+#[test]
+fn optimized_dp_matches_reference_on_opaque_estimators() {
+    // serve_affine == None everywhere: both sides must take the fallback
+    // scalar path and still agree bit-for-bit.
+    check("dp-differential-opaque", 200, |g| {
+        let est = Opaque(gen_estimator(g));
+        let mem = gen_memory(g);
+        let cfg = gen_cfg(g);
+        let pool = gen_pool(g, 120);
+        let fast = dp_batch(pool.clone(), &est, &mem, &cfg);
+        let slow = dp_batch_reference(pool, &est, &mem, &cfg);
+        assert_bit_exact(&fast, &slow, "opaque")
+    });
+}
+
+#[test]
+fn optimized_dp_matches_reference_under_tight_memory_and_caps() {
+    check("dp-differential-tight", 200, |g| {
+        let est = fitted_estimator(&EnginePreset::paper(EngineKind::Ds), 7);
+        // N_max from 1 (all singletons) upward, crossed with a hard cap.
+        let delta = 1u64 << 20;
+        let n_cap = g.u32(1, 6) as u64;
+        let mem = MemoryEstimator::analytic(delta, n_cap * (1024 + 128) * delta, 1.0);
+        let cfg = DpBatcherConfig {
+            slice_len: 128,
+            max_batch_size: Some(g.u32(1, 4)),
+        };
+        let pool = gen_pool(g, 150);
+        let fast = dp_batch(pool.clone(), &est, &mem, &cfg);
+        let slow = dp_batch_reference(pool, &est, &mem, &cfg);
+        assert_bit_exact(&fast, &slow, "tight")
+    });
+}
+
+#[test]
+fn optimized_dp_matches_reference_on_adversarial_tables() {
+    // Profiled rule tables with abrupt steps (Alg. 2 generalization):
+    // window sizes change discontinuously along the sorted order.
+    check("dp-differential-tables", 150, |g| {
+        let est = fitted_estimator(&EnginePreset::paper(EngineKind::Hf), 11);
+        let mem = MemoryEstimator {
+            rule: MemoryRule::Table(vec![
+                (g.u32(700, 1100), g.u32(1, 4)),
+                (g.u32(300, 699), g.u32(5, 20)),
+                (0, g.u32(21, 64)),
+            ]),
+        };
+        let cfg = gen_cfg(g);
+        let pool = gen_pool(g, 180);
+        let fast = dp_batch(pool.clone(), &est, &mem, &cfg);
+        let slow = dp_batch_reference(pool, &est, &mem, &cfg);
+        assert_bit_exact(&fast, &slow, "table")
+    });
+}
+
+#[test]
+fn optimized_dp_matches_reference_on_ascending_capacity_tables() {
+    // Capacity that GROWS with length makes the DP window's left edge move
+    // left mid-scan; the planner must detect that and shut off its skip
+    // certificate (this shape once broke bit-exactness).
+    check("dp-differential-ascending-tables", 200, |g| {
+        let est = fitted_estimator(&EnginePreset::paper(EngineKind::Ds), 17);
+        let mem = MemoryEstimator {
+            rule: MemoryRule::Table(vec![
+                (g.u32(200, 900), g.u32(8, 40)),
+                (0, g.u32(1, 6)),
+            ]),
+        };
+        let cfg = DpBatcherConfig {
+            slice_len: *g.pick(&[16u32, 32, 64, 128]),
+            max_batch_size: None,
+        };
+        let pool = gen_pool(g, 150);
+        let fast = dp_batch(pool.clone(), &est, &mem, &cfg);
+        let slow = dp_batch_reference(pool, &est, &mem, &cfg);
+        assert_bit_exact(&fast, &slow, "ascending-table")
+    });
+}
+
+#[test]
+fn duplicate_heavy_pools_match_reference() {
+    // Long runs of equal lengths exercise the per-distinct-length cache
+    // and the range-skip on flat T[·] stretches.
+    check("dp-differential-duplicates", 150, |g| {
+        let est = fitted_estimator(&EnginePreset::paper(EngineKind::Ds), 13);
+        let preset = EnginePreset::paper(EngineKind::Ds);
+        let mem = preset.memory_estimator();
+        let cfg = gen_cfg(g);
+        let distinct = g.usize(1, 4);
+        let lens: Vec<u32> = (0..distinct).map(|_| g.u32(1, 1024)).collect();
+        let pool: Vec<Request> = (0..g.usize(1, 160))
+            .map(|i| Request::new(i as u64, 0.0, *g.pick(&lens), g.u32(1, 1024)))
+            .collect();
+        let fast = dp_batch(pool.clone(), &est, &mem, &cfg);
+        let slow = dp_batch_reference(pool, &est, &mem, &cfg);
+        assert_bit_exact(&fast, &slow, "duplicates")
+    });
+}

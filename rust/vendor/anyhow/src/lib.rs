@@ -1,0 +1,220 @@
+//! Minimal offline-vendored subset of the `anyhow` error library.
+//!
+//! Covers what this repo uses: [`Error`] (message-chain based), [`Result`],
+//! the `anyhow!` / `bail!` / `ensure!` macros, the [`Context`] extension
+//! trait on `Result` and `Option`, and `?`-conversion from any
+//! `std::error::Error`. Display follows anyhow's convention: `{}` prints
+//! the outermost message, `{:#}` prints the full `a: b: c` chain.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A dynamically typed error with a chain of context messages.
+/// `chain[0]` is the outermost (most recently attached) message; the last
+/// entry is the root cause.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a printable message (what `anyhow!` expands to).
+    pub fn msg(message: impl fmt::Display) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Attach an outer context message (used by the [`Context`] trait).
+    pub fn wrap(mut self, context: impl fmt::Display) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The `a: b: c` cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if f.alternate() {
+            for cause in &self.chain[1..] {
+                write!(f, ": {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error`, so this blanket conversion stays coherent.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>`: `std::result::Result` with [`Error`] as default.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait attaching context to `Result` / `Option` failures.
+pub trait Context<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T, E> for std::result::Result<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| Error::from(e).wrap(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from(e).wrap(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)+) => {
+        $crate::Error::msg(format!($($arg)+))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            $crate::bail!($($arg)+);
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e: Error = io_err().into();
+        let e = e.wrap("reading config");
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: missing file");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn f() -> Result<()> {
+            let r: std::result::Result<(), std::io::Error> = Err(io_err());
+            r?;
+            Ok(())
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| format!("step {}", 3)).unwrap_err();
+        assert_eq!(format!("{e}"), "step 3");
+
+        let o: Option<u32> = None;
+        let e = o.context("empty").unwrap_err();
+        assert_eq!(format!("{e}"), "empty");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(format!("{}", f(5).unwrap_err()), "five is right out");
+        assert_eq!(format!("{}", f(50).unwrap_err()), "x too big: 50");
+        let e = anyhow!("code {}", 7);
+        assert_eq!(format!("{e}"), "code 7");
+    }
+
+    #[test]
+    fn bare_ensure_form() {
+        fn f(ok: bool) -> Result<()> {
+            ensure!(ok);
+            Ok(())
+        }
+        assert!(f(true).is_ok());
+        assert!(format!("{}", f(false).unwrap_err()).contains("condition failed"));
+    }
+}

@@ -1,0 +1,116 @@
+//! Build stub of the PJRT/XLA binding.
+//!
+//! The offline image has no PJRT shared library, so this crate provides the
+//! exact API surface `scls::runtime::client` compiles against, with every
+//! runtime entry point returning an "unavailable" error. All real-mode
+//! tests and benches gate on `artifacts/manifest.json` existing, and
+//! artifact production requires the JAX toolchain anyway, so the stub is
+//! never reached in CI. To serve the real model, replace this path
+//! dependency with a real PJRT binding exposing the same names.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type matching the binding's `Result<_, XlaError>` shape.
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+fn unavailable<T>(what: &str) -> Result<T, XlaError> {
+    Err(XlaError(format!(
+        "{what}: PJRT runtime not available (offline `xla` stub; see rust/vendor/xla)"
+    )))
+}
+
+/// PJRT client handle (stub).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// Compiled executable handle (stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// Device buffer handle (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto, XlaError> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// XLA computation wrapper (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Host literal (stub).
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: Copy>(_values: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, XlaError> {
+        unavailable("Literal::reshape")
+    }
+
+    pub fn to_tuple2(&self) -> Result<(Literal, Literal), XlaError> {
+        unavailable("Literal::to_tuple2")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, XlaError> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("/nonexistent.hlo").is_err());
+        let lit = Literal::vec1(&[1i32, 2, 3]);
+        assert!(lit.reshape(&[3, 1]).is_err());
+        assert!(lit.to_vec::<i32>().is_err());
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{err}").contains("stub"));
+    }
+}
