@@ -3,11 +3,14 @@
 //! --bench bench_scale`).
 //!
 //! This is the perf trajectory anchor for the coordinator hot paths: the
-//! DP batcher, the schedule-tick loop, and the DES driver all run at
-//! production pool sizes here (the adaptive interval stretches under
-//! backlog, so late ticks batch hundreds of thousands of pooled requests
-//! at once). Writes `BENCH_scale.json` with events/sec, wall time, and the
-//! peak pool size so future PRs can regress against it.
+//! DP batcher, the schedule-tick loop, and the generic policy-driven DES
+//! loop all run at production pool sizes here (the adaptive interval
+//! stretches under backlog, so late ticks batch hundreds of thousands of
+//! pooled requests at once). The run streams through a `Tally` metrics
+//! sink (the same observer API the figure cells and the real driver
+//! feed), prints the events/sec delta against the checked-in
+//! `BENCH_scale.json` baseline, then rewrites that baseline in place so
+//! `git diff` shows the drift.
 //!
 //! Knobs (env): SCLS_SCALE_REQUESTS [1000000], SCLS_SCALE_WORKERS [64],
 //! SCLS_SCALE_RATE [2000], SCLS_SCALE_SLICE [128].
@@ -15,8 +18,8 @@
 use std::time::Instant;
 
 use scls::engine::presets::{EngineKind, EnginePreset};
-use scls::scheduler::spec::SchedulerSpec;
-use scls::sim::driver::{run_sliced, SimConfig};
+use scls::metrics::Tally;
+use scls::sim::driver::{SimConfig, Simulation};
 use scls::util::json::Json;
 use scls::workload::distributions::WorkloadKind;
 use scls::workload::{Trace, TraceConfig};
@@ -26,6 +29,11 @@ fn env_u64(key: &str, default: u64) -> u64 {
         .ok()
         .and_then(|s| s.parse::<u64>().ok())
         .unwrap_or(default)
+}
+
+/// The baseline lives next to Cargo.toml regardless of the bench's cwd.
+fn baseline_path() -> String {
+    format!("{}/BENCH_scale.json", env!("CARGO_MANIFEST_DIR"))
 }
 
 fn main() {
@@ -56,24 +64,65 @@ fn main() {
     );
 
     let preset = EnginePreset::paper(EngineKind::Ds);
-    let spec = SchedulerSpec::scls(&preset, slice_len);
-    let sim = SimConfig::new(workers, preset.clone(), 1024, 42);
+    let sim = Simulation::new(SimConfig::new(workers, preset, 1024, 42));
+    let mut tally = Tally::default();
 
     let t0 = Instant::now();
-    let m = run_sliced(&trace, &spec, &sim);
+    let m = sim
+        .run_named_with_sink(&trace, "SCLS", slice_len, &mut tally)
+        .expect("SCLS is a built-in policy");
     let wall = t0.elapsed().as_secs_f64();
 
     assert_eq!(m.completed.len(), n, "scale drain lost requests");
+    assert_eq!(tally.completions as usize, n, "sink missed completions");
     let events_per_sec = m.events as f64 / wall.max(1e-9);
     let s = m.summarize();
 
-    println!("drained {} requests in {wall:.3} s wall", s.completed);
+    println!("drained {} requests in {wall:.3} s wall", tally.completions);
     println!("events            {}", m.events);
     println!("events/sec        {events_per_sec:.0}");
-    println!("peak pool size    {}", m.peak_pool);
-    println!("batches served    {}", m.batches.len());
+    println!("peak pool size    {}", tally.peak_pool);
+    println!("batches served    {}", tally.batches);
     println!("virtual makespan  {:.1} s", m.makespan);
     println!("virtual thpt      {:.2} req/s", s.throughput);
+
+    // Regression check against the checked-in baseline (ROADMAP: diff
+    // events/sec whenever batcher/, sim/, or scheduler/ change).
+    let path = baseline_path();
+    match std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|s| Json::parse(&s).ok())
+    {
+        Some(base) => {
+            let provisional = matches!(base.get("provisional"), Some(Json::Bool(true)));
+            let prev = base.get("events_per_sec").and_then(|j| j.as_f64());
+            // Deltas are only meaningful against the same workload shape:
+            // every knob must match the baseline, not just the request count.
+            let knob = |key: &str| base.get(key).and_then(|j| j.as_f64());
+            let same_shape = knob("requests") == Some(n as f64)
+                && knob("workers") == Some(workers as f64)
+                && knob("rate") == Some(rate)
+                && knob("slice_len") == Some(slice_len as f64);
+            match prev {
+                Some(prev) if provisional => println!(
+                    "baseline is provisional (structure only, authored without a toolchain); \
+                     this run anchors events/sec at {events_per_sec:.0} (placeholder was {prev:.0})"
+                ),
+                Some(prev) if same_shape => {
+                    let delta = (events_per_sec - prev) / prev * 100.0;
+                    println!(
+                        "events/sec delta vs baseline: {delta:+.2}% (baseline {prev:.0}, now {events_per_sec:.0})"
+                    );
+                }
+                Some(prev) => println!(
+                    "baseline used a different workload shape (requests/workers/rate/slice_len) \
+                     — no delta; baseline events/sec was {prev:.0}"
+                ),
+                None => println!("baseline at {path} has no events_per_sec field"),
+            }
+        }
+        None => println!("no baseline at {path}; this run establishes it"),
+    }
 
     let mut j = Json::obj();
     j.set("requests", n as u64)
@@ -88,7 +137,6 @@ fn main() {
         .set("virtual_makespan", m.makespan)
         .set("virtual_throughput", s.throughput)
         .set("completed", s.completed as u64);
-    let path = "BENCH_scale.json";
-    std::fs::write(path, j.to_string_pretty()).expect("write BENCH_scale.json");
+    std::fs::write(&path, j.to_string_pretty()).expect("write BENCH_scale.json");
     println!("wrote {path}");
 }

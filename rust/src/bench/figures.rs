@@ -12,8 +12,7 @@ use crate::engine::presets::{EngineKind, EnginePreset};
 use crate::engine::EngineLatency;
 use crate::estimator::profiler::{profile_and_fit, validate_serving_time, LatencySource, ProfileGrid};
 use crate::metrics::Summary;
-use crate::scheduler::spec::SchedulerSpec;
-use crate::sim::driver::{fitted_estimator, run_ils, run_scls_cb, run_sliced, SimConfig};
+use crate::sim::driver::{fitted_estimator, SimConfig, Simulation};
 use crate::util::jobs::parallel_map;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -109,7 +108,9 @@ impl FigureConfig {
     }
 }
 
-/// Run one (engine, scheduler) cell and summarize.
+/// Run one (engine, scheduler) cell and summarize. `which` is any name
+/// the policy registry accepts ([`crate::scheduler::BUILTIN_POLICIES`]);
+/// every cell goes through the single generic policy loop.
 pub fn run_cell(
     fc: &FigureConfig,
     kind: EngineKind,
@@ -118,33 +119,10 @@ pub fn run_cell(
     slice_len: u32,
 ) -> Summary {
     let trace = fc.trace(rate);
-    let sim = fc.sim(kind);
-    let preset = EnginePreset::paper(kind);
-    let m = match which {
-        "ILS" => run_ils(&trace, &sim),
-        // §7 extension: slice-level scheduling over continuous batching.
-        "SCLS-CB" => run_scls_cb(&trace, &sim, slice_len),
-        "SLS" => run_sliced(&trace, &SchedulerSpec::sls(&preset, fc.max_len), &sim),
-        "SO" => run_sliced(&trace, &SchedulerSpec::slice_only(&preset, slice_len), &sim),
-        "PM" => run_sliced(
-            &trace,
-            &SchedulerSpec::padding_mitigating(&preset, slice_len),
-            &sim,
-        ),
-        "AB" => run_sliced(
-            &trace,
-            &SchedulerSpec::adaptive_batching(&preset, slice_len),
-            &sim,
-        ),
-        "LB" => run_sliced(
-            &trace,
-            &SchedulerSpec::load_balancing(&preset, slice_len),
-            &sim,
-        ),
-        "SCLS" => run_sliced(&trace, &SchedulerSpec::scls(&preset, slice_len), &sim),
-        other => panic!("unknown scheduler {other}"),
-    };
-    m.summarize()
+    let sim = Simulation::new(fc.sim(kind));
+    sim.run_named(&trace, which, slice_len)
+        .unwrap_or_else(|e| panic!("{e}"))
+        .summarize()
 }
 
 // ---------------------------------------------------------------------------

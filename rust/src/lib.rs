@@ -13,9 +13,17 @@
 //!   bucket; `runtime` loads and executes them via PJRT. Python never runs
 //!   on the request path.
 //!
-//! Start at [`sim::driver::run_sliced`] (virtual-time, paper-scale
-//! experiments) or [`worker::real_driver::run_real`] (wall-clock serving of
-//! the real model). `examples/quickstart.rs` is the five-minute tour.
+//! Scheduling is unified behind one open API: every scheduler — the
+//! paper's eight plus yours — is a [`scheduler::SchedulingPolicy`] run by
+//! the single generic DES loop ([`sim::driver::run_policy`]), and the
+//! real PJRT cluster shares the same coordinator brain
+//! ([`scheduler::SlicedCoordinator`]). Start at [`sim::Simulation`]
+//! (virtual-time, paper-scale experiments) or
+//! [`worker::real_driver::run_real`] (wall-clock serving of the real
+//! model); attach [`metrics::MetricsSink`]s to stream a run's event
+//! stream live. `examples/quickstart.rs` is the five-minute tour;
+//! `examples/custom_policy.rs` shows a user-defined scheduler in ~20
+//! lines.
 
 pub mod batcher;
 pub mod bench;

@@ -24,9 +24,11 @@ use scls::bench::figures::{self, FigureConfig, FigureResult};
 use scls::config::{ConfigFile, ExperimentConfig};
 use scls::engine::presets::{EngineKind, EnginePreset};
 use scls::estimator::profiler::{profile_and_fit, ProfileGrid};
+use scls::scheduler::parse_policy_name;
 use scls::scheduler::spec::SchedulerSpec;
-use scls::sim::driver::{run_ils, run_scls_cb, run_sliced, SimConfig};
+use scls::sim::driver::{SimConfig, Simulation};
 use scls::util::cli::Args;
+use scls::util::jobs::parallel_map;
 use scls::util::logging;
 use scls::worker::real_driver::{run_real, RealClusterConfig};
 use scls::workload::distributions::WorkloadKind;
@@ -42,12 +44,17 @@ SUBCOMMANDS:
       --out-dir DIR      output directory            [results]
       --quick SCALE      trace-duration scale, 1.0 = paper's 10 min [0.2]
       --only IDS         comma list, e.g. fig5,fig12
-      --jobs N           parallel simulation cells (output is byte-identical
-                         to --jobs 1; cells are independent sims)  [1]
+      --seeds LIST       comma list of RNG seeds: replicate the whole set
+                         per seed into results/seed<k>/  [42]
+      --jobs N           parallel fan-out (output is byte-identical to
+                         --jobs 1). Multiple figures/seeds fan out across
+                         whole figures; a single figure fans out across
+                         its simulation cells.  [1]
   figure ID   Regenerate one figure (same flags as `figures`)
   simulate    Run one experiment cell on the calibrated DES
       --engine hf|ds     inference engine            [ds]
-      --scheduler NAME   SLS|ILS|SO|PM|AB|LB|SCLS|SCLS-CB  [SCLS]
+      --scheduler NAME   SLS|ILS|SO|PM|AB|LB|SCLS|SCLS-CB (case-insensitive)
+                         [SCLS]
       --rate R           arrival rate req/s          [20]
       --workers W        LLM instances               [8]
       --duration SECS    trace duration              [600]
@@ -154,8 +161,7 @@ fn run_figure(id: &str, fc: &FigureConfig) -> Result<Vec<FigureResult>> {
 fn cmd_figures(args: &Args, only_pos: Option<String>) -> Result<()> {
     let out_dir = PathBuf::from(args.str_or("out-dir", "results"));
     let scale = args.f64_or("quick", 0.2);
-    let mut fc = FigureConfig::quick(scale);
-    fc.jobs = args.usize_or("jobs", 1).max(1);
+    let jobs = args.usize_or("jobs", 1).max(1);
     std::fs::create_dir_all(&out_dir)?;
 
     let ids: Vec<String> = if let Some(id) = only_pos {
@@ -165,13 +171,48 @@ fn cmd_figures(args: &Args, only_pos: Option<String>) -> Result<()> {
     } else {
         figure_ids().into_iter().map(String::from).collect()
     };
+    // Multi-seed replication: `--seeds 42,43,44` reruns the whole figure
+    // set per seed into results/seed<k>/; without the flag the layout is
+    // the classic single-seed one.
+    let multi_seed = args.has("seeds");
+    let seeds: Vec<u64> = args.u64_list_or("seeds", &[FigureConfig::default().seed]);
 
-    for id in &ids {
-        log::info!("running {id} (duration scale {scale})");
-        for (i, r) in run_figure(id, &fc)?.into_iter().enumerate() {
+    // One job per (seed, figure): whole figures fan out across the pool,
+    // and parallelism left over when there are fewer figure jobs than
+    // `--jobs` threads goes to the simulation cells *inside* each figure
+    // (so `figure fig12 --jobs 8` and `figures --only fig5,fig12 --jobs 8`
+    // both saturate). Every cell is a pure function of its arguments and
+    // results are assembled in input order, so output is byte-identical to
+    // `--jobs 1`.
+    let cells: Vec<(u64, String)> = seeds
+        .iter()
+        .flat_map(|&seed| ids.iter().map(move |id| (seed, id.clone())))
+        .collect();
+    let inner_jobs = (jobs / cells.len().max(1)).max(1);
+    log::info!(
+        "running {} figure job(s) over {} seed(s) with --jobs {jobs} (duration scale {scale})",
+        cells.len(),
+        seeds.len()
+    );
+    let results: Vec<Result<Vec<FigureResult>>> = parallel_map(jobs, cells.clone(), |(seed, id)| {
+        let mut fc = FigureConfig::quick(scale);
+        fc.jobs = inner_jobs;
+        fc.seed = seed;
+        run_figure(&id, &fc)
+    });
+
+    // Print and write sequentially, in input order.
+    for ((seed, _id), res) in cells.into_iter().zip(results) {
+        let dir = if multi_seed {
+            out_dir.join(format!("seed{seed}"))
+        } else {
+            out_dir.clone()
+        };
+        std::fs::create_dir_all(&dir)?;
+        for (i, r) in res?.into_iter().enumerate() {
             r.print();
             let suffix = if i == 0 { String::new() } else { format!("_{i}") };
-            let path = out_dir.join(format!("{}{suffix}.json", r.id));
+            let path = dir.join(format!("{}{suffix}.json", r.id));
             std::fs::write(&path, r.json.to_string_pretty())?;
             log::info!("wrote {}", path.display());
         }
@@ -206,7 +247,8 @@ fn experiment_config(args: &Args) -> Result<ExperimentConfig> {
 
 fn cmd_simulate(args: &Args) -> Result<()> {
     let cfg = experiment_config(args)?;
-    let which = args.str_or("scheduler", "SCLS").to_uppercase();
+    // Case-insensitive; unknown names error with the valid-name list.
+    let which = parse_policy_name(args.str_or("scheduler", "SCLS")).map_err(|e| anyhow!("{e}"))?;
     let trace = Trace::generate(&TraceConfig {
         kind: cfg.workload,
         rate: cfg.rate,
@@ -215,13 +257,12 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         max_gen_len: cfg.max_gen_len,
         seed: cfg.seed,
     });
-    let sim = SimConfig::new(
+    let sim = Simulation::new(SimConfig::new(
         cfg.workers,
         EnginePreset::paper(cfg.engine),
         cfg.max_gen_len,
         cfg.seed,
-    );
-    let preset = EnginePreset::paper(cfg.engine);
+    ));
     log::info!(
         "simulate: {} requests, {} workers, engine {}, scheduler {}",
         trace.len(),
@@ -229,33 +270,9 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         cfg.engine.name(),
         which
     );
-    let metrics = match which.as_str() {
-        "ILS" => run_ils(&trace, &sim),
-        "SCLS-CB" | "SCLSCB" => run_scls_cb(&trace, &sim, cfg.slice_len),
-        "SLS" => run_sliced(&trace, &SchedulerSpec::sls(&preset, cfg.max_gen_len), &sim),
-        "SO" => run_sliced(
-            &trace,
-            &SchedulerSpec::slice_only(&preset, cfg.slice_len),
-            &sim,
-        ),
-        "PM" => run_sliced(
-            &trace,
-            &SchedulerSpec::padding_mitigating(&preset, cfg.slice_len),
-            &sim,
-        ),
-        "AB" => run_sliced(
-            &trace,
-            &SchedulerSpec::adaptive_batching(&preset, cfg.slice_len),
-            &sim,
-        ),
-        "LB" => run_sliced(
-            &trace,
-            &SchedulerSpec::load_balancing(&preset, cfg.slice_len),
-            &sim,
-        ),
-        "SCLS" => run_sliced(&trace, &SchedulerSpec::scls(&preset, cfg.slice_len), &sim),
-        other => bail!("unknown --scheduler '{other}'"),
-    };
+    let metrics = sim
+        .run_named(&trace, which, cfg.slice_len)
+        .map_err(|e| anyhow!("{e}"))?;
     let s = metrics.summarize();
     println!("engine            {}", cfg.engine.name());
     println!("scheduler         {which}");
@@ -299,7 +316,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n = args.usize_or("requests", 24);
     let rate = args.f64_or("rate", 4.0);
     let seed = args.u64_or("seed", 42);
-    let which = args.str_or("scheduler", "SCLS").to_uppercase();
+    let which = parse_policy_name(args.str_or("scheduler", "SCLS")).map_err(|e| anyhow!("{e}"))?;
 
     // Synthesize token-bearing requests with Poisson arrivals; lengths from
     // the CodeFuse-shaped input distribution scaled to the bucket budget.
@@ -315,7 +332,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
 
     let preset = EnginePreset::paper(EngineKind::Hf);
-    let mut spec = match which.as_str() {
+    let mut spec = match which {
         "SLS" => SchedulerSpec::sls(&preset, cfg.max_gen_len),
         "SO" => SchedulerSpec::slice_only(&preset, cfg.slice_len),
         // (fixed batch sizes are clamped to the largest exported N bucket
@@ -324,7 +341,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "AB" => SchedulerSpec::adaptive_batching(&preset, cfg.slice_len),
         "LB" => SchedulerSpec::load_balancing(&preset, cfg.slice_len),
         "SCLS" => SchedulerSpec::scls(&preset, cfg.slice_len),
-        other => bail!("unknown --scheduler '{other}' (real mode has no ILS)"),
+        other => bail!("scheduler {other} is not available in real mode (valid: SLS, SO, PM, AB, LB, SCLS)"),
     };
     // Real mode slices are bucket-bound; scale the tick interval Γ down to
     // the small model's speed (paper: Γ tuned per engine, §5.1).

@@ -1,5 +1,11 @@
 //! Run metrics: everything the paper's figures report (§5.1 Metrics plus
-//! the dive-in counters of Figs. 13/14/16/19/20).
+//! the dive-in counters of Figs. 13/14/16/19/20), and the streaming
+//! [`sink::MetricsSink`] observer API the drivers feed while a run is in
+//! flight.
+
+pub mod sink;
+
+pub use sink::{Fanout, MetricsSink, NullSink, Tally};
 
 use crate::util::json::Json;
 use crate::util::stats;
@@ -98,6 +104,53 @@ impl RunMetrics {
             invalid_tokens: req.invalid_tokens,
         });
         self.makespan = self.makespan.max(now);
+    }
+
+    /// Serialize the *entire* event log deterministically — the byte-level
+    /// fingerprint the policy differential suite compares across driver
+    /// implementations. Two runs are behaviorally identical iff this JSON
+    /// matches byte for byte.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("total_requests", self.total_requests)
+            .set("events", self.events)
+            .set("peak_pool", self.peak_pool)
+            .set("makespan", self.makespan)
+            .set("worker_completion", self.worker_completion.clone());
+        let completed: Vec<Json> = self
+            .completed
+            .iter()
+            .map(|c| {
+                let mut j = Json::obj();
+                j.set("id", c.id)
+                    .set("arrival", c.arrival)
+                    .set("finished", c.finished)
+                    .set("generated", c.generated)
+                    .set("slices", c.slices)
+                    .set("pad_tokens", c.pad_tokens)
+                    .set("invalid_tokens", c.invalid_tokens);
+                j
+            })
+            .collect();
+        o.set("completed", Json::Arr(completed));
+        let batches: Vec<Json> = self
+            .batches
+            .iter()
+            .map(|b| {
+                let mut j = Json::obj();
+                j.set("start", b.start)
+                    .set("worker", b.worker)
+                    .set("size", b.size)
+                    .set("input_len", b.input_len)
+                    .set("pad_tokens", b.pad_tokens)
+                    .set("est_serve_time", b.est_serve_time)
+                    .set("actual_serve_time", b.actual_serve_time)
+                    .set("early_return", b.early_return);
+                j
+            })
+            .collect();
+        o.set("batches", Json::Arr(batches));
+        o
     }
 
     pub fn summarize(&self) -> Summary {

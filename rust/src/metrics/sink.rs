@@ -1,0 +1,167 @@
+//! Streaming metrics observers.
+//!
+//! A [`MetricsSink`] watches a run *as it executes*: the generic DES loop
+//! ([`crate::sim::driver::run_policy`]) and the real-cluster driver
+//! ([`crate::worker::real_driver::run_real_streaming`]) invoke the hooks
+//! the moment a batch starts, a request completes, or a schedule tick
+//! drains the pool. `RunMetrics` itself is always populated by the driver
+//! (it is the record of truth the figures summarize); sinks are for
+//! consumers that want the event stream live — progress displays, bench
+//! tallies that must not retain full logs, or exporters.
+//!
+//! Sinks must be cheap and must not assume event ordering beyond
+//! monotonically non-decreasing `now` within one run.
+
+use super::{BatchRecord, CompletedRequest, RunMetrics};
+
+/// Observer of one experiment run's event stream. All hooks default to
+/// no-ops so implementations override only what they consume.
+pub trait MetricsSink {
+    /// A batch was handed to a worker and started serving. In real mode
+    /// `rec.actual_serve_time` is still 0.0 at this point (it is patched
+    /// into `RunMetrics` when the slice completes).
+    fn on_batch(&mut self, _now: f64, _rec: &BatchRecord) {}
+    /// A request finished and its completion record was logged.
+    fn on_completion(&mut self, _now: f64, _req: &CompletedRequest) {}
+    /// A schedule tick drained `depth` pooled requests.
+    fn on_pool_depth(&mut self, _now: f64, _depth: usize) {}
+    /// The run drained; `metrics` is the final event log.
+    fn on_run_end(&mut self, _metrics: &RunMetrics) {}
+}
+
+/// Discards everything (the default sink).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NullSink;
+
+impl MetricsSink for NullSink {}
+
+/// Streaming counters — what the bench harness consumes instead of
+/// re-walking the full `RunMetrics` logs after the fact.
+#[derive(Debug, Default, Clone)]
+pub struct Tally {
+    pub batches: u64,
+    pub completions: u64,
+    pub generated_tokens: u64,
+    pub pad_tokens: u64,
+    pub invalid_tokens: u64,
+    pub peak_pool: usize,
+    /// Virtual/wall time of the last completion seen.
+    pub last_completion: f64,
+}
+
+impl MetricsSink for Tally {
+    fn on_batch(&mut self, _now: f64, _rec: &BatchRecord) {
+        self.batches += 1;
+    }
+
+    fn on_completion(&mut self, now: f64, req: &CompletedRequest) {
+        self.completions += 1;
+        self.generated_tokens += req.generated as u64;
+        self.pad_tokens += req.pad_tokens;
+        self.invalid_tokens += req.invalid_tokens;
+        self.last_completion = now;
+    }
+
+    fn on_pool_depth(&mut self, _now: f64, depth: usize) {
+        self.peak_pool = self.peak_pool.max(depth);
+    }
+}
+
+/// Fans one event stream out to several sinks, in order.
+pub struct Fanout<'a>(pub Vec<&'a mut dyn MetricsSink>);
+
+impl MetricsSink for Fanout<'_> {
+    fn on_batch(&mut self, now: f64, rec: &BatchRecord) {
+        for s in self.0.iter_mut() {
+            s.on_batch(now, rec);
+        }
+    }
+
+    fn on_completion(&mut self, now: f64, req: &CompletedRequest) {
+        for s in self.0.iter_mut() {
+            s.on_completion(now, req);
+        }
+    }
+
+    fn on_pool_depth(&mut self, now: f64, depth: usize) {
+        for s in self.0.iter_mut() {
+            s.on_pool_depth(now, depth);
+        }
+    }
+
+    fn on_run_end(&mut self, metrics: &RunMetrics) {
+        for s in self.0.iter_mut() {
+            s.on_run_end(metrics);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tally_accumulates() {
+        let mut t = Tally::default();
+        t.on_batch(
+            0.5,
+            &BatchRecord {
+                start: 0.5,
+                worker: 0,
+                size: 3,
+                input_len: 10,
+                pad_tokens: 2,
+                est_serve_time: 1.0,
+                actual_serve_time: 1.1,
+                early_return: false,
+            },
+        );
+        t.on_completion(
+            2.0,
+            &CompletedRequest {
+                id: 1,
+                arrival: 0.0,
+                finished: 2.0,
+                generated: 40,
+                slices: 1,
+                pad_tokens: 2,
+                invalid_tokens: 3,
+            },
+        );
+        t.on_pool_depth(1.0, 7);
+        t.on_pool_depth(2.0, 4);
+        assert_eq!(t.batches, 1);
+        assert_eq!(t.completions, 1);
+        assert_eq!(t.generated_tokens, 40);
+        assert_eq!(t.pad_tokens, 2);
+        assert_eq!(t.invalid_tokens, 3);
+        assert_eq!(t.peak_pool, 7);
+        assert_eq!(t.last_completion, 2.0);
+    }
+
+    #[test]
+    fn fanout_forwards_to_all() {
+        let mut a = Tally::default();
+        let mut b = Tally::default();
+        {
+            let mut f = Fanout(vec![&mut a, &mut b]);
+            f.on_pool_depth(0.0, 5);
+            f.on_completion(
+                1.0,
+                &CompletedRequest {
+                    id: 0,
+                    arrival: 0.0,
+                    finished: 1.0,
+                    generated: 1,
+                    slices: 1,
+                    pad_tokens: 0,
+                    invalid_tokens: 0,
+                },
+            );
+        }
+        assert_eq!(a.peak_pool, 5);
+        assert_eq!(b.peak_pool, 5);
+        assert_eq!(a.completions, 1);
+        assert_eq!(b.completions, 1);
+    }
+}

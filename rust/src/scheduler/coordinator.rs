@@ -1,0 +1,234 @@
+//! The sliced-family coordinator core (paper Fig. 7) — the single
+//! "scheduling brain" shared by the calibrated DES
+//! ([`crate::sim::policies::SlicedPolicy`]) and the wall-clock PJRT
+//! cluster ([`crate::worker::real_driver`]).
+//!
+//! It owns the request pool, the DP batcher invocation (with its reusable
+//! scratch), the offloader, the worker-load ledger (Eq. 11), and the
+//! schedule-interval controller (Eq. 12); the drivers own clocks, worker
+//! state, and metrics. Keeping the decision logic here means a policy
+//! tweak lands in simulation and real serving at once.
+
+use crate::batcher::{dp_batch_into, DpBatcherConfig, DpScratch};
+use crate::core::{Batch, Request};
+use crate::estimator::serving_time::ServeEstimate;
+use crate::estimator::MemoryEstimator;
+use crate::offloader::{LoadLedger, MaxMinOffloader, RoundRobin};
+use crate::scheduler::spec::{BatchingSpec, IntervalSpec, OffloadSpec, SchedulerSpec};
+use crate::scheduler::{IntervalController, RequestPool};
+
+/// Coordinator state for one sliced-family scheduler over `workers`
+/// instances. All per-tick buffers are reused across the whole run (the
+/// allocation-lean discipline from the PR 1 hot-path work).
+pub struct SlicedCoordinator {
+    spec: SchedulerSpec,
+    pool: RequestPool,
+    ledger: LoadLedger,
+    rr: RoundRobin,
+    dp_cfg: Option<DpBatcherConfig>,
+    interval: Option<IntervalController>,
+    tick_reqs: Vec<Request>,
+    batch_buf: Vec<Batch>,
+    assign_buf: Vec<(usize, Batch)>,
+    dp_scratch: DpScratch,
+}
+
+impl SlicedCoordinator {
+    pub fn new(spec: &SchedulerSpec, workers: usize) -> SlicedCoordinator {
+        assert!(workers > 0);
+        // `Some` exactly for coordinator (DP) batching.
+        let dp_cfg = match spec.batching {
+            BatchingSpec::Dp { max_batch_size } => Some(DpBatcherConfig {
+                slice_len: spec.slice_len,
+                max_batch_size,
+            }),
+            BatchingSpec::WorkerFcfs { .. } => None,
+        };
+        let interval = match spec.interval {
+            IntervalSpec::Immediate => None,
+            IntervalSpec::Fixed(t) => Some(IntervalController::Fixed(t)),
+            IntervalSpec::Adaptive { lambda, gamma } => {
+                Some(IntervalController::Adaptive { lambda, gamma })
+            }
+        };
+        SlicedCoordinator {
+            spec: spec.clone(),
+            pool: RequestPool::new(),
+            ledger: LoadLedger::new(workers),
+            rr: RoundRobin::new(workers),
+            dp_cfg,
+            interval,
+            tick_reqs: Vec::new(),
+            batch_buf: Vec::new(),
+            assign_buf: Vec::new(),
+            dp_scratch: DpScratch::new(),
+        }
+    }
+
+    pub fn spec(&self) -> &SchedulerSpec {
+        &self.spec
+    }
+
+    /// True when batches are formed centrally (DP) rather than per worker.
+    pub fn coordinator_batching(&self) -> bool {
+        self.dp_cfg.is_some()
+    }
+
+    /// True when this policy runs on schedule ticks (PM/AB/LB/SCLS).
+    pub fn has_ticks(&self) -> bool {
+        self.interval.is_some()
+    }
+
+    /// Pre-size the pool for an expected request volume.
+    pub fn reserve_pool(&mut self, n: usize) {
+        self.pool.reserve(n);
+    }
+
+    /// Route one new or rescheduled request: pooled under coordinator
+    /// batching (`None`), otherwise round-robined to a worker whose local
+    /// queue the caller owns (the request is handed back for delivery).
+    pub fn admit(&mut self, r: Request) -> Option<(usize, Request)> {
+        if self.coordinator_batching() {
+            self.pool.push(r);
+            None
+        } else {
+            Some((self.rr.next_worker(), r))
+        }
+    }
+
+    pub fn pool_is_empty(&self) -> bool {
+        self.pool.is_empty()
+    }
+
+    /// Run one schedule tick: drain the pool, form batches with the DP
+    /// batcher (Alg. 1), and assign them to workers (charging the load
+    /// ledger). Returns the number of requests drained; the assignments
+    /// wait in the buffer handed out by [`Self::take_assignments`].
+    pub fn schedule_tick<E: ServeEstimate + ?Sized>(
+        &mut self,
+        est: &E,
+        mem: &MemoryEstimator,
+    ) -> usize {
+        self.pool.fetch_all_into(&mut self.tick_reqs);
+        let drained = self.tick_reqs.len();
+        if drained == 0 {
+            self.assign_buf.clear();
+            return 0;
+        }
+        let dp_cfg = self
+            .dp_cfg
+            .as_ref()
+            .expect("ticks only exist under coordinator batching");
+        dp_batch_into(
+            &mut self.tick_reqs,
+            est,
+            mem,
+            dp_cfg,
+            &mut self.dp_scratch,
+            &mut self.batch_buf,
+        );
+        match self.spec.offload {
+            OffloadSpec::MaxMin => MaxMinOffloader.offload_into(
+                &mut self.batch_buf,
+                &mut self.ledger,
+                &mut self.assign_buf,
+            ),
+            OffloadSpec::RoundRobin => {
+                self.assign_buf.clear();
+                for b in self.batch_buf.drain(..) {
+                    let w = self.rr.next_worker();
+                    self.ledger.add(w, b.est_serve_time);
+                    self.assign_buf.push((w, b));
+                }
+            }
+        }
+        drained
+    }
+
+    /// Hand out the tick's assignment buffer (drain it, then give it back
+    /// via [`Self::recycle_assignments`] so its capacity is reused).
+    pub fn take_assignments(&mut self) -> Vec<(usize, Batch)> {
+        std::mem::take(&mut self.assign_buf)
+    }
+
+    /// Return a drained assignment buffer for reuse.
+    pub fn recycle_assignments(&mut self, buf: Vec<(usize, Batch)>) {
+        debug_assert!(buf.is_empty(), "recycled buffer must be drained");
+        self.assign_buf = buf;
+    }
+
+    /// Charge the ledger for a worker-locus (FCFS) batch the caller formed
+    /// itself (coordinator batches are charged inside `schedule_tick`).
+    pub fn charge(&mut self, worker: usize, est_serve_time: f64) {
+        self.ledger.add(worker, est_serve_time);
+    }
+
+    /// A worker finished a batch: release its estimated load (§4.5 keeps
+    /// estimation error from accumulating in the ledger).
+    pub fn batch_done(&mut self, worker: usize, est_serve_time: f64) {
+        self.ledger.complete(worker, est_serve_time);
+    }
+
+    /// Next schedule interval (Eq. 12 under SCLS; the fixed Γ otherwise).
+    /// `None` for tickless (Immediate) policies.
+    pub fn next_interval(&self) -> Option<f64> {
+        self.interval.as_ref().map(|c| c.next_interval(&self.ledger))
+    }
+
+    pub fn ledger(&self) -> &LoadLedger {
+        &self.ledger
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::presets::{EngineKind, EnginePreset};
+    use crate::sim::driver::fitted_estimator;
+
+    fn requests(n: usize) -> Vec<Request> {
+        (0..n)
+            .map(|i| Request::new(i as u64, 0.1 * i as f64, 16 + 8 * (i as u32 % 9), 200))
+            .collect()
+    }
+
+    #[test]
+    fn scls_tick_forms_and_assigns_batches() {
+        let preset = EnginePreset::paper(EngineKind::Ds);
+        let spec = SchedulerSpec::scls(&preset, 128);
+        let mut c = SlicedCoordinator::new(&spec, 4);
+        assert!(c.coordinator_batching() && c.has_ticks());
+        for r in requests(24) {
+            assert!(c.admit(r).is_none(), "SCLS pools everything");
+        }
+        let est = fitted_estimator(&preset, 7);
+        let mem = preset.memory_estimator();
+        let drained = c.schedule_tick(&est, &mem);
+        assert_eq!(drained, 24);
+        let mut a = c.take_assignments();
+        let total: usize = a.iter().map(|(_, b)| b.size()).sum();
+        assert_eq!(total, 24, "no request lost in batching/offload");
+        assert!(a.iter().all(|&(w, _)| w < 4));
+        // Ledger was charged for every assignment.
+        assert!((0..4).map(|w| c.ledger().load(w)).sum::<f64>() > 0.0);
+        a.clear();
+        c.recycle_assignments(a);
+        // Adaptive interval floors at gamma while any worker is idle-ish.
+        let t = c.next_interval().unwrap();
+        assert!(t >= preset.gamma * 0.5);
+    }
+
+    #[test]
+    fn sls_routes_round_robin_without_ticks() {
+        let preset = EnginePreset::paper(EngineKind::Ds);
+        let spec = SchedulerSpec::sls(&preset, 1024);
+        let mut c = SlicedCoordinator::new(&spec, 3);
+        assert!(!c.coordinator_batching() && !c.has_ticks());
+        let ws: Vec<usize> = requests(5)
+            .into_iter()
+            .map(|r| c.admit(r).unwrap().0)
+            .collect();
+        assert_eq!(ws, vec![0, 1, 2, 0, 1]);
+        assert_eq!(c.next_interval(), None);
+    }
+}

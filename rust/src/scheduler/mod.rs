@@ -1,15 +1,26 @@
-//! Scheduling policies: SCLS (the paper's contribution, §4), the SLS and
-//! ILS baselines (§5.1), and the SO/PM/AB/LB ablation ladder (§5.4).
+//! Scheduling: the open [`policy::SchedulingPolicy`] API, the shared
+//! sliced-family coordinator core, and the declarative `SchedulerSpec`
+//! axes describing SCLS (§4), the SLS baseline (§5.1), and the SO/PM/AB/LB
+//! ablation ladder (§5.4).
 //!
-//! The policies are expressed as pure configuration over four orthogonal
-//! axes (`SchedulerSpec`); the DES driver (`sim::driver`) and the real-mode
-//! driver (`worker::real_driver`) interpret them. ILS is structurally
-//! different (continuous batching) and has its own driver path.
+//! A `SchedulerSpec` is pure configuration over four orthogonal axes; it
+//! *constructs* a policy object (`spec.policy(&sim_cfg)`) that the single
+//! generic DES loop (`sim::driver::run_policy`) interprets. ILS and
+//! SCLS-CB (continuous batching, §5.1/§7) are policies of their own in
+//! `sim::policies`. The real-mode driver (`worker::real_driver`) shares
+//! the same coordinator brain ([`coordinator::SlicedCoordinator`]).
 
+pub mod coordinator;
 pub mod interval;
+pub mod policy;
 pub mod pool;
 pub mod spec;
 
+pub use coordinator::SlicedCoordinator;
 pub use interval::IntervalController;
+pub use policy::{
+    build_policy, canonical_policy_name, parse_policy_name, SchedulingPolicy, SimCtx,
+    BUILTIN_POLICIES,
+};
 pub use pool::RequestPool;
 pub use spec::{BatchingSpec, IntervalSpec, OffloadSpec, SchedulerSpec};

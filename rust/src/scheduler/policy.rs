@@ -1,0 +1,251 @@
+//! The open scheduling-policy API.
+//!
+//! Every scheduler in the paper — and any user-defined one — is a
+//! [`SchedulingPolicy`]: an object that reacts to the three events a
+//! serving cluster produces (request arrival, schedule tick, worker
+//! completion) and decides batch formation, placement, per-iteration
+//! admission, and the next tick interval. The generic DES loop
+//! ([`crate::sim::driver::run_policy`]) owns the virtual clock, the event
+//! queue, and the metrics log; the policy owns every decision and all
+//! worker-model state.
+//!
+//! The eight built-in policies (SLS, SO, PM, AB, LB, SCLS, ILS, SCLS-CB)
+//! live in [`crate::sim::policies`]; [`build_policy`] constructs them by
+//! name for the CLI and the figure suite. Implementing a new scheduler
+//! takes ~20 lines — see `examples/custom_policy.rs`.
+
+use crate::core::Request;
+use crate::engine::presets::EnginePreset;
+use crate::metrics::{BatchRecord, MetricsSink, RunMetrics};
+use crate::sim::events::EventQueue;
+
+/// DES event alphabet shared by every policy: the loop pops these in time
+/// order (ties break by push order) and dispatches to the policy hooks.
+#[derive(Debug)]
+pub(crate) enum Ev {
+    /// Index into the trace's request list.
+    Arrival(usize),
+    /// Coordinator schedule tick (only policies that arm one receive it).
+    Tick,
+    /// The batch/iteration a policy started on this worker completed.
+    WorkerDone(usize),
+}
+
+/// What a policy sees and can do while handling one event: the virtual
+/// clock, future-event scheduling, and the streaming metrics channel.
+pub struct SimCtx<'a> {
+    /// Current virtual time (seconds).
+    pub now: f64,
+    arrivals_left: usize,
+    queue: &'a mut EventQueue<Ev>,
+    metrics: &'a mut RunMetrics,
+    sink: &'a mut dyn MetricsSink,
+}
+
+impl<'a> SimCtx<'a> {
+    pub(crate) fn new(
+        now: f64,
+        arrivals_left: usize,
+        queue: &'a mut EventQueue<Ev>,
+        metrics: &'a mut RunMetrics,
+        sink: &'a mut dyn MetricsSink,
+    ) -> SimCtx<'a> {
+        SimCtx {
+            now,
+            arrivals_left,
+            queue,
+            metrics,
+            sink,
+        }
+    }
+
+    /// Trace arrivals not yet injected (policies use this to decide
+    /// whether to re-arm their schedule tick).
+    pub fn arrivals_left(&self) -> usize {
+        self.arrivals_left
+    }
+
+    /// Read-only view of the metrics accumulated so far.
+    pub fn metrics(&self) -> &RunMetrics {
+        self.metrics
+    }
+
+    /// Schedule `on_worker_done(worker)` at virtual time `at` — the policy
+    /// committed worker `worker` until then.
+    pub fn complete_at(&mut self, at: f64, worker: usize) {
+        self.queue.push(at, Ev::WorkerDone(worker));
+    }
+
+    /// Schedule the next coordinator tick at virtual time `at`.
+    pub fn tick_at(&mut self, at: f64) {
+        self.queue.push(at, Ev::Tick);
+    }
+
+    /// Log a batch serving start (streams to sinks, then appends to
+    /// `RunMetrics::batches`).
+    pub fn record_batch(&mut self, rec: BatchRecord) {
+        self.sink.on_batch(self.now, &rec);
+        self.metrics.batches.push(rec);
+    }
+
+    /// Log a request completion at the current virtual time.
+    pub fn record_completion(&mut self, req: &Request) {
+        self.metrics.record_completion(req, self.now);
+        let c = self
+            .metrics
+            .completed
+            .last()
+            .expect("record_completion just pushed");
+        self.sink.on_completion(self.now, c);
+    }
+
+    /// Note a schedule tick drained `depth` pooled requests (tracks the
+    /// pool high-water mark and streams to sinks).
+    pub fn observe_pool(&mut self, depth: usize) {
+        self.metrics.peak_pool = self.metrics.peak_pool.max(depth);
+        self.sink.on_pool_depth(self.now, depth);
+    }
+}
+
+/// A scheduling policy: the full decision surface of one cluster
+/// coordinator plus the worker-model state it manages.
+///
+/// The generic loop guarantees: `init` runs once before any event; hooks
+/// run with a monotone non-decreasing `ctx.now`; every `complete_at` is
+/// answered by exactly one `on_worker_done`; `finish` runs once after the
+/// queue drains.
+pub trait SchedulingPolicy {
+    /// Arm initial events (e.g. the first schedule tick) and pre-size
+    /// internal state (`ctx.arrivals_left()` is the trace length here).
+    fn init(&mut self, _ctx: &mut SimCtx) {}
+
+    /// A request entered the cluster: pool it, or place it directly.
+    fn on_arrival(&mut self, req: Request, ctx: &mut SimCtx);
+
+    /// A coordinator tick fired (only delivered if the policy armed one):
+    /// form batches, place them, and re-arm the next tick.
+    fn on_tick(&mut self, _ctx: &mut SimCtx) {}
+
+    /// The serving the policy scheduled on `worker` completed: apply
+    /// outcomes, record completions, reschedule leftovers, refill the
+    /// worker.
+    fn on_worker_done(&mut self, worker: usize, ctx: &mut SimCtx);
+
+    /// Final accounting after the event queue drains (e.g. per-worker
+    /// completion times).
+    fn finish(&mut self, _metrics: &mut RunMetrics) {}
+}
+
+// ---------------------------------------------------------------------------
+// Built-in policy registry (CLI / figure-suite construction by name)
+// ---------------------------------------------------------------------------
+
+/// Canonical names of the eight built-in policies, in paper order.
+pub const BUILTIN_POLICIES: [&str; 8] = ["SLS", "SO", "PM", "AB", "LB", "SCLS", "ILS", "SCLS-CB"];
+
+/// Case-insensitive canonicalization of a scheduler name (accepts the
+/// long-form aliases and `_`/`-` variants, e.g. `scls_cb` or `SCLSCB`).
+pub fn canonical_policy_name(s: &str) -> Option<&'static str> {
+    let up = s.trim().replace('_', "-").to_ascii_uppercase();
+    match up.as_str() {
+        "SLS" => Some("SLS"),
+        "SO" | "SLICE-ONLY" => Some("SO"),
+        "PM" | "PADDING-MITIGATING" => Some("PM"),
+        "AB" | "ADAPTIVE-BATCHING" => Some("AB"),
+        "LB" | "LOAD-BALANCING" => Some("LB"),
+        "SCLS" => Some("SCLS"),
+        "ILS" => Some("ILS"),
+        "SCLS-CB" | "SCLSCB" => Some("SCLS-CB"),
+        _ => None,
+    }
+}
+
+/// Parse a scheduler name from user input, case-insensitively. On failure
+/// the error lists every valid name.
+pub fn parse_policy_name(s: &str) -> Result<&'static str, String> {
+    canonical_policy_name(s).ok_or_else(|| {
+        format!(
+            "unknown scheduler '{s}' (valid, case-insensitive: {})",
+            BUILTIN_POLICIES.join(", ")
+        )
+    })
+}
+
+/// Construct a built-in policy by (canonical or aliased) name against a
+/// cluster configuration. `slice_len` parameterizes every sliced policy;
+/// SLS derives its iteration limit from `cfg.max_gen_len` as in §5.1.
+pub fn build_policy(
+    name: &str,
+    cfg: &crate::sim::driver::SimConfig,
+    slice_len: u32,
+) -> Result<Box<dyn SchedulingPolicy>, String> {
+    use crate::scheduler::spec::SchedulerSpec;
+    use crate::sim::policies::{IlsPolicy, SclsCbPolicy, SlicedPolicy};
+
+    let preset: &EnginePreset = &cfg.engine;
+    Ok(match parse_policy_name(name)? {
+        "ILS" => Box::new(IlsPolicy::new(cfg)),
+        "SCLS-CB" => Box::new(SclsCbPolicy::new(cfg, slice_len)),
+        "SLS" => Box::new(SlicedPolicy::new(
+            &SchedulerSpec::sls(preset, cfg.max_gen_len),
+            cfg,
+        )),
+        "SO" => Box::new(SlicedPolicy::new(
+            &SchedulerSpec::slice_only(preset, slice_len),
+            cfg,
+        )),
+        "PM" => Box::new(SlicedPolicy::new(
+            &SchedulerSpec::padding_mitigating(preset, slice_len),
+            cfg,
+        )),
+        "AB" => Box::new(SlicedPolicy::new(
+            &SchedulerSpec::adaptive_batching(preset, slice_len),
+            cfg,
+        )),
+        "LB" => Box::new(SlicedPolicy::new(
+            &SchedulerSpec::load_balancing(preset, slice_len),
+            cfg,
+        )),
+        "SCLS" => Box::new(SlicedPolicy::new(
+            &SchedulerSpec::scls(preset, slice_len),
+            cfg,
+        )),
+        other => unreachable!("canonical name {other} not constructed"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_is_case_insensitive() {
+        assert_eq!(parse_policy_name("scls"), Ok("SCLS"));
+        assert_eq!(parse_policy_name("Scls-Cb"), Ok("SCLS-CB"));
+        assert_eq!(parse_policy_name("SCLSCB"), Ok("SCLS-CB"));
+        assert_eq!(parse_policy_name("scls_cb"), Ok("SCLS-CB"));
+        assert_eq!(parse_policy_name("ils"), Ok("ILS"));
+        assert_eq!(parse_policy_name(" lb "), Ok("LB"));
+        assert_eq!(parse_policy_name("slice-only"), Ok("SO"));
+    }
+
+    #[test]
+    fn parse_error_lists_valid_names() {
+        let err = parse_policy_name("vllm").unwrap_err();
+        assert!(err.contains("unknown scheduler 'vllm'"), "{err}");
+        for name in BUILTIN_POLICIES {
+            assert!(err.contains(name), "error must list {name}: {err}");
+        }
+    }
+
+    #[test]
+    fn every_builtin_constructs() {
+        use crate::engine::presets::{EngineKind, EnginePreset};
+        use crate::sim::driver::SimConfig;
+        let cfg = SimConfig::new(2, EnginePreset::paper(EngineKind::Ds), 1024, 7);
+        for name in BUILTIN_POLICIES {
+            assert!(build_policy(name, &cfg, 128).is_ok(), "{name}");
+        }
+        assert!(build_policy("nope", &cfg, 128).is_err());
+    }
+}

@@ -23,6 +23,12 @@ impl RequestPool {
         }
     }
 
+    /// Grow the backing store for an expected workload (same steady-state
+    /// no-realloc property as [`RequestPool::with_capacity`]).
+    pub fn reserve(&mut self, n: usize) {
+        self.requests.reserve(n);
+    }
+
     pub fn push(&mut self, r: Request) {
         self.requests.push(r);
     }

@@ -11,8 +11,16 @@
 //! | LB     | S         | DP, uncapped        | max-min     | fixed Γ   |
 //! | SCLS   | S         | DP, uncapped        | max-min     | Eq. (12)  |
 //!
-//! ILS (continuous batching) is structurally different and carried as its
-//! own variant.
+//! A spec is a *constructor of policy objects*: [`SchedulerSpec::policy`]
+//! builds the [`crate::sim::policies::SlicedPolicy`] that the single
+//! generic DES loop ([`crate::sim::driver::run_policy`]) interprets, and
+//! the real-mode driver consumes the same axes through the shared
+//! [`crate::scheduler::SlicedCoordinator`]. The `name` is a free-form
+//! `String`, so user-defined axis combinations are first-class — nothing
+//! pattern-matches on it. ILS and SCLS-CB (continuous batching) are
+//! structurally different and are policies of their own
+//! ([`crate::sim::policies::IlsPolicy`] /
+//! [`crate::sim::policies::SclsCbPolicy`]).
 
 use crate::engine::presets::EnginePreset;
 
@@ -44,7 +52,9 @@ pub enum IntervalSpec {
 /// A fully specified sliced-family scheduler.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SchedulerSpec {
-    pub name: &'static str,
+    /// Display label. Free-form: user-defined policies pick their own;
+    /// no driver logic dispatches on it.
+    pub name: String,
     /// Iteration limit per schedule (S; == max_gen_len for SLS).
     pub slice_len: u32,
     pub batching: BatchingSpec,
@@ -53,10 +63,37 @@ pub struct SchedulerSpec {
 }
 
 impl SchedulerSpec {
+    /// Construct the policy object this spec describes, ready for
+    /// [`crate::sim::driver::run_policy`] or
+    /// [`crate::sim::Simulation::run`].
+    pub fn policy(
+        &self,
+        cfg: &crate::sim::driver::SimConfig,
+    ) -> crate::sim::policies::SlicedPolicy {
+        crate::sim::policies::SlicedPolicy::new(self, cfg)
+    }
+
+    /// A user-defined point in the axis space.
+    pub fn custom(
+        name: impl Into<String>,
+        slice_len: u32,
+        batching: BatchingSpec,
+        offload: OffloadSpec,
+        interval: IntervalSpec,
+    ) -> SchedulerSpec {
+        SchedulerSpec {
+            name: name.into(),
+            slice_len,
+            batching,
+            offload,
+            interval,
+        }
+    }
+
     /// Conventional sequence-level scheduling (§5.1 baseline).
     pub fn sls(preset: &EnginePreset, max_gen_len: u32) -> SchedulerSpec {
         SchedulerSpec {
-            name: "SLS",
+            name: "SLS".into(),
             slice_len: max_gen_len,
             batching: BatchingSpec::WorkerFcfs {
                 batch_size: preset.sls_batch_size,
@@ -69,7 +106,7 @@ impl SchedulerSpec {
     /// Ablation: Slice-Only (§5.4).
     pub fn slice_only(preset: &EnginePreset, slice_len: u32) -> SchedulerSpec {
         SchedulerSpec {
-            name: "SO",
+            name: "SO".into(),
             slice_len,
             batching: BatchingSpec::WorkerFcfs {
                 batch_size: preset.sls_batch_size,
@@ -82,7 +119,7 @@ impl SchedulerSpec {
     /// Ablation: Padding-Mitigating (§5.4) — capped DP, fixed Γ, RR.
     pub fn padding_mitigating(preset: &EnginePreset, slice_len: u32) -> SchedulerSpec {
         SchedulerSpec {
-            name: "PM",
+            name: "PM".into(),
             slice_len,
             batching: BatchingSpec::Dp {
                 max_batch_size: Some(preset.sls_batch_size),
@@ -95,7 +132,7 @@ impl SchedulerSpec {
     /// Ablation: Adaptive-Batching (§5.4) — uncapped DP, fixed Γ, RR.
     pub fn adaptive_batching(preset: &EnginePreset, slice_len: u32) -> SchedulerSpec {
         SchedulerSpec {
-            name: "AB",
+            name: "AB".into(),
             slice_len,
             batching: BatchingSpec::Dp {
                 max_batch_size: None,
@@ -108,7 +145,7 @@ impl SchedulerSpec {
     /// Ablation: Load-Balancing (§5.4) — AB + max-min.
     pub fn load_balancing(preset: &EnginePreset, slice_len: u32) -> SchedulerSpec {
         SchedulerSpec {
-            name: "LB",
+            name: "LB".into(),
             slice_len,
             batching: BatchingSpec::Dp {
                 max_batch_size: None,
@@ -121,7 +158,7 @@ impl SchedulerSpec {
     /// Full SCLS (§4).
     pub fn scls(preset: &EnginePreset, slice_len: u32) -> SchedulerSpec {
         SchedulerSpec {
-            name: "SCLS",
+            name: "SCLS".into(),
             slice_len,
             batching: BatchingSpec::Dp {
                 max_batch_size: None,
@@ -156,7 +193,7 @@ mod tests {
     fn ladder_matches_paper_axes() {
         let p = EnginePreset::paper(EngineKind::Ds);
         let ladder = SchedulerSpec::ablation_ladder(&p, 128, 1024);
-        let names: Vec<&str> = ladder.iter().map(|s| s.name).collect();
+        let names: Vec<&str> = ladder.iter().map(|s| s.name.as_str()).collect();
         assert_eq!(names, vec!["SLS", "SO", "PM", "AB", "LB", "SCLS"]);
 
         // SLS: slice == max gen, fixed batching.

@@ -1,26 +1,33 @@
-//! Discrete-event simulation drivers.
+//! The single discrete-event simulation loop.
 //!
-//! `run_sliced` interprets any `SchedulerSpec` (SLS, SO, PM, AB, LB, SCLS)
-//! against a cluster of simulated workers; `run_ils` models the
-//! DeepSpeed-FastGen-style iteration-level scheduler with continuous
-//! batching. Both run on a virtual clock, so a 10-minute 8-GPU experiment
-//! completes in milliseconds and is exactly reproducible from the seed.
+//! There is exactly ONE event loop in the DES: [`run_policy`]. It owns the
+//! virtual clock, the time-ordered event queue (ties break by push order,
+//! so runs are exactly reproducible from the seed), and the `RunMetrics`
+//! event log; every scheduling decision is delegated to a
+//! [`SchedulingPolicy`] object through three hooks (`on_arrival`,
+//! `on_tick`, `on_worker_done`). The eight built-in policies — the
+//! SLS → SO → PM → AB → LB → SCLS sliced ladder plus ILS and the §7
+//! SCLS-CB extension — live in [`crate::sim::policies`]; user-defined
+//! policies implement the same trait (see `examples/custom_policy.rs`).
+//!
+//! [`Simulation`] / [`ClusterBuilder`] are the facade: configure a
+//! cluster, attach streaming [`MetricsSink`]s, and run policies by object,
+//! by `SchedulerSpec`, or by name. The `run_sliced` / `run_ils` /
+//! `run_scls_cb` functions survive as thin conveniences over the same
+//! generic loop (the three bespoke drivers they used to be are frozen in
+//! [`crate::sim::reference`] as differential oracles). A 10-minute 8-GPU
+//! experiment completes in milliseconds either way.
 
-use std::collections::VecDeque;
-
-use crate::batcher::{dp_batch_into, fcfs_batches, DpBatcherConfig, DpScratch};
-use crate::core::{Batch, Request};
 use crate::engine::presets::EnginePreset;
-use crate::engine::sim::SimEngine;
 use crate::estimator::profiler::{profile_and_fit, ProfileGrid};
 use crate::estimator::ServingTimeEstimator;
-use crate::metrics::{BatchRecord, RunMetrics};
-use crate::offloader::{LoadLedger, MaxMinOffloader, RoundRobin};
-use crate::scheduler::spec::{BatchingSpec, IntervalSpec, OffloadSpec, SchedulerSpec};
-use crate::scheduler::{IntervalController, RequestPool};
+use crate::metrics::{MetricsSink, NullSink, RunMetrics};
+use crate::scheduler::policy::{Ev, SchedulingPolicy, SimCtx};
+use crate::scheduler::spec::SchedulerSpec;
 use crate::workload::Trace;
 
 use super::events::EventQueue;
+use super::policies::{IlsPolicy, SclsCbPolicy, SlicedPolicy};
 
 /// Cluster-level simulation parameters.
 #[derive(Debug, Clone)]
@@ -51,415 +58,208 @@ pub fn fitted_estimator(preset: &EnginePreset, seed: u64) -> ServingTimeEstimato
     profile_and_fit(&mut src, &ProfileGrid::default()).estimator
 }
 
-#[derive(Debug)]
-enum Ev {
-    Arrival(usize),
-    Tick,
-    WorkerDone(usize),
-}
-
-/// Per-worker state for the sliced-family driver.
-struct WorkerState {
-    /// Coordinator-formed batches waiting in the local queue.
-    batch_queue: VecDeque<Batch>,
-    /// Worker-locus FCFS: raw requests waiting locally (SLS/SO).
-    req_queue: VecDeque<Request>,
-    /// The batch currently being served (None = idle).
-    serving: Option<Batch>,
-    engine: SimEngine,
-    last_done: f64,
-}
-
-/// Run one sliced-family experiment to drain.
-pub fn run_sliced(trace: &Trace, spec: &SchedulerSpec, cfg: &SimConfig) -> RunMetrics {
-    assert!(cfg.workers > 0);
-    let est = fitted_estimator(&cfg.engine, cfg.seed);
-    let mem = cfg.engine.memory_estimator();
-
-    let mut workers: Vec<WorkerState> = (0..cfg.workers)
-        .map(|w| WorkerState {
-            batch_queue: VecDeque::new(),
-            req_queue: VecDeque::new(),
-            serving: None,
-            engine: SimEngine::new(
-                cfg.engine.latency(cfg.seed ^ (w as u64).wrapping_mul(0x9E37)),
-                cfg.max_gen_len,
-            ),
-            last_done: 0.0,
-        })
-        .collect();
-
-    let mut pool = RequestPool::with_capacity(trace.len().min(1 << 16));
-    let mut ledger = LoadLedger::new(cfg.workers);
-    let mut rr = RoundRobin::new(cfg.workers);
+/// Drive one policy over one trace to drain: the generic DES loop.
+///
+/// `workers` only pre-sizes the event heap; the policy owns all worker
+/// state. Every event (arrival, tick, worker-done) is counted in
+/// `metrics.events`, and the policy streams batch/completion records to
+/// `sink` through its [`SimCtx`].
+pub fn run_policy(
+    trace: &Trace,
+    policy: &mut dyn SchedulingPolicy,
+    workers: usize,
+    sink: &mut dyn MetricsSink,
+) -> RunMetrics {
     let mut metrics = RunMetrics::with_capacity(trace.len());
-
-    let mut q: EventQueue<Ev> = EventQueue::with_capacity(trace.len() + cfg.workers + 2);
+    let mut q: EventQueue<Ev> = EventQueue::with_capacity(trace.len() + workers + 2);
     for (i, r) in trace.requests.iter().enumerate() {
         q.push(r.arrival, Ev::Arrival(i));
     }
-    // Hoisted batcher config: `Some` exactly for coordinator (DP) batching.
-    let dp_cfg = match spec.batching {
-        BatchingSpec::Dp { max_batch_size } => Some(DpBatcherConfig {
-            slice_len: spec.slice_len,
-            max_batch_size,
-        }),
-        BatchingSpec::WorkerFcfs { .. } => None,
-    };
-    let coordinator_batching = dp_cfg.is_some();
-    let interval = match spec.interval {
-        IntervalSpec::Immediate => None,
-        IntervalSpec::Fixed(t) => Some(IntervalController::Fixed(t)),
-        IntervalSpec::Adaptive { lambda, gamma } => {
-            Some(IntervalController::Adaptive { lambda, gamma })
-        }
-    };
-    if interval.is_some() {
-        q.push(0.0, Ev::Tick);
-    }
     let mut arrivals_left = trace.len();
-
-    // ---- helpers as closures over the mutable state ---------------------
-
-    // Start serving on worker `w` if idle and work is queued.
-    fn try_start(
-        w: usize,
-        now: f64,
-        workers: &mut [WorkerState],
-        spec: &SchedulerSpec,
-        est: &ServingTimeEstimator,
-        metrics: &mut RunMetrics,
-        q: &mut EventQueue<Ev>,
-    ) {
-        let ws = &mut workers[w];
-        if ws.serving.is_some() {
-            return;
-        }
-        // Worker-locus FCFS: form a batch from the local request queue.
-        if let BatchingSpec::WorkerFcfs { batch_size } = spec.batching {
-            if ws.batch_queue.is_empty() && !ws.req_queue.is_empty() {
-                let take = (batch_size as usize).min(ws.req_queue.len());
-                let reqs: Vec<Request> = ws.req_queue.drain(..take).collect();
-                let mut batches = fcfs_batches(reqs, batch_size, est, spec.slice_len);
-                debug_assert_eq!(batches.len(), 1);
-                ws.batch_queue.push_back(batches.pop().unwrap());
-            }
-        }
-        let Some(mut batch) = ws.batch_queue.pop_front() else {
-            return;
-        };
-        // Serving-start accounting: each request pays its pads and a slice.
-        let li = batch.input_len();
-        for r in &mut batch.requests {
-            r.slices += 1;
-            r.pad_tokens += (li - r.input_len) as u64;
-        }
-        let outcome = ws.engine.serve_slice(&batch, spec.slice_len);
-        metrics.batches.push(BatchRecord {
-            start: now,
-            worker: w,
-            size: batch.size() as u32,
-            input_len: li,
-            pad_tokens: batch.pad_tokens(),
-            est_serve_time: batch.est_serve_time,
-            actual_serve_time: outcome.duration,
-            early_return: outcome.early_return,
-        });
-        // Stash the outcome inside the batch by applying it lazily at the
-        // WorkerDone event; we keep (batch, outcome) paired via the serving
-        // slot. Simplest: apply token effects now, deliver at done-time.
-        let done_at = now + outcome.duration;
-        for (r, o) in batch.requests.iter_mut().zip(&outcome.per_request) {
-            debug_assert_eq!(r.id, o.id);
-            r.generated += o.new_tokens;
-            r.invalid_tokens += o.invalid_tokens as u64;
-            // SCLS reschedule: the next prefill recomputes over input +
-            // everything generated so far.
-            r.input_len += o.new_tokens;
-            if o.finished {
-                r.finished_at = Some(done_at);
-            }
-        }
-        ws.serving = Some(batch);
-        q.push(done_at, Ev::WorkerDone(w));
+    {
+        let mut ctx = SimCtx::new(0.0, arrivals_left, &mut q, &mut metrics, &mut *sink);
+        policy.init(&mut ctx);
     }
-
-    // Per-tick scratch, reused across the whole drain: the request drain
-    // buffer swaps with the pool, the batch/assignment buffers and the DP
-    // tables keep their high-water capacity — the schedule tick allocates
-    // only the per-batch member vectors in steady state.
-    let mut tick_reqs: Vec<Request> = Vec::new();
-    let mut batch_buf: Vec<Batch> = Vec::new();
-    let mut assign_buf: Vec<(usize, Batch)> = Vec::new();
-    let mut dp_scratch = DpScratch::new();
-
     while let Some((now, ev)) = q.pop() {
         metrics.events += 1;
         match ev {
             Ev::Arrival(i) => {
                 arrivals_left -= 1;
                 let r = trace.requests[i].clone();
-                if coordinator_batching {
-                    pool.push(r);
-                } else {
-                    // SLS/SO: round-robin the request to a worker queue.
-                    let w = rr.next_worker();
-                    workers[w].req_queue.push_back(r);
-                    try_start(w, now, &mut workers, spec, &est, &mut metrics, &mut q);
-                }
+                let mut ctx = SimCtx::new(now, arrivals_left, &mut q, &mut metrics, &mut *sink);
+                policy.on_arrival(r, &mut ctx);
             }
             Ev::Tick => {
-                let Some(ctrl) = &interval else { continue };
-                pool.fetch_all_into(&mut tick_reqs);
-                if !tick_reqs.is_empty() {
-                    metrics.peak_pool = metrics.peak_pool.max(tick_reqs.len());
-                    let dp_cfg = dp_cfg
-                        .as_ref()
-                        .expect("ticks only exist under coordinator batching");
-                    dp_batch_into(
-                        &mut tick_reqs,
-                        &est,
-                        &mem,
-                        dp_cfg,
-                        &mut dp_scratch,
-                        &mut batch_buf,
-                    );
-                    match spec.offload {
-                        OffloadSpec::MaxMin => MaxMinOffloader.offload_into(
-                            &mut batch_buf,
-                            &mut ledger,
-                            &mut assign_buf,
-                        ),
-                        OffloadSpec::RoundRobin => {
-                            assign_buf.clear();
-                            for b in batch_buf.drain(..) {
-                                let w = rr.next_worker();
-                                ledger.add(w, b.est_serve_time);
-                                assign_buf.push((w, b));
-                            }
-                        }
-                    }
-                    for (w, b) in assign_buf.drain(..) {
-                        workers[w].batch_queue.push_back(b);
-                        try_start(w, now, &mut workers, spec, &est, &mut metrics, &mut q);
-                    }
-                }
-                // Re-arm the tick while any work can still appear.
-                let work_pending = arrivals_left > 0
-                    || !pool.is_empty()
-                    || workers
-                        .iter()
-                        .any(|w| w.serving.is_some() || !w.batch_queue.is_empty());
-                if work_pending {
-                    let t = ctrl.next_interval(&ledger);
-                    q.push(now + t.max(1e-3), Ev::Tick);
-                }
+                let mut ctx = SimCtx::new(now, arrivals_left, &mut q, &mut metrics, &mut *sink);
+                policy.on_tick(&mut ctx);
             }
             Ev::WorkerDone(w) => {
-                let batch = workers[w].serving.take().expect("done without serving");
-                ledger.complete(w, batch.est_serve_time);
-                workers[w].last_done = now;
-                for r in batch.requests {
-                    if r.is_finished() {
-                        metrics.record_completion(&r, now);
-                    } else if coordinator_batching {
-                        pool.push(r);
-                    } else {
-                        // SO: re-send unfinished requests round-robin.
-                        let tw = rr.next_worker();
-                        workers[tw].req_queue.push_back(r);
-                        try_start(tw, now, &mut workers, spec, &est, &mut metrics, &mut q);
-                    }
-                }
-                try_start(w, now, &mut workers, spec, &est, &mut metrics, &mut q);
+                let mut ctx = SimCtx::new(now, arrivals_left, &mut q, &mut metrics, &mut *sink);
+                policy.on_worker_done(w, &mut ctx);
             }
         }
     }
-
-    metrics.worker_completion = workers.iter().map(|w| w.last_done).collect();
+    policy.finish(&mut metrics);
+    sink.on_run_end(&metrics);
     metrics
 }
 
 // ---------------------------------------------------------------------------
-// ILS: iteration-level scheduling with continuous batching (FastGen-like)
+// Simulation facade
 // ---------------------------------------------------------------------------
 
-/// Run the ILS baseline to drain. Continuous batching: per-iteration joins
-/// and exits, no padding, no invalid tokens — but a conservative cap on
-/// parallel requests plus a KV-memory admission check (§1, §5.1). Requests
-/// are offloaded round-robin, as the paper's baselines do (§3.2).
+/// Builder for a simulated cluster (defaults mirror the paper's §5.1
+/// setup: 8 workers, DS engine, 1024-token generation cap, seed 42).
+#[derive(Debug, Clone)]
+pub struct ClusterBuilder {
+    workers: usize,
+    engine: EnginePreset,
+    max_gen_len: u32,
+    seed: u64,
+}
+
+impl Default for ClusterBuilder {
+    fn default() -> Self {
+        use crate::engine::presets::EngineKind;
+        ClusterBuilder {
+            workers: 8,
+            engine: EnginePreset::paper(EngineKind::Ds),
+            max_gen_len: 1024,
+            seed: 42,
+        }
+    }
+}
+
+impl ClusterBuilder {
+    pub fn new() -> ClusterBuilder {
+        ClusterBuilder::default()
+    }
+
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n;
+        self
+    }
+
+    pub fn engine(mut self, preset: EnginePreset) -> Self {
+        self.engine = preset;
+        self
+    }
+
+    pub fn max_gen_len(mut self, n: u32) -> Self {
+        self.max_gen_len = n;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn build(self) -> Simulation {
+        Simulation::new(SimConfig::new(
+            self.workers,
+            self.engine,
+            self.max_gen_len,
+            self.seed,
+        ))
+    }
+}
+
+/// A configured simulated cluster: run any policy over any trace, with
+/// optional streaming metrics sinks.
+#[derive(Debug, Clone)]
+pub struct Simulation {
+    cfg: SimConfig,
+}
+
+impl Simulation {
+    pub fn new(cfg: SimConfig) -> Simulation {
+        Simulation { cfg }
+    }
+
+    pub fn builder() -> ClusterBuilder {
+        ClusterBuilder::default()
+    }
+
+    pub fn config(&self) -> &SimConfig {
+        &self.cfg
+    }
+
+    /// Run a policy object to drain.
+    pub fn run(&self, trace: &Trace, policy: &mut dyn SchedulingPolicy) -> RunMetrics {
+        self.run_with_sink(trace, policy, &mut NullSink)
+    }
+
+    /// Run a policy with a streaming sink observing the event stream
+    /// (attach several with [`crate::metrics::Fanout`]).
+    pub fn run_with_sink(
+        &self,
+        trace: &Trace,
+        policy: &mut dyn SchedulingPolicy,
+        sink: &mut dyn MetricsSink,
+    ) -> RunMetrics {
+        run_policy(trace, policy, self.cfg.workers, sink)
+    }
+
+    /// Construct and run a sliced-family policy from its declarative spec.
+    pub fn run_spec(&self, trace: &Trace, spec: &SchedulerSpec) -> RunMetrics {
+        let mut policy = SlicedPolicy::new(spec, &self.cfg);
+        self.run(trace, &mut policy)
+    }
+
+    /// Construct and run a built-in policy by (case-insensitive) name —
+    /// see [`crate::scheduler::BUILTIN_POLICIES`].
+    pub fn run_named(
+        &self,
+        trace: &Trace,
+        name: &str,
+        slice_len: u32,
+    ) -> Result<RunMetrics, String> {
+        self.run_named_with_sink(trace, name, slice_len, &mut NullSink)
+    }
+
+    /// [`Self::run_named`] with a streaming sink.
+    pub fn run_named_with_sink(
+        &self,
+        trace: &Trace,
+        name: &str,
+        slice_len: u32,
+        sink: &mut dyn MetricsSink,
+    ) -> Result<RunMetrics, String> {
+        let mut policy = crate::scheduler::policy::build_policy(name, &self.cfg, slice_len)?;
+        Ok(self.run_with_sink(trace, policy.as_mut(), sink))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Thin conveniences (the former bespoke drivers, now trait-backed)
+// ---------------------------------------------------------------------------
+
+/// Run one sliced-family experiment to drain (SLS/SO/PM/AB/LB/SCLS).
+pub fn run_sliced(trace: &Trace, spec: &SchedulerSpec, cfg: &SimConfig) -> RunMetrics {
+    let mut policy = SlicedPolicy::new(spec, cfg);
+    run_policy(trace, &mut policy, cfg.workers, &mut NullSink)
+}
+
+/// Run the ILS baseline (continuous batching, conservative cap) to drain.
 pub fn run_ils(trace: &Trace, cfg: &SimConfig) -> RunMetrics {
-    use crate::engine::continuous::ContinuousWorker;
-
-    assert!(cfg.workers > 0);
-    let kv_budget = (0.9 * cfg.engine.m_ava as f64) as u64;
-
-    let mut workers: Vec<ContinuousWorker> = (0..cfg.workers)
-        .map(|w| {
-            ContinuousWorker::new(
-                cfg.engine
-                    .latency(cfg.seed ^ (w as u64).wrapping_mul(0xA5A5)),
-                cfg.engine.ils_max_parallel,
-                kv_budget,
-                cfg.engine.kv_delta,
-                cfg.max_gen_len,
-            )
-        })
-        .collect();
-    let mut looping = vec![false; cfg.workers];
-    let mut last_done = vec![0.0f64; cfg.workers];
-
-    let mut rr = RoundRobin::new(cfg.workers);
-    let mut metrics = RunMetrics::with_capacity(trace.len());
-
-    enum IEv {
-        Arrival(usize),
-        IterDone(usize),
-    }
-
-    let mut q: EventQueue<IEv> = EventQueue::with_capacity(trace.len() + cfg.workers + 2);
-    for (i, r) in trace.requests.iter().enumerate() {
-        q.push(r.arrival, IEv::Arrival(i));
-    }
-
-    while let Some((now, ev)) = q.pop() {
-        metrics.events += 1;
-        match ev {
-            IEv::Arrival(i) => {
-                let r = trace.requests[i].clone();
-                let w = rr.next_worker();
-                workers[w].waiting.push_back(r);
-                if !looping[w] {
-                    if let Some(d) = workers[w].begin_iteration() {
-                        looping[w] = true;
-                        q.push(now + d, IEv::IterDone(w));
-                    }
-                }
-            }
-            IEv::IterDone(wi) => {
-                for r in workers[wi].finish_iteration(now) {
-                    last_done[wi] = now;
-                    metrics.record_completion(&r, now);
-                }
-                if let Some(d) = workers[wi].begin_iteration() {
-                    q.push(now + d, IEv::IterDone(wi));
-                } else {
-                    looping[wi] = false;
-                }
-            }
-        }
-    }
-
-    metrics.worker_completion = last_done;
-    metrics
+    let mut policy = IlsPolicy::new(cfg);
+    run_policy(trace, &mut policy, cfg.workers, &mut NullSink)
 }
 
-// ---------------------------------------------------------------------------
-// SCLS-CB: slice-level scheduling over continuous batching (paper §7)
-// ---------------------------------------------------------------------------
-
-/// Run the §7 extension to drain: continuous batching per instance (no
-/// pads, no invalid tokens), each schedule capped at `slice_len` generated
-/// tokens, **precise** per-slice memory admission instead of ILS's
-/// conservative cap, and coordinator-side offloading of new and
-/// rescheduled requests to the instance with the most free projected KV
-/// memory — §7's "balanced memory consumption across multiple LLM
-/// instances".
+/// Run the §7 SCLS-on-continuous-batching extension to drain.
 pub fn run_scls_cb(trace: &Trace, cfg: &SimConfig, slice_len: u32) -> RunMetrics {
-    use crate::engine::continuous_scls::SlicedContinuousWorker;
-
-    assert!(cfg.workers > 0);
-    let kv_budget = (0.9 * cfg.engine.m_ava as f64) as u64;
-
-    let mut workers: Vec<SlicedContinuousWorker> = (0..cfg.workers)
-        .map(|w| {
-            SlicedContinuousWorker::new(
-                cfg.engine
-                    .latency(cfg.seed ^ (w as u64).wrapping_mul(0x5A5A)),
-                slice_len,
-                kv_budget,
-                cfg.engine.kv_delta,
-                cfg.max_gen_len,
-            )
-        })
-        .collect();
-    let mut looping = vec![false; cfg.workers];
-    let mut last_done = vec![0.0f64; cfg.workers];
-    let mut metrics = RunMetrics::with_capacity(trace.len());
-
-    enum CEv {
-        Arrival(usize),
-        IterDone(usize),
-    }
-
-    let mut q: EventQueue<CEv> = EventQueue::with_capacity(trace.len() + cfg.workers + 2);
-    for (i, r) in trace.requests.iter().enumerate() {
-        q.push(r.arrival, CEv::Arrival(i));
-    }
-
-    // Offload to the instance with the most free projected memory (ties:
-    // shortest local queue); kick its iteration loop if idle.
-    fn assign(
-        r: Request,
-        now: f64,
-        workers: &mut [SlicedContinuousWorker],
-        looping: &mut [bool],
-        q: &mut EventQueue<CEv>,
-    ) {
-        let w = (0..workers.len())
-            .min_by(|&a, &b| {
-                workers[a]
-                    .kv_projected()
-                    .cmp(&workers[b].kv_projected())
-                    .then_with(|| workers[a].waiting.len().cmp(&workers[b].waiting.len()))
-            })
-            .unwrap();
-        workers[w].waiting.push_back(r);
-        if !looping[w] {
-            if let Some(d) = workers[w].begin_iteration() {
-                looping[w] = true;
-                q.push(now + d, CEv::IterDone(w));
-            }
-        }
-    }
-
-    while let Some((now, ev)) = q.pop() {
-        metrics.events += 1;
-        match ev {
-            CEv::Arrival(i) => {
-                let r = trace.requests[i].clone();
-                assign(r, now, &mut workers, &mut looping, &mut q);
-            }
-            CEv::IterDone(wi) => {
-                let exits = workers[wi].finish_iteration(now);
-                for r in exits.done {
-                    last_done[wi] = now;
-                    metrics.record_completion(&r, now);
-                }
-                // §7: slice-capped requests are rescheduled to the least
-                // memory-loaded instance (their KV was just released).
-                for r in exits.rescheduled {
-                    assign(r, now, &mut workers, &mut looping, &mut q);
-                }
-                if let Some(d) = workers[wi].begin_iteration() {
-                    q.push(now + d, CEv::IterDone(wi));
-                } else {
-                    looping[wi] = false;
-                }
-            }
-        }
-    }
-
-    metrics.worker_completion = last_done;
-    metrics
+    let mut policy = SclsCbPolicy::new(cfg, slice_len);
+    run_policy(trace, &mut policy, cfg.workers, &mut NullSink)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::engine::presets::{EngineKind, EnginePreset};
-    use crate::workload::{Trace, TraceConfig};
+    use crate::metrics::Tally;
     use crate::workload::distributions::WorkloadKind;
+    use crate::workload::{Trace, TraceConfig};
 
     fn small_trace(rate: f64, duration: f64, seed: u64) -> Trace {
         Trace::generate(&TraceConfig {
@@ -521,6 +321,8 @@ mod tests {
         assert_eq!(a.batches.len(), b.batches.len());
         assert_eq!(a.events, b.events);
         assert_eq!(a.peak_pool, b.peak_pool);
+        // The full event logs are byte-identical.
+        assert_eq!(a.to_json().to_string_pretty(), b.to_json().to_string_pretty());
     }
 
     #[test]
@@ -649,5 +451,41 @@ mod tests {
             assert!(b.actual_serve_time > 0.0);
             assert!(b.est_serve_time > 0.0);
         }
+    }
+
+    #[test]
+    fn builder_facade_runs_by_spec_and_name() {
+        let trace = small_trace(3.0, 20.0, 11);
+        let preset = EnginePreset::paper(EngineKind::Ds);
+        let sim = Simulation::builder()
+            .workers(4)
+            .engine(preset.clone())
+            .max_gen_len(1024)
+            .seed(7)
+            .build();
+        let by_spec = sim.run_spec(&trace, &SchedulerSpec::scls(&preset, 128));
+        let by_name = sim.run_named(&trace, "scls", 128).unwrap();
+        assert_eq!(
+            by_spec.to_json().to_string_pretty(),
+            by_name.to_json().to_string_pretty(),
+            "name-based construction must match spec-based construction"
+        );
+        assert!(sim.run_named(&trace, "not-a-policy", 128).is_err());
+    }
+
+    #[test]
+    fn sink_streams_what_metrics_record() {
+        let trace = small_trace(4.0, 30.0, 12);
+        let preset = EnginePreset::paper(EngineKind::Ds);
+        let sim = Simulation::new(cfg(EngineKind::Ds));
+        let mut tally = Tally::default();
+        let mut policy = SlicedPolicy::new(&SchedulerSpec::scls(&preset, 128), sim.config());
+        let m = sim.run_with_sink(&trace, &mut policy, &mut tally);
+        assert_eq!(tally.completions as usize, m.completed.len());
+        assert_eq!(tally.batches as usize, m.batches.len());
+        assert_eq!(tally.peak_pool, m.peak_pool);
+        assert_eq!(tally.last_completion, m.makespan);
+        let pads: u64 = m.completed.iter().map(|c| c.pad_tokens).sum();
+        assert_eq!(tally.pad_tokens, pads);
     }
 }

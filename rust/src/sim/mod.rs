@@ -1,6 +1,11 @@
-//! Discrete-event simulation substrate.
+//! Discrete-event simulation substrate: the generic policy-driven loop
+//! ([`driver::run_policy`]), the built-in policies, the deterministic
+//! event queue, and the frozen pre-trait reference drivers.
 
 pub mod driver;
 pub mod events;
+pub mod policies;
+pub mod reference;
 
+pub use driver::{ClusterBuilder, SimConfig, Simulation};
 pub use events::EventQueue;

@@ -1,0 +1,409 @@
+//! The built-in [`SchedulingPolicy`] implementations.
+//!
+//! * [`SlicedPolicy`] — the whole sliced family (SLS, SO, PM, AB, LB,
+//!   SCLS): static batching workers driven by a [`SlicedCoordinator`]
+//!   built from a `SchedulerSpec`'s four axes.
+//! * [`IlsPolicy`] — the DeepSpeed-FastGen-style iteration-level baseline
+//!   (continuous batching, conservative parallel cap, §5.1).
+//! * [`SclsCbPolicy`] — the §7 extension: slice-level scheduling over
+//!   continuous batching with precise per-slice memory admission and
+//!   memory-balanced placement.
+//!
+//! Each policy is a faithful port of the corresponding pre-trait driver
+//! loop (`sim::reference`); the differential suite
+//! (`tests/props_policy_differential.rs`) asserts the ports are
+//! byte-identical on the full `RunMetrics` event log.
+
+use std::collections::VecDeque;
+
+use crate::batcher::fcfs_batches;
+use crate::core::{Batch, Request};
+use crate::engine::continuous::ContinuousWorker;
+use crate::engine::continuous_scls::SlicedContinuousWorker;
+use crate::engine::sim::SimEngine;
+use crate::estimator::{MemoryEstimator, ServingTimeEstimator};
+use crate::metrics::{BatchRecord, RunMetrics};
+use crate::offloader::RoundRobin;
+use crate::scheduler::coordinator::SlicedCoordinator;
+use crate::scheduler::policy::{SchedulingPolicy, SimCtx};
+use crate::scheduler::spec::{BatchingSpec, SchedulerSpec};
+use crate::sim::driver::{fitted_estimator, SimConfig};
+
+// ---------------------------------------------------------------------------
+// Sliced family (SLS / SO / PM / AB / LB / SCLS)
+// ---------------------------------------------------------------------------
+
+/// Per-worker state for the sliced-family policy.
+struct WorkerState {
+    /// Coordinator-formed batches waiting in the local queue.
+    batch_queue: VecDeque<Batch>,
+    /// Worker-locus FCFS: raw requests waiting locally (SLS/SO).
+    req_queue: VecDeque<Request>,
+    /// The batch currently being served (None = idle).
+    serving: Option<Batch>,
+    engine: SimEngine,
+    last_done: f64,
+}
+
+/// Static-batching sliced-family scheduler: any `SchedulerSpec` point
+/// (slice length × batching × offload × interval) over simulated workers.
+pub struct SlicedPolicy {
+    coord: SlicedCoordinator,
+    est: ServingTimeEstimator,
+    mem: MemoryEstimator,
+    workers: Vec<WorkerState>,
+}
+
+impl SlicedPolicy {
+    /// Build the policy the way the SCLS deployment starts up (§4.2):
+    /// profile the engine's latency model once, fit Eq. (3)/(4), then
+    /// instantiate per-worker engines on decorrelated seed streams.
+    pub fn new(spec: &SchedulerSpec, cfg: &SimConfig) -> SlicedPolicy {
+        assert!(cfg.workers > 0);
+        let est = fitted_estimator(&cfg.engine, cfg.seed);
+        let mem = cfg.engine.memory_estimator();
+        let workers: Vec<WorkerState> = (0..cfg.workers)
+            .map(|w| WorkerState {
+                batch_queue: VecDeque::new(),
+                req_queue: VecDeque::new(),
+                serving: None,
+                engine: SimEngine::new(
+                    cfg.engine.latency(cfg.seed ^ (w as u64).wrapping_mul(0x9E37)),
+                    cfg.max_gen_len,
+                ),
+                last_done: 0.0,
+            })
+            .collect();
+        SlicedPolicy {
+            coord: SlicedCoordinator::new(spec, cfg.workers),
+            est,
+            mem,
+            workers,
+        }
+    }
+
+    /// Start serving on worker `w` if idle and work is queued.
+    fn try_start(&mut self, w: usize, ctx: &mut SimCtx) {
+        let slice_len = self.coord.spec().slice_len;
+        let batching = self.coord.spec().batching.clone();
+        let ws = &mut self.workers[w];
+        if ws.serving.is_some() {
+            return;
+        }
+        // Worker-locus FCFS: form a batch from the local request queue.
+        if let BatchingSpec::WorkerFcfs { batch_size } = batching {
+            if ws.batch_queue.is_empty() && !ws.req_queue.is_empty() {
+                let take = (batch_size as usize).min(ws.req_queue.len());
+                let reqs: Vec<Request> = ws.req_queue.drain(..take).collect();
+                let mut batches = fcfs_batches(reqs, batch_size, &self.est, slice_len);
+                debug_assert_eq!(batches.len(), 1);
+                ws.batch_queue.push_back(batches.pop().unwrap());
+            }
+        }
+        let Some(mut batch) = ws.batch_queue.pop_front() else {
+            return;
+        };
+        // Serving-start accounting: each request pays its pads and a slice.
+        let li = batch.input_len();
+        for r in &mut batch.requests {
+            r.slices += 1;
+            r.pad_tokens += (li - r.input_len) as u64;
+        }
+        let outcome = ws.engine.serve_slice(&batch, slice_len);
+        ctx.record_batch(BatchRecord {
+            start: ctx.now,
+            worker: w,
+            size: batch.size() as u32,
+            input_len: li,
+            pad_tokens: batch.pad_tokens(),
+            est_serve_time: batch.est_serve_time,
+            actual_serve_time: outcome.duration,
+            early_return: outcome.early_return,
+        });
+        // Apply token effects now, deliver at done-time (the serving slot
+        // pairs the batch with its outcome).
+        let done_at = ctx.now + outcome.duration;
+        for (r, o) in batch.requests.iter_mut().zip(&outcome.per_request) {
+            debug_assert_eq!(r.id, o.id);
+            r.generated += o.new_tokens;
+            r.invalid_tokens += o.invalid_tokens as u64;
+            // SCLS reschedule: the next prefill recomputes over input +
+            // everything generated so far.
+            r.input_len += o.new_tokens;
+            if o.finished {
+                r.finished_at = Some(done_at);
+            }
+        }
+        ws.serving = Some(batch);
+        ctx.complete_at(done_at, w);
+    }
+}
+
+impl SchedulingPolicy for SlicedPolicy {
+    fn init(&mut self, ctx: &mut SimCtx) {
+        self.coord.reserve_pool(ctx.arrivals_left().min(1 << 16));
+        if self.coord.has_ticks() {
+            ctx.tick_at(0.0);
+        }
+    }
+
+    fn on_arrival(&mut self, req: Request, ctx: &mut SimCtx) {
+        // SLS/SO: round-robin to a worker queue; otherwise pooled.
+        if let Some((w, r)) = self.coord.admit(req) {
+            self.workers[w].req_queue.push_back(r);
+            self.try_start(w, ctx);
+        }
+    }
+
+    fn on_tick(&mut self, ctx: &mut SimCtx) {
+        if !self.coord.has_ticks() {
+            return;
+        }
+        let drained = self.coord.schedule_tick(&self.est, &self.mem);
+        if drained > 0 {
+            ctx.observe_pool(drained);
+            let mut assign = self.coord.take_assignments();
+            for (w, b) in assign.drain(..) {
+                self.workers[w].batch_queue.push_back(b);
+                self.try_start(w, ctx);
+            }
+            self.coord.recycle_assignments(assign);
+        }
+        // Re-arm the tick while any work can still appear.
+        let work_pending = ctx.arrivals_left() > 0
+            || !self.coord.pool_is_empty()
+            || self
+                .workers
+                .iter()
+                .any(|w| w.serving.is_some() || !w.batch_queue.is_empty());
+        if work_pending {
+            let t = self
+                .coord
+                .next_interval()
+                .expect("on_tick only fires for ticked policies");
+            ctx.tick_at(ctx.now + t.max(1e-3));
+        }
+    }
+
+    fn on_worker_done(&mut self, w: usize, ctx: &mut SimCtx) {
+        let batch = self.workers[w].serving.take().expect("done without serving");
+        self.coord.batch_done(w, batch.est_serve_time);
+        self.workers[w].last_done = ctx.now;
+        for r in batch.requests {
+            if r.is_finished() {
+                ctx.record_completion(&r);
+            } else if let Some((tw, r)) = self.coord.admit(r) {
+                // SO: re-send unfinished requests round-robin.
+                self.workers[tw].req_queue.push_back(r);
+                self.try_start(tw, ctx);
+            }
+        }
+        self.try_start(w, ctx);
+    }
+
+    fn finish(&mut self, metrics: &mut RunMetrics) {
+        metrics.worker_completion = self.workers.iter().map(|w| w.last_done).collect();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ILS: iteration-level scheduling with continuous batching (FastGen-like)
+// ---------------------------------------------------------------------------
+
+/// The ILS baseline: per-iteration joins and exits, no padding, no invalid
+/// tokens — but a conservative cap on parallel requests plus a KV-memory
+/// admission check (§1, §5.1). Requests are offloaded round-robin, as the
+/// paper's baselines do (§3.2).
+pub struct IlsPolicy {
+    workers: Vec<ContinuousWorker>,
+    looping: Vec<bool>,
+    last_done: Vec<f64>,
+    rr: RoundRobin,
+    kv_budget: u64,
+    max_kv_seen: u64,
+}
+
+impl IlsPolicy {
+    pub fn new(cfg: &SimConfig) -> IlsPolicy {
+        assert!(cfg.workers > 0);
+        let kv_budget = (0.9 * cfg.engine.m_ava as f64) as u64;
+        let workers: Vec<ContinuousWorker> = (0..cfg.workers)
+            .map(|w| {
+                ContinuousWorker::new(
+                    cfg.engine
+                        .latency(cfg.seed ^ (w as u64).wrapping_mul(0xA5A5)),
+                    cfg.engine.ils_max_parallel,
+                    kv_budget,
+                    cfg.engine.kv_delta,
+                    cfg.max_gen_len,
+                )
+            })
+            .collect();
+        let n = workers.len();
+        IlsPolicy {
+            workers,
+            looping: vec![false; n],
+            last_done: vec![0.0; n],
+            rr: RoundRobin::new(n),
+            kv_budget,
+            max_kv_seen: 0,
+        }
+    }
+
+    /// Per-instance KV budget the admission check enforces.
+    pub fn kv_budget(&self) -> u64 {
+        self.kv_budget
+    }
+
+    /// Largest KV-in-use observed on any instance (no-OOM invariant:
+    /// never exceeds [`Self::kv_budget`]).
+    pub fn max_kv_observed(&self) -> u64 {
+        self.max_kv_seen
+    }
+
+    /// Kick worker `w`'s iteration loop if it is idle.
+    fn kick(&mut self, w: usize, ctx: &mut SimCtx) {
+        if !self.looping[w] {
+            if let Some(d) = self.workers[w].begin_iteration() {
+                self.looping[w] = true;
+                self.max_kv_seen = self.max_kv_seen.max(self.workers[w].kv_in_use());
+                ctx.complete_at(ctx.now + d, w);
+            }
+        }
+    }
+}
+
+impl SchedulingPolicy for IlsPolicy {
+    fn on_arrival(&mut self, req: Request, ctx: &mut SimCtx) {
+        let w = self.rr.next_worker();
+        self.workers[w].waiting.push_back(req);
+        self.kick(w, ctx);
+    }
+
+    fn on_worker_done(&mut self, wi: usize, ctx: &mut SimCtx) {
+        for r in self.workers[wi].finish_iteration(ctx.now) {
+            self.last_done[wi] = ctx.now;
+            ctx.record_completion(&r);
+        }
+        if let Some(d) = self.workers[wi].begin_iteration() {
+            self.max_kv_seen = self.max_kv_seen.max(self.workers[wi].kv_in_use());
+            ctx.complete_at(ctx.now + d, wi);
+        } else {
+            self.looping[wi] = false;
+        }
+    }
+
+    fn finish(&mut self, metrics: &mut RunMetrics) {
+        metrics.worker_completion = self.last_done.clone();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SCLS-CB: slice-level scheduling over continuous batching (paper §7)
+// ---------------------------------------------------------------------------
+
+/// The §7 extension: continuous batching per instance (no pads, no invalid
+/// tokens), each schedule capped at `slice_len` generated tokens,
+/// **precise** per-slice memory admission instead of ILS's conservative
+/// cap, and coordinator-side offloading of new and rescheduled requests to
+/// the instance with the most free projected KV memory.
+pub struct SclsCbPolicy {
+    workers: Vec<SlicedContinuousWorker>,
+    looping: Vec<bool>,
+    last_done: Vec<f64>,
+    kv_budget: u64,
+    max_kv_seen: u64,
+}
+
+impl SclsCbPolicy {
+    pub fn new(cfg: &SimConfig, slice_len: u32) -> SclsCbPolicy {
+        assert!(cfg.workers > 0);
+        let kv_budget = (0.9 * cfg.engine.m_ava as f64) as u64;
+        let workers: Vec<SlicedContinuousWorker> = (0..cfg.workers)
+            .map(|w| {
+                SlicedContinuousWorker::new(
+                    cfg.engine
+                        .latency(cfg.seed ^ (w as u64).wrapping_mul(0x5A5A)),
+                    slice_len,
+                    kv_budget,
+                    cfg.engine.kv_delta,
+                    cfg.max_gen_len,
+                )
+            })
+            .collect();
+        let n = workers.len();
+        SclsCbPolicy {
+            workers,
+            looping: vec![false; n],
+            last_done: vec![0.0; n],
+            kv_budget,
+            max_kv_seen: 0,
+        }
+    }
+
+    /// Per-instance KV budget the precise admission enforces.
+    pub fn kv_budget(&self) -> u64 {
+        self.kv_budget
+    }
+
+    /// Largest *projected* KV observed on any instance after admission
+    /// (no-OOM invariant: never exceeds [`Self::kv_budget`]).
+    pub fn max_kv_observed(&self) -> u64 {
+        self.max_kv_seen
+    }
+
+    /// Offload to the instance with the most free projected memory (ties:
+    /// shortest local queue); kick its iteration loop if idle.
+    fn assign(&mut self, r: Request, ctx: &mut SimCtx) {
+        let w = (0..self.workers.len())
+            .min_by(|&a, &b| {
+                self.workers[a]
+                    .kv_projected()
+                    .cmp(&self.workers[b].kv_projected())
+                    .then_with(|| {
+                        self.workers[a]
+                            .waiting
+                            .len()
+                            .cmp(&self.workers[b].waiting.len())
+                    })
+            })
+            .unwrap();
+        self.workers[w].waiting.push_back(r);
+        if !self.looping[w] {
+            if let Some(d) = self.workers[w].begin_iteration() {
+                self.looping[w] = true;
+                self.max_kv_seen = self.max_kv_seen.max(self.workers[w].kv_projected());
+                ctx.complete_at(ctx.now + d, w);
+            }
+        }
+    }
+}
+
+impl SchedulingPolicy for SclsCbPolicy {
+    fn on_arrival(&mut self, req: Request, ctx: &mut SimCtx) {
+        self.assign(req, ctx);
+    }
+
+    fn on_worker_done(&mut self, wi: usize, ctx: &mut SimCtx) {
+        let exits = self.workers[wi].finish_iteration(ctx.now);
+        for r in exits.done {
+            self.last_done[wi] = ctx.now;
+            ctx.record_completion(&r);
+        }
+        // §7: slice-capped requests are rescheduled to the least
+        // memory-loaded instance (their KV was just released).
+        for r in exits.rescheduled {
+            self.assign(r, ctx);
+        }
+        if let Some(d) = self.workers[wi].begin_iteration() {
+            self.max_kv_seen = self.max_kv_seen.max(self.workers[wi].kv_projected());
+            ctx.complete_at(ctx.now + d, wi);
+        } else {
+            self.looping[wi] = false;
+        }
+    }
+
+    fn finish(&mut self, metrics: &mut RunMetrics) {
+        metrics.worker_completion = self.last_done.clone();
+    }
+}

@@ -1,0 +1,408 @@
+//! Frozen pre-trait DES drivers — the differential oracles for the
+//! [`SchedulingPolicy`](crate::scheduler::SchedulingPolicy) ports.
+//!
+//! These are the three bespoke event loops the repo used before scheduling
+//! was unified behind the policy trait: `run_sliced_reference` (SLS → SO →
+//! PM → AB → LB → SCLS), `run_ils_reference`, and `run_scls_cb_reference`.
+//! They are retained verbatim — the same pattern as
+//! [`crate::batcher::dp_batch_reference`] — so the differential suite
+//! (`tests/props_policy_differential.rs`) can assert, at test time, that
+//! every ported policy run through the single generic loop produces a
+//! **byte-identical** `RunMetrics` event log (`RunMetrics::to_json`).
+//!
+//! Do not extend these: new scheduling behavior goes through the trait.
+
+use std::collections::VecDeque;
+
+use crate::batcher::{dp_batch_into, fcfs_batches, DpBatcherConfig, DpScratch};
+use crate::core::{Batch, Request};
+use crate::engine::sim::SimEngine;
+use crate::estimator::ServingTimeEstimator;
+use crate::metrics::{BatchRecord, RunMetrics};
+use crate::offloader::{LoadLedger, MaxMinOffloader, RoundRobin};
+use crate::scheduler::spec::{BatchingSpec, IntervalSpec, OffloadSpec, SchedulerSpec};
+use crate::scheduler::{IntervalController, RequestPool};
+use crate::workload::Trace;
+
+use super::driver::{fitted_estimator, SimConfig};
+use super::events::EventQueue;
+
+#[derive(Debug)]
+enum Ev {
+    Arrival(usize),
+    Tick,
+    WorkerDone(usize),
+}
+
+/// Per-worker state for the sliced-family driver.
+struct WorkerState {
+    /// Coordinator-formed batches waiting in the local queue.
+    batch_queue: VecDeque<Batch>,
+    /// Worker-locus FCFS: raw requests waiting locally (SLS/SO).
+    req_queue: VecDeque<Request>,
+    /// The batch currently being served (None = idle).
+    serving: Option<Batch>,
+    engine: SimEngine,
+    last_done: f64,
+}
+
+/// Run one sliced-family experiment to drain (frozen pre-trait loop).
+pub fn run_sliced_reference(trace: &Trace, spec: &SchedulerSpec, cfg: &SimConfig) -> RunMetrics {
+    assert!(cfg.workers > 0);
+    let est = fitted_estimator(&cfg.engine, cfg.seed);
+    let mem = cfg.engine.memory_estimator();
+
+    let mut workers: Vec<WorkerState> = (0..cfg.workers)
+        .map(|w| WorkerState {
+            batch_queue: VecDeque::new(),
+            req_queue: VecDeque::new(),
+            serving: None,
+            engine: SimEngine::new(
+                cfg.engine.latency(cfg.seed ^ (w as u64).wrapping_mul(0x9E37)),
+                cfg.max_gen_len,
+            ),
+            last_done: 0.0,
+        })
+        .collect();
+
+    let mut pool = RequestPool::with_capacity(trace.len().min(1 << 16));
+    let mut ledger = LoadLedger::new(cfg.workers);
+    let mut rr = RoundRobin::new(cfg.workers);
+    let mut metrics = RunMetrics::with_capacity(trace.len());
+
+    let mut q: EventQueue<Ev> = EventQueue::with_capacity(trace.len() + cfg.workers + 2);
+    for (i, r) in trace.requests.iter().enumerate() {
+        q.push(r.arrival, Ev::Arrival(i));
+    }
+    // Hoisted batcher config: `Some` exactly for coordinator (DP) batching.
+    let dp_cfg = match spec.batching {
+        BatchingSpec::Dp { max_batch_size } => Some(DpBatcherConfig {
+            slice_len: spec.slice_len,
+            max_batch_size,
+        }),
+        BatchingSpec::WorkerFcfs { .. } => None,
+    };
+    let coordinator_batching = dp_cfg.is_some();
+    let interval = match spec.interval {
+        IntervalSpec::Immediate => None,
+        IntervalSpec::Fixed(t) => Some(IntervalController::Fixed(t)),
+        IntervalSpec::Adaptive { lambda, gamma } => {
+            Some(IntervalController::Adaptive { lambda, gamma })
+        }
+    };
+    if interval.is_some() {
+        q.push(0.0, Ev::Tick);
+    }
+    let mut arrivals_left = trace.len();
+
+    // ---- helpers as closures over the mutable state ---------------------
+
+    // Start serving on worker `w` if idle and work is queued.
+    fn try_start(
+        w: usize,
+        now: f64,
+        workers: &mut [WorkerState],
+        spec: &SchedulerSpec,
+        est: &ServingTimeEstimator,
+        metrics: &mut RunMetrics,
+        q: &mut EventQueue<Ev>,
+    ) {
+        let ws = &mut workers[w];
+        if ws.serving.is_some() {
+            return;
+        }
+        // Worker-locus FCFS: form a batch from the local request queue.
+        if let BatchingSpec::WorkerFcfs { batch_size } = spec.batching {
+            if ws.batch_queue.is_empty() && !ws.req_queue.is_empty() {
+                let take = (batch_size as usize).min(ws.req_queue.len());
+                let reqs: Vec<Request> = ws.req_queue.drain(..take).collect();
+                let mut batches = fcfs_batches(reqs, batch_size, est, spec.slice_len);
+                debug_assert_eq!(batches.len(), 1);
+                ws.batch_queue.push_back(batches.pop().unwrap());
+            }
+        }
+        let Some(mut batch) = ws.batch_queue.pop_front() else {
+            return;
+        };
+        // Serving-start accounting: each request pays its pads and a slice.
+        let li = batch.input_len();
+        for r in &mut batch.requests {
+            r.slices += 1;
+            r.pad_tokens += (li - r.input_len) as u64;
+        }
+        let outcome = ws.engine.serve_slice(&batch, spec.slice_len);
+        metrics.batches.push(BatchRecord {
+            start: now,
+            worker: w,
+            size: batch.size() as u32,
+            input_len: li,
+            pad_tokens: batch.pad_tokens(),
+            est_serve_time: batch.est_serve_time,
+            actual_serve_time: outcome.duration,
+            early_return: outcome.early_return,
+        });
+        let done_at = now + outcome.duration;
+        for (r, o) in batch.requests.iter_mut().zip(&outcome.per_request) {
+            debug_assert_eq!(r.id, o.id);
+            r.generated += o.new_tokens;
+            r.invalid_tokens += o.invalid_tokens as u64;
+            // SCLS reschedule: the next prefill recomputes over input +
+            // everything generated so far.
+            r.input_len += o.new_tokens;
+            if o.finished {
+                r.finished_at = Some(done_at);
+            }
+        }
+        ws.serving = Some(batch);
+        q.push(done_at, Ev::WorkerDone(w));
+    }
+
+    // Per-tick scratch, reused across the whole drain.
+    let mut tick_reqs: Vec<Request> = Vec::new();
+    let mut batch_buf: Vec<Batch> = Vec::new();
+    let mut assign_buf: Vec<(usize, Batch)> = Vec::new();
+    let mut dp_scratch = DpScratch::new();
+
+    while let Some((now, ev)) = q.pop() {
+        metrics.events += 1;
+        match ev {
+            Ev::Arrival(i) => {
+                arrivals_left -= 1;
+                let r = trace.requests[i].clone();
+                if coordinator_batching {
+                    pool.push(r);
+                } else {
+                    // SLS/SO: round-robin the request to a worker queue.
+                    let w = rr.next_worker();
+                    workers[w].req_queue.push_back(r);
+                    try_start(w, now, &mut workers, spec, &est, &mut metrics, &mut q);
+                }
+            }
+            Ev::Tick => {
+                let Some(ctrl) = &interval else { continue };
+                pool.fetch_all_into(&mut tick_reqs);
+                if !tick_reqs.is_empty() {
+                    metrics.peak_pool = metrics.peak_pool.max(tick_reqs.len());
+                    let dp_cfg = dp_cfg
+                        .as_ref()
+                        .expect("ticks only exist under coordinator batching");
+                    dp_batch_into(
+                        &mut tick_reqs,
+                        &est,
+                        &mem,
+                        dp_cfg,
+                        &mut dp_scratch,
+                        &mut batch_buf,
+                    );
+                    match spec.offload {
+                        OffloadSpec::MaxMin => MaxMinOffloader.offload_into(
+                            &mut batch_buf,
+                            &mut ledger,
+                            &mut assign_buf,
+                        ),
+                        OffloadSpec::RoundRobin => {
+                            assign_buf.clear();
+                            for b in batch_buf.drain(..) {
+                                let w = rr.next_worker();
+                                ledger.add(w, b.est_serve_time);
+                                assign_buf.push((w, b));
+                            }
+                        }
+                    }
+                    for (w, b) in assign_buf.drain(..) {
+                        workers[w].batch_queue.push_back(b);
+                        try_start(w, now, &mut workers, spec, &est, &mut metrics, &mut q);
+                    }
+                }
+                // Re-arm the tick while any work can still appear.
+                let work_pending = arrivals_left > 0
+                    || !pool.is_empty()
+                    || workers
+                        .iter()
+                        .any(|w| w.serving.is_some() || !w.batch_queue.is_empty());
+                if work_pending {
+                    let t = ctrl.next_interval(&ledger);
+                    q.push(now + t.max(1e-3), Ev::Tick);
+                }
+            }
+            Ev::WorkerDone(w) => {
+                let batch = workers[w].serving.take().expect("done without serving");
+                ledger.complete(w, batch.est_serve_time);
+                workers[w].last_done = now;
+                for r in batch.requests {
+                    if r.is_finished() {
+                        metrics.record_completion(&r, now);
+                    } else if coordinator_batching {
+                        pool.push(r);
+                    } else {
+                        // SO: re-send unfinished requests round-robin.
+                        let tw = rr.next_worker();
+                        workers[tw].req_queue.push_back(r);
+                        try_start(tw, now, &mut workers, spec, &est, &mut metrics, &mut q);
+                    }
+                }
+                try_start(w, now, &mut workers, spec, &est, &mut metrics, &mut q);
+            }
+        }
+    }
+
+    metrics.worker_completion = workers.iter().map(|w| w.last_done).collect();
+    metrics
+}
+
+/// Run the ILS baseline to drain (frozen pre-trait loop).
+pub fn run_ils_reference(trace: &Trace, cfg: &SimConfig) -> RunMetrics {
+    use crate::engine::continuous::ContinuousWorker;
+
+    assert!(cfg.workers > 0);
+    let kv_budget = (0.9 * cfg.engine.m_ava as f64) as u64;
+
+    let mut workers: Vec<ContinuousWorker> = (0..cfg.workers)
+        .map(|w| {
+            ContinuousWorker::new(
+                cfg.engine
+                    .latency(cfg.seed ^ (w as u64).wrapping_mul(0xA5A5)),
+                cfg.engine.ils_max_parallel,
+                kv_budget,
+                cfg.engine.kv_delta,
+                cfg.max_gen_len,
+            )
+        })
+        .collect();
+    let mut looping = vec![false; cfg.workers];
+    let mut last_done = vec![0.0f64; cfg.workers];
+
+    let mut rr = RoundRobin::new(cfg.workers);
+    let mut metrics = RunMetrics::with_capacity(trace.len());
+
+    enum IEv {
+        Arrival(usize),
+        IterDone(usize),
+    }
+
+    let mut q: EventQueue<IEv> = EventQueue::with_capacity(trace.len() + cfg.workers + 2);
+    for (i, r) in trace.requests.iter().enumerate() {
+        q.push(r.arrival, IEv::Arrival(i));
+    }
+
+    while let Some((now, ev)) = q.pop() {
+        metrics.events += 1;
+        match ev {
+            IEv::Arrival(i) => {
+                let r = trace.requests[i].clone();
+                let w = rr.next_worker();
+                workers[w].waiting.push_back(r);
+                if !looping[w] {
+                    if let Some(d) = workers[w].begin_iteration() {
+                        looping[w] = true;
+                        q.push(now + d, IEv::IterDone(w));
+                    }
+                }
+            }
+            IEv::IterDone(wi) => {
+                for r in workers[wi].finish_iteration(now) {
+                    last_done[wi] = now;
+                    metrics.record_completion(&r, now);
+                }
+                if let Some(d) = workers[wi].begin_iteration() {
+                    q.push(now + d, IEv::IterDone(wi));
+                } else {
+                    looping[wi] = false;
+                }
+            }
+        }
+    }
+
+    metrics.worker_completion = last_done;
+    metrics
+}
+
+/// Run the §7 extension to drain (frozen pre-trait loop).
+pub fn run_scls_cb_reference(trace: &Trace, cfg: &SimConfig, slice_len: u32) -> RunMetrics {
+    use crate::engine::continuous_scls::SlicedContinuousWorker;
+
+    assert!(cfg.workers > 0);
+    let kv_budget = (0.9 * cfg.engine.m_ava as f64) as u64;
+
+    let mut workers: Vec<SlicedContinuousWorker> = (0..cfg.workers)
+        .map(|w| {
+            SlicedContinuousWorker::new(
+                cfg.engine
+                    .latency(cfg.seed ^ (w as u64).wrapping_mul(0x5A5A)),
+                slice_len,
+                kv_budget,
+                cfg.engine.kv_delta,
+                cfg.max_gen_len,
+            )
+        })
+        .collect();
+    let mut looping = vec![false; cfg.workers];
+    let mut last_done = vec![0.0f64; cfg.workers];
+    let mut metrics = RunMetrics::with_capacity(trace.len());
+
+    enum CEv {
+        Arrival(usize),
+        IterDone(usize),
+    }
+
+    let mut q: EventQueue<CEv> = EventQueue::with_capacity(trace.len() + cfg.workers + 2);
+    for (i, r) in trace.requests.iter().enumerate() {
+        q.push(r.arrival, CEv::Arrival(i));
+    }
+
+    // Offload to the instance with the most free projected memory (ties:
+    // shortest local queue); kick its iteration loop if idle.
+    fn assign(
+        r: Request,
+        now: f64,
+        workers: &mut [SlicedContinuousWorker],
+        looping: &mut [bool],
+        q: &mut EventQueue<CEv>,
+    ) {
+        let w = (0..workers.len())
+            .min_by(|&a, &b| {
+                workers[a]
+                    .kv_projected()
+                    .cmp(&workers[b].kv_projected())
+                    .then_with(|| workers[a].waiting.len().cmp(&workers[b].waiting.len()))
+            })
+            .unwrap();
+        workers[w].waiting.push_back(r);
+        if !looping[w] {
+            if let Some(d) = workers[w].begin_iteration() {
+                looping[w] = true;
+                q.push(now + d, CEv::IterDone(w));
+            }
+        }
+    }
+
+    while let Some((now, ev)) = q.pop() {
+        metrics.events += 1;
+        match ev {
+            CEv::Arrival(i) => {
+                let r = trace.requests[i].clone();
+                assign(r, now, &mut workers, &mut looping, &mut q);
+            }
+            CEv::IterDone(wi) => {
+                let exits = workers[wi].finish_iteration(now);
+                for r in exits.done {
+                    last_done[wi] = now;
+                    metrics.record_completion(&r, now);
+                }
+                // §7: slice-capped requests are rescheduled to the least
+                // memory-loaded instance (their KV was just released).
+                for r in exits.rescheduled {
+                    assign(r, now, &mut workers, &mut looping, &mut q);
+                }
+                if let Some(d) = workers[wi].begin_iteration() {
+                    q.push(now + d, CEv::IterDone(wi));
+                } else {
+                    looping[wi] = false;
+                }
+            }
+        }
+    }
+
+    metrics.worker_completion = last_done;
+    metrics
+}

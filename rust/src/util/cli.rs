@@ -113,33 +113,32 @@ impl Args {
         }
     }
 
-    /// Comma-separated list of numbers, e.g. `--rates 12,16,20`.
-    pub fn f64_list_or(&self, key: &str, default: &[f64]) -> Vec<f64> {
+    /// Shared comma-separated list parser behind the typed wrappers.
+    fn list_or<T: std::str::FromStr + Clone>(&self, key: &str, default: &[T]) -> Vec<T> {
         match self.str_opt(key) {
             None => default.to_vec(),
             Some(s) => s
                 .split(',')
                 .map(|x| {
                     x.trim()
-                        .parse::<f64>()
-                        .unwrap_or_else(|_| panic!("--{key}: bad number '{x}'"))
+                        .parse::<T>()
+                        .unwrap_or_else(|_| panic!("--{key}: bad value '{x}'"))
                 })
                 .collect(),
         }
     }
 
+    /// Comma-separated list of numbers, e.g. `--rates 12,16,20`.
+    pub fn f64_list_or(&self, key: &str, default: &[f64]) -> Vec<f64> {
+        self.list_or(key, default)
+    }
+
+    pub fn u64_list_or(&self, key: &str, default: &[u64]) -> Vec<u64> {
+        self.list_or(key, default)
+    }
+
     pub fn u32_list_or(&self, key: &str, default: &[u32]) -> Vec<u32> {
-        match self.str_opt(key) {
-            None => default.to_vec(),
-            Some(s) => s
-                .split(',')
-                .map(|x| {
-                    x.trim()
-                        .parse::<u32>()
-                        .unwrap_or_else(|_| panic!("--{key}: bad integer '{x}'"))
-                })
-                .collect(),
-        }
+        self.list_or(key, default)
     }
 }
 
@@ -170,9 +169,11 @@ mod tests {
 
     #[test]
     fn lists() {
-        let a = args("--rates 12,16,20 --workers 1,2,4,8");
+        let a = args("--rates 12,16,20 --workers 1,2,4,8 --seeds 42,43");
         assert_eq!(a.f64_list_or("rates", &[]), vec![12.0, 16.0, 20.0]);
         assert_eq!(a.u32_list_or("workers", &[]), vec![1, 2, 4, 8]);
+        assert_eq!(a.u64_list_or("seeds", &[7]), vec![42, 43]);
+        assert_eq!(a.u64_list_or("absent", &[7]), vec![7]);
     }
 
     #[test]

@@ -1,11 +1,16 @@
 //! Wall-clock driver for the real PJRT cluster.
 //!
-//! Mirrors `sim::driver::run_sliced` but with OS threads: the coordinator
-//! owns the pool / batcher / offloader / ledger; each worker thread owns a
-//! `RealEngine` (its own PJRT client + compiled executables) with its input
-//! channel acting as the paper's worker local queue (Fig. 7: receiving
-//! thread + processing thread). The offline registry has no tokio, so this
-//! uses std threads + mpsc — same topology, blocking handoff.
+//! Shares the *same scheduling brain* as the DES — the
+//! [`SlicedCoordinator`] (pool, DP batcher, offloader, load ledger,
+//! interval controller) that `sim::policies::SlicedPolicy` drives in
+//! virtual time — but replays arrivals on the wall clock with OS threads:
+//! each worker thread owns a `RealEngine` (its own PJRT client + compiled
+//! executables) with its input channel acting as the paper's worker local
+//! queue (Fig. 7: receiving thread + processing thread). The offline
+//! registry has no tokio, so this uses std threads + mpsc — same topology,
+//! blocking handoff. Like the DES loop, it streams batch and completion
+//! records to a [`MetricsSink`] while the run is in flight
+//! ([`run_real_streaming`]).
 
 use std::path::PathBuf;
 use std::sync::mpsc;
@@ -14,17 +19,16 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::batcher::{dp_batch, fcfs_batches, DpBatcherConfig};
+use crate::batcher::fcfs_batches;
 use crate::core::{Batch, Request};
 use crate::engine::real::{RealEngine, RealSliceResult};
 use crate::estimator::fit::{fit_bilinear, Obs};
 use crate::estimator::memory::{MemoryEstimator, MemoryRule};
 use crate::estimator::serving_time::{ServeEstimate, SliceTimeEstimator};
-use crate::metrics::{BatchRecord, RunMetrics};
-use crate::offloader::{LoadLedger, MaxMinOffloader, RoundRobin};
+use crate::metrics::{BatchRecord, MetricsSink, NullSink, RunMetrics};
 use crate::runtime::ModelRuntime;
-use crate::scheduler::spec::{BatchingSpec, IntervalSpec, OffloadSpec, SchedulerSpec};
-use crate::scheduler::{IntervalController, RequestPool};
+use crate::scheduler::coordinator::SlicedCoordinator;
+use crate::scheduler::spec::{BatchingSpec, SchedulerSpec};
 
 /// Real-cluster parameters.
 #[derive(Debug, Clone)]
@@ -114,13 +118,26 @@ enum WorkerMsg {
     },
 }
 
+/// Run a request stream against the real cluster (no streaming sink).
+pub fn run_real(
+    incoming: Vec<Request>,
+    spec: &SchedulerSpec,
+    cfg: &RealClusterConfig,
+) -> Result<RunMetrics> {
+    run_real_streaming(incoming, spec, cfg, &mut NullSink)
+}
+
 /// Run a request stream (arrival-stamped, tokens attached) against the real
 /// cluster under the given scheduler spec. Arrivals are replayed on the
-/// wall clock; the function returns once every request completes.
-pub fn run_real(
+/// wall clock; the function returns once every request completes. Batch
+/// starts and completions stream to `sink` as they happen (a batch's
+/// `actual_serve_time` is 0.0 at start time and patched into `RunMetrics`
+/// at completion).
+pub fn run_real_streaming(
     mut incoming: Vec<Request>,
     spec: &SchedulerSpec,
     cfg: &RealClusterConfig,
+    sink: &mut dyn MetricsSink,
 ) -> Result<RunMetrics> {
     assert!(cfg.workers > 0);
     incoming.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
@@ -214,34 +231,30 @@ pub fn run_real(
     }
 
     // ---- coordinator loop -------------------------------------------------
+    // The decision core (pool → DP batcher → offloader → ledger → interval)
+    // is the shared `SlicedCoordinator`; this loop only owns the wall
+    // clock, the channels, and the metrics.
     let start = Instant::now();
     let now = || start.elapsed().as_secs_f64();
 
-    let mut pool = RequestPool::new();
-    let mut ledger = LoadLedger::new(cfg.workers);
-    let mut rr = RoundRobin::new(cfg.workers);
+    let mut coord = SlicedCoordinator::new(spec, cfg.workers);
+    coord.reserve_pool(incoming.len());
     let mut metrics = RunMetrics::with_capacity(incoming.len());
     let mut worker_last_done = vec![0.0f64; cfg.workers];
     // Worker-locus FCFS state:
     let mut worker_req_q: Vec<Vec<Request>> = vec![Vec::new(); cfg.workers];
     let mut worker_busy = vec![false; cfg.workers];
 
-    let interval = match spec.interval {
-        IntervalSpec::Immediate => None,
-        IntervalSpec::Fixed(t) => Some(IntervalController::Fixed(t)),
-        IntervalSpec::Adaptive { lambda, gamma } => {
-            Some(IntervalController::Adaptive { lambda, gamma })
-        }
-    };
-    let coordinator_batching = matches!(spec.batching, BatchingSpec::Dp { .. });
     let mut next_tick = 0.0f64;
     let mut next_arrival_idx = 0usize;
     let mut outstanding = incoming.len();
 
+    // Ledger charging happens in the coordinator (schedule_tick for DP
+    // batches, `charge` for worker-locus ones); dispatch only logs + sends.
     let dispatch = |w: usize,
                     mut batch: Batch,
                     metrics: &mut RunMetrics,
-                    ledger: &mut LoadLedger,
+                    sink: &mut dyn MetricsSink,
                     batch_txs: &[mpsc::Sender<Batch>],
                     t: f64|
      -> Result<()> {
@@ -250,8 +263,7 @@ pub fn run_real(
             r.slices += 1;
             r.pad_tokens += (li - r.input_len) as u64;
         }
-        ledger.add(w, batch.est_serve_time);
-        metrics.batches.push(BatchRecord {
+        let rec = BatchRecord {
             start: t,
             worker: w,
             size: batch.size() as u32,
@@ -260,7 +272,9 @@ pub fn run_real(
             est_serve_time: batch.est_serve_time,
             actual_serve_time: 0.0, // patched at completion
             early_return: false,
-        });
+        };
+        sink.on_batch(t, &rec);
+        metrics.batches.push(rec);
         batch_txs[w]
             .send(batch)
             .map_err(|_| anyhow!("worker {w} channel closed"))
@@ -277,7 +291,8 @@ pub fn run_real(
                     let mut bs = fcfs_batches(reqs, batch_size, est.as_ref(), spec.slice_len);
                     let b = bs.pop().unwrap();
                     worker_busy[w] = true;
-                    dispatch(w, b, &mut metrics, &mut ledger, &batch_txs, now())?;
+                    coord.charge(w, b.est_serve_time);
+                    dispatch(w, b, &mut metrics, &mut *sink, &batch_txs, now())?;
                 }
             }
         }};
@@ -290,50 +305,29 @@ pub fn run_real(
         while next_arrival_idx < incoming.len() && incoming[next_arrival_idx].arrival <= t {
             let r = incoming[next_arrival_idx].clone();
             next_arrival_idx += 1;
-            if coordinator_batching {
-                pool.push(r);
-            } else {
-                let w = rr.next_worker();
+            if let Some((w, r)) = coord.admit(r) {
                 worker_req_q[w].push(r);
                 try_start_worker!(w);
             }
         }
 
         // 2. Schedule tick (coordinator batching).
-        if let Some(ctrl) = &interval {
-            if t >= next_tick {
-                let reqs = pool.fetch_all();
-                if !reqs.is_empty() {
-                    let batches = match &spec.batching {
-                        BatchingSpec::Dp { max_batch_size } => dp_batch(
-                            reqs,
-                            est.as_ref(),
-                            &mem,
-                            &DpBatcherConfig {
-                                slice_len: spec.slice_len,
-                                max_batch_size: *max_batch_size,
-                            },
-                        ),
-                        _ => unreachable!(),
-                    };
-                    let assignments: Vec<(usize, Batch)> = match spec.offload {
-                        OffloadSpec::MaxMin => MaxMinOffloader.offload(batches, &mut ledger),
-                        OffloadSpec::RoundRobin => batches
-                            .into_iter()
-                            .map(|b| (rr.next_worker(), b))
-                            .collect(),
-                    };
-                    for (w, b) in assignments {
-                        // max-min already charged the ledger; round-robin
-                        // charges inside dispatch — avoid double counting.
-                        if spec.offload == OffloadSpec::MaxMin {
-                            ledger.complete(w, b.est_serve_time);
-                        }
-                        dispatch(w, b, &mut metrics, &mut ledger, &batch_txs, t)?;
-                    }
+        if coord.has_ticks() && t >= next_tick {
+            let drained = coord.schedule_tick(est.as_ref(), &mem);
+            if drained > 0 {
+                metrics.peak_pool = metrics.peak_pool.max(drained);
+                sink.on_pool_depth(t, drained);
+                let mut assign = coord.take_assignments();
+                for (w, b) in assign.drain(..) {
+                    dispatch(w, b, &mut metrics, &mut *sink, &batch_txs, t)?;
                 }
-                next_tick = t + ctrl.next_interval(&ledger).max(0.005);
+                coord.recycle_assignments(assign);
             }
+            next_tick = t
+                + coord
+                    .next_interval()
+                    .expect("ticks only exist with an interval")
+                    .max(0.005);
         }
 
         // 3. Wait for the next deadline or a completion.
@@ -341,7 +335,7 @@ pub fn run_real(
         if next_arrival_idx < incoming.len() {
             deadline = deadline.min(incoming[next_arrival_idx].arrival);
         }
-        if interval.is_some() {
+        if coord.has_ticks() {
             deadline = deadline.min(next_tick);
         }
         let timeout = if deadline.is_finite() {
@@ -358,7 +352,7 @@ pub fn run_real(
                 result,
             }) => {
                 let t = now();
-                ledger.complete(worker, batch.est_serve_time);
+                coord.batch_done(worker, batch.est_serve_time);
                 worker_last_done[worker] = t;
                 worker_busy[worker] = false;
                 // Patch the batch record with measured duration.
@@ -385,10 +379,10 @@ pub fn run_real(
                         r.finished_at = Some(t);
                         outstanding -= 1;
                         metrics.record_completion(&r, t);
-                    } else if coordinator_batching {
-                        pool.push(r);
-                    } else {
-                        let w = rr.next_worker();
+                        if let Some(c) = metrics.completed.last() {
+                            sink.on_completion(t, c);
+                        }
+                    } else if let Some((w, r)) = coord.admit(r) {
                         worker_req_q[w].push(r);
                         try_start_worker!(w);
                     }
@@ -410,6 +404,7 @@ pub fn run_real(
         let _ = h.join();
     }
     metrics.worker_completion = worker_last_done;
+    sink.on_run_end(&metrics);
     Ok(metrics)
 }
 
@@ -417,6 +412,7 @@ pub fn run_real(
 mod tests {
     use super::*;
     use crate::engine::presets::{EngineKind, EnginePreset};
+    use crate::scheduler::spec::IntervalSpec;
     use std::path::Path;
 
     fn art_dir() -> PathBuf {
@@ -461,11 +457,15 @@ mod tests {
             lambda: 0.5,
             gamma: 0.05,
         };
-        let m = run_real(requests(6), &spec, &cfg(2)).unwrap();
+        let mut tally = crate::metrics::Tally::default();
+        let m = run_real_streaming(requests(6), &spec, &cfg(2), &mut tally).unwrap();
         assert_eq!(m.completed.len(), 6);
         assert!(m.completed.iter().all(|c| c.generated >= 1 && c.generated <= 64));
         assert!(!m.batches.is_empty());
         assert!(m.batches.iter().all(|b| b.actual_serve_time > 0.0));
+        // The sink saw the same stream the metrics logged.
+        assert_eq!(tally.completions as usize, m.completed.len());
+        assert_eq!(tally.batches as usize, m.batches.len());
     }
 
     #[test]

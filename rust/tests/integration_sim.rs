@@ -170,7 +170,7 @@ fn ablation_ladder_improves_monotonically_ish() {
         .iter()
         .map(|spec| run_sliced(&t, spec, &cfg).summarize().throughput)
         .collect();
-    let names: Vec<&str> = ladder.iter().map(|s| s.name).collect();
+    let names: Vec<&str> = ladder.iter().map(|s| s.name.as_str()).collect();
     // SLS -> SCLS strictly better.
     assert!(
         thpt[5] > 1.5 * thpt[0],

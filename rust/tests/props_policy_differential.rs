@@ -1,0 +1,228 @@
+//! Differential suite for the `SchedulingPolicy` refactor: every ported
+//! policy, run through the single generic DES loop
+//! (`sim::driver::run_policy`), must produce a **byte-identical**
+//! `RunMetrics` event log (`RunMetrics::to_json`) to the frozen pre-trait
+//! drivers retained in `sim::reference` — on fixed seeds, across engines,
+//! rates, slice lengths, and worker counts. Same pattern as the DP
+//! batcher's `props_dp_differential.rs`.
+//!
+//! Also property-checks the §7/ILS admission invariant under the generic
+//! loop: no instance's (projected) KV footprint ever exceeds its budget —
+//! the no-OOM guarantee the paper's precise admission is for.
+
+use scls::engine::presets::{EngineKind, EnginePreset};
+use scls::metrics::NullSink;
+use scls::scheduler::spec::SchedulerSpec;
+use scls::sim::driver::{run_ils, run_policy, run_scls_cb, run_sliced, SimConfig, Simulation};
+use scls::sim::policies::{IlsPolicy, SclsCbPolicy};
+use scls::sim::reference::{run_ils_reference, run_scls_cb_reference, run_sliced_reference};
+use scls::testprop::{check, Gen};
+use scls::workload::distributions::WorkloadKind;
+use scls::workload::{Trace, TraceConfig};
+use scls::{prop_assert, prop_assert_eq};
+
+fn trace(kind: WorkloadKind, rate: f64, duration: f64, seed: u64) -> Trace {
+    Trace::generate(&TraceConfig {
+        kind,
+        rate,
+        duration,
+        max_input_len: 1024,
+        max_gen_len: 1024,
+        seed,
+    })
+}
+
+fn cfg(workers: usize, kind: EngineKind, seed: u64) -> SimConfig {
+    SimConfig::new(workers, EnginePreset::paper(kind), 1024, seed)
+}
+
+/// The byte-level fingerprint two runs must share to count as identical.
+fn fingerprint(m: &scls::metrics::RunMetrics) -> String {
+    m.to_json().to_string_pretty()
+}
+
+#[test]
+fn sliced_ladder_matches_reference_byte_for_byte() {
+    for kind in [EngineKind::Hf, EngineKind::Ds] {
+        let preset = EnginePreset::paper(kind);
+        for (rate, duration, seed) in [(4.0, 30.0, 301), (8.0, 45.0, 302)] {
+            let t = trace(WorkloadKind::CodeFuse, rate, duration, seed);
+            let c = cfg(4, kind, seed);
+            for spec in SchedulerSpec::ablation_ladder(&preset, 128, 1024) {
+                let reference = run_sliced_reference(&t, &spec, &c);
+                let ported = run_sliced(&t, &spec, &c);
+                assert_eq!(
+                    fingerprint(&reference),
+                    fingerprint(&ported),
+                    "{} diverged from the pre-trait driver ({} rate {rate} seed {seed})",
+                    spec.name,
+                    kind.name(),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sliced_slice_length_sweep_matches_reference() {
+    let preset = EnginePreset::paper(EngineKind::Ds);
+    let t = trace(WorkloadKind::CodeFuse, 6.0, 40.0, 303);
+    let c = cfg(4, EngineKind::Ds, 303);
+    for s_len in [32u32, 64, 256, 512] {
+        let spec = SchedulerSpec::scls(&preset, s_len);
+        assert_eq!(
+            fingerprint(&run_sliced_reference(&t, &spec, &c)),
+            fingerprint(&run_sliced(&t, &spec, &c)),
+            "SCLS S={s_len} diverged"
+        );
+    }
+}
+
+#[test]
+fn sliced_worker_counts_match_reference() {
+    let preset = EnginePreset::paper(EngineKind::Ds);
+    let t = trace(WorkloadKind::ShareGpt, 6.0, 40.0, 304);
+    for workers in [1usize, 2, 8] {
+        let c = cfg(workers, EngineKind::Ds, 304);
+        let spec = SchedulerSpec::scls(&preset, 128);
+        assert_eq!(
+            fingerprint(&run_sliced_reference(&t, &spec, &c)),
+            fingerprint(&run_sliced(&t, &spec, &c)),
+            "SCLS on {workers} workers diverged"
+        );
+    }
+}
+
+#[test]
+fn ils_matches_reference_byte_for_byte() {
+    for (rate, duration, seed) in [(4.0, 30.0, 311), (10.0, 60.0, 312)] {
+        let t = trace(WorkloadKind::CodeFuse, rate, duration, seed);
+        let c = cfg(4, EngineKind::Ds, seed);
+        assert_eq!(
+            fingerprint(&run_ils_reference(&t, &c)),
+            fingerprint(&run_ils(&t, &c)),
+            "ILS diverged (rate {rate} seed {seed})"
+        );
+    }
+}
+
+#[test]
+fn scls_cb_matches_reference_byte_for_byte() {
+    for (rate, duration, seed, s_len) in [(4.0, 30.0, 321, 128u32), (10.0, 60.0, 322, 64)] {
+        let t = trace(WorkloadKind::CodeFuse, rate, duration, seed);
+        let c = cfg(4, EngineKind::Ds, seed);
+        assert_eq!(
+            fingerprint(&run_scls_cb_reference(&t, &c, s_len)),
+            fingerprint(&run_scls_cb(&t, &c, s_len)),
+            "SCLS-CB diverged (rate {rate} seed {seed} S={s_len})"
+        );
+    }
+}
+
+#[test]
+fn registry_construction_matches_reference() {
+    // The name-based path (CLI / figure cells) is the same policy objects.
+    let t = trace(WorkloadKind::CodeFuse, 5.0, 30.0, 331);
+    let c = cfg(4, EngineKind::Ds, 331);
+    let sim = Simulation::new(c.clone());
+    let preset = EnginePreset::paper(EngineKind::Ds);
+    for (name, reference) in [
+        ("sls", run_sliced_reference(&t, &SchedulerSpec::sls(&preset, 1024), &c)),
+        ("scls", run_sliced_reference(&t, &SchedulerSpec::scls(&preset, 128), &c)),
+        ("ils", run_ils_reference(&t, &c)),
+        ("scls-cb", run_scls_cb_reference(&t, &c, 128)),
+    ] {
+        let ported = sim.run_named(&t, name, 128).unwrap();
+        assert_eq!(
+            fingerprint(&reference),
+            fingerprint(&ported),
+            "registry-built '{name}' diverged"
+        );
+    }
+}
+
+#[test]
+fn randomized_sliced_differential() {
+    // Randomized workload/cluster shapes, smaller but broader than the
+    // fixed-seed cases above.
+    check("policy-differential", 12, |g: &mut Gen| {
+        let kind = if g.bool() { EngineKind::Hf } else { EngineKind::Ds };
+        let preset = EnginePreset::paper(kind);
+        let workload = if g.bool() {
+            WorkloadKind::CodeFuse
+        } else {
+            WorkloadKind::ShareGpt
+        };
+        let rate = *g.pick(&[2.0, 5.0, 9.0]);
+        let workers = *g.pick(&[1usize, 3, 5]);
+        let s_len = *g.pick(&[64u32, 128, 256]);
+        let seed = g.u64();
+        let t = trace(workload, rate, 25.0, seed);
+        let c = cfg(workers, kind, seed);
+        let specs = [
+            SchedulerSpec::scls(&preset, s_len),
+            SchedulerSpec::sls(&preset, 1024),
+            SchedulerSpec::load_balancing(&preset, s_len),
+        ];
+        for spec in &specs {
+            prop_assert!(
+                fingerprint(&run_sliced_reference(&t, spec, &c))
+                    == fingerprint(&run_sliced(&t, spec, &c)),
+                "{} diverged ({} {workers}w rate {rate} S={s_len} seed {seed})",
+                spec.name,
+                kind.name()
+            );
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// No-OOM admission property (ILS conservative cap, SCLS-CB precise)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ils_admission_never_exceeds_kv_budget() {
+    check("ils-no-oom", 20, |g: &mut Gen| {
+        let rate = *g.pick(&[2.0, 6.0, 12.0]);
+        let workers = *g.pick(&[1usize, 2, 4]);
+        let seed = g.u64();
+        let t = trace(WorkloadKind::CodeFuse, rate, 25.0, seed);
+        let c = cfg(workers, EngineKind::Ds, seed);
+        let mut policy = IlsPolicy::new(&c);
+        let m = run_policy(&t, &mut policy, c.workers, &mut NullSink);
+        prop_assert_eq!(m.completed.len(), t.len(), "requests lost");
+        prop_assert!(
+            policy.max_kv_observed() <= policy.kv_budget(),
+            "ILS admitted past the KV budget: {} > {}",
+            policy.max_kv_observed(),
+            policy.kv_budget()
+        );
+        prop_assert!(policy.max_kv_observed() > 0, "invariant never exercised");
+        Ok(())
+    });
+}
+
+#[test]
+fn scls_cb_admission_never_exceeds_kv_budget() {
+    check("scls-cb-no-oom", 20, |g: &mut Gen| {
+        let rate = *g.pick(&[2.0, 6.0, 12.0]);
+        let workers = *g.pick(&[1usize, 2, 4]);
+        let s_len = *g.pick(&[32u32, 128, 512]);
+        let seed = g.u64();
+        let t = trace(WorkloadKind::CodeFuse, rate, 25.0, seed);
+        let c = cfg(workers, EngineKind::Ds, seed);
+        let mut policy = SclsCbPolicy::new(&c, s_len);
+        let m = run_policy(&t, &mut policy, c.workers, &mut NullSink);
+        prop_assert_eq!(m.completed.len(), t.len(), "requests lost");
+        prop_assert!(
+            policy.max_kv_observed() <= policy.kv_budget(),
+            "SCLS-CB projected KV past the budget: {} > {} (S={})",
+            policy.max_kv_observed(),
+            policy.kv_budget(),
+            s_len
+        );
+        prop_assert!(policy.max_kv_observed() > 0, "invariant never exercised");
+        Ok(())
+    });
+}
