@@ -12,8 +12,14 @@
 //! `BENCH_scale.json` baseline, then rewrites that baseline in place so
 //! `git diff` shows the drift.
 //!
+//! A second, smaller P-CB drain (prediction-aware continuous batching
+//! with the oracle predictor) rides along so the predictor subsystem's
+//! overhead shows up in the same events/sec trajectory — its row lands
+//! under the `p_cb` key of `BENCH_scale.json`.
+//!
 //! Knobs (env): SCLS_SCALE_REQUESTS [1000000], SCLS_SCALE_WORKERS [64],
-//! SCLS_SCALE_RATE [2000], SCLS_SCALE_SLICE [128].
+//! SCLS_SCALE_RATE [2000], SCLS_SCALE_SLICE [128],
+//! SCLS_SCALE_PCB_REQUESTS [200000].
 
 use std::time::Instant;
 
@@ -124,6 +130,35 @@ fn main() {
         None => println!("no baseline at {path}; this run establishes it"),
     }
 
+    // ---- P-CB row: prediction-aware continuous batching at scale -------
+    // A smaller drain (per-iteration events make P-CB's event count much
+    // denser than SCLS ticks), same workload shape, oracle predictor.
+    let pcb_n = (env_u64("SCLS_SCALE_PCB_REQUESTS", 200_000) as usize).min(n);
+    let pcb_trace = scls::workload::Trace {
+        requests: trace.requests[..pcb_n].to_vec(),
+        config_rate: trace.config_rate,
+        duration: trace.duration,
+    };
+    let mut pcb_tally = Tally::default();
+    let t1 = Instant::now();
+    let pm = sim
+        .run_named_with_sink(&pcb_trace, "P-CB", slice_len, &mut pcb_tally)
+        .expect("P-CB is a built-in policy");
+    let pcb_wall = t1.elapsed().as_secs_f64();
+    assert_eq!(pm.completed.len(), pcb_n, "P-CB drain lost requests");
+    let pcb_eps = pm.events as f64 / pcb_wall.max(1e-9);
+    println!();
+    println!(
+        "P-CB (oracle): drained {} requests in {pcb_wall:.3} s wall",
+        pcb_tally.completions
+    );
+    println!("P-CB events       {}", pm.events);
+    println!("P-CB events/sec   {pcb_eps:.0}");
+    println!(
+        "P-CB mispredicts  under {} / over {} / wasted {} tok",
+        pm.underpredicted, pm.overpredicted, pm.wasted_kv_token_steps
+    );
+
     let mut j = Json::obj();
     j.set("requests", n as u64)
         .set("workers", workers as u64)
@@ -137,6 +172,16 @@ fn main() {
         .set("virtual_makespan", m.makespan)
         .set("virtual_throughput", s.throughput)
         .set("completed", s.completed as u64);
+    let mut pcb = Json::obj();
+    pcb.set("requests", pcb_n as u64)
+        .set("wall_seconds", pcb_wall)
+        .set("events", pm.events)
+        .set("events_per_sec", pcb_eps)
+        .set("underpredicted", pm.underpredicted)
+        .set("overpredicted", pm.overpredicted)
+        .set("wasted_kv_token_steps", pm.wasted_kv_token_steps)
+        .set("virtual_throughput", pm.summarize().throughput);
+    j.set("p_cb", pcb);
     std::fs::write(&path, j.to_string_pretty()).expect("write BENCH_scale.json");
     println!("wrote {path}");
 }

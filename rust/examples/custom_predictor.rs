@@ -1,0 +1,86 @@
+//! Implement your own generation-length predictor against the
+//! `LengthPredictor` trait and drive the prediction-aware P-CB scheduler
+//! with it.
+//!
+//! The predictor below is the classic cheap heuristic: guess that a reply
+//! is about as long as its prompt (code-assistant traffic often correlates
+//! the two), clamped to a sane band. It takes 4 lines of logic; the same
+//! generic DES loop, metrics, and recovery machinery that run the
+//! built-in oracle/noisy/bucket predictors run this one.
+//!
+//! Run: `cargo run --release --example custom_predictor`
+
+use scls::core::Request;
+use scls::engine::presets::{EngineKind, EnginePreset};
+use scls::predictor::{LengthPredictor, PredictorSpec};
+use scls::sim::policies::PredictiveCbPolicy;
+use scls::sim::Simulation;
+use scls::workload::distributions::WorkloadKind;
+use scls::workload::{Trace, TraceConfig};
+
+/// "Replies are about as long as their prompts": predict 1.5× the input
+/// length, clamped to [16, 768]. No oracle access at all — this is a
+/// heuristic a real deployment could ship on day one.
+struct PromptLenHeuristic;
+
+impl LengthPredictor for PromptLenHeuristic {
+    fn predict(&self, req: &Request) -> u32 {
+        ((req.orig_input_len as f64 * 1.5) as u32).clamp(16, 768)
+    }
+
+    fn name(&self) -> &'static str {
+        "prompt-len-heuristic"
+    }
+}
+
+fn main() {
+    let preset = EnginePreset::paper(EngineKind::Ds);
+    let trace = Trace::generate(&TraceConfig {
+        kind: WorkloadKind::CodeFuse,
+        rate: 12.0,
+        duration: 60.0,
+        max_input_len: 1024,
+        max_gen_len: 1024,
+        seed: 42,
+    });
+    let sim = Simulation::builder()
+        .workers(4)
+        .engine(preset.clone())
+        .seed(42)
+        .build();
+
+    // Custom predictor → P-CB policy object, run on the generic loop.
+    let mut custom = PredictiveCbPolicy::new(sim.config(), Box::new(PromptLenHeuristic));
+    let mc = sim.run(&trace, &mut custom);
+
+    // Built-in predictors for comparison: exact oracle and a p90 constant.
+    let oracle_cfg = sim.config().clone().with_predictor(PredictorSpec::Oracle);
+    let mut oracle = PredictiveCbPolicy::new(
+        &oracle_cfg,
+        oracle_cfg.predictor.build(oracle_cfg.max_gen_len, oracle_cfg.seed),
+    );
+    let mo = sim.run(&trace, &mut oracle);
+
+    // Prediction-free baseline.
+    let mb = sim.run_named(&trace, "SCLS-CB", 128).unwrap();
+
+    println!("policy                thpt    avg RT   underpred  overpred  wasted tok");
+    for (name, m) in [
+        ("P-CB (heuristic)", &mc),
+        ("P-CB (oracle)", &mo),
+        ("SCLS-CB", &mb),
+    ] {
+        let s = m.summarize();
+        println!(
+            "{name:<20} {:>6.2}   {:>6.2}   {:>8}  {:>8}  {:>9}",
+            s.throughput, s.avg_response_time, m.underpredicted, m.overpredicted,
+            m.wasted_kv_token_steps
+        );
+    }
+    println!(
+        "\nThe oracle row is the upper bound; the heuristic pays for its misses\n\
+         through eviction/re-admission (underpred) and idle reservations\n\
+         (wasted tok), which is exactly the trade the predictor subsystem\n\
+         makes measurable."
+    );
+}

@@ -161,6 +161,33 @@ pub fn dp_batch_into<E: ServeEstimate + ?Sized>(
     materialize_into(requests, &scratch.cuts, est, cfg.slice_len, out);
 }
 
+/// [`dp_batch_into`] for callers that already hold the requests sorted
+/// ascending by current input length — the incremental
+/// [`crate::scheduler::RequestPool`] hands the coordinator exactly the
+/// stable-sorted order `dp_batch_into`'s own sort would produce, so this
+/// entry point skips the re-sort (debug-asserting the contract) and is
+/// otherwise identical batch for batch, bit for bit.
+pub fn dp_batch_sorted_into<E: ServeEstimate + ?Sized>(
+    requests: &mut Vec<Request>,
+    est: &E,
+    mem: &MemoryEstimator,
+    cfg: &DpBatcherConfig,
+    scratch: &mut DpScratch,
+    out: &mut Vec<Batch>,
+) {
+    out.clear();
+    if requests.is_empty() {
+        scratch.cuts.clear();
+        return;
+    }
+    debug_assert!(
+        requests.windows(2).all(|w| w[0].input_len <= w[1].input_len),
+        "dp_batch_sorted_into requires ascending input lengths"
+    );
+    dp_plan(requests, est, mem, cfg, scratch);
+    materialize_into(requests, &scratch.cuts, est, cfg.slice_len, out);
+}
+
 /// Run the optimized DP over an already-sorted request slice, leaving the
 /// optimal cuts in `scratch` (see module docs for the exactness argument).
 pub fn dp_plan<E: ServeEstimate + ?Sized>(

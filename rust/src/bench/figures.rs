@@ -534,6 +534,89 @@ pub fn fig18_21(fc: &FigureConfig, kind: EngineKind, slice_lens: &[u32]) -> Figu
 }
 
 // ---------------------------------------------------------------------------
+// Prediction sweep — throughput vs prediction error (extension figure)
+// ---------------------------------------------------------------------------
+
+/// One prediction-sweep cell: run `which` with a noisy-oracle predictor of
+/// the given σ and return the full metrics (the sweep reports the
+/// prediction counters, which `Summary` does not carry).
+fn run_pred_cell(
+    fc: &FigureConfig,
+    kind: EngineKind,
+    which: &str,
+    rate: f64,
+    slice_len: u32,
+    sigma: Option<f64>,
+) -> crate::metrics::RunMetrics {
+    let trace = fc.trace(rate);
+    let mut cfg = fc.sim(kind);
+    if let Some(sigma) = sigma {
+        cfg.predictor = crate::predictor::PredictorSpec::Noisy { sigma };
+    }
+    Simulation::new(cfg)
+        .run_named(&trace, which, slice_len)
+        .unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Extension figure: throughput vs prediction error. P-SCLS and P-CB run
+/// with a [`crate::predictor::NoisyOracle`] across σ (σ = 0 is the exact
+/// oracle); SCLS, ILS, and SCLS-CB anchor the prediction-free baselines.
+/// The acceptance shape: P-CB at σ = 0 beats SCLS-CB, and both
+/// prediction-aware rows degrade (within noise) as σ grows.
+pub fn fig_pred(fc: &FigureConfig, sigmas: &[f64]) -> FigureResult {
+    let mut items: Vec<(&'static str, Option<f64>)> =
+        vec![("SCLS", None), ("ILS", None), ("SCLS-CB", None)];
+    for &s in sigmas {
+        items.push(("P-SCLS", Some(s)));
+        items.push(("P-CB", Some(s)));
+    }
+    let sums = parallel_map(fc.jobs, items, |(which, sigma)| {
+        let m = run_pred_cell(fc, EngineKind::Ds, which, 20.0, fc.slice_len, sigma);
+        let (under, over, wasted) = (m.underpredicted, m.overpredicted, m.wasted_kv_token_steps);
+        (which, sigma, m.summarize(), under, over, wasted)
+    });
+    let mut rows = Vec::new();
+    let mut arr = Vec::new();
+    for (which, sigma, s, under, over, wasted) in sums {
+        rows.push(vec![
+            which.to_string(),
+            sigma.map(|x| format!("{x}")).unwrap_or_else(|| "-".into()),
+            f2(s.throughput),
+            f2(s.avg_response_time),
+            f2(s.p95_response_time),
+            under.to_string(),
+            over.to_string(),
+            wasted.to_string(),
+        ]);
+        let mut o = s.to_json();
+        o.set("scheduler", which)
+            .set("underpredicted", under)
+            .set("overpredicted", over)
+            .set("wasted_kv_token_steps", wasted);
+        if let Some(x) = sigma {
+            o.set("sigma", x);
+        }
+        arr.push(o);
+    }
+    FigureResult {
+        id: "figpred".into(),
+        title: "Prediction sweep: throughput vs length-prediction error (DS, rate 20)".into(),
+        header: vec![
+            "scheduler".into(),
+            "sigma".into(),
+            "thpt".into(),
+            "avg RT".into(),
+            "p95 RT".into(),
+            "underpred".into(),
+            "overpred".into(),
+            "wasted tok".into(),
+        ],
+        rows,
+        json: Json::Arr(arr),
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Fig. 22 — scalability: throughput vs number of workers
 // ---------------------------------------------------------------------------
 
@@ -626,6 +709,41 @@ mod tests {
         assert!(get("SCLS", "throughput") > get("ILS", "throughput"));
         assert!(get("SCLS", "avg_invalid_tokens") < get("SLS", "avg_invalid_tokens"));
         assert!(get("SCLS", "avg_batch_size") > get("SLS", "avg_batch_size"));
+    }
+
+    #[test]
+    fn figpred_covers_baselines_and_sigma_sweep() {
+        let r = fig_pred(&quick(), &[0.0, 0.5]);
+        // 3 baselines + 2 policies × 2 sigmas.
+        assert_eq!(r.rows.len(), 7);
+        let arr = r.json.as_arr().unwrap();
+        let cell = |which: &str, sigma: Option<f64>| {
+            arr.iter()
+                .find(|o| {
+                    o.get("scheduler").and_then(Json::as_str) == Some(which)
+                        && o.get("sigma").and_then(Json::as_f64) == sigma
+                })
+                .unwrap_or_else(|| panic!("missing cell {which} {sigma:?}"))
+        };
+        let thpt = |which: &str, sigma: Option<f64>| {
+            cell(which, sigma).get("throughput").unwrap().as_f64().unwrap()
+        };
+        assert!(thpt("P-CB", Some(0.0)) > 0.0);
+        assert!(thpt("SCLS-CB", None) > 0.0);
+        // Exact oracle: zero recovery events.
+        let under0 = cell("P-CB", Some(0.0))
+            .get("underpredicted")
+            .unwrap()
+            .as_i64()
+            .unwrap();
+        assert_eq!(under0, 0, "oracle P-CB must never evict");
+        // Heavy noise produces recovery events on the sliced ladder too.
+        let under_noisy = cell("P-CB", Some(0.5))
+            .get("underpredicted")
+            .unwrap()
+            .as_i64()
+            .unwrap();
+        assert!(under_noisy > 0, "sigma 0.5 must under-predict sometimes");
     }
 
     #[test]

@@ -33,6 +33,12 @@ pub struct Request {
     /// Accumulated invalid tokens (generated after this request's EOS while
     /// waiting for the rest of its batch).
     pub invalid_tokens: u64,
+    /// Predicted total generation length, stamped by a
+    /// [`crate::predictor::LengthPredictor`] when a prediction-aware
+    /// policy admits the request (`None` under prediction-free policies).
+    /// Unlike `target_gen_len` this is scheduler-visible by design: it is
+    /// the proxy-model estimate, not the oracle.
+    pub predicted_gen: Option<u32>,
     /// Set when the response is returned to the user.
     pub finished_at: Option<f64>,
     /// Real-engine only: concrete token ids of the current input (original
@@ -54,6 +60,7 @@ impl Request {
             slices: 0,
             pad_tokens: 0,
             invalid_tokens: 0,
+            predicted_gen: None,
             finished_at: None,
             tokens: Vec::new(),
             eos_seen: false,

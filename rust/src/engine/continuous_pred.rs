@@ -1,0 +1,351 @@
+//! Prediction-reserved continuous batching — the P-CB worker substrate.
+//!
+//! Where ILS admits against a conservative parallel cap and SCLS-CB
+//! against the per-slice worst case (`cached + S`), this worker admits
+//! against the request's **predicted** KV demand: a request is admitted
+//! iff the KV it is *reserved* to grow to — `(input + allowed)·Δ`, where
+//! `allowed` is its predicted remaining generation — fits alongside the
+//! reservations of everything already running.
+//!
+//! Mispredict recovery keeps the no-OOM invariant unconditional:
+//!
+//! * **Under-prediction** — a request that exhausts its reservation
+//!   without finishing is *evicted* at the iteration boundary: its KV is
+//!   released and it goes back to the coordinator to be re-admitted with
+//!   an enlarged reservation (paying a fresh prefill over input +
+//!   generated, exactly like an SCLS-CB slice exit). Eviction fires
+//!   *before* the reservation can be exceeded, so actual KV use never
+//!   passes the projected sum, which admission keeps ≤ the budget.
+//! * **Over-prediction** — a request that finishes with reservation to
+//!   spare wasted that headroom for its whole residency; the unused tokens
+//!   are reported per exit so the scheduler can account
+//!   `wasted_kv_token_steps`.
+//!
+//! A lone-request clamp guarantees progress under tight budgets: when the
+//! instance is idle and the front request's reservation alone exceeds the
+//! budget, the reservation is clamped down to what fits (≥ 1 token), so
+//! the request advances by eviction/re-admission cycles instead of
+//! deadlocking — the invariant is never traded for liveness.
+
+use std::collections::VecDeque;
+
+use crate::core::Request;
+
+use super::latency::EngineLatency;
+
+/// A request in the running set, pinned with its admission-time
+/// reservation.
+#[derive(Debug)]
+struct PredictedRunning {
+    req: Request,
+    /// Cached length (input + all generated tokens).
+    cached: u32,
+    /// Tokens still to generate (EOS oracle or the max-gen cap) — engine
+    /// side only, never consulted for admission.
+    remaining: u32,
+    /// Reserved generation tokens for this residency (admission-time).
+    allowed: u32,
+    /// Tokens generated within this residency.
+    gen_this_residency: u32,
+    /// This entry's contribution to the projected-KV sum, fixed at
+    /// admission: `(input_at_admission + allowed)·Δ`.
+    reserved_kv: u64,
+}
+
+/// What `finish_iteration` hands back to the coordinator.
+#[derive(Debug, Default)]
+pub struct PredExits {
+    /// Finished requests, each with its unused reservation (tokens the
+    /// prediction over-shot by; 0 for exact or under-predictions).
+    pub done: Vec<(Request, u32)>,
+    /// Exhausted their reservation without finishing (under-predicted):
+    /// KV released, must be re-admitted with a larger reservation.
+    pub evicted: Vec<Request>,
+}
+
+/// One prediction-reserved continuous-batching LLM instance.
+pub struct PredictiveContinuousWorker {
+    pub waiting: VecDeque<Request>,
+    running: Vec<PredictedRunning>,
+    pub engine: EngineLatency,
+    /// KV budget in bytes and per-token KV size.
+    pub kv_budget: u64,
+    pub kv_delta: u64,
+    pub max_gen_len: u32,
+    /// Running sum of `reserved_kv` over the running set (incremental so
+    /// admission is O(1) per candidate even with deep queues).
+    projected: u64,
+}
+
+impl PredictiveContinuousWorker {
+    pub fn new(
+        engine: EngineLatency,
+        kv_budget: u64,
+        kv_delta: u64,
+        max_gen_len: u32,
+    ) -> PredictiveContinuousWorker {
+        PredictiveContinuousWorker {
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            engine,
+            kv_budget,
+            kv_delta: kv_delta.max(1),
+            max_gen_len,
+            projected: 0,
+        }
+    }
+
+    pub fn running_len(&self) -> usize {
+        self.running.len()
+    }
+
+    /// Projected KV: the sum of admission-time reservations of everything
+    /// running. Actual KV use never exceeds this (eviction fires when a
+    /// reservation is consumed), so admission against it is the no-OOM
+    /// invariant.
+    pub fn kv_projected(&self) -> u64 {
+        self.projected
+    }
+
+    /// Reservation a request asks for: predicted remaining generation,
+    /// clamped to at least 1 token and at most the distance to the
+    /// generation cap. Falls back to the worst case when no prediction is
+    /// stamped (plain conservative continuous batching).
+    fn reservation(&self, req: &Request) -> u32 {
+        let pred_total = req.predicted_gen.unwrap_or(self.max_gen_len);
+        let to_cap = self.max_gen_len.saturating_sub(req.generated).max(1);
+        pred_total.saturating_sub(req.generated).clamp(1, to_cap)
+    }
+
+    /// Begin the next iteration: admit whatever the predicted reservations
+    /// say fits, then return the duration of one decode iteration over the
+    /// running set (plus the prefill cost of requests admitted at this
+    /// boundary). `None` = idle.
+    pub fn begin_iteration(&mut self) -> Option<f64> {
+        let mut admit_prefill = 0.0;
+        while let Some(front) = self.waiting.front() {
+            let mut allowed = self.reservation(front);
+            let need = (front.input_len as u64 + allowed as u64) * self.kv_delta;
+            if self.projected + need > self.kv_budget {
+                if !self.running.is_empty() {
+                    break;
+                }
+                // Lone-request clamp: shrink the reservation to what the
+                // whole budget can hold so the instance makes progress.
+                let fit = (self.kv_budget / self.kv_delta)
+                    .saturating_sub(front.input_len as u64);
+                if fit == 0 {
+                    // Not even input + 1 token fits: this request can never
+                    // be served on this instance, and it blocks the queue
+                    // behind it for good (mirrors the ILS/SCLS-CB stall on
+                    // oversized inputs, but say so instead of stalling
+                    // silently).
+                    log::warn!(
+                        "request {} (input {} tokens) exceeds the KV budget \
+                         ({} tokens) outright; instance queue is stalled",
+                        front.id,
+                        front.input_len,
+                        self.kv_budget / self.kv_delta
+                    );
+                    break;
+                }
+                allowed = allowed.min(fit.min(u32::MAX as u64) as u32);
+            }
+            let mut req = self.waiting.pop_front().unwrap();
+            req.slices += 1;
+            admit_prefill += self.engine.prefill_mean(1, req.input_len);
+            let remaining = self
+                .max_gen_len
+                .saturating_sub(req.generated)
+                .min(req.remaining_to_eos())
+                .max(1);
+            let reserved_kv = (req.input_len as u64 + allowed as u64) * self.kv_delta;
+            self.projected += reserved_kv;
+            self.running.push(PredictedRunning {
+                cached: req.input_len,
+                remaining,
+                allowed,
+                gen_this_residency: 0,
+                reserved_kv,
+                req,
+            });
+        }
+        if self.running.is_empty() {
+            return None;
+        }
+        let n = self.running.len() as u32;
+        let mean_l =
+            (self.running.iter().map(|r| r.cached as u64).sum::<u64>() / n as u64) as u32;
+        Some(admit_prefill + self.engine.decode_iter_mean(mean_l, n))
+    }
+
+    /// Complete the iteration: every running request gains one token;
+    /// finished requests exit as `done` (with their unused reservation),
+    /// reservation-exhausted ones as `evicted` (with `input_len` advanced
+    /// so re-admission prefills over the full context).
+    pub fn finish_iteration(&mut self, now: f64) -> PredExits {
+        for r in &mut self.running {
+            r.cached += 1;
+            r.remaining -= 1;
+            r.gen_this_residency += 1;
+            r.req.generated += 1;
+        }
+        let mut out = PredExits::default();
+        let mut k = 0;
+        while k < self.running.len() {
+            if self.running[k].remaining == 0 {
+                let fin = self.running.swap_remove(k);
+                self.projected -= fin.reserved_kv;
+                let unused = fin.allowed.saturating_sub(fin.gen_this_residency);
+                let mut req = fin.req;
+                req.finished_at = Some(now);
+                out.done.push((req, unused));
+            } else if self.running[k].gen_this_residency >= self.running[k].allowed {
+                let evicted = self.running.swap_remove(k);
+                self.projected -= evicted.reserved_kv;
+                let mut req = evicted.req;
+                // Re-admission prefills over everything generated so far
+                // (the KV cache is dropped on eviction).
+                req.input_len = evicted.cached;
+                out.evicted.push(req);
+            } else {
+                k += 1;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DELTA: u64 = 800 * 1024;
+
+    fn worker(budget_tokens: u64) -> PredictiveContinuousWorker {
+        let mut lat = EngineLatency::ds(1);
+        lat.jitter = 0.0;
+        PredictiveContinuousWorker::new(lat, budget_tokens * DELTA, DELTA, 1024)
+    }
+
+    fn req(id: u64, input: u32, gen: u32, pred: u32) -> Request {
+        let mut r = Request::new(id, 0.0, input, gen);
+        r.predicted_gen = Some(pred);
+        r
+    }
+
+    #[test]
+    fn admission_reserves_predicted_not_worst_case() {
+        // Budget: 400 tokens. Worst-case (cap 1024) admission would admit
+        // nothing; predicted admission fits two (100 + 80)-token requests.
+        let mut w = worker(400);
+        w.waiting.push_back(req(0, 100, 500, 80));
+        w.waiting.push_back(req(1, 100, 500, 80));
+        w.waiting.push_back(req(2, 100, 500, 80));
+        w.begin_iteration().unwrap();
+        assert_eq!(w.running_len(), 2, "third reservation must not fit");
+        assert_eq!(w.kv_projected(), 2 * 180 * DELTA);
+    }
+
+    #[test]
+    fn oracle_prediction_never_evicts() {
+        let mut w = worker(10_000);
+        w.waiting.push_back(req(0, 10, 5, 5));
+        w.begin_iteration().unwrap();
+        for t in 0..5 {
+            let out = w.finish_iteration(t as f64);
+            assert!(out.evicted.is_empty());
+            if t < 4 {
+                w.begin_iteration().unwrap();
+            } else {
+                let (done, unused) = out.done.into_iter().next().expect("finished at EOS");
+                assert_eq!(done.generated, 5);
+                assert_eq!(unused, 0, "exact prediction wastes nothing");
+            }
+        }
+        assert_eq!(w.running_len(), 0);
+        assert_eq!(w.kv_projected(), 0);
+    }
+
+    #[test]
+    fn underprediction_evicts_with_context_advanced() {
+        // Predicted 4, actually needs 20: evicted after 4 tokens.
+        let mut w = worker(10_000);
+        w.waiting.push_back(req(0, 10, 20, 4));
+        w.begin_iteration().unwrap();
+        let mut evicted = None;
+        for t in 0..4 {
+            let out = w.finish_iteration(t as f64);
+            assert!(out.done.is_empty());
+            if !out.evicted.is_empty() {
+                evicted = Some(out.evicted.into_iter().next().unwrap());
+                break;
+            }
+            w.begin_iteration().unwrap();
+        }
+        let r = evicted.expect("reservation exhaustion must evict");
+        assert_eq!(r.generated, 4);
+        assert_eq!(r.input_len, 14, "re-admission prefills input+generated");
+        assert_eq!(w.running_len(), 0, "KV released at eviction");
+        assert_eq!(w.kv_projected(), 0);
+    }
+
+    #[test]
+    fn overprediction_reports_unused_reservation() {
+        // Predicted 100, actually needs 3: 97 reserved tokens wasted.
+        let mut w = worker(10_000);
+        w.waiting.push_back(req(0, 10, 3, 100));
+        w.begin_iteration().unwrap();
+        w.finish_iteration(1.0);
+        w.begin_iteration().unwrap();
+        w.finish_iteration(2.0);
+        w.begin_iteration().unwrap();
+        let out = w.finish_iteration(3.0);
+        let (done, unused) = out.done.into_iter().next().unwrap();
+        assert_eq!(done.generated, 3);
+        assert_eq!(unused, 97);
+    }
+
+    #[test]
+    fn lone_request_clamp_keeps_progress_and_invariant() {
+        // Budget 120 tokens; request wants input 100 + predicted 500.
+        let mut w = worker(120);
+        w.waiting.push_back(req(0, 100, 500, 500));
+        w.begin_iteration().unwrap();
+        assert_eq!(w.running_len(), 1, "idle instance must clamp and admit");
+        assert!(w.kv_projected() <= w.kv_budget, "invariant holds post-clamp");
+        // The clamped reservation is 20 tokens; eviction fires there.
+        let mut evicted = false;
+        for t in 0..20 {
+            let out = w.finish_iteration(t as f64);
+            if !out.evicted.is_empty() {
+                assert_eq!(out.evicted[0].generated, 20);
+                evicted = true;
+                break;
+            }
+            w.begin_iteration().unwrap();
+        }
+        assert!(evicted);
+    }
+
+    #[test]
+    fn missing_prediction_falls_back_to_worst_case() {
+        let mut w = worker(4096);
+        let r = Request::new(0, 0.0, 64, 2000); // no predicted_gen stamped
+        w.waiting.push_back(r);
+        w.begin_iteration().unwrap();
+        // Reservation = cap (1024) since generated = 0.
+        assert_eq!(w.kv_projected(), (64 + 1024) * DELTA);
+    }
+
+    #[test]
+    fn projection_constant_over_residency() {
+        let mut w = worker(10_000);
+        w.waiting.push_back(req(0, 100, 1000, 50));
+        w.begin_iteration().unwrap();
+        let p0 = w.kv_projected();
+        w.finish_iteration(1.0);
+        w.begin_iteration().unwrap();
+        assert_eq!(w.kv_projected(), p0, "reservation is fixed at admission");
+    }
+}

@@ -11,9 +11,13 @@
 //! * `continuous_scls` — slice-capped continuous batching with precise
 //!   per-slice memory admission: the paper's §7 extension (SCLS on a
 //!   vLLM-style engine).
+//! * `continuous_pred` — prediction-reserved continuous batching: KV
+//!   admission against predicted demand with eviction-based mispredict
+//!   recovery (the P-CB substrate).
 //! * `real` — PJRT-backed execution of the AOT tiny-GPT artifacts.
 
 pub mod continuous;
+pub mod continuous_pred;
 pub mod continuous_scls;
 pub mod latency;
 pub mod presets;

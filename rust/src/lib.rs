@@ -14,7 +14,8 @@
 //!   on the request path.
 //!
 //! Scheduling is unified behind one open API: every scheduler — the
-//! paper's eight plus yours — is a [`scheduler::SchedulingPolicy`] run by
+//! paper's eight, the prediction-aware P-SCLS/P-CB pair, plus yours — is a
+//! [`scheduler::SchedulingPolicy`] run by
 //! the single generic DES loop ([`sim::driver::run_policy`]), and the
 //! real PJRT cluster shares the same coordinator brain
 //! ([`scheduler::SlicedCoordinator`]). Start at [`sim::Simulation`]
@@ -33,6 +34,7 @@ pub mod engine;
 pub mod estimator;
 pub mod metrics;
 pub mod offloader;
+pub mod predictor;
 pub mod runtime;
 pub mod scheduler;
 pub mod sim;

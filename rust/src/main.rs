@@ -24,6 +24,7 @@ use scls::bench::figures::{self, FigureConfig, FigureResult};
 use scls::config::{ConfigFile, ExperimentConfig};
 use scls::engine::presets::{EngineKind, EnginePreset};
 use scls::estimator::profiler::{profile_and_fit, ProfileGrid};
+use scls::predictor::PredictorSpec;
 use scls::scheduler::parse_policy_name;
 use scls::scheduler::spec::SchedulerSpec;
 use scls::sim::driver::{SimConfig, Simulation};
@@ -53,8 +54,8 @@ SUBCOMMANDS:
   figure ID   Regenerate one figure (same flags as `figures`)
   simulate    Run one experiment cell on the calibrated DES
       --engine hf|ds     inference engine            [ds]
-      --scheduler NAME   SLS|ILS|SO|PM|AB|LB|SCLS|SCLS-CB (case-insensitive)
-                         [SCLS]
+      --scheduler NAME   SLS|ILS|SO|PM|AB|LB|SCLS|SCLS-CB|P-SCLS|P-CB
+                         (case-insensitive)          [SCLS]
       --rate R           arrival rate req/s          [20]
       --workers W        LLM instances               [8]
       --duration SECS    trace duration              [600]
@@ -62,6 +63,12 @@ SUBCOMMANDS:
       --workload NAME    codefuse|sharegpt           [codefuse]
       --seed N           RNG seed                    [42]
       --config FILE      key=value config file overriding defaults
+      --predictor NAME   length predictor for P-SCLS/P-CB:
+                         oracle|noisy[:SIGMA]|bucket[:B]|percentile[:P]
+                         [oracle]
+      --pred-sigma S     noisy-oracle sigma (implies --predictor noisy)
+      --pred-buckets B   bucket count (implies --predictor bucket)
+      --pred-accuracy A  bucket classifier accuracy in [0,1]  [0.85]
   serve       Serve a scaled trace on the real PJRT cluster
       --artifacts DIR    AOT artifact dir            [artifacts]
       --workers W        worker threads              [2]
@@ -124,6 +131,7 @@ fn dispatch(args: &Args) -> Result<()> {
 fn figure_ids() -> Vec<&'static str> {
     vec![
         "fig5", "fig6", "fig8", "fig10", "fig11", "fig12", "fig15", "fig17", "fig18", "fig22",
+        "figpred",
     ]
 }
 
@@ -154,6 +162,8 @@ fn run_figure(id: &str, fc: &FigureConfig) -> Result<Vec<FigureResult>> {
             figures::fig18_21(fc, EngineKind::Hf, &slice_lens),
         ],
         "fig22" => vec![figures::fig22(fc, &workers)],
+        // Extension: throughput vs length-prediction error (P-SCLS/P-CB).
+        "figpred" => vec![figures::fig_pred(fc, &[0.0, 0.1, 0.25, 0.5, 1.0])],
         other => bail!("unknown figure id '{other}' (known: {:?})", figure_ids()),
     })
 }
@@ -245,10 +255,51 @@ fn experiment_config(args: &Args) -> Result<ExperimentConfig> {
     Ok(cfg)
 }
 
+/// Assemble the predictor spec from `--predictor` plus the dedicated
+/// override flags (`--pred-sigma`, `--pred-buckets`, `--pred-accuracy`).
+fn predictor_spec(args: &Args, workload: WorkloadKind) -> Result<PredictorSpec> {
+    let mut spec = PredictorSpec::parse(args.str_or("predictor", "oracle"), workload)
+        .map_err(|e| anyhow!("{e}"))?;
+    if args.has("pred-sigma") {
+        let sigma = args.f64_or("pred-sigma", PredictorSpec::DEFAULT_SIGMA);
+        spec = match spec {
+            PredictorSpec::Oracle | PredictorSpec::Noisy { .. } => {
+                PredictorSpec::Noisy { sigma }
+            }
+            other => other, // sigma is meaningless for bucket/percentile
+        };
+    }
+    if args.has("pred-buckets") || args.has("pred-accuracy") {
+        // Override only what the flags name, keeping whatever the
+        // `--predictor bucket:N` spelling already set.
+        let (base_buckets, base_accuracy) = match &spec {
+            PredictorSpec::Bucket {
+                buckets, accuracy, ..
+            } => (*buckets, *accuracy),
+            _ => (
+                PredictorSpec::DEFAULT_BUCKETS,
+                PredictorSpec::DEFAULT_ACCURACY,
+            ),
+        };
+        let buckets = args.u32_or("pred-buckets", base_buckets).max(1);
+        let accuracy = args.f64_or("pred-accuracy", base_accuracy).clamp(0.0, 1.0);
+        spec = match spec {
+            PredictorSpec::Oracle | PredictorSpec::Bucket { .. } => PredictorSpec::Bucket {
+                buckets,
+                accuracy,
+                workload,
+            },
+            other => other,
+        };
+    }
+    Ok(spec)
+}
+
 fn cmd_simulate(args: &Args) -> Result<()> {
     let cfg = experiment_config(args)?;
     // Case-insensitive; unknown names error with the valid-name list.
     let which = parse_policy_name(args.str_or("scheduler", "SCLS")).map_err(|e| anyhow!("{e}"))?;
+    let pspec = predictor_spec(args, cfg.workload)?;
     let trace = Trace::generate(&TraceConfig {
         kind: cfg.workload,
         rate: cfg.rate,
@@ -257,12 +308,15 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         max_gen_len: cfg.max_gen_len,
         seed: cfg.seed,
     });
-    let sim = Simulation::new(SimConfig::new(
-        cfg.workers,
-        EnginePreset::paper(cfg.engine),
-        cfg.max_gen_len,
-        cfg.seed,
-    ));
+    let sim = Simulation::new(
+        SimConfig::new(
+            cfg.workers,
+            EnginePreset::paper(cfg.engine),
+            cfg.max_gen_len,
+            cfg.seed,
+        )
+        .with_predictor(pspec.clone()),
+    );
     log::info!(
         "simulate: {} requests, {} workers, engine {}, scheduler {}",
         trace.len(),
@@ -286,6 +340,12 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     println!("CT std            {:.2} s", s.ct_std);
     println!("early-return      {:.4}", s.early_return_ratio);
     println!("slices [1,2,3,4+] {:?}", s.slice_histogram);
+    if matches!(which, "P-SCLS" | "P-CB") {
+        println!("predictor         {}", pspec.describe());
+        println!("underpredicted    {}", metrics.underpredicted);
+        println!("overpredicted     {}", metrics.overpredicted);
+        println!("wasted KV tokens  {}", metrics.wasted_kv_token_steps);
+    }
     if let Some(out) = args.str_opt("out") {
         std::fs::write(out, s.to_json().to_string_pretty())?;
         log::info!("wrote {out}");

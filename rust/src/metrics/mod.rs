@@ -23,6 +23,22 @@ pub struct CompletedRequest {
     pub invalid_tokens: u64,
 }
 
+/// One prediction-accounting event from a prediction-aware policy
+/// (P-SCLS / P-CB): either a mispredict-recovery action (under-prediction:
+/// a re-queue to the next rung or an eviction/re-admission) or a
+/// completion whose reservation over-shot the actual generation.
+#[derive(Debug, Clone)]
+pub struct PredictionRecord {
+    /// Request the event belongs to.
+    pub id: u64,
+    /// True for an under-prediction recovery event; false for an
+    /// over-predicted completion.
+    pub underpredicted: bool,
+    /// Reserved generation capacity (KV token-slots) that went unused —
+    /// non-zero only on over-predicted completions.
+    pub wasted_tokens: u64,
+}
+
 /// Per-batch-serving record.
 #[derive(Debug, Clone)]
 pub struct BatchRecord {
@@ -54,6 +70,16 @@ pub struct RunMetrics {
     /// Largest pool size observed at a schedule tick (coordinator paths
     /// only) — the scale benchmark's memory high-water mark.
     pub peak_pool: usize,
+    /// Prediction-aware policies only: mispredict-recovery events
+    /// (re-queues to the next rung under P-SCLS, evictions/re-admissions
+    /// under P-CB). Always 0 for prediction-free policies.
+    pub underpredicted: u64,
+    /// Prediction-aware policies only: completions whose reservation
+    /// over-shot the actual generation length.
+    pub overpredicted: u64,
+    /// Prediction-aware policies only: total reserved generation capacity
+    /// (KV token-slots) that went unused across all servings/residencies.
+    pub wasted_kv_token_steps: u64,
 }
 
 /// Headline summary of a run.
@@ -115,6 +141,9 @@ impl RunMetrics {
         o.set("total_requests", self.total_requests)
             .set("events", self.events)
             .set("peak_pool", self.peak_pool)
+            .set("underpredicted", self.underpredicted)
+            .set("overpredicted", self.overpredicted)
+            .set("wasted_kv_token_steps", self.wasted_kv_token_steps)
             .set("makespan", self.makespan)
             .set("worker_completion", self.worker_completion.clone());
         let completed: Vec<Json> = self

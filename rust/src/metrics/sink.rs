@@ -12,7 +12,7 @@
 //! Sinks must be cheap and must not assume event ordering beyond
 //! monotonically non-decreasing `now` within one run.
 
-use super::{BatchRecord, CompletedRequest, RunMetrics};
+use super::{BatchRecord, CompletedRequest, PredictionRecord, RunMetrics};
 
 /// Observer of one experiment run's event stream. All hooks default to
 /// no-ops so implementations override only what they consume.
@@ -25,6 +25,9 @@ pub trait MetricsSink {
     fn on_completion(&mut self, _now: f64, _req: &CompletedRequest) {}
     /// A schedule tick drained `depth` pooled requests.
     fn on_pool_depth(&mut self, _now: f64, _depth: usize) {}
+    /// A prediction-aware policy logged a mispredict-recovery or
+    /// over-prediction event (never fires under prediction-free policies).
+    fn on_prediction(&mut self, _now: f64, _rec: &PredictionRecord) {}
     /// The run drained; `metrics` is the final event log.
     fn on_run_end(&mut self, _metrics: &RunMetrics) {}
 }
@@ -47,6 +50,11 @@ pub struct Tally {
     pub peak_pool: usize,
     /// Virtual/wall time of the last completion seen.
     pub last_completion: f64,
+    /// Prediction-aware policies only (see [`RunMetrics`]): recovery
+    /// events, over-predicted completions, and unused reserved capacity.
+    pub underpredicted: u64,
+    pub overpredicted: u64,
+    pub wasted_kv_token_steps: u64,
 }
 
 impl MetricsSink for Tally {
@@ -64,6 +72,15 @@ impl MetricsSink for Tally {
 
     fn on_pool_depth(&mut self, _now: f64, depth: usize) {
         self.peak_pool = self.peak_pool.max(depth);
+    }
+
+    fn on_prediction(&mut self, _now: f64, rec: &PredictionRecord) {
+        if rec.underpredicted {
+            self.underpredicted += 1;
+        } else {
+            self.overpredicted += 1;
+        }
+        self.wasted_kv_token_steps += rec.wasted_tokens;
     }
 }
 
@@ -86,6 +103,12 @@ impl MetricsSink for Fanout<'_> {
     fn on_pool_depth(&mut self, now: f64, depth: usize) {
         for s in self.0.iter_mut() {
             s.on_pool_depth(now, depth);
+        }
+    }
+
+    fn on_prediction(&mut self, now: f64, rec: &PredictionRecord) {
+        for s in self.0.iter_mut() {
+            s.on_prediction(now, rec);
         }
     }
 
@@ -137,6 +160,30 @@ mod tests {
         assert_eq!(t.invalid_tokens, 3);
         assert_eq!(t.peak_pool, 7);
         assert_eq!(t.last_completion, 2.0);
+    }
+
+    #[test]
+    fn tally_prediction_counters() {
+        let mut t = Tally::default();
+        t.on_prediction(
+            1.0,
+            &PredictionRecord {
+                id: 1,
+                underpredicted: true,
+                wasted_tokens: 0,
+            },
+        );
+        t.on_prediction(
+            2.0,
+            &PredictionRecord {
+                id: 2,
+                underpredicted: false,
+                wasted_tokens: 40,
+            },
+        );
+        assert_eq!(t.underpredicted, 1);
+        assert_eq!(t.overpredicted, 1);
+        assert_eq!(t.wasted_kv_token_steps, 40);
     }
 
     #[test]

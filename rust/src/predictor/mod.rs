@@ -1,0 +1,391 @@
+//! Generation-length prediction (the proxy-model direction of Qiu et al.,
+//! arXiv 2404.08509, grafted onto the SCLS reproduction).
+//!
+//! The paper's central premise is that generation length is unknowable a
+//! priori, so SCLS buys predictability by capping every schedule at S
+//! tokens. Related work takes the complementary path: *predict* the length
+//! with a cheap proxy model and pack batches/memory against the prediction
+//! instead of the worst case. This module is that subsystem:
+//!
+//! * [`LengthPredictor`] — the open trait: one pure function from a
+//!   request to a predicted total generation length. Implementations may
+//!   read anything on the request **except treat `target_gen_len` as
+//!   exact**: the built-ins that consult it ([`Oracle`], [`NoisyOracle`],
+//!   [`BucketClassifier`]) model proxy predictors of configurable fidelity
+//!   whose ground truth happens to be the trace oracle, which is exactly
+//!   how prediction-accuracy sweeps are run against a synthetic workload.
+//! * [`Oracle`] — perfect foresight (σ = 0 upper bound).
+//! * [`NoisyOracle`] — multiplicative log-normal error of configurable σ:
+//!   `pred = truth · exp(σ·z)`, `z ~ N(0,1)` per request. σ sweeps are the
+//!   figure suite's prediction-error axis.
+//! * [`BucketClassifier`] — what a real proxy classifier gives you:
+//!   quantile buckets fit from the workload's length distribution, a
+//!   configurable per-request accuracy, and off-by-one confusion when the
+//!   classifier misses.
+//! * [`PercentileConst`] — the no-model baseline: predict one fixed
+//!   workload percentile for every request.
+//!
+//! Predictions are **deterministic per request**: stochastic predictors
+//! derive their randomness from `(predictor seed, request id)`, never from
+//! shared mutable state, so a prediction can be recomputed anywhere in the
+//! pipeline and every run is reproducible from its seed.
+//!
+//! The prediction-aware scheduling policies built on this trait — P-SCLS
+//! (slice-ladder seeding) and P-CB (predicted-KV admission) — live in
+//! [`crate::sim::policies`]; [`registry::PredictorSpec`] constructs
+//! predictors by name for the CLI and the figure suite, mirroring
+//! [`crate::scheduler::policy::parse_policy_name`].
+
+pub mod registry;
+
+pub use registry::{
+    canonical_predictor_name, parse_predictor_name, PredictorSpec, BUILTIN_PREDICTORS,
+};
+
+use crate::core::Request;
+use crate::util::rng::Rng;
+use crate::workload::distributions::LengthDistribution;
+
+/// A generation-length predictor: request in, predicted total generation
+/// length (tokens, ≥ 1) out.
+///
+/// `predict` must be pure — same request, same answer — so policies may
+/// re-invoke it freely and runs stay reproducible from the seed. The
+/// predicted value is a *total* length (like `target_gen_len`), not a
+/// remaining length; policies subtract `generated` themselves.
+pub trait LengthPredictor {
+    fn predict(&self, req: &Request) -> u32;
+
+    /// Display name (diagnostics and figure labels).
+    fn name(&self) -> &'static str;
+}
+
+/// Mixes a request id into a predictor seed: each request gets an
+/// independent, reproducible draw stream.
+fn per_request_rng(seed: u64, id: u64) -> Rng {
+    Rng::new(seed ^ id.wrapping_mul(0x9E3779B97F4A7C15))
+}
+
+// ---------------------------------------------------------------------------
+// Oracle
+// ---------------------------------------------------------------------------
+
+/// Perfect predictor: returns the trace's generation-length oracle. The
+/// σ = 0 / accuracy = 1 upper bound every sweep is anchored against.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Oracle;
+
+impl LengthPredictor for Oracle {
+    fn predict(&self, req: &Request) -> u32 {
+        req.target_gen_len.max(1)
+    }
+
+    fn name(&self) -> &'static str {
+        "oracle"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NoisyOracle
+// ---------------------------------------------------------------------------
+
+/// Oracle with multiplicative log-normal error: `pred = truth · exp(σ·z)`
+/// with `z ~ N(0,1)` drawn per request. σ = 0 degenerates to [`Oracle`];
+/// σ = 1 mispredicts by more than e× for ~32% of requests.
+#[derive(Debug, Clone)]
+pub struct NoisyOracle {
+    sigma: f64,
+    seed: u64,
+}
+
+impl NoisyOracle {
+    pub fn new(sigma: f64, seed: u64) -> NoisyOracle {
+        assert!(sigma >= 0.0, "sigma must be non-negative");
+        NoisyOracle { sigma, seed }
+    }
+
+    pub fn sigma(&self) -> f64 {
+        self.sigma
+    }
+}
+
+impl LengthPredictor for NoisyOracle {
+    fn predict(&self, req: &Request) -> u32 {
+        let truth = req.target_gen_len.max(1) as f64;
+        if self.sigma == 0.0 {
+            return truth as u32;
+        }
+        let z = per_request_rng(self.seed, req.id).normal();
+        let pred = (truth * (self.sigma * z).exp()).round();
+        pred.clamp(1.0, u32::MAX as f64) as u32
+    }
+
+    fn name(&self) -> &'static str {
+        "noisy"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// BucketClassifier
+// ---------------------------------------------------------------------------
+
+/// A quantile-bucket length classifier, the shape a real proxy model takes
+/// (Qiu et al. fine-tune a small LM to emit a length *bucket*, not a token
+/// count).
+///
+/// Fit: draw a calibration sample from the workload's generation-length
+/// distribution and cut it into `buckets` equal-mass quantile buckets; a
+/// bucket predicts its upper edge (the conservative choice — an accurate
+/// classification never under-predicts by more than one bucket's width).
+///
+/// Accuracy knob: with probability `accuracy` the classifier emits the
+/// request's true bucket; otherwise it confuses it into an adjacent bucket
+/// (the dominant error mode of ordinal classifiers), direction uniform.
+#[derive(Debug, Clone)]
+pub struct BucketClassifier {
+    /// Upper edge of each bucket, ascending; the last edge is the sample
+    /// maximum.
+    edges: Vec<u32>,
+    accuracy: f64,
+    seed: u64,
+}
+
+impl BucketClassifier {
+    /// Calibration-sample size for quantile fitting.
+    const FIT_SAMPLES: usize = 65_536;
+
+    /// Fit quantile buckets from an explicit sample of generation lengths
+    /// (e.g. a recorded trace's lengths).
+    pub fn fit_from_lengths(
+        mut lengths: Vec<u32>,
+        buckets: u32,
+        accuracy: f64,
+        seed: u64,
+    ) -> BucketClassifier {
+        assert!(buckets >= 1, "need at least one bucket");
+        assert!(
+            (0.0..=1.0).contains(&accuracy),
+            "accuracy must be in [0, 1]"
+        );
+        assert!(!lengths.is_empty(), "empty calibration sample");
+        lengths.sort_unstable();
+        let n = lengths.len();
+        let b = buckets as usize;
+        let edges: Vec<u32> = (1..=b)
+            .map(|i| lengths[(i * n / b).clamp(1, n) - 1].max(1))
+            .collect();
+        BucketClassifier {
+            edges,
+            accuracy,
+            seed,
+        }
+    }
+
+    /// Fit from a workload's analytic length distribution (what the CLI
+    /// and figure suite do: the deployment profiles its own traffic).
+    pub fn fit_distribution(
+        dist: &LengthDistribution,
+        buckets: u32,
+        accuracy: f64,
+        seed: u64,
+    ) -> BucketClassifier {
+        // The calibration stream is decorrelated from every serving stream.
+        let mut rng = Rng::new(seed ^ 0xB0C4_E7F1);
+        let lengths: Vec<u32> = (0..Self::FIT_SAMPLES).map(|_| dist.sample(&mut rng)).collect();
+        BucketClassifier::fit_from_lengths(lengths, buckets, accuracy, seed)
+    }
+
+    pub fn buckets(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Bucket index the true length falls into.
+    fn true_bucket(&self, len: u32) -> usize {
+        self.edges
+            .partition_point(|&e| e < len)
+            .min(self.edges.len() - 1)
+    }
+}
+
+impl LengthPredictor for BucketClassifier {
+    fn predict(&self, req: &Request) -> u32 {
+        let mut b = self.true_bucket(req.target_gen_len.max(1));
+        if self.accuracy < 1.0 {
+            let mut rng = per_request_rng(self.seed, req.id);
+            if rng.f64() >= self.accuracy {
+                // Ordinal confusion: slip one bucket up or down.
+                let up = rng.next_u64() & 1 == 1;
+                if up {
+                    b = (b + 1).min(self.edges.len() - 1);
+                } else {
+                    b = b.saturating_sub(1);
+                }
+            }
+        }
+        self.edges[b].max(1)
+    }
+
+    fn name(&self) -> &'static str {
+        "bucket"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PercentileConst
+// ---------------------------------------------------------------------------
+
+/// No-model baseline: predict one fixed percentile of the workload's
+/// generation-length distribution for every request. p100 reproduces the
+/// worst-case (`max_gen_len`-like) reservation; p50 halves it and accepts
+/// under-predicting half the traffic.
+#[derive(Debug, Clone)]
+pub struct PercentileConst {
+    value: u32,
+    pct: f64,
+}
+
+impl PercentileConst {
+    /// Calibration-sample size for the percentile fit.
+    const FIT_SAMPLES: usize = 65_536;
+
+    pub fn new(value: u32, pct: f64) -> PercentileConst {
+        PercentileConst {
+            value: value.max(1),
+            pct,
+        }
+    }
+
+    /// Fit the percentile from a workload's length distribution.
+    pub fn fit_distribution(dist: &LengthDistribution, pct: f64, seed: u64) -> PercentileConst {
+        assert!((0.0..=100.0).contains(&pct), "percentile must be in [0, 100]");
+        let mut rng = Rng::new(seed ^ 0x9C7_D15E);
+        let mut lengths: Vec<u32> =
+            (0..Self::FIT_SAMPLES).map(|_| dist.sample(&mut rng)).collect();
+        lengths.sort_unstable();
+        let idx = ((pct / 100.0) * (lengths.len() - 1) as f64).round() as usize;
+        PercentileConst::new(lengths[idx.min(lengths.len() - 1)], pct)
+    }
+
+    pub fn value(&self) -> u32 {
+        self.value
+    }
+
+    pub fn pct(&self) -> f64 {
+        self.pct
+    }
+}
+
+impl LengthPredictor for PercentileConst {
+    fn predict(&self, _req: &Request) -> u32 {
+        self.value
+    }
+
+    fn name(&self) -> &'static str {
+        "percentile"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::distributions::WorkloadKind;
+
+    fn req(id: u64, gen: u32) -> Request {
+        Request::new(id, 0.0, 64, gen)
+    }
+
+    #[test]
+    fn oracle_is_exact() {
+        let o = Oracle;
+        assert_eq!(o.predict(&req(1, 200)), 200);
+        assert_eq!(o.predict(&req(2, 0)), 1, "predictions are at least 1");
+    }
+
+    #[test]
+    fn noisy_sigma_zero_is_oracle() {
+        let p = NoisyOracle::new(0.0, 42);
+        for (id, gen) in [(1u64, 7u32), (2, 200), (3, 1024)] {
+            assert_eq!(p.predict(&req(id, gen)), gen.max(1));
+        }
+    }
+
+    #[test]
+    fn noisy_is_deterministic_per_request_and_varies_across_requests() {
+        let p = NoisyOracle::new(0.5, 42);
+        let a = p.predict(&req(1, 200));
+        assert_eq!(a, p.predict(&req(1, 200)), "same request, same prediction");
+        let distinct: std::collections::HashSet<u32> =
+            (0..64).map(|id| p.predict(&req(id, 200))).collect();
+        assert!(distinct.len() > 16, "error draws must vary per request");
+        assert!(distinct.iter().all(|&x| x >= 1));
+    }
+
+    #[test]
+    fn noisy_error_is_centered_on_truth() {
+        // Median of exp(σ·z) is 1, so the median prediction is the truth.
+        let p = NoisyOracle::new(0.5, 7);
+        let mut preds: Vec<u32> = (0..1001).map(|id| p.predict(&req(id, 300))).collect();
+        preds.sort_unstable();
+        let median = preds[preds.len() / 2] as f64;
+        assert!((median - 300.0).abs() < 60.0, "median {median}");
+    }
+
+    #[test]
+    fn bucket_edges_are_quantiles() {
+        let c = BucketClassifier::fit_from_lengths((1..=1000).collect(), 4, 1.0, 0);
+        assert_eq!(c.buckets(), 4);
+        assert_eq!(c.edges, vec![250, 500, 750, 1000]);
+        // Perfect accuracy: predictions are the true bucket's upper edge.
+        assert_eq!(c.predict(&req(1, 10)), 250);
+        assert_eq!(c.predict(&req(2, 251)), 500);
+        assert_eq!(c.predict(&req(3, 1000)), 1000);
+        // Beyond the sample max: clamped to the top bucket.
+        assert_eq!(c.predict(&req(4, 5000)), 1000);
+    }
+
+    #[test]
+    fn bucket_perfect_accuracy_never_underpredicts_in_range() {
+        let dist = WorkloadKind::CodeFuse.gen_dist(1024);
+        let c = BucketClassifier::fit_distribution(&dist, 8, 1.0, 3);
+        let mut rng = Rng::new(11);
+        for id in 0..2000u64 {
+            let truth = dist.sample(&mut rng);
+            let r = req(id, truth);
+            let pred = c.predict(&r);
+            if truth <= c.edges[c.edges.len() - 1] {
+                assert!(pred >= truth, "upper-edge prediction {pred} < truth {truth}");
+            }
+        }
+    }
+
+    #[test]
+    fn bucket_accuracy_knob_controls_confusion_rate() {
+        let c = BucketClassifier::fit_from_lengths((1..=1000).collect(), 10, 0.7, 5);
+        let exact = BucketClassifier::fit_from_lengths((1..=1000).collect(), 10, 1.0, 5);
+        let n = 4000u64;
+        // Sample truths inside the fitted range away from the clamp edges.
+        let confused = (0..n)
+            .filter(|&id| {
+                let truth = 100 + ((id * 37) % 800) as u32;
+                let r = req(id, truth);
+                c.predict(&r) != exact.predict(&r)
+            })
+            .count();
+        let rate = confused as f64 / n as f64;
+        assert!(
+            (rate - 0.3).abs() < 0.08,
+            "confusion rate {rate} not near 1 - accuracy"
+        );
+    }
+
+    #[test]
+    fn percentile_const_predicts_one_value() {
+        let dist = WorkloadKind::CodeFuse.gen_dist(1024);
+        let p50 = PercentileConst::fit_distribution(&dist, 50.0, 1);
+        let p95 = PercentileConst::fit_distribution(&dist, 95.0, 1);
+        assert_eq!(p50.predict(&req(1, 7)), p50.predict(&req(2, 900)));
+        assert!(p95.value() > p50.value());
+        // CodeFuse: "vast majority < 512" — the median is far below it.
+        assert!(p50.value() < 512, "p50 {}", p50.value());
+    }
+}

@@ -1,0 +1,222 @@
+//! Predictor registry: construct a [`LengthPredictor`] by name, mirroring
+//! the policy registry ([`crate::scheduler::policy::parse_policy_name`]).
+//!
+//! Names are case-insensitive and accept `_`/`-` variants; an optional
+//! `:param` suffix carries the predictor's main knob, so the CLI spellings
+//! `--predictor noisy:0.25`, `--predictor bucket:8`, and
+//! `--predictor percentile:90` all parse. [`PredictorSpec`] is the
+//! declarative form that travels inside [`crate::sim::driver::SimConfig`];
+//! `build` instantiates the predictor against the workload and seed.
+
+use crate::workload::distributions::WorkloadKind;
+
+use super::{BucketClassifier, LengthPredictor, NoisyOracle, Oracle, PercentileConst};
+
+/// Canonical names of the built-in predictors.
+pub const BUILTIN_PREDICTORS: [&str; 4] = ["oracle", "noisy", "bucket", "percentile"];
+
+/// Case-insensitive canonicalization of a predictor name (no `:param`
+/// suffix; see [`PredictorSpec::parse`] for the full spec syntax).
+pub fn canonical_predictor_name(s: &str) -> Option<&'static str> {
+    let low = s.trim().replace('_', "-").to_ascii_lowercase();
+    match low.as_str() {
+        "oracle" | "exact" => Some("oracle"),
+        "noisy" | "noisy-oracle" => Some("noisy"),
+        "bucket" | "buckets" | "classifier" => Some("bucket"),
+        "percentile" | "const" => Some("percentile"),
+        _ => None,
+    }
+}
+
+/// Parse a predictor name from user input. On failure the error lists
+/// every valid name.
+pub fn parse_predictor_name(s: &str) -> Result<&'static str, String> {
+    canonical_predictor_name(s).ok_or_else(|| {
+        format!(
+            "unknown predictor '{s}' (valid, case-insensitive: {})",
+            BUILTIN_PREDICTORS.join(", ")
+        )
+    })
+}
+
+/// Declarative predictor configuration — what `SimConfig` carries and the
+/// CLI/figure suite construct. `build` turns it into a live predictor.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PredictorSpec {
+    /// Perfect foresight.
+    Oracle,
+    /// Multiplicative log-normal error of the given σ.
+    Noisy { sigma: f64 },
+    /// Quantile-bucket classifier fit from the workload's generation-length
+    /// distribution.
+    Bucket {
+        buckets: u32,
+        accuracy: f64,
+        workload: WorkloadKind,
+    },
+    /// Fixed workload percentile for every request.
+    Percentile { pct: f64, workload: WorkloadKind },
+}
+
+impl PredictorSpec {
+    pub const DEFAULT_SIGMA: f64 = 0.25;
+    pub const DEFAULT_BUCKETS: u32 = 8;
+    pub const DEFAULT_ACCURACY: f64 = 0.85;
+    pub const DEFAULT_PCT: f64 = 90.0;
+
+    /// Parse `name` or `name:param` (e.g. `noisy:0.25`, `bucket:8`,
+    /// `percentile:90`). `workload` supplies the length distribution the
+    /// fitted predictors calibrate against.
+    pub fn parse(s: &str, workload: WorkloadKind) -> Result<PredictorSpec, String> {
+        let (name, param) = match s.split_once(':') {
+            Some((n, p)) => (n, Some(p.trim())),
+            None => (s, None),
+        };
+        let parse_param = |what: &str| -> Result<Option<f64>, String> {
+            param
+                .map(|p| {
+                    p.parse::<f64>()
+                        .map_err(|_| format!("predictor '{name}': bad {what} '{p}'"))
+                })
+                .transpose()
+        };
+        Ok(match parse_predictor_name(name)? {
+            "oracle" => {
+                if let Some(p) = param {
+                    return Err(format!("predictor 'oracle' takes no parameter (got '{p}')"));
+                }
+                PredictorSpec::Oracle
+            }
+            "noisy" => PredictorSpec::Noisy {
+                sigma: parse_param("sigma")?.unwrap_or(Self::DEFAULT_SIGMA),
+            },
+            "bucket" => PredictorSpec::Bucket {
+                buckets: parse_param("bucket count")?
+                    .map(|b| b.max(1.0) as u32)
+                    .unwrap_or(Self::DEFAULT_BUCKETS),
+                accuracy: Self::DEFAULT_ACCURACY,
+                workload,
+            },
+            "percentile" => PredictorSpec::Percentile {
+                pct: parse_param("percentile")?.unwrap_or(Self::DEFAULT_PCT),
+                workload,
+            },
+            other => unreachable!("canonical predictor {other} not constructed"),
+        })
+    }
+
+    /// Canonical name of the predictor this spec constructs.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PredictorSpec::Oracle => "oracle",
+            PredictorSpec::Noisy { .. } => "noisy",
+            PredictorSpec::Bucket { .. } => "bucket",
+            PredictorSpec::Percentile { .. } => "percentile",
+        }
+    }
+
+    /// Human-readable `name:param` form (CLI echo, figure labels).
+    pub fn describe(&self) -> String {
+        match self {
+            PredictorSpec::Oracle => "oracle".into(),
+            PredictorSpec::Noisy { sigma } => format!("noisy:{sigma}"),
+            PredictorSpec::Bucket {
+                buckets, accuracy, ..
+            } => format!("bucket:{buckets} (accuracy {accuracy})"),
+            PredictorSpec::Percentile { pct, .. } => format!("percentile:{pct}"),
+        }
+    }
+
+    /// Instantiate the predictor. `max_gen_len` bounds the calibration
+    /// distributions; `seed` drives both the calibration sample and the
+    /// per-request error draws.
+    pub fn build(&self, max_gen_len: u32, seed: u64) -> Box<dyn LengthPredictor> {
+        match self {
+            PredictorSpec::Oracle => Box::new(Oracle),
+            PredictorSpec::Noisy { sigma } => Box::new(NoisyOracle::new(*sigma, seed)),
+            PredictorSpec::Bucket {
+                buckets,
+                accuracy,
+                workload,
+            } => Box::new(BucketClassifier::fit_distribution(
+                &workload.gen_dist(max_gen_len),
+                *buckets,
+                *accuracy,
+                seed,
+            )),
+            PredictorSpec::Percentile { pct, workload } => Box::new(
+                PercentileConst::fit_distribution(&workload.gen_dist(max_gen_len), *pct, seed),
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_is_case_insensitive() {
+        assert_eq!(parse_predictor_name("Oracle"), Ok("oracle"));
+        assert_eq!(parse_predictor_name("NOISY"), Ok("noisy"));
+        assert_eq!(parse_predictor_name("noisy_oracle"), Ok("noisy"));
+        assert_eq!(parse_predictor_name(" bucket "), Ok("bucket"));
+        assert_eq!(parse_predictor_name("const"), Ok("percentile"));
+    }
+
+    #[test]
+    fn parse_error_lists_valid_names() {
+        let err = parse_predictor_name("lstm").unwrap_err();
+        assert!(err.contains("unknown predictor 'lstm'"), "{err}");
+        for name in BUILTIN_PREDICTORS {
+            assert!(err.contains(name), "error must list {name}: {err}");
+        }
+    }
+
+    #[test]
+    fn spec_parses_params() {
+        let w = WorkloadKind::CodeFuse;
+        assert_eq!(PredictorSpec::parse("oracle", w), Ok(PredictorSpec::Oracle));
+        assert_eq!(
+            PredictorSpec::parse("noisy:0.5", w),
+            Ok(PredictorSpec::Noisy { sigma: 0.5 })
+        );
+        assert_eq!(
+            PredictorSpec::parse("Bucket:4", w),
+            Ok(PredictorSpec::Bucket {
+                buckets: 4,
+                accuracy: PredictorSpec::DEFAULT_ACCURACY,
+                workload: w
+            })
+        );
+        assert_eq!(
+            PredictorSpec::parse("percentile:99", w),
+            Ok(PredictorSpec::Percentile {
+                pct: 99.0,
+                workload: w
+            })
+        );
+        // Defaults when the param is omitted.
+        assert_eq!(
+            PredictorSpec::parse("noisy", w),
+            Ok(PredictorSpec::Noisy {
+                sigma: PredictorSpec::DEFAULT_SIGMA
+            })
+        );
+        assert!(PredictorSpec::parse("noisy:abc", w).is_err());
+        assert!(PredictorSpec::parse("oracle:1", w).is_err());
+        assert!(PredictorSpec::parse("vllm", w).is_err());
+    }
+
+    #[test]
+    fn every_builtin_builds() {
+        let w = WorkloadKind::ShareGpt;
+        for name in BUILTIN_PREDICTORS {
+            let spec = PredictorSpec::parse(name, w).unwrap();
+            let p = spec.build(1024, 42);
+            assert_eq!(p.name(), spec.name());
+            let r = crate::core::Request::new(1, 0.0, 64, 200);
+            assert!(p.predict(&r) >= 1);
+        }
+    }
+}

@@ -9,7 +9,7 @@
 //! state, and metrics. Keeping the decision logic here means a policy
 //! tweak lands in simulation and real serving at once.
 
-use crate::batcher::{dp_batch_into, DpBatcherConfig, DpScratch};
+use crate::batcher::{dp_batch_sorted_into, DpBatcherConfig, DpScratch};
 use crate::core::{Batch, Request};
 use crate::estimator::serving_time::ServeEstimate;
 use crate::estimator::MemoryEstimator;
@@ -100,16 +100,19 @@ impl SlicedCoordinator {
         self.pool.is_empty()
     }
 
-    /// Run one schedule tick: drain the pool, form batches with the DP
-    /// batcher (Alg. 1), and assign them to workers (charging the load
-    /// ledger). Returns the number of requests drained; the assignments
-    /// wait in the buffer handed out by [`Self::take_assignments`].
+    /// Run one schedule tick: drain the pool (already incrementally
+    /// sorted — only arrivals since the last merge get sorted, the
+    /// unchanged prefix is merged), form batches with the DP batcher
+    /// (Alg. 1) on the presorted buffer, and assign them to workers
+    /// (charging the load ledger). Returns the number of requests drained;
+    /// the assignments wait in the buffer handed out by
+    /// [`Self::take_assignments`].
     pub fn schedule_tick<E: ServeEstimate + ?Sized>(
         &mut self,
         est: &E,
         mem: &MemoryEstimator,
     ) -> usize {
-        self.pool.fetch_all_into(&mut self.tick_reqs);
+        self.pool.drain_sorted_into(&mut self.tick_reqs);
         let drained = self.tick_reqs.len();
         if drained == 0 {
             self.assign_buf.clear();
@@ -119,7 +122,7 @@ impl SlicedCoordinator {
             .dp_cfg
             .as_ref()
             .expect("ticks only exist under coordinator batching");
-        dp_batch_into(
+        dp_batch_sorted_into(
             &mut self.tick_reqs,
             est,
             mem,

@@ -9,14 +9,15 @@
 //! queue, and the metrics log; the policy owns every decision and all
 //! worker-model state.
 //!
-//! The eight built-in policies (SLS, SO, PM, AB, LB, SCLS, ILS, SCLS-CB)
+//! The ten built-in policies (SLS, SO, PM, AB, LB, SCLS, ILS, SCLS-CB,
+//! plus the prediction-aware P-SCLS and P-CB)
 //! live in [`crate::sim::policies`]; [`build_policy`] constructs them by
 //! name for the CLI and the figure suite. Implementing a new scheduler
 //! takes ~20 lines — see `examples/custom_policy.rs`.
 
 use crate::core::Request;
 use crate::engine::presets::EnginePreset;
-use crate::metrics::{BatchRecord, MetricsSink, RunMetrics};
+use crate::metrics::{BatchRecord, MetricsSink, PredictionRecord, RunMetrics};
 use crate::sim::events::EventQueue;
 
 /// DES event alphabet shared by every policy: the loop pops these in time
@@ -105,6 +106,19 @@ impl<'a> SimCtx<'a> {
         self.metrics.peak_pool = self.metrics.peak_pool.max(depth);
         self.sink.on_pool_depth(self.now, depth);
     }
+
+    /// Log a prediction-accounting event (prediction-aware policies only):
+    /// updates the `underpredicted`/`overpredicted`/`wasted_kv_token_steps`
+    /// counters and streams to sinks.
+    pub fn record_prediction(&mut self, rec: PredictionRecord) {
+        if rec.underpredicted {
+            self.metrics.underpredicted += 1;
+        } else {
+            self.metrics.overpredicted += 1;
+        }
+        self.metrics.wasted_kv_token_steps += rec.wasted_tokens;
+        self.sink.on_prediction(self.now, &rec);
+    }
 }
 
 /// A scheduling policy: the full decision surface of one cluster
@@ -140,8 +154,11 @@ pub trait SchedulingPolicy {
 // Built-in policy registry (CLI / figure-suite construction by name)
 // ---------------------------------------------------------------------------
 
-/// Canonical names of the eight built-in policies, in paper order.
-pub const BUILTIN_POLICIES: [&str; 8] = ["SLS", "SO", "PM", "AB", "LB", "SCLS", "ILS", "SCLS-CB"];
+/// Canonical names of the ten built-in policies: the paper's eight in
+/// paper order, then the prediction-aware pair (P-SCLS, P-CB).
+pub const BUILTIN_POLICIES: [&str; 10] = [
+    "SLS", "SO", "PM", "AB", "LB", "SCLS", "ILS", "SCLS-CB", "P-SCLS", "P-CB",
+];
 
 /// Case-insensitive canonicalization of a scheduler name (accepts the
 /// long-form aliases and `_`/`-` variants, e.g. `scls_cb` or `SCLSCB`).
@@ -156,6 +173,8 @@ pub fn canonical_policy_name(s: &str) -> Option<&'static str> {
         "SCLS" => Some("SCLS"),
         "ILS" => Some("ILS"),
         "SCLS-CB" | "SCLSCB" => Some("SCLS-CB"),
+        "P-SCLS" | "PSCLS" | "PRED-SCLS" => Some("P-SCLS"),
+        "P-CB" | "PCB" | "PRED-CB" => Some("P-CB"),
         _ => None,
     }
 }
@@ -173,19 +192,32 @@ pub fn parse_policy_name(s: &str) -> Result<&'static str, String> {
 
 /// Construct a built-in policy by (canonical or aliased) name against a
 /// cluster configuration. `slice_len` parameterizes every sliced policy;
-/// SLS derives its iteration limit from `cfg.max_gen_len` as in §5.1.
+/// SLS derives its iteration limit from `cfg.max_gen_len` as in §5.1. The
+/// prediction-aware policies (P-SCLS, P-CB) build their length predictor
+/// from `cfg.predictor`.
 pub fn build_policy(
     name: &str,
     cfg: &crate::sim::driver::SimConfig,
     slice_len: u32,
 ) -> Result<Box<dyn SchedulingPolicy>, String> {
     use crate::scheduler::spec::SchedulerSpec;
-    use crate::sim::policies::{IlsPolicy, SclsCbPolicy, SlicedPolicy};
+    use crate::sim::policies::{
+        IlsPolicy, PredictiveCbPolicy, PredictiveSlicedPolicy, SclsCbPolicy, SlicedPolicy,
+    };
 
     let preset: &EnginePreset = &cfg.engine;
     Ok(match parse_policy_name(name)? {
         "ILS" => Box::new(IlsPolicy::new(cfg)),
         "SCLS-CB" => Box::new(SclsCbPolicy::new(cfg, slice_len)),
+        "P-SCLS" => Box::new(PredictiveSlicedPolicy::new(
+            &SchedulerSpec::p_scls(preset, slice_len),
+            cfg,
+            cfg.predictor.build(cfg.max_gen_len, cfg.seed),
+        )),
+        "P-CB" => Box::new(PredictiveCbPolicy::new(
+            cfg,
+            cfg.predictor.build(cfg.max_gen_len, cfg.seed),
+        )),
         "SLS" => Box::new(SlicedPolicy::new(
             &SchedulerSpec::sls(preset, cfg.max_gen_len),
             cfg,
@@ -227,6 +259,11 @@ mod tests {
         assert_eq!(parse_policy_name("ils"), Ok("ILS"));
         assert_eq!(parse_policy_name(" lb "), Ok("LB"));
         assert_eq!(parse_policy_name("slice-only"), Ok("SO"));
+        assert_eq!(parse_policy_name("p-scls"), Ok("P-SCLS"));
+        assert_eq!(parse_policy_name("p_scls"), Ok("P-SCLS"));
+        assert_eq!(parse_policy_name("Pred-SCLS"), Ok("P-SCLS"));
+        assert_eq!(parse_policy_name("P-CB"), Ok("P-CB"));
+        assert_eq!(parse_policy_name("pcb"), Ok("P-CB"));
     }
 
     #[test]

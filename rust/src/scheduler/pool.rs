@@ -1,66 +1,174 @@
 //! The request pool (paper Fig. 7): newly arrived requests and uncompleted
 //! rescheduled requests wait here between schedule ticks.
+//!
+//! ## Incremental ordering
+//!
+//! The DP batcher (Alg. 1) consumes the pool *sorted ascending by input
+//! length* on every tick. Re-sorting the whole pool per tick is wasted
+//! work under backlog, where a late tick drains hundreds of thousands of
+//! requests most of which were already ordered at the previous merge. The
+//! pool therefore keeps its contents incrementally sorted: pushes land in
+//! an insertion buffer, and whenever the buffer grows to the size of the
+//! sorted store it is stable-sorted and merged in (a doubling schedule, so
+//! total merge work stays O(n log n) while each individual push is O(1)
+//! amortized). [`RequestPool::drain_sorted_into`] finalizes the pending
+//! merge and hands the batcher a fully sorted buffer; only the new
+//! arrivals since the last merge were sorted — the unchanged prefix is
+//! merged, not re-sorted.
+//!
+//! **Order contract** (what keeps the frozen differential suite
+//! byte-identical): every element of the sorted store was pushed before
+//! every element of the insertion buffer, and both keep equal input
+//! lengths in push order, so a stable merge that prefers the sorted side
+//! on ties yields *exactly* the stable sort of the raw push sequence —
+//! bit-for-bit the order `dp_batch_into`'s internal sort would produce.
 
 use crate::core::Request;
 
+/// Pending-buffer size below which merging is deferred (keeps tiny pools
+/// and unit tests in pure push order, and bounds per-push overhead).
+const MERGE_MIN: usize = 64;
+
 #[derive(Debug, Default)]
 pub struct RequestPool {
-    requests: Vec<Request>,
+    /// Merged store: ascending `input_len`, push order among equals. Every
+    /// element here was pushed before everything in `pending`.
+    sorted: Vec<Request>,
+    /// Pushes since the last merge, in push order.
+    pending: Vec<Request>,
+    /// Merge scratch, retained for capacity reuse across ticks.
+    scratch: Vec<Request>,
 }
 
 impl RequestPool {
     pub fn new() -> RequestPool {
-        RequestPool {
-            requests: Vec::new(),
-        }
+        RequestPool::default()
     }
 
     /// Pre-size the pool for a known workload (per-tick drains then never
     /// reallocate in steady state).
     pub fn with_capacity(n: usize) -> RequestPool {
         RequestPool {
-            requests: Vec::with_capacity(n),
+            sorted: Vec::new(),
+            pending: Vec::with_capacity(n),
+            scratch: Vec::new(),
         }
     }
 
     /// Grow the backing store for an expected workload (same steady-state
     /// no-realloc property as [`RequestPool::with_capacity`]).
     pub fn reserve(&mut self, n: usize) {
-        self.requests.reserve(n);
+        self.pending.reserve(n);
     }
 
     pub fn push(&mut self, r: Request) {
-        self.requests.push(r);
+        self.pending.push(r);
+        if self.pending.len() >= MERGE_MIN && self.pending.len() >= self.sorted.len() {
+            self.merge_pending();
+        }
     }
 
-    /// Drain everything (SCLS "periodically fetches all requests", §4.1).
+    /// Stable-sort the insertion buffer and merge it into the sorted
+    /// store. Ties take the sorted side first: those elements were pushed
+    /// earlier, so the result equals the stable sort of the push sequence.
+    fn merge_pending(&mut self) {
+        if self.pending.is_empty() {
+            return;
+        }
+        self.pending.sort_by_key(|r| r.input_len);
+        if self.sorted.is_empty() {
+            std::mem::swap(&mut self.sorted, &mut self.pending);
+            return;
+        }
+        let mut out = std::mem::take(&mut self.scratch);
+        out.clear();
+        out.reserve(self.sorted.len() + self.pending.len());
+        {
+            let mut a = self.sorted.drain(..).peekable();
+            let mut b = self.pending.drain(..).peekable();
+            loop {
+                let take_a = match (a.peek(), b.peek()) {
+                    (Some(x), Some(y)) => x.input_len <= y.input_len,
+                    (Some(_), None) => true,
+                    (None, Some(_)) => false,
+                    (None, None) => break,
+                };
+                if take_a {
+                    out.push(a.next().unwrap());
+                } else {
+                    out.push(b.next().unwrap());
+                }
+            }
+        }
+        // `sorted`/`pending` are drained but keep their capacity; recycle
+        // the larger one as the next merge's scratch.
+        std::mem::swap(&mut self.sorted, &mut out);
+        self.scratch = out;
+    }
+
+    /// Drain everything **sorted ascending by input length** (stable: push
+    /// order among equal lengths) — the order Alg. 1 wants, finalized by
+    /// merging only the arrivals since the last background merge. `out` is
+    /// cleared and swapped so the drain allocates nothing in steady state.
+    pub fn drain_sorted_into(&mut self, out: &mut Vec<Request>) {
+        self.merge_pending();
+        out.clear();
+        std::mem::swap(&mut self.sorted, out);
+        // The swapped-in buffer becomes the next merge target; keep the
+        // larger of it and the old scratch as future merge scratch.
+        if self.sorted.capacity() < self.scratch.capacity() {
+            std::mem::swap(&mut self.sorted, &mut self.scratch);
+        }
+    }
+
+    /// Drain everything in pool order: the merged (sorted) prefix followed
+    /// by pushes since the last merge. For consumers that re-sort stably
+    /// by input length — the DP batcher — this is indistinguishable from
+    /// raw push order; pools that never crossed the merge threshold return
+    /// pure push order.
     pub fn fetch_all(&mut self) -> Vec<Request> {
-        std::mem::take(&mut self.requests)
+        if self.sorted.is_empty() {
+            return std::mem::take(&mut self.pending);
+        }
+        let mut all = std::mem::take(&mut self.sorted);
+        all.append(&mut self.pending);
+        all
     }
 
     /// Buffer-swap drain: `out` is cleared and swapped with the pool's
-    /// backing store, so a tick-loop caller cycles two buffers and the
-    /// drain allocates nothing in steady state.
+    /// backing store (same order contract as [`RequestPool::fetch_all`]),
+    /// so a tick-loop caller cycles two buffers and the drain allocates
+    /// nothing in steady state.
     pub fn fetch_all_into(&mut self, out: &mut Vec<Request>) {
         out.clear();
-        std::mem::swap(&mut self.requests, out);
+        if self.sorted.is_empty() {
+            std::mem::swap(&mut self.pending, out);
+        } else {
+            std::mem::swap(&mut self.sorted, out);
+            out.append(&mut self.pending);
+        }
     }
 
-    /// Drain at most `n`, in arrival order of insertion (FCFS baselines).
+    /// Drain at most `n` from the front of the pool order (pure insertion
+    /// order while the pool stays under the merge threshold — the FCFS
+    /// baselines' case).
     pub fn fetch_up_to(&mut self, n: usize) -> Vec<Request> {
-        if n >= self.requests.len() {
+        if n >= self.len() {
             return self.fetch_all();
         }
-        let rest = self.requests.split_off(n);
-        std::mem::replace(&mut self.requests, rest)
+        let from_sorted = n.min(self.sorted.len());
+        let mut out: Vec<Request> = self.sorted.drain(..from_sorted).collect();
+        let rest = n - from_sorted;
+        out.extend(self.pending.drain(..rest));
+        out
     }
 
     pub fn len(&self) -> usize {
-        self.requests.len()
+        self.sorted.len() + self.pending.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.requests.is_empty()
+        self.sorted.is_empty() && self.pending.is_empty()
     }
 }
 
@@ -70,6 +178,10 @@ mod tests {
 
     fn req(id: u64) -> Request {
         Request::new(id, 0.0, 10, 10)
+    }
+
+    fn req_len(id: u64, input_len: u32) -> Request {
+        Request::new(id, 0.0, input_len, 10)
     }
 
     #[test]
@@ -108,5 +220,68 @@ mod tests {
         assert_eq!(p.len(), 3);
         let rest = p.fetch_up_to(10);
         assert_eq!(rest.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 3, 4]);
+    }
+
+    /// The byte-identity contract: for any push sequence, the incremental
+    /// drain equals the stable sort of the raw push order — ties resolve
+    /// to the earlier push.
+    #[test]
+    fn drain_sorted_matches_full_stable_sort() {
+        let mut p = RequestPool::new();
+        let mut model: Vec<Request> = Vec::new();
+        let mut out = Vec::new();
+        // Three tick cycles, each pushing enough to trigger background
+        // merges, with duplicate lengths to exercise tie stability.
+        for round in 0..3u64 {
+            for i in 0..300u64 {
+                let id = round * 1000 + i;
+                let len = ((id * 37) % 50) as u32 + 1; // many duplicates
+                p.push(req_len(id, len));
+                model.push(req_len(id, len));
+            }
+            p.drain_sorted_into(&mut out);
+            model.sort_by_key(|r| r.input_len); // stable
+            assert_eq!(out.len(), model.len());
+            for (a, b) in out.iter().zip(&model) {
+                assert_eq!((a.id, a.input_len), (b.id, b.input_len));
+            }
+            model.clear();
+            assert!(p.is_empty());
+        }
+    }
+
+    #[test]
+    fn interleaved_push_orders_still_sort_stably() {
+        // Push under the merge threshold, drain, push over it, drain:
+        // both drains must be stable sorts of their own push windows.
+        let mut p = RequestPool::new();
+        let mut out = Vec::new();
+        p.push(req_len(1, 5));
+        p.push(req_len(2, 5));
+        p.push(req_len(3, 1));
+        p.drain_sorted_into(&mut out);
+        assert_eq!(out.iter().map(|r| r.id).collect::<Vec<_>>(), vec![3, 1, 2]);
+        for i in 0..200u64 {
+            p.push(req_len(100 + i, 7));
+        }
+        p.push(req_len(999, 3));
+        p.drain_sorted_into(&mut out);
+        assert_eq!(out[0].id, 999);
+        // Equal-length run keeps push order after background merges.
+        let ids: Vec<u64> = out[1..].iter().map(|r| r.id).collect();
+        assert_eq!(ids, (0..200u64).map(|i| 100 + i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn len_spans_sorted_and_pending() {
+        let mut p = RequestPool::new();
+        for i in 0..130u64 {
+            p.push(req_len(i, (i % 9) as u32 + 1));
+        }
+        assert_eq!(p.len(), 130);
+        assert!(!p.is_empty());
+        let all = p.fetch_all();
+        assert_eq!(all.len(), 130);
+        assert!(p.is_empty());
     }
 }

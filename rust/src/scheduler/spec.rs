@@ -171,6 +171,18 @@ impl SchedulerSpec {
         }
     }
 
+    /// Prediction-aware SCLS (P-SCLS): the SCLS axes — uncapped DP
+    /// batching, max-min offload, Eq. (12) interval — interpreted by
+    /// [`crate::sim::policies::PredictiveSlicedPolicy`], which seeds each
+    /// request at the slice-ladder rung matching its predicted length
+    /// bucket instead of entering at the bottom.
+    pub fn p_scls(preset: &EnginePreset, slice_len: u32) -> SchedulerSpec {
+        SchedulerSpec {
+            name: "P-SCLS".into(),
+            ..SchedulerSpec::scls(preset, slice_len)
+        }
+    }
+
     /// The §5.4 ablation ladder in paper order.
     pub fn ablation_ladder(preset: &EnginePreset, slice_len: u32, max_gen: u32) -> Vec<SchedulerSpec> {
         vec![

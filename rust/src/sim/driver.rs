@@ -22,6 +22,7 @@ use crate::engine::presets::EnginePreset;
 use crate::estimator::profiler::{profile_and_fit, ProfileGrid};
 use crate::estimator::ServingTimeEstimator;
 use crate::metrics::{MetricsSink, NullSink, RunMetrics};
+use crate::predictor::PredictorSpec;
 use crate::scheduler::policy::{Ev, SchedulingPolicy, SimCtx};
 use crate::scheduler::spec::SchedulerSpec;
 use crate::workload::Trace;
@@ -37,6 +38,10 @@ pub struct SimConfig {
     /// Maximal generation length limit (paper: 1024).
     pub max_gen_len: u32,
     pub seed: u64,
+    /// Length predictor the prediction-aware policies (P-SCLS / P-CB)
+    /// build from — ignored by every other policy. Defaults to the exact
+    /// oracle.
+    pub predictor: PredictorSpec,
 }
 
 impl SimConfig {
@@ -46,7 +51,14 @@ impl SimConfig {
             engine,
             max_gen_len,
             seed,
+            predictor: PredictorSpec::Oracle,
         }
+    }
+
+    /// Select the length predictor P-SCLS / P-CB use.
+    pub fn with_predictor(mut self, predictor: PredictorSpec) -> SimConfig {
+        self.predictor = predictor;
+        self
     }
 }
 
@@ -116,6 +128,7 @@ pub struct ClusterBuilder {
     engine: EnginePreset,
     max_gen_len: u32,
     seed: u64,
+    predictor: PredictorSpec,
 }
 
 impl Default for ClusterBuilder {
@@ -126,6 +139,7 @@ impl Default for ClusterBuilder {
             engine: EnginePreset::paper(EngineKind::Ds),
             max_gen_len: 1024,
             seed: 42,
+            predictor: PredictorSpec::Oracle,
         }
     }
 }
@@ -155,13 +169,17 @@ impl ClusterBuilder {
         self
     }
 
+    /// Length predictor for the prediction-aware policies (P-SCLS / P-CB).
+    pub fn predictor(mut self, predictor: PredictorSpec) -> Self {
+        self.predictor = predictor;
+        self
+    }
+
     pub fn build(self) -> Simulation {
-        Simulation::new(SimConfig::new(
-            self.workers,
-            self.engine,
-            self.max_gen_len,
-            self.seed,
-        ))
+        Simulation::new(
+            SimConfig::new(self.workers, self.engine, self.max_gen_len, self.seed)
+                .with_predictor(self.predictor),
+        )
     }
 }
 
@@ -250,6 +268,28 @@ pub fn run_ils(trace: &Trace, cfg: &SimConfig) -> RunMetrics {
 /// Run the §7 SCLS-on-continuous-batching extension to drain.
 pub fn run_scls_cb(trace: &Trace, cfg: &SimConfig, slice_len: u32) -> RunMetrics {
     let mut policy = SclsCbPolicy::new(cfg, slice_len);
+    run_policy(trace, &mut policy, cfg.workers, &mut NullSink)
+}
+
+/// Run P-CB (continuous batching with predicted-KV admission) to drain,
+/// building the predictor from `cfg.predictor`.
+pub fn run_p_cb(trace: &Trace, cfg: &SimConfig) -> RunMetrics {
+    let mut policy = super::policies::PredictiveCbPolicy::new(
+        cfg,
+        cfg.predictor.build(cfg.max_gen_len, cfg.seed),
+    );
+    run_policy(trace, &mut policy, cfg.workers, &mut NullSink)
+}
+
+/// Run P-SCLS (prediction-seeded slice ladder) to drain, building the
+/// predictor from `cfg.predictor`.
+pub fn run_p_scls(trace: &Trace, cfg: &SimConfig, slice_len: u32) -> RunMetrics {
+    let spec = SchedulerSpec::p_scls(&cfg.engine, slice_len);
+    let mut policy = super::policies::PredictiveSlicedPolicy::new(
+        &spec,
+        cfg,
+        cfg.predictor.build(cfg.max_gen_len, cfg.seed),
+    );
     run_policy(trace, &mut policy, cfg.workers, &mut NullSink)
 }
 

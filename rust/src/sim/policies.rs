@@ -8,26 +8,89 @@
 //! * [`SclsCbPolicy`] — the §7 extension: slice-level scheduling over
 //!   continuous batching with precise per-slice memory admission and
 //!   memory-balanced placement.
+//! * [`PredictiveSlicedPolicy`] (P-SCLS) — SCLS seeded by a
+//!   [`LengthPredictor`]: each request enters the slice ladder at the rung
+//!   matching its predicted length bucket instead of the bottom, with
+//!   under-predictions re-queued one rung at a time.
+//! * [`PredictiveCbPolicy`] (P-CB) — continuous batching that admits
+//!   against *predicted* KV demand instead of the worst case, with
+//!   eviction/re-admission recovery when predictions fall short.
 //!
-//! Each policy is a faithful port of the corresponding pre-trait driver
-//! loop (`sim::reference`); the differential suite
+//! Each pre-existing policy is a faithful port of the corresponding
+//! pre-trait driver loop (`sim::reference`); the differential suite
 //! (`tests/props_policy_differential.rs`) asserts the ports are
 //! byte-identical on the full `RunMetrics` event log.
 
 use std::collections::VecDeque;
 
-use crate::batcher::fcfs_batches;
+use crate::batcher::{dp_batch_sorted_into, fcfs_batches, DpBatcherConfig, DpScratch};
 use crate::core::{Batch, Request};
 use crate::engine::continuous::ContinuousWorker;
+use crate::engine::continuous_pred::PredictiveContinuousWorker;
 use crate::engine::continuous_scls::SlicedContinuousWorker;
 use crate::engine::sim::SimEngine;
 use crate::estimator::{MemoryEstimator, ServingTimeEstimator};
-use crate::metrics::{BatchRecord, RunMetrics};
-use crate::offloader::RoundRobin;
+use crate::metrics::{BatchRecord, PredictionRecord, RunMetrics};
+use crate::offloader::{LoadLedger, RoundRobin};
+use crate::predictor::LengthPredictor;
 use crate::scheduler::coordinator::SlicedCoordinator;
 use crate::scheduler::policy::{SchedulingPolicy, SimCtx};
-use crate::scheduler::spec::{BatchingSpec, SchedulerSpec};
+use crate::scheduler::spec::{BatchingSpec, IntervalSpec, OffloadSpec, SchedulerSpec};
+use crate::scheduler::{IntervalController, RequestPool};
 use crate::sim::driver::{fitted_estimator, SimConfig};
+
+// ---------------------------------------------------------------------------
+// Shared static-batching serving start
+// ---------------------------------------------------------------------------
+
+/// Serving-start accounting shared by every static-batching policy
+/// (sliced family and P-SCLS): charge each request its pads and a pass,
+/// serve one slice of `iter_limit` iterations, log the batch record,
+/// apply token outcomes (the SCLS reschedule prefill recomputes over
+/// input + generated), park the batch in the worker's serving slot, and
+/// schedule the completion event.
+fn start_static_batch(
+    engine: &mut SimEngine,
+    serving: &mut Option<Batch>,
+    w: usize,
+    mut batch: Batch,
+    iter_limit: u32,
+    ctx: &mut SimCtx,
+) {
+    debug_assert!(serving.is_none(), "worker {w} already serving");
+    let li = batch.input_len();
+    for r in &mut batch.requests {
+        r.slices += 1;
+        r.pad_tokens += (li - r.input_len) as u64;
+    }
+    let outcome = engine.serve_slice(&batch, iter_limit);
+    ctx.record_batch(BatchRecord {
+        start: ctx.now,
+        worker: w,
+        size: batch.size() as u32,
+        input_len: li,
+        pad_tokens: batch.pad_tokens(),
+        est_serve_time: batch.est_serve_time,
+        actual_serve_time: outcome.duration,
+        early_return: outcome.early_return,
+    });
+    // Apply token effects now, deliver at done-time (the serving slot
+    // pairs the batch with its outcome).
+    let done_at = ctx.now + outcome.duration;
+    for (r, o) in batch.requests.iter_mut().zip(&outcome.per_request) {
+        debug_assert_eq!(r.id, o.id);
+        r.generated += o.new_tokens;
+        r.invalid_tokens += o.invalid_tokens as u64;
+        // SCLS reschedule: the next prefill recomputes over input +
+        // everything generated so far.
+        r.input_len += o.new_tokens;
+        if o.finished {
+            r.finished_at = Some(done_at);
+        }
+    }
+    *serving = Some(batch);
+    ctx.complete_at(done_at, w);
+}
 
 // ---------------------------------------------------------------------------
 // Sliced family (SLS / SO / PM / AB / LB / SCLS)
@@ -100,42 +163,10 @@ impl SlicedPolicy {
                 ws.batch_queue.push_back(batches.pop().unwrap());
             }
         }
-        let Some(mut batch) = ws.batch_queue.pop_front() else {
+        let Some(batch) = ws.batch_queue.pop_front() else {
             return;
         };
-        // Serving-start accounting: each request pays its pads and a slice.
-        let li = batch.input_len();
-        for r in &mut batch.requests {
-            r.slices += 1;
-            r.pad_tokens += (li - r.input_len) as u64;
-        }
-        let outcome = ws.engine.serve_slice(&batch, slice_len);
-        ctx.record_batch(BatchRecord {
-            start: ctx.now,
-            worker: w,
-            size: batch.size() as u32,
-            input_len: li,
-            pad_tokens: batch.pad_tokens(),
-            est_serve_time: batch.est_serve_time,
-            actual_serve_time: outcome.duration,
-            early_return: outcome.early_return,
-        });
-        // Apply token effects now, deliver at done-time (the serving slot
-        // pairs the batch with its outcome).
-        let done_at = ctx.now + outcome.duration;
-        for (r, o) in batch.requests.iter_mut().zip(&outcome.per_request) {
-            debug_assert_eq!(r.id, o.id);
-            r.generated += o.new_tokens;
-            r.invalid_tokens += o.invalid_tokens as u64;
-            // SCLS reschedule: the next prefill recomputes over input +
-            // everything generated so far.
-            r.input_len += o.new_tokens;
-            if o.finished {
-                r.finished_at = Some(done_at);
-            }
-        }
-        ws.serving = Some(batch);
-        ctx.complete_at(done_at, w);
+        start_static_batch(&mut ws.engine, &mut ws.serving, w, batch, slice_len, ctx);
     }
 }
 
@@ -393,6 +424,412 @@ impl SchedulingPolicy for SclsCbPolicy {
         // §7: slice-capped requests are rescheduled to the least
         // memory-loaded instance (their KV was just released).
         for r in exits.rescheduled {
+            self.assign(r, ctx);
+        }
+        if let Some(d) = self.workers[wi].begin_iteration() {
+            self.max_kv_seen = self.max_kv_seen.max(self.workers[wi].kv_projected());
+            ctx.complete_at(ctx.now + d, wi);
+        } else {
+            self.looping[wi] = false;
+        }
+    }
+
+    fn finish(&mut self, metrics: &mut RunMetrics) {
+        metrics.worker_completion = self.last_done.clone();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// P-SCLS: prediction-seeded slice-level scheduling (static batching)
+// ---------------------------------------------------------------------------
+
+/// Per-worker state for P-SCLS: coordinator-formed batches carry the
+/// iteration budget of the rung they were cut for.
+struct PredWorkerState {
+    /// (iteration budget, batch) pairs waiting in the local queue.
+    batch_queue: VecDeque<(u32, Batch)>,
+    /// The batch currently being served (None = idle).
+    serving: Option<Batch>,
+    engine: SimEngine,
+    last_done: f64,
+}
+
+/// **P-SCLS** — SCLS with prediction-seeded ladder entry.
+///
+/// Baseline SCLS serves every request S tokens per schedule: a request
+/// that generates `k·S` tokens climbs the ladder in `k` passes, paying a
+/// full re-prefill (input + generated so far) at each rung. P-SCLS asks a
+/// [`LengthPredictor`] once at arrival and seeds the request at the rung
+/// matching its predicted bucket: its *first* schedule gets an iteration
+/// budget of `k·S` (k = ⌈pred/S⌉), so an accurately predicted request
+/// completes in one pass with one prefill. Requests are pooled per rung;
+/// each tick runs the Alg. 1 DP batcher *within* each rung (so co-batched
+/// requests share both input-length affinity and iteration budget) and
+/// offloads all rung batches together via the spec's offload axis.
+///
+/// Mispredict recovery:
+/// * **under-prediction** — a request unfinished after its seeded pass is
+///   re-queued to the next rung: one more pass of S (vanilla SCLS
+///   behaviour from there on), counted in `RunMetrics::underpredicted`;
+/// * **over-prediction** — a completion whose reserved rungs exceed
+///   ⌈generated/S⌉ logs the unused rungs as `wasted_kv_token_steps`
+///   (rung-granular: `(reserved − needed)·S` token-slots).
+///
+/// With the [`crate::predictor::Oracle`] predictor every request completes
+/// in exactly one pass, which is never more passes than baseline SCLS —
+/// the invariant `props_predictor.rs` checks on fixed seeds.
+pub struct PredictiveSlicedPolicy {
+    spec: SchedulerSpec,
+    predictor: Box<dyn LengthPredictor>,
+    est: ServingTimeEstimator,
+    mem: MemoryEstimator,
+    ledger: LoadLedger,
+    rr: RoundRobin,
+    interval: IntervalController,
+    /// One pool per rung: `pools[b-1]` holds requests whose next pass gets
+    /// an iteration budget of `b·S` (requeues always land on rung 1).
+    pools: Vec<RequestPool>,
+    workers: Vec<PredWorkerState>,
+    max_gen_len: u32,
+    max_rung: u32,
+    // Reused per-tick buffers (allocation-lean discipline from PR 1).
+    tick_reqs: Vec<Request>,
+    batch_buf: Vec<Batch>,
+    staged: Vec<(u32, Batch)>,
+    assign_buf: Vec<(usize, u32, Batch)>,
+    dp_scratch: DpScratch,
+}
+
+impl PredictiveSlicedPolicy {
+    pub fn new(
+        spec: &SchedulerSpec,
+        cfg: &SimConfig,
+        predictor: Box<dyn LengthPredictor>,
+    ) -> PredictiveSlicedPolicy {
+        assert!(cfg.workers > 0);
+        let s = spec.slice_len.max(1);
+        let max_rung = ((cfg.max_gen_len + s - 1) / s).max(1);
+        let est = fitted_estimator(&cfg.engine, cfg.seed);
+        let mem = cfg.engine.memory_estimator();
+        let workers: Vec<PredWorkerState> = (0..cfg.workers)
+            .map(|w| PredWorkerState {
+                batch_queue: VecDeque::new(),
+                serving: None,
+                engine: SimEngine::new(
+                    cfg.engine.latency(cfg.seed ^ (w as u64).wrapping_mul(0x7A3D)),
+                    cfg.max_gen_len,
+                ),
+                last_done: 0.0,
+            })
+            .collect();
+        let interval = match spec.interval {
+            IntervalSpec::Fixed(t) => IntervalController::Fixed(t),
+            IntervalSpec::Adaptive { lambda, gamma } => {
+                IntervalController::Adaptive { lambda, gamma }
+            }
+            // P-SCLS is inherently ticked: pooling per rung needs a tick.
+            IntervalSpec::Immediate => IntervalController::Fixed(cfg.engine.gamma),
+        };
+        PredictiveSlicedPolicy {
+            spec: spec.clone(),
+            predictor,
+            est,
+            mem,
+            ledger: LoadLedger::new(cfg.workers),
+            rr: RoundRobin::new(cfg.workers),
+            interval,
+            pools: (0..max_rung).map(|_| RequestPool::new()).collect(),
+            workers,
+            max_gen_len: cfg.max_gen_len,
+            max_rung,
+            tick_reqs: Vec::new(),
+            batch_buf: Vec::new(),
+            staged: Vec::new(),
+            assign_buf: Vec::new(),
+            dp_scratch: DpScratch::new(),
+        }
+    }
+
+    /// Ladder rung for a predicted total generation length.
+    fn rung_of(&self, predicted: u32) -> u32 {
+        let s = self.spec.slice_len.max(1);
+        let eff = predicted.min(self.max_gen_len).max(1);
+        ((eff + s - 1) / s).clamp(1, self.max_rung)
+    }
+
+    /// Iteration budget of rung `b` (the whole ladder up to the rung).
+    fn rung_budget(&self, b: u32) -> u32 {
+        (b * self.spec.slice_len).min(self.max_gen_len).max(1)
+    }
+
+    fn pooled(&self) -> usize {
+        self.pools.iter().map(|p| p.len()).sum()
+    }
+
+    /// Start serving on worker `w` if idle and work is queued.
+    fn try_start(&mut self, w: usize, ctx: &mut SimCtx) {
+        if self.workers[w].serving.is_some() {
+            return;
+        }
+        let Some((budget, batch)) = self.workers[w].batch_queue.pop_front() else {
+            return;
+        };
+        let ws = &mut self.workers[w];
+        start_static_batch(&mut ws.engine, &mut ws.serving, w, batch, budget, ctx);
+    }
+}
+
+impl SchedulingPolicy for PredictiveSlicedPolicy {
+    fn init(&mut self, ctx: &mut SimCtx) {
+        self.pools[0].reserve(ctx.arrivals_left().min(1 << 16));
+        ctx.tick_at(0.0);
+    }
+
+    fn on_arrival(&mut self, mut req: Request, _ctx: &mut SimCtx) {
+        // Pooled until the next tick; the seeded rung is the prediction's.
+        let pred = self.predictor.predict(&req).max(1);
+        req.predicted_gen = Some(pred);
+        let rung = self.rung_of(pred);
+        self.pools[rung as usize - 1].push(req);
+    }
+
+    fn on_tick(&mut self, ctx: &mut SimCtx) {
+        let drained = self.pooled();
+        if drained > 0 {
+            ctx.observe_pool(drained);
+            // DP-batch each rung with the rung's iteration budget, then
+            // offload everything together.
+            for b in 1..=self.max_rung {
+                if self.pools[b as usize - 1].is_empty() {
+                    continue;
+                }
+                let budget = self.rung_budget(b);
+                self.pools[b as usize - 1].drain_sorted_into(&mut self.tick_reqs);
+                let dp_cfg = DpBatcherConfig {
+                    slice_len: budget,
+                    max_batch_size: match self.spec.batching {
+                        BatchingSpec::Dp { max_batch_size } => max_batch_size,
+                        BatchingSpec::WorkerFcfs { batch_size } => Some(batch_size),
+                    },
+                };
+                dp_batch_sorted_into(
+                    &mut self.tick_reqs,
+                    &self.est,
+                    &self.mem,
+                    &dp_cfg,
+                    &mut self.dp_scratch,
+                    &mut self.batch_buf,
+                );
+                self.staged
+                    .extend(self.batch_buf.drain(..).map(|batch| (budget, batch)));
+            }
+            match self.spec.offload {
+                OffloadSpec::MaxMin => {
+                    // LPT over all rung batches: longest estimate first to
+                    // the least-loaded worker (paper §4.5).
+                    self.staged
+                        .sort_by(|a, b| b.1.est_serve_time.total_cmp(&a.1.est_serve_time));
+                    for (budget, batch) in self.staged.drain(..) {
+                        let w = self.ledger.argmin();
+                        self.ledger.add(w, batch.est_serve_time);
+                        self.assign_buf.push((w, budget, batch));
+                    }
+                }
+                OffloadSpec::RoundRobin => {
+                    for (budget, batch) in self.staged.drain(..) {
+                        let w = self.rr.next_worker();
+                        self.ledger.add(w, batch.est_serve_time);
+                        self.assign_buf.push((w, budget, batch));
+                    }
+                }
+            }
+            let mut assign = std::mem::take(&mut self.assign_buf);
+            for (w, budget, batch) in assign.drain(..) {
+                self.workers[w].batch_queue.push_back((budget, batch));
+                self.try_start(w, ctx);
+            }
+            self.assign_buf = assign;
+        }
+        // Re-arm the tick while any work can still appear.
+        let work_pending = ctx.arrivals_left() > 0
+            || self.pooled() > 0
+            || self
+                .workers
+                .iter()
+                .any(|w| w.serving.is_some() || !w.batch_queue.is_empty());
+        if work_pending {
+            let t = self.interval.next_interval(&self.ledger);
+            ctx.tick_at(ctx.now + t.max(1e-3));
+        }
+    }
+
+    fn on_worker_done(&mut self, w: usize, ctx: &mut SimCtx) {
+        let batch = self.workers[w].serving.take().expect("done without serving");
+        self.ledger.complete(w, batch.est_serve_time);
+        self.workers[w].last_done = ctx.now;
+        let s = self.spec.slice_len.max(1);
+        for r in batch.requests {
+            if r.is_finished() {
+                // Over-prediction accounting, rung-granular: rungs reserved
+                // (seeded rung + one per extra pass) vs rungs needed.
+                let k0 = self.rung_of(r.predicted_gen.unwrap_or(1)) as u64;
+                let reserved = k0 + (r.slices.max(1) as u64 - 1);
+                let needed = ((r.generated.max(1) + s - 1) / s) as u64;
+                if reserved > needed {
+                    ctx.record_prediction(PredictionRecord {
+                        id: r.id,
+                        underpredicted: false,
+                        wasted_tokens: (reserved - needed) * s as u64,
+                    });
+                }
+                ctx.record_completion(&r);
+            } else {
+                // Under-prediction: re-queue to the next rung (one more
+                // pass of S from here on).
+                ctx.record_prediction(PredictionRecord {
+                    id: r.id,
+                    underpredicted: true,
+                    wasted_tokens: 0,
+                });
+                self.pools[0].push(r);
+            }
+        }
+        self.try_start(w, ctx);
+    }
+
+    fn finish(&mut self, metrics: &mut RunMetrics) {
+        metrics.worker_completion = self.workers.iter().map(|w| w.last_done).collect();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// P-CB: continuous batching with predicted-KV admission
+// ---------------------------------------------------------------------------
+
+/// **P-CB** — continuous batching that admits against *predicted* KV
+/// demand instead of the worst-case `max_gen_len` reservation.
+///
+/// Each request is stamped with a [`LengthPredictor`] estimate at arrival
+/// and placed on the instance with the most free *reserved* memory; the
+/// instance admits it iff its predicted remaining generation fits
+/// alongside the reservations already running
+/// ([`PredictiveContinuousWorker`]). Recovery: under-predicted requests
+/// are evicted at the boundary where their reservation runs out and
+/// re-admitted with a doubled prediction (so recoveries per request are
+/// logarithmic), paying a fresh prefill like an SCLS-CB slice exit;
+/// over-predicted completions log their unused reservation. The KV-budget
+/// invariant therefore holds under arbitrary prediction error — the
+/// property `props_predictor.rs` hammers across randomized error draws.
+pub struct PredictiveCbPolicy {
+    workers: Vec<PredictiveContinuousWorker>,
+    looping: Vec<bool>,
+    last_done: Vec<f64>,
+    predictor: Box<dyn LengthPredictor>,
+    max_gen_len: u32,
+    kv_budget: u64,
+    max_kv_seen: u64,
+}
+
+impl PredictiveCbPolicy {
+    pub fn new(cfg: &SimConfig, predictor: Box<dyn LengthPredictor>) -> PredictiveCbPolicy {
+        assert!(cfg.workers > 0);
+        let kv_budget = (0.9 * cfg.engine.m_ava as f64) as u64;
+        let workers: Vec<PredictiveContinuousWorker> = (0..cfg.workers)
+            .map(|w| {
+                PredictiveContinuousWorker::new(
+                    cfg.engine
+                        .latency(cfg.seed ^ (w as u64).wrapping_mul(0xD1CE)),
+                    kv_budget,
+                    cfg.engine.kv_delta,
+                    cfg.max_gen_len,
+                )
+            })
+            .collect();
+        let n = workers.len();
+        PredictiveCbPolicy {
+            workers,
+            looping: vec![false; n],
+            last_done: vec![0.0; n],
+            predictor,
+            max_gen_len: cfg.max_gen_len,
+            kv_budget,
+            max_kv_seen: 0,
+        }
+    }
+
+    /// Per-instance KV budget the predicted admission enforces.
+    pub fn kv_budget(&self) -> u64 {
+        self.kv_budget
+    }
+
+    /// Largest *projected* (reservation-sum) KV observed on any instance
+    /// after admission — the no-OOM invariant bounds actual use by it, and
+    /// it never exceeds [`Self::kv_budget`].
+    pub fn max_kv_observed(&self) -> u64 {
+        self.max_kv_seen
+    }
+
+    /// Offload to the instance with the most free reserved memory (ties:
+    /// shortest local queue); kick its iteration loop if idle.
+    fn assign(&mut self, r: Request, ctx: &mut SimCtx) {
+        let w = (0..self.workers.len())
+            .min_by(|&a, &b| {
+                self.workers[a]
+                    .kv_projected()
+                    .cmp(&self.workers[b].kv_projected())
+                    .then_with(|| {
+                        self.workers[a]
+                            .waiting
+                            .len()
+                            .cmp(&self.workers[b].waiting.len())
+                    })
+            })
+            .unwrap();
+        self.workers[w].waiting.push_back(r);
+        if !self.looping[w] {
+            if let Some(d) = self.workers[w].begin_iteration() {
+                self.looping[w] = true;
+                self.max_kv_seen = self.max_kv_seen.max(self.workers[w].kv_projected());
+                ctx.complete_at(ctx.now + d, w);
+            }
+        }
+    }
+}
+
+impl SchedulingPolicy for PredictiveCbPolicy {
+    fn on_arrival(&mut self, mut req: Request, ctx: &mut SimCtx) {
+        req.predicted_gen = Some(self.predictor.predict(&req).max(1));
+        self.assign(req, ctx);
+    }
+
+    fn on_worker_done(&mut self, wi: usize, ctx: &mut SimCtx) {
+        let exits = self.workers[wi].finish_iteration(ctx.now);
+        for (r, unused) in exits.done {
+            self.last_done[wi] = ctx.now;
+            if unused > 0 {
+                ctx.record_prediction(PredictionRecord {
+                    id: r.id,
+                    underpredicted: false,
+                    wasted_tokens: unused as u64,
+                });
+            }
+            ctx.record_completion(&r);
+        }
+        // Mispredict recovery: evicted requests re-enter with a doubled
+        // prediction (capped at the generation limit), so each request is
+        // re-admitted at most O(log max_gen_len) times.
+        for mut r in exits.evicted {
+            ctx.record_prediction(PredictionRecord {
+                id: r.id,
+                underpredicted: true,
+                wasted_tokens: 0,
+            });
+            let old = r.predicted_gen.unwrap_or(self.max_gen_len);
+            let bumped = old
+                .max(r.generated)
+                .saturating_mul(2)
+                .min(self.max_gen_len.max(r.generated + 1));
+            r.predicted_gen = Some(bumped);
             self.assign(r, ctx);
         }
         if let Some(d) = self.workers[wi].begin_iteration() {

@@ -1,0 +1,215 @@
+//! Properties of the generation-length-prediction subsystem and the
+//! prediction-aware policies built on it (P-SCLS, P-CB):
+//!
+//! 1. **No-OOM under any error draw** — P-CB's projected KV never exceeds
+//!    the budget, across randomized predictors, error magnitudes, cluster
+//!    shapes, and deliberately tight budgets that force eviction-based
+//!    recovery (≥ 200 randomized cases).
+//! 2. **Oracle P-SCLS pass bound** — with perfect predictions every
+//!    request completes in at most as many slice passes as baseline SCLS
+//!    takes on the same fixed-seed trace.
+//! 3. **Acceptance throughput shape** — P-CB with the oracle beats
+//!    baseline SCLS-CB on the default CodeFuse configuration (rate 20,
+//!    600 s, 4 workers), and heavy prediction noise does not come for
+//!    free.
+
+use std::collections::HashMap;
+
+use scls::engine::presets::{EngineKind, EnginePreset};
+use scls::metrics::NullSink;
+use scls::predictor::PredictorSpec;
+use scls::scheduler::spec::SchedulerSpec;
+use scls::sim::driver::{run_p_cb, run_p_scls, run_policy, run_scls_cb, run_sliced, SimConfig};
+use scls::sim::policies::PredictiveCbPolicy;
+use scls::testprop::{check, Gen};
+use scls::workload::distributions::WorkloadKind;
+use scls::workload::{Trace, TraceConfig};
+use scls::{prop_assert, prop_assert_eq};
+
+fn trace(kind: WorkloadKind, rate: f64, duration: f64, seed: u64) -> Trace {
+    Trace::generate(&TraceConfig {
+        kind,
+        rate,
+        duration,
+        max_input_len: 1024,
+        max_gen_len: 1024,
+        seed,
+    })
+}
+
+fn cfg(workers: usize, kind: EngineKind, seed: u64) -> SimConfig {
+    SimConfig::new(workers, EnginePreset::paper(kind), 1024, seed)
+}
+
+// ---------------------------------------------------------------------------
+// 1. No-OOM KV-budget invariant under arbitrary prediction error
+// ---------------------------------------------------------------------------
+
+#[test]
+fn p_cb_never_exceeds_kv_budget_under_any_error_draw() {
+    // ≥ 200 randomized draws (ISSUE acceptance): predictors of every
+    // fidelity, tight budgets that make reservations collide, and error
+    // magnitudes up to e^{2z}.
+    check("p-cb-no-oom", 200, |g: &mut Gen| {
+        let rate = *g.pick(&[2.0, 5.0, 10.0]);
+        let workers = *g.pick(&[1usize, 2, 4]);
+        let seed = g.u64();
+        let predictor = match g.usize(0, 3) {
+            0 => PredictorSpec::Oracle,
+            1 => PredictorSpec::Noisy {
+                sigma: *g.pick(&[0.1, 0.5, 1.0, 2.0]),
+            },
+            2 => PredictorSpec::Bucket {
+                buckets: *g.pick(&[2u32, 4, 8]),
+                accuracy: *g.pick(&[0.5, 0.85, 1.0]),
+                workload: WorkloadKind::CodeFuse,
+            },
+            _ => PredictorSpec::Percentile {
+                pct: *g.pick(&[50.0, 90.0, 99.0]),
+                workload: WorkloadKind::CodeFuse,
+            },
+        };
+        let mut c = cfg(workers, EngineKind::Ds, seed).with_predictor(predictor);
+        // Tight budgets: a few thousand KV token-slots instead of ~56k, so
+        // reservations collide and the recovery path actually runs. Every
+        // budget still holds one worst-case request (input 1024 + cap
+        // 1024 ≤ 0.9 · m_ava / Δ), so no request is unservable.
+        let budget_tokens = *g.pick(&[4096u64, 6144, 16384]);
+        c.engine.m_ava = budget_tokens * c.engine.kv_delta;
+        let t = trace(WorkloadKind::CodeFuse, rate, 25.0, seed);
+        let mut policy =
+            PredictiveCbPolicy::new(&c, c.predictor.build(c.max_gen_len, c.seed));
+        let m = run_policy(&t, &mut policy, c.workers, &mut NullSink);
+        prop_assert_eq!(m.completed.len(), t.len(), "requests lost");
+        prop_assert!(
+            policy.max_kv_observed() <= policy.kv_budget(),
+            "P-CB projected KV past the budget: {} > {} ({:?})",
+            policy.max_kv_observed(),
+            policy.kv_budget(),
+            c.predictor
+        );
+        if !t.is_empty() {
+            prop_assert!(policy.max_kv_observed() > 0, "invariant never exercised");
+        }
+        // Recovery accounting is consistent: every completion happened.
+        prop_assert!(
+            m.completed.iter().all(|r| r.generated >= 1),
+            "empty generation recorded"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn p_cb_tight_budget_exercises_recovery() {
+    // A deliberately under-predicting predictor on a tight budget must
+    // take the eviction path and still drain cleanly.
+    let seed = 4242;
+    let mut c = cfg(2, EngineKind::Ds, seed).with_predictor(PredictorSpec::Percentile {
+        pct: 25.0,
+        workload: WorkloadKind::CodeFuse,
+    });
+    c.engine.m_ava = 6144 * c.engine.kv_delta;
+    let t = trace(WorkloadKind::CodeFuse, 6.0, 40.0, seed);
+    let m = run_p_cb(&t, &c);
+    assert_eq!(m.completed.len(), t.len());
+    assert!(
+        m.underpredicted > 0,
+        "p25 predictions must under-predict the upper three quarters"
+    );
+    // Recovery means extra admissions: slices > 1 for evicted requests.
+    assert!(m.completed.iter().any(|r| r.slices > 1));
+}
+
+// ---------------------------------------------------------------------------
+// 2. Oracle P-SCLS: never more slice passes than baseline SCLS
+// ---------------------------------------------------------------------------
+
+#[test]
+fn oracle_p_scls_takes_at_most_scls_passes() {
+    for (rate, duration, seed) in [(4.0, 30.0, 901), (8.0, 45.0, 902), (12.0, 30.0, 903)] {
+        let t = trace(WorkloadKind::CodeFuse, rate, duration, seed);
+        let c = cfg(4, EngineKind::Ds, seed); // predictor defaults to Oracle
+        let preset = EnginePreset::paper(EngineKind::Ds);
+        let p = run_p_scls(&t, &c, 128);
+        let s = run_sliced(&t, &SchedulerSpec::scls(&preset, 128), &c);
+        assert_eq!(p.completed.len(), t.len(), "P-SCLS lost requests");
+        assert_eq!(s.completed.len(), t.len(), "SCLS lost requests");
+        let scls_passes: HashMap<u64, u32> =
+            s.completed.iter().map(|r| (r.id, r.slices)).collect();
+        for r in &p.completed {
+            let baseline = scls_passes[&r.id];
+            assert!(
+                r.slices <= baseline,
+                "req {} took {} P-SCLS passes vs {} SCLS passes (seed {seed})",
+                r.id,
+                r.slices,
+                baseline
+            );
+        }
+        // Oracle seeding lands every request at its exact rung: one pass.
+        assert!(p.completed.iter().all(|r| r.slices == 1));
+        assert_eq!(p.underpredicted, 0, "oracle must never requeue");
+    }
+}
+
+#[test]
+fn noisy_p_scls_recovers_underpredictions() {
+    let seed = 905;
+    let t = trace(WorkloadKind::CodeFuse, 6.0, 40.0, seed);
+    let c = cfg(4, EngineKind::Ds, seed)
+        .with_predictor(PredictorSpec::Noisy { sigma: 1.0 });
+    let m = run_p_scls(&t, &c, 128);
+    assert_eq!(m.completed.len(), t.len(), "recovery must complete everything");
+    assert!(m.underpredicted > 0, "sigma 1.0 must under-predict some requests");
+    assert!(
+        m.completed.iter().all(|r| r.generated >= 1),
+        "every request generated"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 3. Acceptance throughput shape (default CodeFuse configuration)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn oracle_p_cb_beats_scls_cb_on_default_codefuse_trace() {
+    // ISSUE acceptance: rate 20, 600 s, 4 workers, default CodeFuse trace.
+    let t = trace(WorkloadKind::CodeFuse, 20.0, 600.0, 42);
+    let c = cfg(4, EngineKind::Ds, 42);
+    let p = run_p_cb(&t, &c);
+    let b = run_scls_cb(&t, &c, 128);
+    assert_eq!(p.completed.len(), t.len());
+    assert_eq!(b.completed.len(), t.len());
+    let pt = p.summarize().throughput;
+    let bt = b.summarize().throughput;
+    assert!(
+        pt > bt,
+        "P-CB (oracle) {pt} must beat SCLS-CB {bt}: exact reservations avoid \
+         every slice-exit re-prefill"
+    );
+    assert_eq!(p.underpredicted, 0);
+    assert_eq!(p.overpredicted, 0);
+    assert_eq!(p.wasted_kv_token_steps, 0);
+}
+
+#[test]
+fn p_cb_noise_is_not_free() {
+    // The figure sweep's monotone-degradation claim, spot-checked at its
+    // endpoints: heavy prediction error can't beat the exact oracle by
+    // more than simulation noise.
+    let t = trace(WorkloadKind::CodeFuse, 20.0, 120.0, 77);
+    let c0 = cfg(4, EngineKind::Ds, 77); // oracle
+    let c1 = cfg(4, EngineKind::Ds, 77)
+        .with_predictor(PredictorSpec::Noisy { sigma: 1.0 });
+    let exact = run_p_cb(&t, &c0);
+    let noisy = run_p_cb(&t, &c1);
+    assert_eq!(noisy.completed.len(), t.len());
+    assert!(noisy.underpredicted > 0, "sigma 1.0 must trigger recovery");
+    let te = exact.summarize().throughput;
+    let tn = noisy.summarize().throughput;
+    assert!(
+        tn <= te * 1.02,
+        "noisy predictions ({tn}) must not beat the oracle ({te}) beyond noise"
+    );
+}
