@@ -20,6 +20,18 @@
 //! Knobs (env): SCLS_SCALE_REQUESTS [1000000], SCLS_SCALE_WORKERS [64],
 //! SCLS_SCALE_RATE [2000], SCLS_SCALE_SLICE [128],
 //! SCLS_SCALE_PCB_REQUESTS [200000].
+//!
+//! Enforcement: set SCLS_SCALE_MAX_REGRESSION to a percentage (e.g. `10`)
+//! and the bench *fails* when events/sec drops more than that against a
+//! non-provisional, same-shape baseline — the events/sec delta is then a
+//! gate, not just a printout. A gated run that came in at-or-below a
+//! *valid* anchor (non-provisional, same shape) leaves it untouched — a
+//! passing-but-slower run must not ratchet the anchor down night after
+//! night — while improvements beyond the gate margin re-anchor upward
+//! (within-margin wiggle is treated as noise), and provisional or
+//! shape-mismatched baselines are always regenerated (without the
+//! `provisional` flag), so even a gated-only workflow arms the gate on
+//! its first real-toolchain run.
 
 use std::time::Instant;
 
@@ -43,6 +55,20 @@ fn baseline_path() -> String {
 }
 
 fn main() {
+    // A malformed gate value must not silently disarm the gate (nor arm a
+    // nonsensical one): warn loudly and run un-gated.
+    let max_regression = std::env::var("SCLS_SCALE_MAX_REGRESSION").ok().and_then(|s| {
+        match s.parse::<f64>() {
+            Ok(v) if v.is_finite() && v >= 0.0 => Some(v),
+            _ => {
+                eprintln!(
+                    "warning: ignoring invalid SCLS_SCALE_MAX_REGRESSION='{s}' \
+                     (want a non-negative percentage, e.g. 10) — gate DISARMED"
+                );
+                None
+            }
+        }
+    });
     let n_requests = env_u64("SCLS_SCALE_REQUESTS", 1_000_000) as usize;
     let workers = env_u64("SCLS_SCALE_WORKERS", 64) as usize;
     let rate = env_u64("SCLS_SCALE_RATE", 2000) as f64;
@@ -93,8 +119,13 @@ fn main() {
     println!("virtual thpt      {:.2} req/s", s.throughput);
 
     // Regression check against the checked-in baseline (ROADMAP: diff
-    // events/sec whenever batcher/, sim/, or scheduler/ change).
+    // events/sec whenever batcher/, sim/, or scheduler/ change). Gated
+    // runs protect a *valid* anchor (non-provisional, same shape) from
+    // being rewritten; provisional or shape-mismatched baselines are
+    // regenerated even when gated, so a gated-only workflow still arms
+    // the gate on its first real run.
     let path = baseline_path();
+    let mut protect_baseline = false;
     match std::fs::read_to_string(&path)
         .ok()
         .and_then(|s| Json::parse(&s).ok())
@@ -110,20 +141,58 @@ fn main() {
                 && knob("rate") == Some(rate)
                 && knob("slice_len") == Some(slice_len as f64);
             match prev {
-                Some(prev) if provisional => println!(
-                    "baseline is provisional (structure only, authored without a toolchain); \
-                     this run anchors events/sec at {events_per_sec:.0} (placeholder was {prev:.0})"
-                ),
+                Some(prev) if provisional => {
+                    if max_regression.is_some() && !same_shape {
+                        // A gated quick run with overridden shape knobs
+                        // must not anchor the provisional baseline at the
+                        // wrong shape (that would leave every later
+                        // default-shape gated run in the mismatch arm and
+                        // permanently disarm the gate). Leave arming to a
+                        // run at the baseline's own shape.
+                        protect_baseline = true;
+                        println!(
+                            "baseline is provisional and this gated run overrides the workload \
+                             shape — leaving the placeholder for a matching-shape run to anchor"
+                        );
+                    } else {
+                        println!(
+                            "baseline is provisional (structure only, authored without a toolchain); \
+                             this run anchors events/sec at {events_per_sec:.0} (placeholder was {prev:.0})"
+                        );
+                    }
+                }
                 Some(prev) if same_shape => {
                     let delta = (events_per_sec - prev) / prev * 100.0;
                     println!(
                         "events/sec delta vs baseline: {delta:+.2}% (baseline {prev:.0}, now {events_per_sec:.0})"
                     );
+                    if let Some(max_reg) = max_regression {
+                        assert!(
+                            delta >= -max_reg,
+                            "events/sec regressed {delta:.2}% (> {max_reg}% allowed): \
+                             baseline {prev:.0}, now {events_per_sec:.0}"
+                        );
+                        // Protect the anchor inside the noise band: only a
+                        // genuine improvement (beyond the gate margin
+                        // itself) re-anchors upward. Re-anchoring on any
+                        // positive delta would ratchet the anchor to the
+                        // historical noise maximum and fail healthy runs;
+                        // never re-anchoring would let a later regression
+                        // hide inside real-speedup headroom.
+                        protect_baseline = delta <= max_reg;
+                    }
                 }
-                Some(prev) => println!(
-                    "baseline used a different workload shape (requests/workers/rate/slice_len) \
-                     — no delta; baseline events/sec was {prev:.0}"
-                ),
+                Some(prev) => {
+                    println!(
+                        "baseline used a different workload shape (requests/workers/rate/slice_len) \
+                         — no delta; baseline events/sec was {prev:.0}"
+                    );
+                    // A gated quick run with overridden shape knobs must
+                    // not clobber the valid anchor the gate exists to
+                    // protect (only provisional/missing baselines need
+                    // regenerating to arm the gate).
+                    protect_baseline = max_regression.is_some();
+                }
                 None => println!("baseline at {path} has no events_per_sec field"),
             }
         }
@@ -182,6 +251,13 @@ fn main() {
         .set("wasted_kv_token_steps", pm.wasted_kv_token_steps)
         .set("virtual_throughput", pm.summarize().throughput);
     j.set("p_cb", pcb);
-    std::fs::write(&path, j.to_string_pretty()).expect("write BENCH_scale.json");
-    println!("wrote {path}");
+    if protect_baseline {
+        // Gated run against a valid anchor: rewriting it would let a
+        // passing-but-slower run ratchet the anchor down until a
+        // cumulative regression never trips.
+        println!("gated run (SCLS_SCALE_MAX_REGRESSION set): baseline at {path} left untouched");
+    } else {
+        std::fs::write(&path, j.to_string_pretty()).expect("write BENCH_scale.json");
+        println!("wrote {path}");
+    }
 }

@@ -19,6 +19,7 @@ fn main() {
     let cfg = DpBatcherConfig {
         slice_len: 128,
         max_batch_size: None,
+        pred_corrected: false,
     };
 
     // The paper's exact scenario: 15 × len-10 + 1 × len-1024.

@@ -38,6 +38,7 @@ fn main() {
         &DpBatcherConfig {
             slice_len: 128,
             max_batch_size: None,
+            pred_corrected: false,
         },
     );
     println!("{}", report_header());

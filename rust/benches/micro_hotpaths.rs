@@ -50,6 +50,7 @@ fn main() {
     let cfg = DpBatcherConfig {
         slice_len: 128,
         max_batch_size: None,
+        pred_corrected: false,
     };
 
     println!("{}", report_header());

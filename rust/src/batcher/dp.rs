@@ -51,6 +51,25 @@
 //!   roundings — making it a true lower bound *in float arithmetic*, not
 //!   just in exact math.
 //!
+//! ## Predicted early-return correction (`pred_corrected`)
+//!
+//! The legacy DP budgets every batch at the full slice length S even when
+//! length predictions say most members return early. With
+//! `DpBatcherConfig::pred_corrected` set, a candidate batch is costed at
+//! its *predicted* budget instead: `T_serve(N, L_i, S_eff)` where `S_eff`
+//! is the largest predicted remaining generation among its members
+//! (static batching serves until the slowest member finishes or the slice
+//! cap hits, so the batch's predicted duration is its max), clamped to
+//! `[1, S]`. Requests without a stamped prediction fall back to S, so the
+//! correction is a no-op on prediction-free pools. Memory feasibility
+//! (`N_max`) still uses the full S — an under-predicted batch can run to
+//! the slice cap, so KV must be provisioned for the worst case; only the
+//! *time estimate* is corrected. The corrected path is an explicit opt-in
+//! precisely because its costs vary per candidate window: the affine
+//! fast path above does not apply, and the frozen differential contract
+//! (`dp_batch_reference`, `props_dp_differential.rs`) covers the default
+//! path only, which this flag leaves bit-for-bit untouched.
+//!
 //! Exactness of the result: every *evaluated* candidate uses bit-for-bit
 //! the reference's expression; the minimum over the evaluated set equals
 //! the minimum over all candidates (skipped ranges are certified strictly
@@ -90,6 +109,38 @@ pub struct DpBatcherConfig {
     /// Optional hard cap on batch size (the PM ablation limits this to the
     /// engine's fixed SLS batch size; full AB/SCLS leaves it None).
     pub max_batch_size: Option<u32>,
+    /// Cost batches at their predicted early-return budget instead of the
+    /// full slice length (see module docs). Off by default: the legacy
+    /// path stays bit-exact against `dp_batch_reference`.
+    pub pred_corrected: bool,
+}
+
+/// Predicted iterations request `r` needs in its next pass under slice
+/// budget `s`: predicted remaining generation (total prediction minus
+/// tokens already generated), clamped to `[1, s]`. Falls back to the full
+/// budget when no prediction is stamped — or when the prediction is
+/// *exhausted* (`predicted_gen ≤ generated`: the request already outlived
+/// it, e.g. a P-SCLS under-prediction requeued for another full pass of
+/// S), because an overrun prediction says nothing about the remainder and
+/// costing the next pass at ~1 iteration would poison the ledger, the LPT
+/// offload, and the adaptive interval with drastic underestimates.
+#[inline]
+pub fn predicted_iters(r: &Request, s: u32) -> u32 {
+    match r.predicted_gen {
+        Some(p) if p > r.generated => (p - r.generated).min(s.max(1)),
+        _ => s.max(1),
+    }
+}
+
+/// Predicted serve budget of a batch under slice budget `s`: the slowest
+/// member's [`predicted_iters`] (static batching runs until every member
+/// is done or the cap hits).
+pub fn predicted_batch_iters(members: &[Request], s: u32) -> u32 {
+    members
+        .iter()
+        .map(|r| predicted_iters(r, s))
+        .max()
+        .unwrap_or_else(|| s.max(1))
 }
 
 /// Reusable workspace for [`dp_plan`] / [`dp_batch_into`]: the DP tables
@@ -107,6 +158,10 @@ pub struct DpScratch {
     /// The optimal partition as `(start, end)` half-open index pairs into
     /// the sorted request slice, in ascending order.
     cuts: Vec<(usize, usize)>,
+    /// Batches of the most recent materialization costed at a predicted
+    /// budget strictly below the slice cap (always 0 with the correction
+    /// off).
+    corrected: usize,
 }
 
 impl DpScratch {
@@ -117,6 +172,20 @@ impl DpScratch {
     /// The cuts produced by the most recent plan.
     pub fn cuts(&self) -> &[(usize, usize)] {
         &self.cuts
+    }
+
+    /// How many batches of the most recent `dp_batch_into` /
+    /// `dp_batch_sorted_into` run were costed at a predicted budget
+    /// strictly below the slice cap (0 unless `pred_corrected` is on).
+    pub fn corrected_batches(&self) -> usize {
+        self.corrected
+    }
+
+    /// Zero the corrected-batch count — for callers that skip the batcher
+    /// on an empty tick but still want [`Self::corrected_batches`] to
+    /// describe that tick rather than a stale earlier one.
+    pub fn reset_corrected_batches(&mut self) {
+        self.corrected = 0;
     }
 }
 
@@ -152,13 +221,14 @@ pub fn dp_batch_into<E: ServeEstimate + ?Sized>(
     if requests.is_empty() {
         // Keep the scratch's public cuts() consistent with this run.
         scratch.cuts.clear();
+        scratch.corrected = 0;
         return;
     }
     // Line 1: sort ascending by current input length (stable: equal-length
     // requests keep arrival order — FCFS among ties).
     requests.sort_by_key(|r| r.input_len);
     dp_plan(requests, est, mem, cfg, scratch);
-    materialize_into(requests, &scratch.cuts, est, cfg.slice_len, out);
+    scratch.corrected = materialize_into(requests, &scratch.cuts, est, cfg, out);
 }
 
 /// [`dp_batch_into`] for callers that already hold the requests sorted
@@ -178,6 +248,7 @@ pub fn dp_batch_sorted_into<E: ServeEstimate + ?Sized>(
     out.clear();
     if requests.is_empty() {
         scratch.cuts.clear();
+        scratch.corrected = 0;
         return;
     }
     debug_assert!(
@@ -185,7 +256,7 @@ pub fn dp_batch_sorted_into<E: ServeEstimate + ?Sized>(
         "dp_batch_sorted_into requires ascending input lengths"
     );
     dp_plan(requests, est, mem, cfg, scratch);
-    materialize_into(requests, &scratch.cuts, est, cfg.slice_len, out);
+    scratch.corrected = materialize_into(requests, &scratch.cuts, est, cfg, out);
 }
 
 /// Run the optimized DP over an already-sorted request slice, leaving the
@@ -198,6 +269,9 @@ pub fn dp_plan<E: ServeEstimate + ?Sized>(
     scratch: &mut DpScratch,
 ) {
     debug_assert!(sorted.windows(2).all(|w| w[0].input_len <= w[1].input_len));
+    if cfg.pred_corrected {
+        return dp_plan_corrected(sorted, est, mem, cfg, scratch);
+    }
     let n = sorted.len();
     let s = cfg.slice_len;
     scratch.cuts.clear();
@@ -429,24 +503,102 @@ pub fn dp_plan<E: ServeEstimate + ?Sized>(
     scratch.cuts.reverse();
 }
 
+/// The corrected planning loop: the reference's scalar scan with the
+/// candidate budget replaced by the window's running maximum of predicted
+/// remaining iterations (see the module's predicted-correction section).
+/// The affine fast path and skip certificates do not apply — the cost is
+/// no longer affine in N at fixed (L_i, S) once S_eff varies with the
+/// window — so every candidate is evaluated, exactly like the opaque
+/// reference loop.
+fn dp_plan_corrected<E: ServeEstimate + ?Sized>(
+    sorted: &[Request],
+    est: &E,
+    mem: &MemoryEstimator,
+    cfg: &DpBatcherConfig,
+    scratch: &mut DpScratch,
+) {
+    let n = sorted.len();
+    let s = cfg.slice_len;
+    scratch.cuts.clear();
+    if n == 0 {
+        return;
+    }
+    scratch.t.clear();
+    scratch.t.resize(n + 1, 0.0);
+    scratch.p.clear();
+    scratch.p.resize(n + 1, 0);
+    let t = &mut scratch.t;
+    let p = &mut scratch.p;
+
+    for i in 1..=n {
+        let l_i = sorted[i - 1].input_len;
+        // Memory feasibility stays at the full slice length: a batch whose
+        // predictions all fall short can still run to the cap.
+        let mut n_max = mem.max_batch(l_i, s).max(1);
+        if let Some(cap) = cfg.max_batch_size {
+            n_max = n_max.min(cap.max(1));
+        }
+        // Running max of predicted iterations over the candidate window,
+        // grown as j walks backwards (the batch [j, i] gains member j).
+        let mut s_eff = predicted_iters(&sorted[i - 1], s);
+        p[i] = i - 1;
+        t[i] = t[i - 1] + est.serve_est(1, l_i, s_eff);
+        let mut j = i - 1;
+        while j > 0 {
+            let size = (i - j + 1) as u32;
+            if size > n_max {
+                break;
+            }
+            s_eff = s_eff.max(predicted_iters(&sorted[j - 1], s));
+            let cand = t[j - 1] + est.serve_est(size, l_i, s_eff);
+            if cand < t[i] {
+                t[i] = cand;
+                p[i] = j - 1;
+            }
+            j -= 1;
+        }
+    }
+
+    let mut i = n;
+    while i > 0 {
+        let start = p[i];
+        scratch.cuts.push((start, i));
+        i = start;
+    }
+    scratch.cuts.reverse();
+}
+
 /// Materialize batches from cuts by draining the sorted request buffer in
 /// one pass (buffer keeps its capacity for reuse by per-tick callers).
+/// Under predicted correction each batch's `est_serve_time` uses the same
+/// corrected budget the plan costed it at; returns how many batches came
+/// in strictly below the slice cap (the correction counter callers fold
+/// into `RunMetrics::corrected_batches`).
 fn materialize_into<E: ServeEstimate + ?Sized>(
     requests: &mut Vec<Request>,
     cuts: &[(usize, usize)],
     est: &E,
-    slice_len: u32,
+    cfg: &DpBatcherConfig,
     out: &mut Vec<Batch>,
-) {
+) -> usize {
     out.reserve(cuts.len());
+    let mut corrected = 0usize;
     let mut drain = requests.drain(..);
     for &(start, end) in cuts {
         let members: Vec<Request> = drain.by_ref().take(end - start).collect();
         debug_assert_eq!(members.len(), end - start);
+        let budget = if cfg.pred_corrected {
+            let b = predicted_batch_iters(&members, cfg.slice_len);
+            corrected += (b < cfg.slice_len) as usize;
+            b
+        } else {
+            cfg.slice_len
+        };
         let mut b = Batch::new(members);
-        b.est_serve_time = est.serve_est(b.size() as u32, b.input_len(), slice_len);
+        b.est_serve_time = est.serve_est(b.size() as u32, b.input_len(), budget);
         out.push(b);
     }
+    corrected
 }
 
 // ---------------------------------------------------------------------------
@@ -455,7 +607,9 @@ fn materialize_into<E: ServeEstimate + ?Sized>(
 
 /// The original O(n·N_max) DP, retained as the differential-testing and
 /// benchmarking baseline. [`dp_batch`] must produce bit-identical cuts and
-/// `est_serve_time` values to this function on every input.
+/// `est_serve_time` values to this function on every input — with
+/// `pred_corrected` off; the reference predates predictions and ignores
+/// the flag.
 pub fn dp_batch_reference(
     mut requests: Vec<Request>,
     est: &dyn ServeEstimate,
@@ -576,6 +730,7 @@ mod tests {
         DpBatcherConfig {
             slice_len: s,
             max_batch_size: None,
+            pred_corrected: false,
         }
     }
 
@@ -657,6 +812,7 @@ mod tests {
             &DpBatcherConfig {
                 slice_len: 128,
                 max_batch_size: Some(6),
+                pred_corrected: false,
             },
         );
         assert!(batches.iter().all(|b| b.size() <= 6));
@@ -732,6 +888,7 @@ mod tests {
                     &DpBatcherConfig {
                         slice_len: s,
                         max_batch_size: Some(6),
+                        pred_corrected: false,
                     },
                 );
             }
@@ -763,6 +920,168 @@ mod tests {
             let lens: Vec<u32> = (0..40).map(|x| (x * 13) % 64 + 1).collect();
             assert_matches_reference(&lens, &e, &mem, &cfg(128));
         }
+    }
+
+    /// Requests with oracle-stamped predictions for the corrected-path
+    /// tests: predicted == target generation length.
+    fn predicted_reqs(lens_preds: &[(u32, u32)]) -> Vec<Request> {
+        lens_preds
+            .iter()
+            .enumerate()
+            .map(|(i, &(l, pred))| {
+                let mut r = Request::new(i as u64, 0.0, l, pred);
+                r.predicted_gen = Some(pred);
+                r
+            })
+            .collect()
+    }
+
+    #[test]
+    fn predicted_iters_clamps_and_falls_back() {
+        let mut r = Request::new(1, 0.0, 64, 500);
+        assert_eq!(predicted_iters(&r, 128), 128, "no prediction → full budget");
+        r.predicted_gen = Some(40);
+        assert_eq!(predicted_iters(&r, 128), 40);
+        r.generated = 30;
+        assert_eq!(predicted_iters(&r, 128), 10, "prediction is a total, not remaining");
+        r.generated = 45;
+        assert_eq!(
+            predicted_iters(&r, 128),
+            128,
+            "an exhausted prediction says nothing — next pass costs the full budget \
+             (a requeued under-prediction really can run all of it)"
+        );
+        r.generated = 0;
+        r.predicted_gen = Some(9999);
+        assert_eq!(predicted_iters(&r, 128), 128, "caps at the slice budget");
+    }
+
+    #[test]
+    fn corrected_partition_is_complete_and_feasible() {
+        let e = est();
+        let mem = mem_loose();
+        let c = DpBatcherConfig {
+            slice_len: 128,
+            max_batch_size: Some(6),
+            pred_corrected: true,
+        };
+        let reqs = predicted_reqs(&[
+            (10, 30),
+            (1024, 500),
+            (30, 128),
+            (500, 20),
+            (10, 900),
+            (80, 64),
+            (80, 64),
+            (80, 64),
+            (80, 64),
+            (80, 64),
+            (80, 64),
+            (80, 64),
+        ]);
+        let n = reqs.len();
+        let batches = dp_batch(reqs, &e, &mem, &c);
+        let mut ids: Vec<u64> = batches
+            .iter()
+            .flat_map(|b| b.requests.iter().map(|r| r.id))
+            .collect();
+        ids.sort();
+        assert_eq!(ids, (0..n as u64).collect::<Vec<_>>());
+        assert!(batches.iter().all(|b| b.size() <= 6));
+        for b in &batches {
+            let budget = predicted_batch_iters(&b.requests, c.slice_len);
+            let expect = e.serve(b.size() as u32, b.input_len(), budget);
+            assert!(
+                (b.est_serve_time - expect).abs() < 1e-12,
+                "est must use the corrected budget"
+            );
+        }
+    }
+
+    #[test]
+    fn correction_never_raises_the_estimated_total() {
+        // The corrected cost of ANY candidate batch is ≤ its uncorrected
+        // cost (serve time is monotone in the iteration budget and
+        // S_eff ≤ S), so the corrected DP's minimal total is ≤ the
+        // uncorrected DP's total for the same pool.
+        let e = est();
+        let mem = mem_loose();
+        let lens_preds: Vec<(u32, u32)> = (0..60)
+            .map(|x: u32| ((x * 37) % 800 + 1, (x * 53) % 128 + 1))
+            .collect();
+        for s in [32u32, 128, 512] {
+            let base = DpBatcherConfig {
+                slice_len: s,
+                max_batch_size: None,
+                pred_corrected: false,
+            };
+            let corr = DpBatcherConfig {
+                pred_corrected: true,
+                ..base.clone()
+            };
+            let uncorrected: f64 = dp_batch(predicted_reqs(&lens_preds), &e, &mem, &base)
+                .iter()
+                .map(|b| b.est_serve_time)
+                .sum();
+            let corrected: f64 = dp_batch(predicted_reqs(&lens_preds), &e, &mem, &corr)
+                .iter()
+                .map(|b| b.est_serve_time)
+                .sum();
+            assert!(
+                corrected <= uncorrected + 1e-9,
+                "S={s}: corrected {corrected} !<= uncorrected {uncorrected}"
+            );
+        }
+    }
+
+    #[test]
+    fn correction_without_predictions_matches_full_budget_costs() {
+        // No stamped predictions → every S_eff == S: the corrected planner
+        // must form batches costed exactly at the full budget (the flag is
+        // a semantic no-op; only the scalar evaluation path differs).
+        let e = est();
+        let mem = mem_loose();
+        let c = DpBatcherConfig {
+            slice_len: 128,
+            max_batch_size: None,
+            pred_corrected: true,
+        };
+        let batches = dp_batch(reqs(&[10, 20, 900, 64, 64]), &e, &mem, &c);
+        assert_eq!(
+            batches.iter().map(|b| b.size()).sum::<usize>(),
+            5,
+            "no request lost"
+        );
+        for b in &batches {
+            let expect = e.serve(b.size() as u32, b.input_len(), 128);
+            assert!((b.est_serve_time - expect).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn corrected_dp_separates_predicted_long_tail() {
+        // All same input length, so the legacy DP sees one homogeneous
+        // batch; predictions say one member runs the full slice while the
+        // rest return after ~8 iterations. The corrected DP must isolate
+        // the long-predicted straggler whenever doing so lowers the
+        // estimated total — and never produce a worse total than batching
+        // everything together.
+        let e = est();
+        let mem = mem_loose();
+        let c = DpBatcherConfig {
+            slice_len: 512,
+            max_batch_size: None,
+            pred_corrected: true,
+        };
+        let mut lens_preds = vec![(64u32, 8u32); 15];
+        lens_preds.push((64, 512));
+        let batches = dp_batch(predicted_reqs(&lens_preds), &e, &mem, &c);
+        let total: f64 = batches.iter().map(|b| b.est_serve_time).sum();
+        let together = e.serve(16, 64, 512);
+        assert!(
+            total <= together + 1e-9,
+            "corrected total {total} !<= together {together}"
+        );
     }
 
     #[test]

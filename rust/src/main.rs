@@ -64,11 +64,15 @@ SUBCOMMANDS:
       --seed N           RNG seed                    [42]
       --config FILE      key=value config file overriding defaults
       --predictor NAME   length predictor for P-SCLS/P-CB:
-                         oracle|noisy[:SIGMA]|bucket[:B]|percentile[:P]
+                         oracle|noisy[:SIGMA]|bucket[:B]|online[:W]|
+                         percentile[:P]   (online:W refits its buckets
+                         from a sliding window of W completions)
                          [oracle]
       --pred-sigma S     noisy-oracle sigma (implies --predictor noisy)
       --pred-buckets B   bucket count (implies --predictor bucket)
-      --pred-accuracy A  bucket classifier accuracy in [0,1]  [0.85]
+      --pred-accuracy A  bucket/online classifier accuracy in [0,1] [0.85]
+      --pred-corrected-dp  cost DP batches at their predicted early-return
+                         budget instead of the full slice length (P-SCLS)
   serve       Serve a scaled trace on the real PJRT cluster
       --artifacts DIR    AOT artifact dir            [artifacts]
       --workers W        worker threads              [2]
@@ -131,7 +135,7 @@ fn dispatch(args: &Args) -> Result<()> {
 fn figure_ids() -> Vec<&'static str> {
     vec![
         "fig5", "fig6", "fig8", "fig10", "fig11", "fig12", "fig15", "fig17", "fig18", "fig22",
-        "figpred",
+        "figpred", "figdrift",
     ]
 }
 
@@ -164,6 +168,8 @@ fn run_figure(id: &str, fc: &FigureConfig) -> Result<Vec<FigureResult>> {
         "fig22" => vec![figures::fig22(fc, &workers)],
         // Extension: throughput vs length-prediction error (P-SCLS/P-CB).
         "figpred" => vec![figures::fig_pred(fc, &[0.0, 0.1, 0.25, 0.5, 1.0])],
+        // Extension: online predictor refit under a mid-run length drift.
+        "figdrift" => vec![figures::fig_drift(fc)],
         other => bail!("unknown figure id '{other}' (known: {:?})", figure_ids()),
     })
 }
@@ -271,9 +277,12 @@ fn predictor_spec(args: &Args, workload: WorkloadKind) -> Result<PredictorSpec> 
     }
     if args.has("pred-buckets") || args.has("pred-accuracy") {
         // Override only what the flags name, keeping whatever the
-        // `--predictor bucket:N` spelling already set.
+        // `--predictor bucket:N` / `online:W` spelling already set.
         let (base_buckets, base_accuracy) = match &spec {
             PredictorSpec::Bucket {
+                buckets, accuracy, ..
+            }
+            | PredictorSpec::Online {
                 buckets, accuracy, ..
             } => (*buckets, *accuracy),
             _ => (
@@ -281,10 +290,26 @@ fn predictor_spec(args: &Args, workload: WorkloadKind) -> Result<PredictorSpec> 
                 PredictorSpec::DEFAULT_ACCURACY,
             ),
         };
-        let buckets = args.u32_or("pred-buckets", base_buckets).max(1);
+        // Parse wide, then validate: `u32_or` would wrap ≥ 2^32 values
+        // before the range check. Same bounds as `--predictor bucket:<N>`
+        // — the two spellings must not disagree on what they accept.
+        let buckets = args.u64_or("pred-buckets", base_buckets as u64);
+        if !(1..=PredictorSpec::MAX_BUCKETS as u64).contains(&buckets) {
+            return Err(anyhow!(
+                "--pred-buckets must be in [1, {}] (got {buckets})",
+                PredictorSpec::MAX_BUCKETS
+            ));
+        }
+        let buckets = buckets as u32;
         let accuracy = args.f64_or("pred-accuracy", base_accuracy).clamp(0.0, 1.0);
         spec = match spec {
             PredictorSpec::Oracle | PredictorSpec::Bucket { .. } => PredictorSpec::Bucket {
+                buckets,
+                accuracy,
+                workload,
+            },
+            PredictorSpec::Online { window, .. } => PredictorSpec::Online {
+                window,
                 buckets,
                 accuracy,
                 workload,
@@ -308,6 +333,15 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         max_gen_len: cfg.max_gen_len,
         seed: cfg.seed,
     });
+    // bool_or handles all spellings: absent → false, bare flag → true,
+    // `--pred-corrected-dp false` → false.
+    let pred_corrected = args.bool_or("pred-corrected-dp", false);
+    if pred_corrected && which != "P-SCLS" {
+        log::warn!(
+            "--pred-corrected-dp only affects the P-SCLS scheduler (got {which}); \
+             this run is uncorrected"
+        );
+    }
     let sim = Simulation::new(
         SimConfig::new(
             cfg.workers,
@@ -315,7 +349,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             cfg.max_gen_len,
             cfg.seed,
         )
-        .with_predictor(pspec.clone()),
+        .with_predictor(pspec.clone())
+        .with_pred_corrected_dp(pred_corrected),
     );
     log::info!(
         "simulate: {} requests, {} workers, engine {}, scheduler {}",
@@ -345,6 +380,12 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         println!("underpredicted    {}", metrics.underpredicted);
         println!("overpredicted     {}", metrics.overpredicted);
         println!("wasted KV tokens  {}", metrics.wasted_kv_token_steps);
+        if matches!(pspec, PredictorSpec::Online { .. }) {
+            println!("predictor refits  {}", metrics.predictor_refits);
+        }
+        if pred_corrected {
+            println!("corrected batches {}", metrics.corrected_batches);
+        }
     }
     if let Some(out) = args.str_opt("out") {
         std::fs::write(out, s.to_json().to_string_pretty())?;

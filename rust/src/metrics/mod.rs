@@ -80,6 +80,14 @@ pub struct RunMetrics {
     /// Prediction-aware policies only: total reserved generation capacity
     /// (KV token-slots) that went unused across all servings/residencies.
     pub wasted_kv_token_steps: u64,
+    /// Online predictors only: model refits triggered by completion
+    /// observations ([`crate::predictor::LengthPredictor::observe`]).
+    /// Always 0 under offline predictors and prediction-free policies.
+    pub predictor_refits: u64,
+    /// Predicted-correction opt-in only: batches the DP batcher costed at
+    /// a predicted budget strictly below the slice cap. Always 0 with the
+    /// correction off.
+    pub corrected_batches: u64,
 }
 
 /// Headline summary of a run.
@@ -144,6 +152,8 @@ impl RunMetrics {
             .set("underpredicted", self.underpredicted)
             .set("overpredicted", self.overpredicted)
             .set("wasted_kv_token_steps", self.wasted_kv_token_steps)
+            .set("predictor_refits", self.predictor_refits)
+            .set("corrected_batches", self.corrected_batches)
             .set("makespan", self.makespan)
             .set("worker_completion", self.worker_completion.clone());
         let completed: Vec<Json> = self

@@ -28,6 +28,12 @@ pub trait MetricsSink {
     /// A prediction-aware policy logged a mispredict-recovery or
     /// over-prediction event (never fires under prediction-free policies).
     fn on_prediction(&mut self, _now: f64, _rec: &PredictionRecord) {}
+    /// An online predictor refit its model from completion observations
+    /// (never fires under offline predictors).
+    fn on_predictor_refit(&mut self, _now: f64) {}
+    /// The DP batcher costed a batch at a predicted budget strictly below
+    /// the slice cap (predicted-correction opt-in only).
+    fn on_corrected_batch(&mut self, _now: f64) {}
     /// The run drained; `metrics` is the final event log.
     fn on_run_end(&mut self, _metrics: &RunMetrics) {}
 }
@@ -55,6 +61,10 @@ pub struct Tally {
     pub underpredicted: u64,
     pub overpredicted: u64,
     pub wasted_kv_token_steps: u64,
+    /// Online-predictor refits and predicted-budget-corrected batches
+    /// (see [`RunMetrics`]).
+    pub predictor_refits: u64,
+    pub corrected_batches: u64,
 }
 
 impl MetricsSink for Tally {
@@ -81,6 +91,14 @@ impl MetricsSink for Tally {
             self.overpredicted += 1;
         }
         self.wasted_kv_token_steps += rec.wasted_tokens;
+    }
+
+    fn on_predictor_refit(&mut self, _now: f64) {
+        self.predictor_refits += 1;
+    }
+
+    fn on_corrected_batch(&mut self, _now: f64) {
+        self.corrected_batches += 1;
     }
 }
 
@@ -109,6 +127,18 @@ impl MetricsSink for Fanout<'_> {
     fn on_prediction(&mut self, now: f64, rec: &PredictionRecord) {
         for s in self.0.iter_mut() {
             s.on_prediction(now, rec);
+        }
+    }
+
+    fn on_predictor_refit(&mut self, now: f64) {
+        for s in self.0.iter_mut() {
+            s.on_predictor_refit(now);
+        }
+    }
+
+    fn on_corrected_batch(&mut self, now: f64) {
+        for s in self.0.iter_mut() {
+            s.on_corrected_batch(now);
         }
     }
 
@@ -184,6 +214,11 @@ mod tests {
         assert_eq!(t.underpredicted, 1);
         assert_eq!(t.overpredicted, 1);
         assert_eq!(t.wasted_kv_token_steps, 40);
+        t.on_predictor_refit(3.0);
+        t.on_predictor_refit(4.0);
+        t.on_corrected_batch(5.0);
+        assert_eq!(t.predictor_refits, 2);
+        assert_eq!(t.corrected_batches, 1);
     }
 
     #[test]

@@ -24,11 +24,18 @@
 //!   classifier misses.
 //! * [`PercentileConst`] — the no-model baseline: predict one fixed
 //!   workload percentile for every request.
+//! * [`OnlineBuckets`] — the online variant of the bucket classifier: it
+//!   starts from a prior fit (or cold) and *refits* its quantile edges
+//!   from a sliding window of completed-request true lengths, fed through
+//!   the [`LengthPredictor::observe`] completion hook (the continuous-refit
+//!   direction of Qiu et al.).
 //!
 //! Predictions are **deterministic per request**: stochastic predictors
 //! derive their randomness from `(predictor seed, request id)`, never from
-//! shared mutable state, so a prediction can be recomputed anywhere in the
-//! pipeline and every run is reproducible from its seed.
+//! hidden shared state, so every run is reproducible from its seed. An
+//! *online* predictor's model does evolve — but only through `observe`,
+//! whose call sequence is itself a deterministic function of the run seed,
+//! so reproducibility holds end to end.
 //!
 //! The prediction-aware scheduling policies built on this trait — P-SCLS
 //! (slice-ladder seeding) and P-CB (predicted-KV admission) — live in
@@ -36,8 +43,10 @@
 //! predictors by name for the CLI and the figure suite, mirroring
 //! [`crate::scheduler::policy::parse_policy_name`].
 
+pub mod online;
 pub mod registry;
 
+pub use online::OnlineBuckets;
 pub use registry::{
     canonical_predictor_name, parse_predictor_name, PredictorSpec, BUILTIN_PREDICTORS,
 };
@@ -49,12 +58,23 @@ use crate::workload::distributions::LengthDistribution;
 /// A generation-length predictor: request in, predicted total generation
 /// length (tokens, ≥ 1) out.
 ///
-/// `predict` must be pure — same request, same answer — so policies may
-/// re-invoke it freely and runs stay reproducible from the seed. The
-/// predicted value is a *total* length (like `target_gen_len`), not a
-/// remaining length; policies subtract `generated` themselves.
+/// `predict` must be pure *between observations* — same request, same
+/// model state, same answer — so policies may re-invoke it freely and
+/// runs stay reproducible from the seed. The predicted value is a *total*
+/// length (like `target_gen_len`), not a remaining length; policies
+/// subtract `generated` themselves.
 pub trait LengthPredictor {
     fn predict(&self, req: &Request) -> u32;
+
+    /// Completion feedback: a prediction-aware policy calls this once per
+    /// completed request with the true total generation length, giving
+    /// online predictors ([`OnlineBuckets`]) the signal they refit from.
+    /// Returns `true` when this observation triggered a model refit (the
+    /// drivers count refits into `RunMetrics::predictor_refits`). Offline
+    /// predictors keep the default no-op.
+    fn observe(&mut self, _req: &Request, _true_len: u32) -> bool {
+        false
+    }
 
     /// Display name (diagnostics and figure labels).
     fn name(&self) -> &'static str;
@@ -64,6 +84,64 @@ pub trait LengthPredictor {
 /// independent, reproducible draw stream.
 fn per_request_rng(seed: u64, id: u64) -> Rng {
     Rng::new(seed ^ id.wrapping_mul(0x9E3779B97F4A7C15))
+}
+
+/// Cut a calibration sample into `buckets` equal-mass quantile edges
+/// (ascending upper edges; the last edge is the sample maximum), then
+/// deduplicate. Small or duplicate-heavy samples can collapse several
+/// quantiles onto one value; keeping the collapsed copies would make
+/// `true_bucket`'s `partition_point` silently skip buckets and turn the
+/// accuracy knob's adjacent-bucket confusion into a no-op on identical
+/// edges, so duplicates are dropped and the effective bucket count may be
+/// smaller than requested. Sorts `lengths` in place (callers hand over a
+/// scratch buffer).
+fn quantile_edges(lengths: &mut [u32], buckets: u32) -> Vec<u32> {
+    assert!(buckets >= 1, "need at least one bucket");
+    assert!(!lengths.is_empty(), "empty calibration sample");
+    lengths.sort_unstable();
+    let n = lengths.len();
+    let b = buckets as usize;
+    let mut edges: Vec<u32> = (1..=b)
+        .map(|i| lengths[(i * n / b).clamp(1, n) - 1].max(1))
+        .collect();
+    edges.dedup();
+    edges
+}
+
+/// Ordinal confusion over `k ≥ 2` buckets: slip one bucket up or down. At
+/// the edge buckets the slip *reflects inward* instead of saturating —
+/// `saturating_sub` at bucket 0 (and `min` at the top) would leave the
+/// prediction unchanged for half the error draws, making effective
+/// accuracy at the edges higher than the knob says.
+fn confused_bucket(b: usize, up: bool, k: usize) -> usize {
+    debug_assert!(k >= 2 && b < k);
+    if up {
+        if b + 1 < k {
+            b + 1
+        } else {
+            b - 1
+        }
+    } else if b > 0 {
+        b - 1
+    } else {
+        1
+    }
+}
+
+/// Shared predict kernel of [`BucketClassifier`] and [`OnlineBuckets`]:
+/// classify the true length into its bucket, apply the accuracy knob's
+/// adjacent-bucket confusion, and emit the bucket's upper edge.
+fn bucket_predict(edges: &[u32], accuracy: f64, seed: u64, req: &Request) -> u32 {
+    let len = req.target_gen_len.max(1);
+    let mut b = edges.partition_point(|&e| e < len).min(edges.len() - 1);
+    if accuracy < 1.0 && edges.len() >= 2 {
+        let mut rng = per_request_rng(seed, req.id);
+        if rng.f64() >= accuracy {
+            let up = rng.next_u64() & 1 == 1;
+            b = confused_bucket(b, up, edges.len());
+        }
+    }
+    edges[b].max(1)
 }
 
 // ---------------------------------------------------------------------------
@@ -140,11 +218,13 @@ impl LengthPredictor for NoisyOracle {
 ///
 /// Accuracy knob: with probability `accuracy` the classifier emits the
 /// request's true bucket; otherwise it confuses it into an adjacent bucket
-/// (the dominant error mode of ordinal classifiers), direction uniform.
+/// (the dominant error mode of ordinal classifiers), direction uniform,
+/// reflecting inward at the first/last bucket so edge buckets keep the
+/// same effective confusion rate as interior ones.
 #[derive(Debug, Clone)]
 pub struct BucketClassifier {
-    /// Upper edge of each bucket, ascending; the last edge is the sample
-    /// maximum.
+    /// Upper edge of each bucket, strictly ascending (duplicates from a
+    /// degenerate fit are removed); the last edge is the sample maximum.
     edges: Vec<u32>,
     accuracy: f64,
     seed: u64,
@@ -162,18 +242,11 @@ impl BucketClassifier {
         accuracy: f64,
         seed: u64,
     ) -> BucketClassifier {
-        assert!(buckets >= 1, "need at least one bucket");
         assert!(
             (0.0..=1.0).contains(&accuracy),
             "accuracy must be in [0, 1]"
         );
-        assert!(!lengths.is_empty(), "empty calibration sample");
-        lengths.sort_unstable();
-        let n = lengths.len();
-        let b = buckets as usize;
-        let edges: Vec<u32> = (1..=b)
-            .map(|i| lengths[(i * n / b).clamp(1, n) - 1].max(1))
-            .collect();
+        let edges = quantile_edges(&mut lengths, buckets);
         BucketClassifier {
             edges,
             accuracy,
@@ -199,30 +272,15 @@ impl BucketClassifier {
         self.edges.len()
     }
 
-    /// Bucket index the true length falls into.
-    fn true_bucket(&self, len: u32) -> usize {
-        self.edges
-            .partition_point(|&e| e < len)
-            .min(self.edges.len() - 1)
+    /// The fitted bucket upper edges (strictly ascending).
+    pub fn edges(&self) -> &[u32] {
+        &self.edges
     }
 }
 
 impl LengthPredictor for BucketClassifier {
     fn predict(&self, req: &Request) -> u32 {
-        let mut b = self.true_bucket(req.target_gen_len.max(1));
-        if self.accuracy < 1.0 {
-            let mut rng = per_request_rng(self.seed, req.id);
-            if rng.f64() >= self.accuracy {
-                // Ordinal confusion: slip one bucket up or down.
-                let up = rng.next_u64() & 1 == 1;
-                if up {
-                    b = (b + 1).min(self.edges.len() - 1);
-                } else {
-                    b = b.saturating_sub(1);
-                }
-            }
-        }
-        self.edges[b].max(1)
+        bucket_predict(&self.edges, self.accuracy, self.seed, req)
     }
 
     fn name(&self) -> &'static str {
@@ -363,19 +421,59 @@ mod tests {
         let c = BucketClassifier::fit_from_lengths((1..=1000).collect(), 10, 0.7, 5);
         let exact = BucketClassifier::fit_from_lengths((1..=1000).collect(), 10, 1.0, 5);
         let n = 4000u64;
-        // Sample truths inside the fitted range away from the clamp edges.
-        let confused = (0..n)
-            .filter(|&id| {
-                let truth = 100 + ((id * 37) % 800) as u32;
-                let r = req(id, truth);
-                c.predict(&r) != exact.predict(&r)
-            })
-            .count();
-        let rate = confused as f64 / n as f64;
-        assert!(
-            (rate - 0.3).abs() < 0.08,
-            "confusion rate {rate} not near 1 - accuracy"
-        );
+        let rate_over = |truth_of: &dyn Fn(u64) -> u32| {
+            let confused = (0..n)
+                .filter(|&id| {
+                    let truth = truth_of(id);
+                    let r = req(id, truth);
+                    c.predict(&r) != exact.predict(&r)
+                })
+                .count();
+            confused as f64 / n as f64
+        };
+        // Interior buckets.
+        let interior = rate_over(&|id| 100 + ((id * 37) % 800) as u32);
+        // Edge buckets: the first (truths ≤ 100) and last (truths > 900)
+        // must see the same effective confusion rate — the inward
+        // reflection makes every error draw move the prediction, where the
+        // old saturating slip silently dropped half of them.
+        let first = rate_over(&|id| 1 + ((id * 37) % 100) as u32);
+        let last = rate_over(&|id| 901 + ((id * 37) % 100) as u32);
+        for (name, rate) in [("interior", interior), ("first", first), ("last", last)] {
+            assert!(
+                (rate - 0.3).abs() < 0.08,
+                "{name}-bucket confusion rate {rate} not near 1 - accuracy"
+            );
+        }
+    }
+
+    #[test]
+    fn degenerate_fit_dedupes_collapsed_edges() {
+        // More buckets than samples: the quantile cut lands several edges
+        // on the same value; they must collapse to distinct edges instead
+        // of leaving phantom buckets that `partition_point` can never hit.
+        let c = BucketClassifier::fit_from_lengths(vec![7, 7, 7], 8, 1.0, 0);
+        assert_eq!(c.edges(), &[7]);
+        assert_eq!(c.predict(&req(1, 3)), 7);
+        assert_eq!(c.predict(&req(2, 7)), 7);
+        assert_eq!(c.predict(&req(3, 999)), 7);
+
+        // Heavy duplicates: 90% of the sample is one value.
+        let mut lengths = vec![50u32; 900];
+        lengths.extend(1..=100u32);
+        let c = BucketClassifier::fit_from_lengths(lengths, 10, 1.0, 0);
+        let e = c.edges();
+        assert!(e.windows(2).all(|w| w[0] < w[1]), "edges not strictly ascending: {e:?}");
+        assert!(e.contains(&50));
+        assert_eq!(*e.last().unwrap(), 100, "last edge is the sample max");
+
+        // A single-bucket classifier draws no confusion at all: with one
+        // edge there is no adjacent bucket to slip into.
+        let c = BucketClassifier::fit_from_lengths(vec![9, 9, 9, 9], 4, 0.0, 3);
+        assert_eq!(c.edges(), &[9]);
+        for id in 0..64 {
+            assert_eq!(c.predict(&req(id, 5)), 9);
+        }
     }
 
     #[test]

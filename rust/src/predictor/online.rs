@@ -1,0 +1,284 @@
+//! Online quantile-bucket predictor: the continuous-refit direction of
+//! proxy-model serving (Qiu et al., arXiv 2404.08509 keep their predictor
+//! fresh against the live request mix instead of trusting a one-shot fit).
+//!
+//! [`OnlineBuckets`] predicts exactly like
+//! [`crate::predictor::BucketClassifier`] — quantile bucket upper edges
+//! with an accuracy/confusion knob — but its edges are *refit from served
+//! traffic*: every completed request's true generation length enters a
+//! sliding window (a ring buffer of the most recent `window` completions),
+//! and on a deterministic count-based schedule the edges are recut from
+//! the window. A workload whose length distribution drifts mid-run
+//! (deployments change, a new tenant arrives, prompts get longer) walks
+//! the edges to the new distribution within one window, where a static
+//! fit would keep predicting the stale quantiles forever — the
+//! `figdrift` figure plots exactly that comparison.
+//!
+//! Determinism: the refit schedule is "every `refit_every` observations",
+//! a pure function of the completion count; completions arrive in DES
+//! event order, which is itself a deterministic function of the run seed.
+//! No wall clock, no sampling — identical seeds give identical refit
+//! points, edges, and predictions.
+
+use crate::core::Request;
+use crate::workload::distributions::LengthDistribution;
+
+use super::{bucket_predict, quantile_edges, BucketClassifier, LengthPredictor};
+
+/// A quantile-bucket classifier that refits its edges online from
+/// completed-request true lengths (see module docs).
+#[derive(Debug, Clone)]
+pub struct OnlineBuckets {
+    /// Current bucket upper edges (strictly ascending). Empty until the
+    /// first refit when constructed cold.
+    edges: Vec<u32>,
+    buckets: u32,
+    accuracy: f64,
+    seed: u64,
+    /// Prediction before any edges exist (cold start): the conservative
+    /// worst case the caller chooses, typically `max_gen_len` — identical
+    /// to scheduling without a predictor.
+    fallback: u32,
+    /// Ring buffer of the most recent true lengths, `head` is the next
+    /// write position once the buffer is full.
+    window: Vec<u32>,
+    cap: usize,
+    head: usize,
+    /// Observations since the last refit; refitting every `refit_every`
+    /// keeps the schedule deterministic and the amortized cost at
+    /// O(log window) comparisons per completion.
+    since_refit: u64,
+    refit_every: u64,
+    observed: u64,
+    refits: u64,
+    /// Reusable sort buffer for refits.
+    scratch: Vec<u32>,
+}
+
+impl OnlineBuckets {
+    /// Default sliding-window size (completions retained for refitting).
+    pub const DEFAULT_WINDOW: usize = 4096;
+
+    /// Refit cadence for a window of `cap`: often enough to track drift
+    /// within a fraction of the window, rarely enough that the O(w log w)
+    /// recut amortizes to a few comparisons per completion.
+    fn cadence(cap: usize) -> u64 {
+        ((cap / 8) as u64).clamp(32, 1024)
+    }
+
+    /// Cold start: no edges yet — every prediction is `fallback` (pass the
+    /// generation cap for worst-case reservations) until the first refit.
+    pub fn cold(
+        buckets: u32,
+        accuracy: f64,
+        window: usize,
+        seed: u64,
+        fallback: u32,
+    ) -> OnlineBuckets {
+        assert!(buckets >= 1, "need at least one bucket");
+        assert!(
+            (0.0..=1.0).contains(&accuracy),
+            "accuracy must be in [0, 1]"
+        );
+        let cap = window.max(1);
+        OnlineBuckets {
+            edges: Vec::new(),
+            buckets,
+            accuracy,
+            seed,
+            fallback: fallback.max(1),
+            window: Vec::with_capacity(cap),
+            cap,
+            head: 0,
+            since_refit: 0,
+            refit_every: Self::cadence(cap),
+            observed: 0,
+            refits: 0,
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Start from a prior fit (what the registry builds: the deployment
+    /// calibrates against its assumed traffic, then refits as the real
+    /// traffic comes in). `buckets` is the count future refits cut — kept
+    /// explicit rather than derived from the prior, whose own count may
+    /// have collapsed under edge deduplication (a degenerate prior must
+    /// not pin every future refit to one bucket after traffic widens).
+    pub fn with_prior(
+        prior: &BucketClassifier,
+        buckets: u32,
+        accuracy: f64,
+        window: usize,
+        seed: u64,
+        fallback: u32,
+    ) -> OnlineBuckets {
+        let mut p = OnlineBuckets::cold(buckets, accuracy, window, seed, fallback);
+        p.edges = prior.edges().to_vec();
+        p
+    }
+
+    /// [`Self::with_prior`] against a workload's analytic length
+    /// distribution, mirroring
+    /// [`BucketClassifier::fit_distribution`].
+    pub fn with_prior_distribution(
+        dist: &LengthDistribution,
+        buckets: u32,
+        accuracy: f64,
+        window: usize,
+        seed: u64,
+        fallback: u32,
+    ) -> OnlineBuckets {
+        let prior = BucketClassifier::fit_distribution(dist, buckets, accuracy, seed);
+        OnlineBuckets::with_prior(&prior, buckets, accuracy, window, seed, fallback)
+    }
+
+    /// Current bucket upper edges (empty before the first refit of a cold
+    /// start).
+    pub fn edges(&self) -> &[u32] {
+        &self.edges
+    }
+
+    /// Completions observed so far.
+    pub fn observed(&self) -> u64 {
+        self.observed
+    }
+
+    /// Refits performed so far.
+    pub fn refits(&self) -> u64 {
+        self.refits
+    }
+
+    /// Recut the edges from the current window contents.
+    fn refit(&mut self) {
+        self.scratch.clear();
+        self.scratch.extend_from_slice(&self.window);
+        self.edges = quantile_edges(&mut self.scratch, self.buckets);
+        self.since_refit = 0;
+        self.refits += 1;
+    }
+}
+
+impl LengthPredictor for OnlineBuckets {
+    fn predict(&self, req: &Request) -> u32 {
+        if self.edges.is_empty() {
+            return self.fallback;
+        }
+        bucket_predict(&self.edges, self.accuracy, self.seed, req)
+    }
+
+    fn observe(&mut self, _req: &Request, true_len: u32) -> bool {
+        let t = true_len.max(1);
+        if self.window.len() < self.cap {
+            self.window.push(t);
+        } else {
+            self.window[self.head] = t;
+            self.head = (self.head + 1) % self.cap;
+        }
+        self.observed += 1;
+        self.since_refit += 1;
+        if self.since_refit >= self.refit_every {
+            self.refit();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "online"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::distributions::WorkloadKind;
+
+    fn req(id: u64, gen: u32) -> Request {
+        Request::new(id, 0.0, 64, gen)
+    }
+
+    #[test]
+    fn cold_start_predicts_fallback_until_first_refit() {
+        let mut p = OnlineBuckets::cold(4, 1.0, 256, 7, 1024);
+        assert_eq!(p.predict(&req(1, 50)), 1024);
+        let cadence = OnlineBuckets::cadence(256);
+        let mut refitted = false;
+        for id in 0..cadence {
+            refitted |= p.observe(&req(id, 100), 100);
+        }
+        assert!(refitted, "cadence-many observations must trigger a refit");
+        assert_eq!(p.refits(), 1);
+        assert_eq!(p.edges(), &[100], "uniform window collapses to one edge");
+        assert_eq!(p.predict(&req(99, 50)), 100);
+    }
+
+    #[test]
+    fn prior_start_predicts_like_the_static_fit() {
+        let dist = WorkloadKind::CodeFuse.gen_dist(1024);
+        let prior = BucketClassifier::fit_distribution(&dist, 8, 0.85, 3);
+        let online = OnlineBuckets::with_prior_distribution(&dist, 8, 0.85, 1024, 3, 1024);
+        assert_eq!(online.edges(), prior.edges());
+        // Same seed → same confusion draws → identical predictions until
+        // the first refit diverges the edges.
+        for id in 0..200u64 {
+            let r = req(id, 1 + (id * 13 % 900) as u32);
+            assert_eq!(online.predict(&r), prior.predict(&r));
+        }
+    }
+
+    #[test]
+    fn window_slides_and_tracks_drift() {
+        let mut p = OnlineBuckets::cold(4, 1.0, 128, 1, 1024);
+        // Phase 1: short lengths around 64.
+        for id in 0..256u64 {
+            p.observe(&req(id, 64), 64);
+        }
+        assert_eq!(*p.edges().last().unwrap(), 64);
+        // Phase 2: the distribution shifts to 512; once the window has
+        // turned over and a refit fires, the edges must follow.
+        for id in 256..640u64 {
+            p.observe(&req(id, 512), 512);
+        }
+        assert_eq!(p.edges(), &[512], "edges must track the drifted window");
+        assert_eq!(p.predict(&req(9999, 80)), 512);
+        assert!(p.refits() >= 2);
+        assert_eq!(p.observed(), 640);
+    }
+
+    #[test]
+    fn collapsed_prior_does_not_pin_future_refits() {
+        // A degenerate prior dedupes to a single edge; the online variant
+        // must still cut the *requested* bucket count once real traffic
+        // spreads out.
+        let prior = BucketClassifier::fit_from_lengths(vec![7, 7, 7], 4, 1.0, 0);
+        assert_eq!(prior.edges(), &[7]);
+        let mut p = OnlineBuckets::with_prior(&prior, 4, 1.0, 64, 0, 1024);
+        assert_eq!(p.edges(), &[7]);
+        for id in 0..64u64 {
+            let len = 100 + (id as u32 % 4) * 100; // 100/200/300/400 evenly
+            p.observe(&req(id, len), len);
+        }
+        assert_eq!(
+            p.edges(),
+            &[100, 200, 300, 400],
+            "refit must honor the requested 4 buckets, not the prior's 1"
+        );
+    }
+
+    #[test]
+    fn refit_schedule_is_deterministic() {
+        let run = || {
+            let mut p = OnlineBuckets::cold(8, 0.8, 64, 5, 1024);
+            let mut log = Vec::new();
+            for id in 0..500u64 {
+                let len = 1 + (id * 37 % 700) as u32;
+                if p.observe(&req(id, len), len) {
+                    log.push((id, p.edges().to_vec()));
+                }
+            }
+            (log, p.predict(&req(777, 350)))
+        };
+        assert_eq!(run(), run(), "same stream must give same refits and edges");
+    }
+}

@@ -10,10 +10,12 @@
 
 use crate::workload::distributions::WorkloadKind;
 
-use super::{BucketClassifier, LengthPredictor, NoisyOracle, Oracle, PercentileConst};
+use super::{
+    BucketClassifier, LengthPredictor, NoisyOracle, OnlineBuckets, Oracle, PercentileConst,
+};
 
 /// Canonical names of the built-in predictors.
-pub const BUILTIN_PREDICTORS: [&str; 4] = ["oracle", "noisy", "bucket", "percentile"];
+pub const BUILTIN_PREDICTORS: [&str; 5] = ["oracle", "noisy", "bucket", "online", "percentile"];
 
 /// Case-insensitive canonicalization of a predictor name (no `:param`
 /// suffix; see [`PredictorSpec::parse`] for the full spec syntax).
@@ -23,6 +25,7 @@ pub fn canonical_predictor_name(s: &str) -> Option<&'static str> {
         "oracle" | "exact" => Some("oracle"),
         "noisy" | "noisy-oracle" => Some("noisy"),
         "bucket" | "buckets" | "classifier" => Some("bucket"),
+        "online" | "online-buckets" => Some("online"),
         "percentile" | "const" => Some("percentile"),
         _ => None,
     }
@@ -54,6 +57,15 @@ pub enum PredictorSpec {
         accuracy: f64,
         workload: WorkloadKind,
     },
+    /// Online quantile-bucket classifier: starts from a prior fit on the
+    /// workload's distribution, then refits its edges from a sliding
+    /// window of the most recent `window` completed-request lengths.
+    Online {
+        window: usize,
+        buckets: u32,
+        accuracy: f64,
+        workload: WorkloadKind,
+    },
     /// Fixed workload percentile for every request.
     Percentile { pct: f64, workload: WorkloadKind },
 }
@@ -63,10 +75,16 @@ impl PredictorSpec {
     pub const DEFAULT_BUCKETS: u32 = 8;
     pub const DEFAULT_ACCURACY: f64 = 0.85;
     pub const DEFAULT_PCT: f64 = 90.0;
+    pub const DEFAULT_WINDOW: usize = OnlineBuckets::DEFAULT_WINDOW;
+    /// Upper bound on `bucket:<count>` (quantile cuts of a 64Ki
+    /// calibration sample — more buckets than samples is meaningless).
+    pub const MAX_BUCKETS: u32 = 65_536;
+    /// Upper bound on `online:<window>` (the window is pre-allocated).
+    pub const MAX_WINDOW: usize = 1 << 24;
 
     /// Parse `name` or `name:param` (e.g. `noisy:0.25`, `bucket:8`,
-    /// `percentile:90`). `workload` supplies the length distribution the
-    /// fitted predictors calibrate against.
+    /// `online:4096`, `percentile:90`). `workload` supplies the length
+    /// distribution the fitted predictors calibrate against.
     pub fn parse(s: &str, workload: WorkloadKind) -> Result<PredictorSpec, String> {
         let (name, param) = match s.split_once(':') {
             Some((n, p)) => (n, Some(p.trim())),
@@ -80,6 +98,18 @@ impl PredictorSpec {
                 })
                 .transpose()
         };
+        // Integer-valued knobs (bucket counts, window sizes) must actually
+        // be integers in a sane range — an unchecked `as` cast would turn
+        // `online:1e18` into a capacity-overflow abort instead of an error.
+        let parse_count = |what: &str, max: u64| -> Result<Option<u64>, String> {
+            match parse_param(what)? {
+                None => Ok(None),
+                Some(v) if v.fract() == 0.0 && v >= 1.0 && v <= max as f64 => Ok(Some(v as u64)),
+                Some(v) => Err(format!(
+                    "predictor '{name}': {what} must be an integer in [1, {max}] (got '{v}')"
+                )),
+            }
+        };
         Ok(match parse_predictor_name(name)? {
             "oracle" => {
                 if let Some(p) = param {
@@ -91,9 +121,17 @@ impl PredictorSpec {
                 sigma: parse_param("sigma")?.unwrap_or(Self::DEFAULT_SIGMA),
             },
             "bucket" => PredictorSpec::Bucket {
-                buckets: parse_param("bucket count")?
-                    .map(|b| b.max(1.0) as u32)
+                buckets: parse_count("bucket count", Self::MAX_BUCKETS as u64)?
+                    .map(|b| b as u32)
                     .unwrap_or(Self::DEFAULT_BUCKETS),
+                accuracy: Self::DEFAULT_ACCURACY,
+                workload,
+            },
+            "online" => PredictorSpec::Online {
+                window: parse_count("window size", Self::MAX_WINDOW as u64)?
+                    .map(|w| w as usize)
+                    .unwrap_or(Self::DEFAULT_WINDOW),
+                buckets: Self::DEFAULT_BUCKETS,
                 accuracy: Self::DEFAULT_ACCURACY,
                 workload,
             },
@@ -111,6 +149,7 @@ impl PredictorSpec {
             PredictorSpec::Oracle => "oracle",
             PredictorSpec::Noisy { .. } => "noisy",
             PredictorSpec::Bucket { .. } => "bucket",
+            PredictorSpec::Online { .. } => "online",
             PredictorSpec::Percentile { .. } => "percentile",
         }
     }
@@ -123,6 +162,12 @@ impl PredictorSpec {
             PredictorSpec::Bucket {
                 buckets, accuracy, ..
             } => format!("bucket:{buckets} (accuracy {accuracy})"),
+            PredictorSpec::Online {
+                window,
+                buckets,
+                accuracy,
+                ..
+            } => format!("online:{window} ({buckets} buckets, accuracy {accuracy})"),
             PredictorSpec::Percentile { pct, .. } => format!("percentile:{pct}"),
         }
     }
@@ -144,6 +189,19 @@ impl PredictorSpec {
                 *accuracy,
                 seed,
             )),
+            PredictorSpec::Online {
+                window,
+                buckets,
+                accuracy,
+                workload,
+            } => Box::new(OnlineBuckets::with_prior_distribution(
+                &workload.gen_dist(max_gen_len),
+                *buckets,
+                *accuracy,
+                *window,
+                seed,
+                max_gen_len,
+            )),
             PredictorSpec::Percentile { pct, workload } => Box::new(
                 PercentileConst::fit_distribution(&workload.gen_dist(max_gen_len), *pct, seed),
             ),
@@ -162,6 +220,8 @@ mod tests {
         assert_eq!(parse_predictor_name("noisy_oracle"), Ok("noisy"));
         assert_eq!(parse_predictor_name(" bucket "), Ok("bucket"));
         assert_eq!(parse_predictor_name("const"), Ok("percentile"));
+        assert_eq!(parse_predictor_name("Online"), Ok("online"));
+        assert_eq!(parse_predictor_name("online_buckets"), Ok("online"));
     }
 
     #[test]
@@ -196,6 +256,24 @@ mod tests {
                 workload: w
             })
         );
+        assert_eq!(
+            PredictorSpec::parse("online:2048", w),
+            Ok(PredictorSpec::Online {
+                window: 2048,
+                buckets: PredictorSpec::DEFAULT_BUCKETS,
+                accuracy: PredictorSpec::DEFAULT_ACCURACY,
+                workload: w
+            })
+        );
+        assert_eq!(
+            PredictorSpec::parse("online", w),
+            Ok(PredictorSpec::Online {
+                window: PredictorSpec::DEFAULT_WINDOW,
+                buckets: PredictorSpec::DEFAULT_BUCKETS,
+                accuracy: PredictorSpec::DEFAULT_ACCURACY,
+                workload: w
+            })
+        );
         // Defaults when the param is omitted.
         assert_eq!(
             PredictorSpec::parse("noisy", w),
@@ -206,6 +284,13 @@ mod tests {
         assert!(PredictorSpec::parse("noisy:abc", w).is_err());
         assert!(PredictorSpec::parse("oracle:1", w).is_err());
         assert!(PredictorSpec::parse("vllm", w).is_err());
+        // Integer knobs reject absurd, fractional, and non-positive values
+        // with an error instead of casting into an abort.
+        assert!(PredictorSpec::parse("online:1e18", w).is_err());
+        assert!(PredictorSpec::parse("online:0.5", w).is_err());
+        assert!(PredictorSpec::parse("online:0", w).is_err());
+        assert!(PredictorSpec::parse("bucket:1e18", w).is_err());
+        assert!(PredictorSpec::parse("bucket:2.5", w).is_err());
     }
 
     #[test]

@@ -41,6 +41,7 @@ impl SlicedCoordinator {
             BatchingSpec::Dp { max_batch_size } => Some(DpBatcherConfig {
                 slice_len: spec.slice_len,
                 max_batch_size,
+                pred_corrected: false,
             }),
             BatchingSpec::WorkerFcfs { .. } => None,
         };
@@ -72,6 +73,39 @@ impl SlicedCoordinator {
     /// True when batches are formed centrally (DP) rather than per worker.
     pub fn coordinator_batching(&self) -> bool {
         self.dp_cfg.is_some()
+    }
+
+    /// Opt in to predicted early-return correction in the DP batcher (see
+    /// [`crate::batcher::dp`]'s module docs): batches whose members carry
+    /// `predicted_gen` stamps are costed at their predicted budget instead
+    /// of the full slice length. A semantic no-op under prediction-free
+    /// policies (unstamped requests fall back to the full budget) that
+    /// trades the optimized planner for the corrected scalar loop, so
+    /// only enable it when requests actually carry predictions — e.g. a
+    /// coordinator embedder (real-mode or custom policy) stamping
+    /// proxy-model estimates before `admit`. The built-in DES P-SCLS
+    /// policy pools per rung and builds its own corrected
+    /// `DpBatcherConfig` from `SimConfig::pred_corrected_dp` rather than
+    /// going through this coordinator. No effect under worker-locus
+    /// (FCFS) batching.
+    pub fn set_pred_correction(&mut self, on: bool) {
+        if let Some(cfg) = self.dp_cfg.as_mut() {
+            cfg.pred_corrected = on;
+        }
+    }
+
+    /// Whether predicted early-return correction is active.
+    pub fn pred_correction(&self) -> bool {
+        self.dp_cfg.as_ref().map(|c| c.pred_corrected).unwrap_or(false)
+    }
+
+    /// Batches the most recent [`Self::schedule_tick`] costed at a
+    /// predicted budget strictly below the slice cap (always 0 with the
+    /// correction off, and 0 after a tick that drained nothing) —
+    /// embedders fold this into `RunMetrics::corrected_batches` after
+    /// each tick.
+    pub fn corrected_batches_last_tick(&self) -> usize {
+        self.dp_scratch.corrected_batches()
     }
 
     /// True when this policy runs on schedule ticks (PM/AB/LB/SCLS).
@@ -116,6 +150,9 @@ impl SlicedCoordinator {
         let drained = self.tick_reqs.len();
         if drained == 0 {
             self.assign_buf.clear();
+            // An empty tick forms no batches: keep the corrected-batch
+            // accessor truthful instead of re-reporting the last one.
+            self.dp_scratch.reset_corrected_batches();
             return 0;
         }
         let dp_cfg = self
@@ -219,6 +256,21 @@ mod tests {
         // Adaptive interval floors at gamma while any worker is idle-ish.
         let t = c.next_interval().unwrap();
         assert!(t >= preset.gamma * 0.5);
+    }
+
+    #[test]
+    fn pred_correction_toggles_only_under_dp_batching() {
+        let preset = EnginePreset::paper(EngineKind::Ds);
+        let mut c = SlicedCoordinator::new(&SchedulerSpec::scls(&preset, 128), 2);
+        assert!(!c.pred_correction());
+        c.set_pred_correction(true);
+        assert!(c.pred_correction());
+        c.set_pred_correction(false);
+        assert!(!c.pred_correction());
+        // Worker-locus batching has no DP config to flag.
+        let mut f = SlicedCoordinator::new(&SchedulerSpec::sls(&preset, 1024), 2);
+        f.set_pred_correction(true);
+        assert!(!f.pred_correction());
     }
 
     #[test]

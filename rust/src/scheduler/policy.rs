@@ -119,6 +119,22 @@ impl<'a> SimCtx<'a> {
         self.metrics.wasted_kv_token_steps += rec.wasted_tokens;
         self.sink.on_prediction(self.now, &rec);
     }
+
+    /// Log an online-predictor refit (a completion observation that
+    /// triggered [`crate::predictor::LengthPredictor::observe`] to recut
+    /// the model): bumps `predictor_refits` and streams to sinks.
+    pub fn record_refit(&mut self) {
+        self.metrics.predictor_refits += 1;
+        self.sink.on_predictor_refit(self.now);
+    }
+
+    /// Log a batch the DP batcher costed at a predicted budget strictly
+    /// below the slice cap (predicted-correction opt-in only): bumps
+    /// `corrected_batches` and streams to sinks.
+    pub fn record_corrected_batch(&mut self) {
+        self.metrics.corrected_batches += 1;
+        self.sink.on_corrected_batch(self.now);
+    }
 }
 
 /// A scheduling policy: the full decision surface of one cluster

@@ -42,6 +42,11 @@ pub struct SimConfig {
     /// build from — ignored by every other policy. Defaults to the exact
     /// oracle.
     pub predictor: PredictorSpec,
+    /// Opt in to predicted early-return correction in the DP batcher
+    /// (P-SCLS only; see [`crate::batcher::dp`]): batches whose members'
+    /// predictions fall below the slice cap are costed at the predicted
+    /// budget. Off by default — the legacy DP path stays bit-exact.
+    pub pred_corrected_dp: bool,
 }
 
 impl SimConfig {
@@ -52,12 +57,19 @@ impl SimConfig {
             max_gen_len,
             seed,
             predictor: PredictorSpec::Oracle,
+            pred_corrected_dp: false,
         }
     }
 
     /// Select the length predictor P-SCLS / P-CB use.
     pub fn with_predictor(mut self, predictor: PredictorSpec) -> SimConfig {
         self.predictor = predictor;
+        self
+    }
+
+    /// Toggle predicted early-return correction in the DP batcher.
+    pub fn with_pred_corrected_dp(mut self, on: bool) -> SimConfig {
+        self.pred_corrected_dp = on;
         self
     }
 }
@@ -129,6 +141,7 @@ pub struct ClusterBuilder {
     max_gen_len: u32,
     seed: u64,
     predictor: PredictorSpec,
+    pred_corrected_dp: bool,
 }
 
 impl Default for ClusterBuilder {
@@ -140,6 +153,7 @@ impl Default for ClusterBuilder {
             max_gen_len: 1024,
             seed: 42,
             predictor: PredictorSpec::Oracle,
+            pred_corrected_dp: false,
         }
     }
 }
@@ -175,10 +189,18 @@ impl ClusterBuilder {
         self
     }
 
+    /// Opt in to predicted early-return correction in the DP batcher
+    /// (P-SCLS only).
+    pub fn pred_corrected_dp(mut self, on: bool) -> Self {
+        self.pred_corrected_dp = on;
+        self
+    }
+
     pub fn build(self) -> Simulation {
         Simulation::new(
             SimConfig::new(self.workers, self.engine, self.max_gen_len, self.seed)
-                .with_predictor(self.predictor),
+                .with_predictor(self.predictor)
+                .with_pred_corrected_dp(self.pred_corrected_dp),
         )
     }
 }

@@ -137,6 +137,13 @@ impl SlicedPolicy {
                 last_done: 0.0,
             })
             .collect();
+        // `pred_corrected_dp` is deliberately NOT forwarded here: plain
+        // sliced policies never stamp `predicted_gen`, so the correction
+        // would change nothing semantically while trading the optimized
+        // DP planner for the scalar corrected loop. Prediction-aware
+        // callers that share this coordinator (the real-mode driver, or a
+        // custom policy stamping predictions before `admit`) opt in via
+        // `SlicedCoordinator::set_pred_correction`.
         SlicedPolicy {
             coord: SlicedCoordinator::new(spec, cfg.workers),
             est,
@@ -475,6 +482,15 @@ struct PredWorkerState {
 ///   ⌈generated/S⌉ logs the unused rungs as `wasted_kv_token_steps`
 ///   (rung-granular: `(reserved − needed)·S` token-slots).
 ///
+/// Every completion is also fed back through
+/// [`LengthPredictor::observe`], so an online predictor
+/// ([`crate::predictor::OnlineBuckets`]) refits its buckets from the
+/// traffic it actually served. With `SimConfig::pred_corrected_dp` the
+/// per-rung DP additionally costs batches at their *predicted* budget
+/// instead of the rung's worst case (see [`crate::batcher::dp`]), so the
+/// load ledger and LPT offload see estimates that anticipate early
+/// returns.
+///
 /// With the [`crate::predictor::Oracle`] predictor every request completes
 /// in exactly one pass, which is never more passes than baseline SCLS —
 /// the invariant `props_predictor.rs` checks on fixed seeds.
@@ -492,6 +508,8 @@ pub struct PredictiveSlicedPolicy {
     workers: Vec<PredWorkerState>,
     max_gen_len: u32,
     max_rung: u32,
+    /// Cost rung batches at their predicted budget (`SimConfig::pred_corrected_dp`).
+    pred_corrected: bool,
     // Reused per-tick buffers (allocation-lean discipline from PR 1).
     tick_reqs: Vec<Request>,
     batch_buf: Vec<Batch>,
@@ -542,6 +560,7 @@ impl PredictiveSlicedPolicy {
             workers,
             max_gen_len: cfg.max_gen_len,
             max_rung,
+            pred_corrected: cfg.pred_corrected_dp,
             tick_reqs: Vec::new(),
             batch_buf: Vec::new(),
             staged: Vec::new(),
@@ -611,6 +630,7 @@ impl SchedulingPolicy for PredictiveSlicedPolicy {
                         BatchingSpec::Dp { max_batch_size } => max_batch_size,
                         BatchingSpec::WorkerFcfs { batch_size } => Some(batch_size),
                     },
+                    pred_corrected: self.pred_corrected,
                 };
                 dp_batch_sorted_into(
                     &mut self.tick_reqs,
@@ -620,6 +640,11 @@ impl SchedulingPolicy for PredictiveSlicedPolicy {
                     &mut self.dp_scratch,
                     &mut self.batch_buf,
                 );
+                // Correction accounting: the batcher counted how many
+                // batches it costed strictly below the rung's slice cap.
+                for _ in 0..self.dp_scratch.corrected_batches() {
+                    ctx.record_corrected_batch();
+                }
                 self.staged
                     .extend(self.batch_buf.drain(..).map(|batch| (budget, batch)));
             }
@@ -670,6 +695,11 @@ impl SchedulingPolicy for PredictiveSlicedPolicy {
         let s = self.spec.slice_len.max(1);
         for r in batch.requests {
             if r.is_finished() {
+                // Completion feedback: online predictors refit from the
+                // true generated length.
+                if self.predictor.observe(&r, r.generated) {
+                    ctx.record_refit();
+                }
                 // Over-prediction accounting, rung-granular: rungs reserved
                 // (seeded rung + one per extra pass) vs rungs needed.
                 let k0 = self.rung_of(r.predicted_gen.unwrap_or(1)) as u64;
@@ -720,6 +750,8 @@ impl SchedulingPolicy for PredictiveSlicedPolicy {
 /// over-predicted completions log their unused reservation. The KV-budget
 /// invariant therefore holds under arbitrary prediction error — the
 /// property `props_predictor.rs` hammers across randomized error draws.
+/// Every completion is fed back through [`LengthPredictor::observe`], so
+/// an online predictor refits its reservation model from served traffic.
 pub struct PredictiveCbPolicy {
     workers: Vec<PredictiveContinuousWorker>,
     looping: Vec<bool>,
@@ -806,6 +838,11 @@ impl SchedulingPolicy for PredictiveCbPolicy {
         let exits = self.workers[wi].finish_iteration(ctx.now);
         for (r, unused) in exits.done {
             self.last_done[wi] = ctx.now;
+            // Completion feedback: online predictors refit from the true
+            // generated length.
+            if self.predictor.observe(&r, r.generated) {
+                ctx.record_refit();
+            }
             if unused > 0 {
                 ctx.record_prediction(PredictionRecord {
                     id: r.id,

@@ -79,6 +79,7 @@ pub fn run_sliced_reference(trace: &Trace, spec: &SchedulerSpec, cfg: &SimConfig
         BatchingSpec::Dp { max_batch_size } => Some(DpBatcherConfig {
             slice_len: spec.slice_len,
             max_batch_size,
+            pred_corrected: false,
         }),
         BatchingSpec::WorkerFcfs { .. } => None,
     };

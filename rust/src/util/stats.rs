@@ -58,7 +58,10 @@ pub fn rmse(pred: &[f64], obs: &[f64]) -> f64 {
     (se / pred.len() as f64).sqrt()
 }
 
-/// Fixed-bin histogram over [lo, hi); out-of-range values clamp to edge bins.
+/// Fixed-bin histogram over [lo, hi); out-of-range values (±∞ included)
+/// clamp to the edge bins. NaN samples are skipped entirely — a NaN would
+/// otherwise clamp to NaN, cast to bin 0, and still bump `count`,
+/// silently skewing `pdf`/`cdf`.
 #[derive(Debug, Clone)]
 pub struct Histogram {
     pub lo: f64,
@@ -79,6 +82,9 @@ impl Histogram {
     }
 
     pub fn add(&mut self, x: f64) {
+        if x.is_nan() {
+            return;
+        }
         let n = self.bins.len();
         let idx = ((x - self.lo) / (self.hi - self.lo) * n as f64).floor();
         let idx = idx.clamp(0.0, (n - 1) as f64) as usize;
@@ -210,6 +216,24 @@ mod tests {
         h.add(-5.0);
         h.add(5.0);
         assert_eq!(h.bins, vec![1, 1]);
+        h.add(f64::NEG_INFINITY);
+        h.add(f64::INFINITY);
+        assert_eq!(h.bins, vec![2, 2]);
+        assert_eq!(h.count, 4);
+    }
+
+    #[test]
+    fn histogram_skips_nan() {
+        let mut h = Histogram::new(0.0, 10.0, 4);
+        h.add(1.0);
+        h.add(f64::NAN);
+        h.add(9.0);
+        // NaN neither lands in a bin nor inflates the count, so the
+        // pdf/cdf normalization stays truthful.
+        assert_eq!(h.count, 2);
+        assert_eq!(h.bins, vec![1, 0, 0, 1]);
+        let cdf = h.cdf();
+        assert!((cdf[3] - 1.0).abs() < 1e-12);
     }
 
     #[test]

@@ -53,6 +53,7 @@ fn dp_batch_partitions_without_loss_or_duplication() {
             &DpBatcherConfig {
                 slice_len,
                 max_batch_size: if g.bool() { Some(g.u32(1, 16)) } else { None },
+                pred_corrected: false,
             },
         );
         let mut got: Vec<u64> = batches.iter().flat_map(|b| b.requests.iter().map(|r| r.id)).collect();
@@ -79,6 +80,7 @@ fn dp_batches_are_contiguous_in_sorted_order_and_feasible() {
             &DpBatcherConfig {
                 slice_len,
                 max_batch_size: cap,
+                pred_corrected: false,
             },
         );
         let mut last_max = 0u32;
@@ -127,6 +129,7 @@ fn dp_total_time_never_worse_than_fcfs_or_singletons() {
             &DpBatcherConfig {
                 slice_len,
                 max_batch_size: None,
+                pred_corrected: false,
             },
         );
         // Baseline 1: every request its own batch.
@@ -169,6 +172,7 @@ fn dp_respects_algorithm2_feasibility_exactly() {
             &DpBatcherConfig {
                 slice_len: s,
                 max_batch_size: None,
+                pred_corrected: false,
             },
         ) {
             let l = b.input_len() + s;

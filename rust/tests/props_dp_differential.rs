@@ -75,6 +75,7 @@ fn gen_cfg(g: &mut Gen) -> DpBatcherConfig {
     DpBatcherConfig {
         slice_len: *g.pick(&[16u32, 32, 64, 128, 256, 512]),
         max_batch_size: if g.bool() { Some(g.u32(1, 24)) } else { None },
+        pred_corrected: false,
     }
 }
 
@@ -157,6 +158,7 @@ fn optimized_dp_matches_reference_under_tight_memory_and_caps() {
         let cfg = DpBatcherConfig {
             slice_len: 128,
             max_batch_size: Some(g.u32(1, 4)),
+            pred_corrected: false,
         };
         let pool = gen_pool(g, 150);
         let fast = dp_batch(pool.clone(), &est, &mem, &cfg);
@@ -202,6 +204,7 @@ fn optimized_dp_matches_reference_on_ascending_capacity_tables() {
         let cfg = DpBatcherConfig {
             slice_len: *g.pick(&[16u32, 32, 64, 128]),
             max_batch_size: None,
+            pred_corrected: false,
         };
         let pool = gen_pool(g, 150);
         let fast = dp_batch(pool.clone(), &est, &mem, &cfg);

@@ -12,6 +12,13 @@
 //!    baseline SCLS-CB on the default CodeFuse configuration (rate 20,
 //!    600 s, 4 workers), and heavy prediction noise does not come for
 //!    free.
+//! 4. **Online refit** — `OnlineBuckets` converges to the static
+//!    `BucketClassifier` fit on a stationary workload, and refitting
+//!    mid-run never breaks the P-CB no-OOM invariant.
+//! 5. **Predicted DP correction** — with the oracle predictor and
+//!    `pred_corrected_dp`, P-SCLS's serve estimates track actual serving
+//!    strictly better than the full-budget estimates, without losing
+//!    throughput on the acceptance cell.
 
 use std::collections::HashMap;
 
@@ -54,12 +61,18 @@ fn p_cb_never_exceeds_kv_budget_under_any_error_draw() {
         let rate = *g.pick(&[2.0, 5.0, 10.0]);
         let workers = *g.pick(&[1usize, 2, 4]);
         let seed = g.u64();
-        let predictor = match g.usize(0, 3) {
+        let predictor = match g.usize(0, 4) {
             0 => PredictorSpec::Oracle,
             1 => PredictorSpec::Noisy {
                 sigma: *g.pick(&[0.1, 0.5, 1.0, 2.0]),
             },
             2 => PredictorSpec::Bucket {
+                buckets: *g.pick(&[2u32, 4, 8]),
+                accuracy: *g.pick(&[0.5, 0.85, 1.0]),
+                workload: WorkloadKind::CodeFuse,
+            },
+            3 => PredictorSpec::Online {
+                window: *g.pick(&[64usize, 256, 1024]),
                 buckets: *g.pick(&[2u32, 4, 8]),
                 accuracy: *g.pick(&[0.5, 0.85, 1.0]),
                 workload: WorkloadKind::CodeFuse,
@@ -191,6 +204,136 @@ fn oracle_p_cb_beats_scls_cb_on_default_codefuse_trace() {
     assert_eq!(p.underpredicted, 0);
     assert_eq!(p.overpredicted, 0);
     assert_eq!(p.wasted_kv_token_steps, 0);
+}
+
+// ---------------------------------------------------------------------------
+// 4. Online refit: convergence + invariants under refitting
+// ---------------------------------------------------------------------------
+
+#[test]
+fn online_buckets_converge_to_static_fit_on_stationary_workload() {
+    use scls::core::Request;
+    use scls::predictor::{BucketClassifier, LengthPredictor, OnlineBuckets};
+    use scls::util::rng::Rng;
+
+    let dist = WorkloadKind::CodeFuse.gen_dist(1024);
+    let stat = BucketClassifier::fit_distribution(&dist, 8, 1.0, 7);
+    let mut online = OnlineBuckets::cold(8, 1.0, 4096, 7, 1024);
+    let mut rng = Rng::new(1234);
+    for id in 0..20_000u64 {
+        let len = dist.sample(&mut rng);
+        online.observe(&Request::new(id, 0.0, 64, len), len);
+    }
+    assert!(online.refits() > 0);
+    let se = stat.edges();
+    let oe = online.edges();
+    assert_eq!(
+        oe.len(),
+        se.len(),
+        "same workload, same bucket count: {oe:?} vs {se:?}"
+    );
+    // Each refitted quantile edge must sit near the offline fit's (both
+    // are finite-sample quantiles of the same distribution; the online
+    // window is 4096 samples, so allow generous sampling slack).
+    for (o, s) in oe.iter().zip(se) {
+        let tol = (0.2 * *s as f64).max(16.0);
+        assert!(
+            (*o as f64 - *s as f64).abs() <= tol,
+            "edge {o} vs static {s} beyond tolerance {tol} ({oe:?} vs {se:?})"
+        );
+    }
+}
+
+#[test]
+fn online_refit_never_breaks_p_cb_no_oom() {
+    // The dedicated online arm of the invariant: tight budgets, a cold
+    // online predictor that refits throughout the run, eviction recovery
+    // in play — projected KV must never pass the budget and every request
+    // must drain.
+    for (seed, window) in [(11u64, 64usize), (12, 256), (13, 1024)] {
+        let mut c = cfg(2, EngineKind::Ds, seed).with_predictor(PredictorSpec::Online {
+            window,
+            buckets: 8,
+            accuracy: 0.85,
+            workload: WorkloadKind::CodeFuse,
+        });
+        c.engine.m_ava = 6144 * c.engine.kv_delta;
+        let t = trace(WorkloadKind::CodeFuse, 8.0, 40.0, seed);
+        let mut policy = PredictiveCbPolicy::new(&c, c.predictor.build(c.max_gen_len, c.seed));
+        let m = run_policy(&t, &mut policy, c.workers, &mut NullSink);
+        assert_eq!(m.completed.len(), t.len(), "requests lost (window {window})");
+        assert!(
+            policy.max_kv_observed() <= policy.kv_budget(),
+            "online P-CB projected KV past the budget: {} > {}",
+            policy.max_kv_observed(),
+            policy.kv_budget()
+        );
+        assert!(
+            m.predictor_refits > 0,
+            "a {}-request run must refit a window-{window} predictor",
+            t.len()
+        );
+    }
+}
+
+#[test]
+fn p_scls_online_predictor_completes_and_refits() {
+    let seed = 907;
+    let t = trace(WorkloadKind::CodeFuse, 8.0, 60.0, seed);
+    let c = cfg(4, EngineKind::Ds, seed).with_predictor(PredictorSpec::Online {
+        window: 256,
+        buckets: 8,
+        accuracy: 0.85,
+        workload: WorkloadKind::CodeFuse,
+    });
+    let m = run_p_scls(&t, &c, 128);
+    assert_eq!(m.completed.len(), t.len(), "online P-SCLS lost requests");
+    assert!(m.predictor_refits > 0, "completions must drive refits");
+}
+
+// ---------------------------------------------------------------------------
+// 5. Predicted early-return correction in the DP batcher
+// ---------------------------------------------------------------------------
+
+#[test]
+fn corrected_dp_tracks_actual_serving_and_keeps_throughput() {
+    // ISSUE acceptance cell: rate 20, 600 s, 4 workers, oracle predictor.
+    let t = trace(WorkloadKind::CodeFuse, 20.0, 600.0, 42);
+    let base = cfg(4, EngineKind::Ds, 42); // predictor defaults to Oracle
+    let corr = cfg(4, EngineKind::Ds, 42).with_pred_corrected_dp(true);
+    let mu = run_p_scls(&t, &base, 128);
+    let mc = run_p_scls(&t, &corr, 128);
+    assert_eq!(mu.completed.len(), t.len());
+    assert_eq!(mc.completed.len(), t.len());
+    assert!(mc.corrected_batches > 0, "oracle predictions sit below rung caps");
+    assert_eq!(base.predictor, corr.predictor, "only the correction differs");
+
+    // The mechanism: with exact predictions the corrected estimate is the
+    // estimator evaluated at the true early-return length, so the
+    // systematic rung-rounding overestimate disappears and only latency
+    // jitter remains. Mean |est − actual| must shrink.
+    let mean_err = |m: &scls::metrics::RunMetrics| {
+        m.batches
+            .iter()
+            .map(|b| (b.est_serve_time - b.actual_serve_time).abs())
+            .sum::<f64>()
+            / m.batches.len().max(1) as f64
+    };
+    let eu = mean_err(&mu);
+    let ec = mean_err(&mc);
+    assert!(
+        ec < eu,
+        "corrected estimates must track serving better: {ec} !< {eu}"
+    );
+
+    // And honest estimates must not cost throughput (the acceptance bar
+    // is corrected ≥ uncorrected; allow a sliver of simulation noise).
+    let tu = mu.summarize().throughput;
+    let tc = mc.summarize().throughput;
+    assert!(
+        tc >= tu * 0.99,
+        "corrected P-SCLS {tc} lost throughput vs uncorrected {tu}"
+    );
 }
 
 #[test]
