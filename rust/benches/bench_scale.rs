@@ -15,11 +15,15 @@
 //! A second, smaller P-CB drain (prediction-aware continuous batching
 //! with the oracle predictor) rides along so the predictor subsystem's
 //! overhead shows up in the same events/sec trajectory — its row lands
-//! under the `p_cb` key of `BENCH_scale.json`.
+//! under the `p_cb` key of `BENCH_scale.json`. A third drain runs P-SCLS
+//! with `--pred-corrected-dp` and the `online:4096` predictor (the
+//! corrected branch-and-bound planner's production shape) under the
+//! `p_scls_corrected` key, so the regression gate covers the corrected
+//! path too.
 //!
 //! Knobs (env): SCLS_SCALE_REQUESTS [1000000], SCLS_SCALE_WORKERS [64],
 //! SCLS_SCALE_RATE [2000], SCLS_SCALE_SLICE [128],
-//! SCLS_SCALE_PCB_REQUESTS [200000].
+//! SCLS_SCALE_PCB_REQUESTS [200000], SCLS_SCALE_PSCLS_REQUESTS [200000].
 //!
 //! Enforcement: set SCLS_SCALE_MAX_REGRESSION to a percentage (e.g. `10`)
 //! and the bench *fails* when events/sec drops more than that against a
@@ -37,6 +41,7 @@ use std::time::Instant;
 
 use scls::engine::presets::{EngineKind, EnginePreset};
 use scls::metrics::Tally;
+use scls::predictor::PredictorSpec;
 use scls::sim::driver::{SimConfig, Simulation};
 use scls::util::json::Json;
 use scls::workload::distributions::WorkloadKind;
@@ -126,10 +131,8 @@ fn main() {
     // the gate on its first real run.
     let path = baseline_path();
     let mut protect_baseline = false;
-    match std::fs::read_to_string(&path)
-        .ok()
-        .and_then(|s| Json::parse(&s).ok())
-    {
+    let baseline = std::fs::read_to_string(&path).ok().and_then(|s| Json::parse(&s).ok());
+    match &baseline {
         Some(base) => {
             let provisional = matches!(base.get("provisional"), Some(Json::Bool(true)));
             let prev = base.get("events_per_sec").and_then(|j| j.as_f64());
@@ -228,6 +231,69 @@ fn main() {
         pm.underpredicted, pm.overpredicted, pm.wasted_kv_token_steps
     );
 
+    // ---- P-SCLS corrected row: branch-and-bound corrected DP at scale ---
+    // Same workload shape, online:4096 predictor, --pred-corrected-dp: the
+    // production shape of the corrected planner (per-rung DP with stamped
+    // predictions), so its events/sec lands in the gate's trajectory.
+    let pscls_n = (env_u64("SCLS_SCALE_PSCLS_REQUESTS", 200_000) as usize).min(n);
+    let pscls_trace = scls::workload::Trace {
+        requests: trace.requests[..pscls_n].to_vec(),
+        config_rate: trace.config_rate,
+        duration: trace.duration,
+    };
+    let pspec = PredictorSpec::parse("online:4096", WorkloadKind::CodeFuse)
+        .expect("online:4096 is a valid predictor spelling");
+    let pscls_sim = Simulation::new(
+        SimConfig::new(workers, EnginePreset::paper(EngineKind::Ds), 1024, 42)
+            .with_predictor(pspec)
+            .with_pred_corrected_dp(true),
+    );
+    let mut pscls_tally = Tally::default();
+    let t2 = Instant::now();
+    let sm = pscls_sim
+        .run_named_with_sink(&pscls_trace, "P-SCLS", slice_len, &mut pscls_tally)
+        .expect("P-SCLS is a built-in policy");
+    let pscls_wall = t2.elapsed().as_secs_f64();
+    assert_eq!(sm.completed.len(), pscls_n, "P-SCLS corrected drain lost requests");
+    if pscls_n >= 1000 {
+        // The drain must actually exercise the corrected planner, or the
+        // row gates nothing.
+        assert!(sm.corrected_batches > 0, "corrected DP never fired on the P-SCLS drain");
+    }
+    let pscls_eps = sm.events as f64 / pscls_wall.max(1e-9);
+    println!();
+    println!(
+        "P-SCLS corrected (online:4096): drained {} requests in {pscls_wall:.3} s wall",
+        pscls_tally.completions
+    );
+    println!("P-SCLS events     {}", sm.events);
+    println!("P-SCLS events/sec {pscls_eps:.0}");
+    println!(
+        "P-SCLS corrected batches {} / refits {} / under {} / over {}",
+        sm.corrected_batches, sm.predictor_refits, sm.underpredicted, sm.overpredicted
+    );
+    // Row-level gate: a valid (non-provisional) baseline with a matching
+    // p_scls_corrected row must not regress beyond the same margin.
+    if let (Some(max_reg), Some(base)) = (max_regression, baseline.as_ref()) {
+        let provisional = matches!(base.get("provisional"), Some(Json::Bool(true)));
+        let row = base.get("p_scls_corrected");
+        let row_knob = |key: &str| row.and_then(|r| r.get(key)).and_then(|v| v.as_f64());
+        if !provisional && row_knob("requests") == Some(pscls_n as f64) {
+            if let Some(prev) = row_knob("events_per_sec").filter(|&v| v > 0.0) {
+                let delta = (pscls_eps - prev) / prev * 100.0;
+                println!(
+                    "p_scls_corrected events/sec delta vs baseline: {delta:+.2}% \
+                     (baseline {prev:.0}, now {pscls_eps:.0})"
+                );
+                assert!(
+                    delta >= -max_reg,
+                    "p_scls_corrected events/sec regressed {delta:.2}% (> {max_reg}% allowed): \
+                     baseline {prev:.0}, now {pscls_eps:.0}"
+                );
+            }
+        }
+    }
+
     let mut j = Json::obj();
     j.set("requests", n as u64)
         .set("workers", workers as u64)
@@ -251,6 +317,18 @@ fn main() {
         .set("wasted_kv_token_steps", pm.wasted_kv_token_steps)
         .set("virtual_throughput", pm.summarize().throughput);
     j.set("p_cb", pcb);
+    let mut pscls = Json::obj();
+    pscls
+        .set("requests", pscls_n as u64)
+        .set("wall_seconds", pscls_wall)
+        .set("events", sm.events)
+        .set("events_per_sec", pscls_eps)
+        .set("corrected_batches", sm.corrected_batches)
+        .set("predictor_refits", sm.predictor_refits)
+        .set("underpredicted", sm.underpredicted)
+        .set("overpredicted", sm.overpredicted)
+        .set("virtual_throughput", sm.summarize().throughput);
+    j.set("p_scls_corrected", pscls);
     if protect_baseline {
         // Gated run against a valid anchor: rewriting it would let a
         // passing-but-slower run ratchet the anchor down until a

@@ -15,7 +15,9 @@
 //! and the quadratic-reference rows see the identical pre-sorted input,
 //! making the printed speedup an apples-to-apples algorithmic comparison.
 
-use scls::batcher::{dp_plan, dp_plan_reference, DpBatcherConfig, DpScratch};
+use scls::batcher::{
+    dp_plan, dp_plan_corrected_reference, dp_plan_reference, DpBatcherConfig, DpScratch,
+};
 use scls::bench::harness::{bench, report_header};
 use scls::core::{Batch, Request};
 use scls::engine::presets::{EngineKind, EnginePreset};
@@ -40,6 +42,18 @@ fn requests(n: usize, seed: u64) -> Vec<Request> {
 fn sorted_requests(n: usize, seed: u64) -> Vec<Request> {
     let mut reqs = requests(n, seed);
     reqs.sort_by_key(|r| r.input_len);
+    reqs
+}
+
+/// Sorted pool with oracle-stamped predictions (predicted == target
+/// generation) — the shape the prediction-corrected planner sees under
+/// P-SCLS with the oracle predictor. Same pool and sort discipline as the
+/// legacy rows (stamping is per-request, so it cannot perturb the sort).
+fn sorted_predicted_requests(n: usize, seed: u64) -> Vec<Request> {
+    let mut reqs = sorted_requests(n, seed);
+    for r in &mut reqs {
+        r.predicted_gen = Some(r.target_gen_len);
+    }
     reqs
 }
 
@@ -82,6 +96,37 @@ fn main() {
             println!("{}", slow.report());
             println!(
                 "   -> dp_batch speedup vs quadratic ({rule_name}, n={n}): {:.2}x",
+                slow.mean_ns / fast.mean_ns
+            );
+        }
+    }
+
+    // Prediction-corrected planner: the branch-and-bound (dp_plan with
+    // pred_corrected) against the retained scalar reference, on oracle-
+    // stamped pools. Same planner-only discipline: identical pre-sorted
+    // input, no clone or materialization in the timed region.
+    let corr_cfg = DpBatcherConfig {
+        slice_len: 128,
+        max_batch_size: None,
+        pred_corrected: true,
+    };
+    for (rule_name, rule_preset) in [("ds", EngineKind::Ds), ("hf", EngineKind::Hf)] {
+        let rule_mem = EnginePreset::paper(rule_preset).memory_estimator();
+        for &n in &[16usize, 64, 256, 1024] {
+            let reqs = sorted_predicted_requests(n, 42);
+            let mut scratch = DpScratch::new();
+            let fast = bench(&format!("dp_corrected_bnb({n} requests, {rule_name} rule)"), || {
+                dp_plan(&reqs, &est, &rule_mem, &corr_cfg, &mut scratch);
+                scratch.cuts().len()
+            });
+            println!("{}", fast.report());
+            let slow = bench(
+                &format!("dp_corrected_scalar({n} requests, {rule_name} rule)"),
+                || dp_plan_corrected_reference(&reqs, &est, &rule_mem, &corr_cfg).len(),
+            );
+            println!("{}", slow.report());
+            println!(
+                "   -> dp_corrected speedup vs scalar ({rule_name}, n={n}): {:.2}x",
                 slow.mean_ns / fast.mean_ns
             );
         }

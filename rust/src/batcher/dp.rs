@@ -64,11 +64,51 @@
 //! correction is a no-op on prediction-free pools. Memory feasibility
 //! (`N_max`) still uses the full S — an under-predicted batch can run to
 //! the slice cap, so KV must be provisioned for the worst case; only the
-//! *time estimate* is corrected. The corrected path is an explicit opt-in
-//! precisely because its costs vary per candidate window: the affine
-//! fast path above does not apply, and the frozen differential contract
-//! (`dp_batch_reference`, `props_dp_differential.rs`) covers the default
-//! path only, which this flag leaves bit-for-bit untouched.
+//! *time estimate* is corrected. The corrected path is an explicit opt-in;
+//! the frozen differential contract (`dp_batch_reference`,
+//! `props_dp_differential.rs`) covers the default path only, which this
+//! flag leaves bit-for-bit untouched.
+//!
+//! ### Corrected branch-and-bound (`dp_plan_corrected`)
+//!
+//! The corrected cost is not affine in N over the whole window — `S_eff`
+//! varies as the window grows — so the legacy certificates don't apply
+//! directly. But `S_eff(j) = max_{m ∈ [j, i]} predicted_iters(m)` is a
+//! *running max*: monotone non-increasing in `j`, i.e. the window splits
+//! into maximal segments of constant `S_eff` ("plateaus"). A sliding-
+//! window max deque over the predicted iterations yields the plateaus in
+//! O(1) amortized per cell (rebuilt in O(window) on the rare cells where
+//! a capacity-growing `MemoryRule::Table` moves the window's left edge
+//! left). *Within* a plateau the cost is affine in N again whenever
+//! `serve_affine(L_i, S_eff)` applies, so each plateau runs a range
+//! bisection:
+//!
+//! * a range `[j0, j1]` is skipped wholesale when
+//!   `t[j0−1] + (a·size_{j1} + b) − σ + (j1−j0)·min(γ, a) > m` — the
+//!   T-side gains at least γ per index (suffix minimum of the verified-
+//!   monotone `T[·]` steps, the legacy deque) while the serve side loses
+//!   at most the real slope `a` per size step, and σ =
+//!   [`ServeEstimate::serve_affine_slack`] certifies the float gap
+//!   between `serve_est`'s own rounding and the affine anchor (default
+//!   `INFINITY` for custom estimators ⇒ no skipping, always sound);
+//! * ranges that survive the bound are bisected until smaller than a
+//!   chunk, then evaluated *exactly* through the bulk kernel
+//!   [`ServeEstimate::serve_est_many`] (bit-identical to per-candidate
+//!   `serve_est` calls by its contract, and vectorizable);
+//! * plateaus whose clamp disables the affine form (or whose estimator
+//!   is opaque) skip the certificates and go straight to the bulk
+//!   kernel.
+//!
+//! Every *evaluated* candidate is the reference expression
+//! `t[j−1] + serve_est(size, L_i, S_eff)` bit for bit, skipped ranges are
+//! certified strictly worse than an already-seen candidate (so they can
+//! neither lower the minimum nor win a tie — ties resolve to the largest
+//! `j`, like the reference's descending strict `<`), and the scalar loop
+//! is retained verbatim as [`dp_plan_corrected_reference`]: the corrected
+//! differential suite (`props_dp_corrected_differential.rs`) proves
+//! bit-exactness across ~1000 randomized pools, and a Python mirror of
+//! both loops (IEEE-754 doubles, identical rounding) validated the
+//! algorithm over 6000 more.
 //!
 //! Exactness of the result: every *evaluated* candidate uses bit-for-bit
 //! the reference's expression; the minimum over the evaluated set equals
@@ -162,6 +202,19 @@ pub struct DpScratch {
     /// budget strictly below the slice cap (always 0 with the correction
     /// off).
     corrected: usize,
+    /// `predicted_iters` per sorted request (corrected planner only).
+    pred: Vec<u32>,
+    /// Sliding-window max deque over `pred` (index, value): descending
+    /// values front-to-back; entry `t` covers the constant-`S_eff` plateau
+    /// `j ∈ (index_{t−1}, index_t]` of the corrected planner's window.
+    smax: Vec<(usize, u32)>,
+    /// Bulk-kernel output for the corrected planner's chunk evaluation.
+    serve_buf: Vec<f64>,
+    /// Per-distinct-length serve-by-size cache for the opaque fallback
+    /// scan in `dp_plan`: `serve_by_size[k] = serve_est(k + 2, L_i, S)`
+    /// at the currently cached length, extended lazily as the window
+    /// grows.
+    serve_by_size: Vec<f64>,
 }
 
 impl DpScratch {
@@ -283,9 +336,11 @@ pub fn dp_plan<E: ServeEstimate + ?Sized>(
     scratch.p.clear();
     scratch.p.resize(n + 1, 0);
     scratch.steps.clear();
+    scratch.serve_by_size.clear();
     let t = &mut scratch.t;
     let p = &mut scratch.p;
     let dq = &mut scratch.steps;
+    let sbuf = &mut scratch.serve_by_size;
     let mut dq_head = 0usize;
 
     // Verified cell by cell; the skip certificate relies on it (see
@@ -321,6 +376,7 @@ pub fn dp_plan<E: ServeEstimate + ?Sized>(
             }
             cached_l = l_i;
             cached_n_max = n_max;
+            sbuf.clear();
             // At fixed (L_i, S) both fitted estimators are affine in N, so
             // the candidate cost is one mul-add per step instead of a full
             // surface evaluation (None if the clamp could fire).
@@ -469,14 +525,27 @@ pub fn dp_plan<E: ServeEstimate + ?Sized>(
                     }
                 }
                 None => {
-                    // Opaque estimator: the reference scalar loop verbatim
-                    // (lines 9–15; grow the batch backwards while memory
-                    // allows).
+                    // Opaque estimator: the reference scan (lines 9–15),
+                    // but candidates come out of the per-distinct-length
+                    // serve-by-size cache — at fixed (L_i, S) the cost
+                    // depends only on the batch size, so each value is
+                    // computed once per run of equal lengths (through the
+                    // bulk kernel, extended lazily as the window grows)
+                    // instead of once per DP cell. `serve_est_many` is
+                    // bit-identical to per-candidate `serve_est` calls,
+                    // so the plan stays bit-exact against the reference.
+                    let max_size = i - j_lo + 1; // ≥ 2 since j_lo < i
+                    if sbuf.len() < max_size - 1 {
+                        let lo_size = sbuf.len() as u32 + 2;
+                        let hi_size = max_size as u32 + 1;
+                        let from = sbuf.len();
+                        sbuf.resize(max_size - 1, 0.0);
+                        est.serve_est_many(lo_size..hi_size, l_i, s, &mut sbuf[from..]);
+                    }
                     let mut j = i - 1;
                     while j >= j_lo {
-                        let size = (i - j + 1) as u32;
-                        let serve = est.serve_est(size, l_i, s);
-                        let cand = t[j - 1] + serve;
+                        let size = i - j + 1;
+                        let cand = t[j - 1] + sbuf[size - 2];
                         if cand < t[i] {
                             t[i] = cand;
                             p[i] = j - 1;
@@ -503,13 +572,95 @@ pub fn dp_plan<E: ServeEstimate + ?Sized>(
     scratch.cuts.reverse();
 }
 
-/// The corrected planning loop: the reference's scalar scan with the
-/// candidate budget replaced by the window's running maximum of predicted
-/// remaining iterations (see the module's predicted-correction section).
-/// The affine fast path and skip certificates do not apply — the cost is
-/// no longer affine in N at fixed (L_i, S) once S_eff varies with the
-/// window — so every candidate is evaluated, exactly like the opaque
-/// reference loop.
+/// Bisection chunk width of the corrected branch-and-bound: ranges that
+/// survive the skip certificate are halved until below this, then
+/// evaluated exactly through the bulk kernel.
+const CORRECTED_CHUNK: usize = 16;
+
+/// One range `[j0, j1]` of a constant-`S_eff` plateau in the corrected
+/// planner's window scan: try to certify-and-skip the whole range, bisect
+/// on failure, bulk-evaluate surviving chunks (see module docs). `cert`
+/// carries `(a, b, slack)` when the affine surface and its float slack
+/// are available (`None` ⇒ no skipping, pure bulk evaluation — always
+/// sound). Evaluated candidates are bit-for-bit the reference expression;
+/// `(m, jb)` track the running minimum with ties to the largest `j`.
+#[allow(clippy::too_many_arguments)]
+fn corrected_scan_range<E: ServeEstimate + ?Sized>(
+    est: &E,
+    t: &[f64],
+    steps: &[(usize, f64)],
+    ptr: &mut usize,
+    i: usize,
+    l_i: u32,
+    v: u32,
+    mut j0: usize,
+    j1: usize,
+    cert: Option<(f64, f64, f64)>,
+    serve_buf: &mut Vec<f64>,
+    m: &mut f64,
+    jb: &mut usize,
+) {
+    loop {
+        if let Some((a, b, slack)) = cert {
+            if *m < f64::INFINITY {
+                // Lower-bound every candidate in [j0, j1]: the T side
+                // gains at least γ per index past j0 (suffix minimum of
+                // the verified-monotone T steps, rounded down 2 ulps),
+                // the serve side loses at most the real slope a per size
+                // step, and `slack` certifies the float gap between
+                // serve_est and the affine anchor at the range's smallest
+                // size. 8 ulps of downward slop absorb this expression's
+                // own roundings; `bound > m` is then a strict-worseness
+                // certificate for the whole range.
+                while *ptr < steps.len() && steps[*ptr].0 < j0 {
+                    *ptr += 1;
+                }
+                let gamma = if *ptr < steps.len() {
+                    down_ulps(steps[*ptr].1, 2)
+                } else {
+                    0.0
+                };
+                let mut coef = if gamma < a { gamma } else { a };
+                if coef < 0.0 {
+                    coef = 0.0;
+                }
+                let bound = down_ulps(
+                    t[j0 - 1] + (a * ((i - j1 + 1) as f64) + b) - slack + (j1 - j0) as f64 * coef,
+                    8,
+                );
+                if bound > *m {
+                    return;
+                }
+            }
+        }
+        if j1 - j0 < CORRECTED_CHUNK {
+            let n0 = (i - j1 + 1) as u32;
+            let count = j1 - j0 + 1;
+            serve_buf.resize(count, 0.0);
+            est.serve_est_many(n0..n0 + count as u32, l_i, v, serve_buf);
+            for j in j0..=j1 {
+                let c = t[j - 1] + serve_buf[j1 - j];
+                if c < *m || (c == *m && j > *jb) {
+                    *m = c;
+                    *jb = j;
+                }
+            }
+            return;
+        }
+        let mid = j0 + (j1 - j0) / 2;
+        corrected_scan_range(est, t, steps, ptr, i, l_i, v, j0, mid, cert, serve_buf, m, jb);
+        j0 = mid + 1;
+    }
+}
+
+/// The corrected planning loop, rebuilt as a running-max-aware branch-and-
+/// bound (see the module's corrected-branch-and-bound section): a sliding-
+/// window max deque over the predicted iterations yields the constant-
+/// `S_eff` plateaus of each cell's window; each plateau is scanned by
+/// [`corrected_scan_range`] (certify-and-skip where the affine surface
+/// and its slack apply, bulk-kernel evaluation elsewhere). Bit-exact
+/// against [`dp_plan_corrected_reference`] — the retained scalar loop —
+/// by the corrected differential suite.
 fn dp_plan_corrected<E: ServeEstimate + ?Sized>(
     sorted: &[Request],
     est: &E,
@@ -527,8 +678,191 @@ fn dp_plan_corrected<E: ServeEstimate + ?Sized>(
     scratch.t.resize(n + 1, 0.0);
     scratch.p.clear();
     scratch.p.resize(n + 1, 0);
+    scratch.steps.clear();
+    scratch.smax.clear();
+    scratch.pred.clear();
+    scratch.pred.extend(sorted.iter().map(|r| predicted_iters(r, s)));
     let t = &mut scratch.t;
     let p = &mut scratch.p;
+    let dq = &mut scratch.steps;
+    let smax = &mut scratch.smax;
+    let serve_buf = &mut scratch.serve_buf;
+    let pred = &scratch.pred;
+    let mut dq_head = 0usize;
+    let mut smax_head = 0usize;
+
+    // Same soundness flags as the legacy planner: certificates need the
+    // T-step deque, which needs verified T monotonicity and a window
+    // whose left edge never moves left (both re-checked cell by cell).
+    let mut t_monotone = true;
+    let mut j_lo_monotone = true;
+    let mut last_j_lo = 0usize;
+
+    // N_max is a pure function of L_i (memory feasibility stays at the
+    // full S); the affine surface is NOT cacheable per length here — it
+    // depends on each plateau's S_eff.
+    let mut have_cache = false;
+    let mut cached_l = 0u32;
+    let mut cached_n_max = 1u32;
+
+    for i in 1..=n {
+        let l_i = sorted[i - 1].input_len;
+        if !have_cache || l_i != cached_l {
+            // A batch whose predictions all fall short can still run to
+            // the slice cap, so feasibility provisions the full S.
+            let mut n_max = mem.max_batch(l_i, s).max(1);
+            if let Some(cap) = cfg.max_batch_size {
+                n_max = n_max.min(cap.max(1));
+            }
+            cached_l = l_i;
+            cached_n_max = n_max;
+            have_cache = true;
+        }
+        let n_max = cached_n_max;
+
+        // Singleton first (wins exact ties, like the reference's strict
+        // `<`): its budget is the request's own predicted iterations.
+        p[i] = i - 1;
+        t[i] = t[i - 1] + est.serve_est(1, l_i, pred[i - 1]);
+
+        let j_lo = if (n_max as usize) >= i {
+            1
+        } else {
+            i + 1 - n_max as usize
+        };
+        let moved_left = j_lo < last_j_lo;
+        if moved_left {
+            j_lo_monotone = false;
+        }
+        last_j_lo = j_lo;
+
+        // T-step deque (certificates only; same maintenance as legacy).
+        if t_monotone && i >= 2 {
+            let v = t[i - 1] - t[i - 2];
+            if v.is_nan() {
+                t_monotone = false;
+            } else {
+                while dq.len() > dq_head && dq[dq.len() - 1].1 >= v {
+                    dq.pop();
+                }
+                dq.push((i - 1, v));
+            }
+        }
+        while dq.len() > dq_head && dq[dq_head].0 < j_lo {
+            dq_head += 1;
+        }
+
+        // Sliding-window max deque over pred[j_lo..=i]: front-dropped
+        // entries are unrecoverable, so a left-moving window (capacity-
+        // growing table rule) rebuilds it for correctness — unlike the
+        // T-step deque, this one is structural, not an optimization.
+        if moved_left {
+            smax.clear();
+            smax_head = 0;
+            for m in j_lo..=i {
+                let v = pred[m - 1];
+                while smax.len() > smax_head && smax[smax.len() - 1].1 <= v {
+                    smax.pop();
+                }
+                smax.push((m, v));
+            }
+        } else {
+            let v = pred[i - 1];
+            while smax.len() > smax_head && smax[smax.len() - 1].1 <= v {
+                smax.pop();
+            }
+            smax.push((i, v));
+            while smax[smax_head].0 < j_lo {
+                smax_head += 1;
+            }
+        }
+
+        if j_lo < i {
+            let mut m = f64::INFINITY;
+            let mut jb = 0usize;
+            let mut ptr = dq_head;
+            // Plateaus ascend in j (deque values descend): entry (e, v)
+            // covers j ∈ (prev_e, e], i.e. S_eff(j) = v there. The last
+            // entry is always (i, pred[i−1]) and covers the singleton,
+            // which was costed above — `phi` caps at i−1.
+            let mut prev_e = j_lo - 1;
+            for &(e, v) in smax.iter().skip(smax_head) {
+                let plo = prev_e + 1;
+                let phi = e.min(i - 1);
+                prev_e = e;
+                if plo > phi {
+                    continue;
+                }
+                let cert = match est.serve_affine(l_i, v) {
+                    // `serve_affine`'s contract guarantees a ≥ 0, but the
+                    // certificate depends on it, so gate defensively.
+                    Some((a, b)) if t_monotone && j_lo_monotone && a >= 0.0 => {
+                        let slack = est.serve_affine_slack(l_i, v, n_max);
+                        if slack.is_finite() && slack >= 0.0 {
+                            Some((a, b, slack))
+                        } else {
+                            None
+                        }
+                    }
+                    _ => None,
+                };
+                corrected_scan_range(
+                    est,
+                    t,
+                    dq,
+                    &mut ptr,
+                    i,
+                    l_i,
+                    v,
+                    plo,
+                    phi,
+                    cert,
+                    serve_buf,
+                    &mut m,
+                    &mut jb,
+                );
+            }
+            // Strict `<`: the singleton wins exact ties, as in the
+            // reference.
+            if m < t[i] {
+                t[i] = m;
+                p[i] = jb - 1;
+            }
+        }
+        if t[i] < t[i - 1] || t[i].is_nan() {
+            t_monotone = false;
+        }
+    }
+
+    let mut i = n;
+    while i > 0 {
+        let start = p[i];
+        scratch.cuts.push((start, i));
+        i = start;
+    }
+    scratch.cuts.reverse();
+}
+
+/// The PR 4 scalar corrected loop, retained verbatim as the differential-
+/// testing and benchmarking baseline (the corrected analogue of
+/// [`dp_plan_reference`], self-allocating like it): the reference scan
+/// with the candidate budget replaced by the window's running maximum of
+/// predicted remaining iterations. `dp_plan` with
+/// `DpBatcherConfig::pred_corrected` set must produce identical cuts (and
+/// hence bit-identical `est_serve_time`) on every input.
+pub fn dp_plan_corrected_reference(
+    sorted: &[Request],
+    est: &dyn ServeEstimate,
+    mem: &MemoryEstimator,
+    cfg: &DpBatcherConfig,
+) -> Vec<(usize, usize)> {
+    let n = sorted.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let s = cfg.slice_len;
+    let mut t = vec![0.0f64; n + 1];
+    let mut p = vec![0usize; n + 1];
 
     for i in 1..=n {
         let l_i = sorted[i - 1].input_len;
@@ -559,13 +893,15 @@ fn dp_plan_corrected<E: ServeEstimate + ?Sized>(
         }
     }
 
+    let mut cuts = Vec::new();
     let mut i = n;
     while i > 0 {
         let start = p[i];
-        scratch.cuts.push((start, i));
+        cuts.push((start, i));
         i = start;
     }
-    scratch.cuts.reverse();
+    cuts.reverse();
+    cuts
 }
 
 /// Materialize batches from cuts by draining the sorted request buffer in
@@ -1082,6 +1418,109 @@ mod tests {
             total <= together + 1e-9,
             "corrected total {total} !<= together {together}"
         );
+    }
+
+    /// The branch-and-bound corrected planner must produce identical cuts
+    /// to the retained scalar reference (the full randomized contract is
+    /// `tests/props_dp_corrected_differential.rs`; these are the shaped
+    /// cases).
+    fn assert_corrected_matches_reference(
+        lens_preds: &[(u32, u32)],
+        e: &dyn ServeEstimate,
+        mem: &MemoryEstimator,
+        c: &DpBatcherConfig,
+    ) {
+        let mut sorted = predicted_reqs(lens_preds);
+        sorted.sort_by_key(|r| r.input_len);
+        let mut scratch = DpScratch::new();
+        dp_plan(&sorted, e, mem, c, &mut scratch);
+        let slow = dp_plan_corrected_reference(&sorted, e, mem, c);
+        assert_eq!(scratch.cuts(), &slow[..], "corrected cuts diverge");
+    }
+
+    #[test]
+    fn corrected_bnb_matches_scalar_reference_on_shapes() {
+        let e = est();
+        let mem = mem_loose();
+        // Constant predictions (one plateau), oracle-ish spread (many),
+        // anti-correlated with the sort key (max plateaus), prediction
+        // gaps, and a duplicate-heavy pool.
+        let shapes: Vec<Vec<(u32, u32)>> = vec![
+            (0..120).map(|x: u32| ((x * 37) % 1024 + 1, 64)).collect(),
+            (0..150)
+                .map(|x: u32| ((x * 37) % 1024 + 1, (x * 53) % 1024 + 1))
+                .collect(),
+            (0..150)
+                .map(|x: u32| {
+                    let l = (x * 37) % 1024 + 1;
+                    (l, 1025 - l)
+                })
+                .collect(),
+            (0..90)
+                .map(|x: u32| ((x * 13) % 64 + 1, [8u32, 64, 512][(x % 3) as usize]))
+                .collect(),
+            vec![(64, 8); 40],
+        ];
+        for lens_preds in &shapes {
+            for s in [16u32, 128, 512] {
+                for cap in [None, Some(6)] {
+                    let c = DpBatcherConfig {
+                        slice_len: s,
+                        max_batch_size: cap,
+                        pred_corrected: true,
+                    };
+                    assert_corrected_matches_reference(lens_preds, &e, &mem, &c);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn corrected_bnb_matches_reference_with_ascending_capacity_table() {
+        // Capacity growing with length moves the window's left edge left
+        // mid-scan: the plateau deque must REBUILD (it is structural for
+        // the corrected planner, not just an optimization) and the skip
+        // certificates must shut off.
+        use crate::estimator::MemoryRule;
+        let e = est();
+        let mem = MemoryEstimator {
+            rule: MemoryRule::Table(vec![(512, 28), (0, 2)]),
+        };
+        let lens_preds: Vec<(u32, u32)> = (0..120)
+            .map(|x: u32| ((x * 17) % 1024 + 1, (x * 29) % 256 + 1))
+            .collect();
+        for s in [16u32, 64, 128] {
+            let c = DpBatcherConfig {
+                slice_len: s,
+                max_batch_size: None,
+                pred_corrected: true,
+            };
+            assert_corrected_matches_reference(&lens_preds, &e, &mem, &c);
+        }
+    }
+
+    #[test]
+    fn corrected_bnb_matches_reference_on_opaque_estimator() {
+        // serve_affine == None everywhere: every plateau takes the bulk
+        // path with no certificates, and must still agree with the
+        // reference exactly.
+        struct Opaque(ServingTimeEstimator);
+        impl ServeEstimate for Opaque {
+            fn serve_est(&self, n: u32, l_i: u32, s: u32) -> f64 {
+                self.0.serve_est(n, l_i, s)
+            }
+        }
+        let e = Opaque(est());
+        let mem = mem_loose();
+        let lens_preds: Vec<(u32, u32)> = (0..100)
+            .map(|x: u32| ((x * 41) % 900 + 1, (x * 7) % 300 + 1))
+            .collect();
+        let c = DpBatcherConfig {
+            slice_len: 128,
+            max_batch_size: None,
+            pred_corrected: true,
+        };
+        assert_corrected_matches_reference(&lens_preds, &e, &mem, &c);
     }
 
     #[test]

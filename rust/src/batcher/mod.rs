@@ -5,7 +5,8 @@ pub mod dp;
 pub mod fcfs;
 
 pub use dp::{
-    dp_batch, dp_batch_into, dp_batch_reference, dp_batch_sorted_into, dp_plan, dp_plan_reference,
-    predicted_batch_iters, predicted_iters, DpBatcherConfig, DpScratch,
+    dp_batch, dp_batch_into, dp_batch_reference, dp_batch_sorted_into, dp_plan,
+    dp_plan_corrected_reference, dp_plan_reference, predicted_batch_iters, predicted_iters,
+    DpBatcherConfig, DpScratch,
 };
 pub use fcfs::fcfs_batches;

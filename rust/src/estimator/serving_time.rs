@@ -33,7 +33,52 @@ pub trait ServeEstimate {
     fn serve_affine(&self, _l_i: u32, _s: u32) -> Option<(f64, f64)> {
         None
     }
+
+    /// Bulk kernel for the DP batcher's window scans: fill `out[k]` with
+    /// `serve_est(ns.start + k, l_i, s)` for every offset `k` covered by
+    /// `ns` (`out.len()` must equal `ns.len()`).
+    ///
+    /// Implementations MUST be bit-identical to the scalar `serve_est`
+    /// loop — the planner's differential contracts
+    /// (`props_dp_differential`, the corrected suite) read candidates out
+    /// of bulk-filled buffers and compare them against per-candidate
+    /// reference calls. The default is exactly that scalar loop; the
+    /// concrete estimators override it with chunked, autovectorization-
+    /// friendly loops that evaluate the identical per-lane expression.
+    fn serve_est_many(&self, ns: std::ops::Range<u32>, l_i: u32, s: u32, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), ns.len());
+        for (o, n) in out.iter_mut().zip(ns) {
+            *o = self.serve_est(n, l_i, s);
+        }
+    }
+
+    /// Certified rounding slack for the corrected planner's skip
+    /// certificates. When `serve_affine(l_i, s) == Some((a, b))`, return a
+    /// finite σ ≥ 0 such that for all `1 ≤ n ≤ n' ≤ n_max`
+    ///
+    ///   `serve_est(n', l_i, s) ≥ fl(a·n + b) + (n' − n)·a − σ`
+    ///
+    /// where `fl(·)` is any f64 round-to-nearest evaluation order — σ must
+    /// absorb the accumulated rounding of *both* `serve_est`'s own
+    /// evaluation and the affine expression (including the error of the
+    /// stored `a`, `b` against the exact real surface, amplified by
+    /// `n_max`). The corrected DP planner uses this to lower-bound
+    /// unevaluated candidates; too small a σ breaks its bit-exactness
+    /// contract, too large merely prunes less. The default
+    /// `f64::INFINITY` means "no certificate": the planner then evaluates
+    /// every candidate (always sound). Meaningless when `serve_affine`
+    /// returns `None`.
+    fn serve_affine_slack(&self, _l_i: u32, _s: u32, _n_max: u32) -> f64 {
+        f64::INFINITY
+    }
 }
+
+/// Lane width of the chunked bulk kernels: wide enough for the
+/// autovectorizer to pack 2–4 f64 vectors per chunk, small enough that the
+/// remainder loop stays cheap. (std-only — no `std::simd`; the per-lane
+/// expression is written exactly like the scalar path so the results are
+/// bit-identical whether or not the compiler vectorizes.)
+const LANES: usize = 8;
 
 /// `(a, b)` of an affine-in-N latency `max(0, a·n + b)`, or `None` when the
 /// clamp could fire for some `n ≥ 1` (i.e. unless `a ≥ 0` and `a + b ≥ 0`).
@@ -140,6 +185,72 @@ impl ServeEstimate for ServingTimeEstimator {
         )?;
         Some((p.0 + d.0, p.1 + d.1))
     }
+
+    fn serve_est_many(&self, ns: std::ops::Range<u32>, l_i: u32, s: u32, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), ns.len());
+        if s == 0 {
+            // `decode` early-returns 0.0 at L_o == 0; the fused closed form
+            // below differs in signed-zero handling, so keep the scalar
+            // path for bit-identity.
+            for (o, n) in out.iter_mut().zip(ns) {
+                *o = self.serve_est(n, l_i, s);
+            }
+            return;
+        }
+        let li = l_i as f64;
+        let lo = s as f64;
+        let sum_l = lo * (2.0 * li + lo + 1.0) / 2.0;
+        let p = self.prefill;
+        let d = self.decode;
+        // Per-lane expression identical (ops and order) to
+        // `prefill(n, l_i) + decode(n, l_i, s)`, so results are bit-equal
+        // to the scalar loop with or without vectorization.
+        let lane = move |nf: f64| -> f64 {
+            let pre = (p.c1 * nf * li + p.c2 * nf + p.c3 * li + p.c4).max(0.0);
+            let dec = ((d.c1 * nf + d.c3) * sum_l + (d.c2 * nf + d.c4) * lo).max(0.0);
+            pre + dec
+        };
+        let n0 = ns.start;
+        let mut base = 0usize;
+        let mut chunks = out.chunks_exact_mut(LANES);
+        for chunk in &mut chunks {
+            let nb = n0 + base as u32;
+            for (k, o) in chunk.iter_mut().enumerate() {
+                *o = lane((nb + k as u32) as f64);
+            }
+            base += LANES;
+        }
+        let nb = n0 + base as u32;
+        for (k, o) in chunks.into_remainder().iter_mut().enumerate() {
+            *o = lane((nb + k as u32) as f64);
+        }
+    }
+
+    fn serve_affine_slack(&self, l_i: u32, s: u32, n_max: u32) -> f64 {
+        // Forward-error budget for the certificate inequality (see the
+        // trait doc): `serve_est` accumulates ~12 roundings and the affine
+        // expression plus the stored (a, b)'s own construction ~10 more,
+        // each bounded by ε times the sum of absolute term magnitudes at
+        // n = n_max (the magnitude sum is computed from the raw
+        // coefficients, NOT from |a|/|b| — negative fitted coefficients can
+        // cancel inside a and b, hiding the intermediate magnitudes that
+        // actually round). 64ε leaves ~3x headroom over that worst case.
+        let li = l_i as f64;
+        let lo = s as f64;
+        let nf = n_max as f64;
+        let sum_l = (lo * (2.0 * li + lo + 1.0) / 2.0).abs();
+        let p = &self.prefill;
+        let d = &self.decode;
+        let mag = p.c1.abs() * nf * li
+            + p.c2.abs() * nf
+            + p.c3.abs() * li
+            + p.c4.abs()
+            + d.c1.abs() * nf * sum_l
+            + d.c2.abs() * nf * lo
+            + d.c3.abs() * sum_l
+            + d.c4.abs() * lo;
+        mag * (f64::EPSILON * 64.0)
+    }
 }
 
 /// A single whole-slice bilinear surface T_slice(N, L_i) fitted at fixed S
@@ -162,6 +273,41 @@ impl ServeEstimate for SliceTimeEstimator {
             self.surface.c1 * li + self.surface.c2,
             self.surface.c3 * li + self.surface.c4,
         )
+    }
+
+    fn serve_est_many(&self, ns: std::ops::Range<u32>, l_i: u32, _s: u32, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), ns.len());
+        let li = l_i as f64;
+        let c = self.surface;
+        // Identical expression to `serve_est` per lane (bit-equal results).
+        let lane =
+            move |nf: f64| -> f64 { (c.c1 * nf * li + c.c2 * nf + c.c3 * li + c.c4).max(0.0) };
+        let n0 = ns.start;
+        let mut base = 0usize;
+        let mut chunks = out.chunks_exact_mut(LANES);
+        for chunk in &mut chunks {
+            let nb = n0 + base as u32;
+            for (k, o) in chunk.iter_mut().enumerate() {
+                *o = lane((nb + k as u32) as f64);
+            }
+            base += LANES;
+        }
+        let nb = n0 + base as u32;
+        for (k, o) in chunks.into_remainder().iter_mut().enumerate() {
+            *o = lane((nb + k as u32) as f64);
+        }
+    }
+
+    fn serve_affine_slack(&self, l_i: u32, _s: u32, n_max: u32) -> f64 {
+        // Same budget argument as `ServingTimeEstimator::serve_affine_slack`
+        // over the single whole-slice surface (fewer roundings, same 64ε
+        // headroom; magnitudes from raw coefficients to survive
+        // cancellation in a/b).
+        let li = l_i as f64;
+        let nf = n_max as f64;
+        let c = &self.surface;
+        let mag = c.c1.abs() * nf * li + c.c2.abs() * nf + c.c3.abs() * li + c.c4.abs();
+        mag * (f64::EPSILON * 64.0)
     }
 }
 
@@ -228,6 +374,96 @@ mod tests {
         assert!(e.serve(8, 256, 128) > e.serve(4, 256, 128));
         assert!(e.serve(8, 512, 128) > e.serve(8, 256, 128));
         assert!(e.serve(8, 256, 256) > e.serve(8, 256, 128));
+    }
+
+    #[test]
+    fn bulk_kernel_is_bit_identical_to_scalar_loop() {
+        // Every remainder width 0..LANES plus multi-chunk lengths, both
+        // surfaces, including a clamp-activating negative fit.
+        let two_surface = est();
+        let clampy = ServingTimeEstimator {
+            prefill: LinearLatency {
+                c1: 1e-4,
+                c2: -2e-3,
+                c3: 1e-4,
+                c4: -0.5,
+            },
+            decode: LinearLatency {
+                c1: 5e-7,
+                c2: 7e-4,
+                c3: -2.5e-6,
+                c4: -2e-2,
+            },
+        };
+        let slice = SliceTimeEstimator {
+            surface: LinearLatency {
+                c1: 2e-5,
+                c2: 3e-4,
+                c3: -1e-5,
+                c4: 0.01,
+            },
+        };
+        let ests: [&dyn ServeEstimate; 3] = [&two_surface, &clampy, &slice];
+        for est in ests {
+            for &(l_i, s) in &[(1u32, 16u32), (512, 128), (1024, 0), (7, 1)] {
+                for n0 in [1u32, 2, 5] {
+                    for len in 0..=(3 * super::LANES + 1) {
+                        let mut out = vec![f64::NAN; len];
+                        est.serve_est_many(n0..n0 + len as u32, l_i, s, &mut out);
+                        for (k, &got) in out.iter().enumerate() {
+                            let want = est.serve_est(n0 + k as u32, l_i, s);
+                            assert_eq!(
+                                got.to_bits(),
+                                want.to_bits(),
+                                "n={} l_i={l_i} s={s}: {got} vs {want}",
+                                n0 + k as u32
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn affine_slack_certifies_the_surface() {
+        // Wherever serve_affine applies, every float serve_est value must
+        // sit within the certified slack of the affine anchor — the
+        // inequality the corrected DP's skip certificates rely on.
+        let e = est();
+        for &(l_i, s) in &[(1u32, 16u32), (64, 128), (1024, 512)] {
+            let n_max = 2048u32;
+            let (a, b) = e.serve_affine(l_i, s).expect("non-negative fit is affine");
+            let slack = e.serve_affine_slack(l_i, s, n_max);
+            assert!(slack.is_finite() && slack >= 0.0);
+            for n in [1u32, 2, 7, 100, 1000, 2048] {
+                let v = e.serve_est(n, l_i, s);
+                for anchor in [1u32, n / 2, n] {
+                    let anchor = anchor.max(1);
+                    let lo = (a * anchor as f64 + b) + (n - anchor) as f64 * a - slack;
+                    assert!(
+                        v >= lo,
+                        "serve_est({n},{l_i},{s})={v} below certified bound {lo}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn default_trait_hooks_are_safe() {
+        // A minimal estimator: the default bulk kernel is the scalar loop
+        // and the default slack disables certificates.
+        struct Flat;
+        impl ServeEstimate for Flat {
+            fn serve_est(&self, n: u32, _l: u32, _s: u32) -> f64 {
+                n as f64
+            }
+        }
+        let mut out = [0.0f64; 5];
+        Flat.serve_est_many(3..8, 10, 10, &mut out);
+        assert_eq!(out, [3.0, 4.0, 5.0, 6.0, 7.0]);
+        assert_eq!(Flat.serve_affine_slack(10, 10, 100), f64::INFINITY);
     }
 
     #[test]

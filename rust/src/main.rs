@@ -267,7 +267,13 @@ fn predictor_spec(args: &Args, workload: WorkloadKind) -> Result<PredictorSpec> 
     let mut spec = PredictorSpec::parse(args.str_or("predictor", "oracle"), workload)
         .map_err(|e| anyhow!("{e}"))?;
     if args.has("pred-sigma") {
+        // Same bounds as the `noisy:<sigma>` spelling: a negative (or
+        // NaN/∞) sigma must fail loudly here rather than propagate into a
+        // degenerate log-normal error model.
         let sigma = args.f64_or("pred-sigma", PredictorSpec::DEFAULT_SIGMA);
+        if !(sigma.is_finite() && sigma >= 0.0) {
+            return Err(anyhow!("--pred-sigma must be finite and non-negative (got {sigma})"));
+        }
         spec = match spec {
             PredictorSpec::Oracle | PredictorSpec::Noisy { .. } => {
                 PredictorSpec::Noisy { sigma }
@@ -301,7 +307,15 @@ fn predictor_spec(args: &Args, workload: WorkloadKind) -> Result<PredictorSpec> 
             ));
         }
         let buckets = buckets as u32;
-        let accuracy = args.f64_or("pred-accuracy", base_accuracy).clamp(0.0, 1.0);
+        let accuracy = args.f64_or("pred-accuracy", base_accuracy);
+        // clamp(NaN) is NaN — reject it before it reaches the confusion
+        // draw as a never-confuse/always-confuse coin.
+        if !accuracy.is_finite() {
+            return Err(anyhow!(
+                "--pred-accuracy must be a finite number in [0, 1] (got {accuracy})"
+            ));
+        }
+        let accuracy = accuracy.clamp(0.0, 1.0);
         spec = match spec {
             PredictorSpec::Oracle | PredictorSpec::Bucket { .. } => PredictorSpec::Bucket {
                 buckets,
@@ -539,4 +553,69 @@ fn cmd_trace(args: &Args) -> Result<()> {
     trace.save(&out)?;
     println!("wrote {} requests to {}", trace.len(), out.display());
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    fn spec_of(s: &str) -> Result<PredictorSpec> {
+        predictor_spec(&args(s), WorkloadKind::CodeFuse)
+    }
+
+    #[test]
+    fn predictor_flags_assemble_specs() {
+        assert_eq!(spec_of("simulate").unwrap(), PredictorSpec::Oracle);
+        assert_eq!(
+            spec_of("simulate --pred-sigma 0.3").unwrap(),
+            PredictorSpec::Noisy { sigma: 0.3 }
+        );
+        match spec_of("simulate --pred-buckets 4 --pred-accuracy 0.9").unwrap() {
+            PredictorSpec::Bucket { buckets, accuracy, .. } => {
+                assert_eq!(buckets, 4);
+                assert!((accuracy - 0.9).abs() < 1e-12);
+            }
+            other => panic!("expected bucket spec, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pred_buckets_zero_is_a_friendly_error() {
+        let err = spec_of("simulate --pred-buckets 0").unwrap_err().to_string();
+        assert!(err.contains("--pred-buckets"), "{err}");
+        assert!(err.contains("[1,"), "{err}");
+        // Same failure through the `--predictor bucket:0` spelling.
+        assert!(spec_of("simulate --predictor bucket:0").is_err());
+    }
+
+    #[test]
+    fn negative_pred_sigma_is_a_friendly_error() {
+        let err = spec_of("simulate --pred-sigma -0.5").unwrap_err().to_string();
+        assert!(err.contains("--pred-sigma"), "{err}");
+        assert!(err.contains("non-negative"), "{err}");
+        assert!(spec_of("simulate --pred-sigma nan").is_err());
+        assert!(spec_of("simulate --pred-sigma inf").is_err());
+        // Zero sigma (an exact oracle) stays valid.
+        assert_eq!(
+            spec_of("simulate --pred-sigma 0").unwrap(),
+            PredictorSpec::Noisy { sigma: 0.0 }
+        );
+        // The equivalent registry spelling fails the same way.
+        assert!(spec_of("simulate --predictor noisy:-0.5").is_err());
+    }
+
+    #[test]
+    fn non_finite_pred_accuracy_is_a_friendly_error() {
+        let err = spec_of("simulate --pred-accuracy nan").unwrap_err().to_string();
+        assert!(err.contains("--pred-accuracy"), "{err}");
+        // Out-of-range finite values still clamp (documented behaviour).
+        match spec_of("simulate --pred-buckets 8 --pred-accuracy 1.5").unwrap() {
+            PredictorSpec::Bucket { accuracy, .. } => assert_eq!(accuracy, 1.0),
+            other => panic!("expected bucket spec, got {other:?}"),
+        }
+    }
 }

@@ -117,9 +117,20 @@ impl PredictorSpec {
                 }
                 PredictorSpec::Oracle
             }
-            "noisy" => PredictorSpec::Noisy {
-                sigma: parse_param("sigma")?.unwrap_or(Self::DEFAULT_SIGMA),
-            },
+            "noisy" => {
+                // A negative (or NaN/∞) sigma would propagate into the
+                // log-normal draw as a degenerate error model; reject it
+                // here so both the `noisy:-0.5` spelling and the
+                // `--pred-sigma` flag (which funnels through the same
+                // bounds) fail with a friendly message.
+                let sigma = parse_param("sigma")?.unwrap_or(Self::DEFAULT_SIGMA);
+                if !(sigma.is_finite() && sigma >= 0.0) {
+                    return Err(format!(
+                        "predictor 'noisy': sigma must be a finite non-negative number (got '{sigma}')"
+                    ));
+                }
+                PredictorSpec::Noisy { sigma }
+            }
             "bucket" => PredictorSpec::Bucket {
                 buckets: parse_count("bucket count", Self::MAX_BUCKETS as u64)?
                     .map(|b| b as u32)
@@ -135,10 +146,15 @@ impl PredictorSpec {
                 accuracy: Self::DEFAULT_ACCURACY,
                 workload,
             },
-            "percentile" => PredictorSpec::Percentile {
-                pct: parse_param("percentile")?.unwrap_or(Self::DEFAULT_PCT),
-                workload,
-            },
+            "percentile" => {
+                let pct = parse_param("percentile")?.unwrap_or(Self::DEFAULT_PCT);
+                if !(pct.is_finite() && (0.0..=100.0).contains(&pct)) {
+                    return Err(format!(
+                        "predictor 'percentile': percentile must be in [0, 100] (got '{pct}')"
+                    ));
+                }
+                PredictorSpec::Percentile { pct, workload }
+            }
             other => unreachable!("canonical predictor {other} not constructed"),
         })
     }
@@ -284,6 +300,21 @@ mod tests {
         assert!(PredictorSpec::parse("noisy:abc", w).is_err());
         assert!(PredictorSpec::parse("oracle:1", w).is_err());
         assert!(PredictorSpec::parse("vllm", w).is_err());
+        // Degenerate knob values fail with a friendly message instead of
+        // propagating into a degenerate fit.
+        let err = PredictorSpec::parse("noisy:-0.5", w).unwrap_err();
+        assert!(err.contains("finite non-negative"), "{err}");
+        assert!(PredictorSpec::parse("noisy:nan", w).is_err());
+        assert!(PredictorSpec::parse("noisy:inf", w).is_err());
+        assert_eq!(
+            PredictorSpec::parse("noisy:0", w),
+            Ok(PredictorSpec::Noisy { sigma: 0.0 }),
+            "sigma 0 (exact oracle) stays valid"
+        );
+        let err = PredictorSpec::parse("percentile:150", w).unwrap_err();
+        assert!(err.contains("[0, 100]"), "{err}");
+        assert!(PredictorSpec::parse("percentile:-5", w).is_err());
+        assert!(PredictorSpec::parse("percentile:nan", w).is_err());
         // Integer knobs reject absurd, fractional, and non-positive values
         // with an error instead of casting into an abort.
         assert!(PredictorSpec::parse("online:1e18", w).is_err());

@@ -79,15 +79,16 @@ impl SlicedCoordinator {
     /// [`crate::batcher::dp`]'s module docs): batches whose members carry
     /// `predicted_gen` stamps are costed at their predicted budget instead
     /// of the full slice length. A semantic no-op under prediction-free
-    /// policies (unstamped requests fall back to the full budget) that
-    /// trades the optimized planner for the corrected scalar loop, so
-    /// only enable it when requests actually carry predictions — e.g. a
-    /// coordinator embedder (real-mode or custom policy) stamping
-    /// proxy-model estimates before `admit`. The built-in DES P-SCLS
-    /// policy pools per rung and builds its own corrected
-    /// `DpBatcherConfig` from `SimConfig::pred_corrected_dp` rather than
-    /// going through this coordinator. No effect under worker-locus
-    /// (FCFS) batching.
+    /// policies (unstamped requests fall back to the full budget). The
+    /// corrected path runs its own running-max-aware branch-and-bound
+    /// (plateau certificates + bulk estimator kernels), so flipping this
+    /// on no longer trades away the optimized planner's speed — enable it
+    /// whenever requests actually carry predictions, e.g. a coordinator
+    /// embedder (real-mode or custom policy) stamping proxy-model
+    /// estimates before `admit`. The built-in DES P-SCLS policy pools per
+    /// rung and builds its own corrected `DpBatcherConfig` from
+    /// `SimConfig::pred_corrected_dp` rather than going through this
+    /// coordinator. No effect under worker-locus (FCFS) batching.
     pub fn set_pred_correction(&mut self, on: bool) {
         if let Some(cfg) = self.dp_cfg.as_mut() {
             cfg.pred_corrected = on;

@@ -489,7 +489,10 @@ struct PredWorkerState {
 /// per-rung DP additionally costs batches at their *predicted* budget
 /// instead of the rung's worst case (see [`crate::batcher::dp`]), so the
 /// load ledger and LPT offload see estimates that anticipate early
-/// returns.
+/// returns. The corrected planner is a running-max-aware branch-and-bound
+/// over the bulk estimator kernels — on par with the legacy optimized
+/// path — so the correction no longer costs P-SCLS its tick budget at
+/// large pools.
 ///
 /// With the [`crate::predictor::Oracle`] predictor every request completes
 /// in exactly one pass, which is never more passes than baseline SCLS —

@@ -1,0 +1,277 @@
+//! Differential property tests for the corrected DP planner: the
+//! running-max-aware branch-and-bound (`dp_plan` with
+//! `DpBatcherConfig::pred_corrected`) must be bit-exact against the
+//! retained scalar loop (`dp_plan_corrected_reference`) — identical cuts
+//! and bit-identical `est_serve_time` on every materialized batch —
+//! across ~1000 randomized pools: random and fitted estimator surfaces,
+//! opaque (`serve_affine == None`) estimators, `max_batch_size` caps,
+//! tight memory, adversarial rule tables (including capacity-growing
+//! tables that force the plateau deque to rebuild), and adversarial
+//! prediction patterns (constant, oracle-like, anti-correlated with the
+//! sort key, plateau-heavy, gaps, exhausted predictions).
+//!
+//! The legacy suite (`props_dp_differential.rs`) stays frozen and covers
+//! the `pred_corrected: false` path only.
+
+use std::cell::RefCell;
+
+use scls::batcher::{
+    dp_batch, dp_plan, dp_plan_corrected_reference, predicted_batch_iters, DpBatcherConfig,
+    DpScratch,
+};
+use scls::core::{Batch, Request};
+use scls::engine::presets::{EngineKind, EnginePreset};
+use scls::estimator::serving_time::{LinearLatency, ServeEstimate, ServingTimeEstimator};
+use scls::estimator::{MemoryEstimator, MemoryRule};
+use scls::prop_assert;
+use scls::sim::driver::fitted_estimator;
+use scls::testprop::{check, Gen};
+
+/// Wrap an estimator so `serve_affine` always reports `None`: every
+/// plateau takes the bulk-kernel path with no certificates.
+struct Opaque(ServingTimeEstimator);
+
+impl ServeEstimate for Opaque {
+    fn serve_est(&self, n: u32, l_i: u32, s: u32) -> f64 {
+        self.0.serve_est(n, l_i, s)
+    }
+}
+
+/// Random pool with a prediction pattern chosen per case — the shapes the
+/// plateau structure is sensitive to.
+fn gen_pool(g: &mut Gen, max_n: usize) -> Vec<Request> {
+    let pattern = g.u32(0, 7);
+    (0..g.usize(1, max_n))
+        .map(|i| {
+            let li = g.u32(1, 1024);
+            let gl = g.u32(1, 1024);
+            let mut r = Request::new(i as u64, 0.0, li, gl);
+            r.predicted_gen = match pattern {
+                0 => None, // prediction-free: the correction is a no-op
+                1 => Some(gl), // oracle
+                2 => Some(g.u32(1, 1024)),
+                3 => Some(64), // constant: a single plateau
+                4 => Some(li), // correlated with the sort key: monotone
+                5 => Some(1025 - li), // anti-correlated: max plateaus
+                6 => Some(*g.pick(&[8u32, 64, 512])), // plateau-heavy
+                _ => {
+                    if g.u32(0, 2) > 0 {
+                        Some(g.u32(1, 1024))
+                    } else {
+                        None // gaps: unstamped members fall back to S
+                    }
+                }
+            };
+            if g.u32(0, 3) == 0 {
+                // Mid-flight requeues: nonzero progress, sometimes past
+                // the prediction (exhausted ⇒ full-budget fallback).
+                r.generated = g.u32(0, 200);
+            }
+            r
+        })
+        .collect()
+}
+
+/// Random bilinear surfaces around fitted magnitudes; occasionally
+/// negative constants so the `max(0, ·)` clamp can fire and
+/// `serve_affine` returns `None` for some plateaus but not others.
+fn gen_estimator(g: &mut Gen) -> ServingTimeEstimator {
+    let mut coeff = |scale: f64| {
+        let x = g.f64(0.0, scale);
+        if g.u32(0, 9) == 0 {
+            -x * 0.25
+        } else {
+            x
+        }
+    };
+    ServingTimeEstimator {
+        prefill: LinearLatency {
+            c1: coeff(5e-4),
+            c2: coeff(2e-3),
+            c3: coeff(5e-4),
+            c4: coeff(0.05),
+        },
+        decode: LinearLatency {
+            c1: coeff(2e-6),
+            c2: coeff(1e-3),
+            c3: coeff(5e-6),
+            c4: coeff(0.05),
+        },
+    }
+}
+
+fn gen_memory(g: &mut Gen) -> MemoryEstimator {
+    match g.u32(0, 2) {
+        0 => MemoryEstimator::ds_rules(),
+        1 => MemoryEstimator::analytic(800 * 1024, 48 << 30, 0.9),
+        _ => {
+            let delta = 1u64 << 20;
+            let cap = g.u32(1, 12) as u64;
+            MemoryEstimator::analytic(delta, cap * (1024 + 512) * delta, 1.0)
+        }
+    }
+}
+
+fn gen_cfg(g: &mut Gen) -> DpBatcherConfig {
+    DpBatcherConfig {
+        slice_len: *g.pick(&[16u32, 32, 64, 128, 256, 512]),
+        max_batch_size: if g.bool() { Some(g.u32(1, 24)) } else { None },
+        pred_corrected: true,
+    }
+}
+
+/// Reference-side materialization: the retained scalar plan plus the
+/// production corrected budget (`predicted_batch_iters`) per batch.
+fn corrected_batches_reference(
+    pool: Vec<Request>,
+    est: &dyn ServeEstimate,
+    mem: &MemoryEstimator,
+    cfg: &DpBatcherConfig,
+) -> Vec<Batch> {
+    let mut sorted = pool;
+    sorted.sort_by_key(|r| r.input_len);
+    let cuts = dp_plan_corrected_reference(&sorted, est, mem, cfg);
+    let mut batches = Vec::with_capacity(cuts.len());
+    let mut drain = sorted.drain(..);
+    for &(start, end) in &cuts {
+        let members: Vec<Request> = drain.by_ref().take(end - start).collect();
+        let budget = predicted_batch_iters(&members, cfg.slice_len);
+        let mut b = Batch::new(members);
+        b.est_serve_time = est.serve_est(b.size() as u32, b.input_len(), budget);
+        batches.push(b);
+    }
+    batches
+}
+
+/// Full-stack check: plan-level cuts through a REUSED scratch (the
+/// steady-state production shape) and batch-level membership plus
+/// bit-identical serve estimates.
+fn assert_corrected_bit_exact(
+    pool: Vec<Request>,
+    est: &dyn ServeEstimate,
+    mem: &MemoryEstimator,
+    cfg: &DpBatcherConfig,
+    scratch: &mut DpScratch,
+    ctx: &str,
+) -> Result<(), scls::testprop::PropFail> {
+    let mut sorted = pool.clone();
+    sorted.sort_by_key(|r| r.input_len);
+    dp_plan(&sorted, est, mem, cfg, scratch);
+    let ref_cuts = dp_plan_corrected_reference(&sorted, est, mem, cfg);
+    prop_assert!(
+        scratch.cuts() == &ref_cuts[..],
+        "{ctx}: cuts {:?} vs {:?}",
+        scratch.cuts(),
+        ref_cuts
+    );
+
+    let fast = dp_batch(pool.clone(), est, mem, cfg);
+    let slow = corrected_batches_reference(pool, est, mem, cfg);
+    prop_assert!(
+        fast.len() == slow.len(),
+        "{ctx}: batch count {} vs {}",
+        fast.len(),
+        slow.len()
+    );
+    for (idx, (f, s)) in fast.iter().zip(&slow).enumerate() {
+        let fi: Vec<u64> = f.requests.iter().map(|r| r.id).collect();
+        let si: Vec<u64> = s.requests.iter().map(|r| r.id).collect();
+        prop_assert!(fi == si, "{ctx}: batch {idx} members {fi:?} vs {si:?}");
+        prop_assert!(
+            f.est_serve_time.to_bits() == s.est_serve_time.to_bits(),
+            "{ctx}: batch {idx} est {} vs {}",
+            f.est_serve_time,
+            s.est_serve_time
+        );
+    }
+    Ok(())
+}
+
+#[test]
+fn corrected_bnb_matches_reference_on_random_surfaces() {
+    let scratch = RefCell::new(DpScratch::new());
+    check("dp-corrected-differential-random", 200, |g| {
+        let est = gen_estimator(g);
+        let mem = gen_memory(g);
+        let cfg = gen_cfg(g);
+        let pool = gen_pool(g, 200);
+        assert_corrected_bit_exact(pool, &est, &mem, &cfg, &mut scratch.borrow_mut(), "random")
+    });
+}
+
+#[test]
+fn corrected_bnb_matches_reference_with_fitted_estimators() {
+    let scratch = RefCell::new(DpScratch::new());
+    check("dp-corrected-differential-fitted", 200, |g| {
+        let kind = if g.bool() { EngineKind::Hf } else { EngineKind::Ds };
+        let preset = EnginePreset::paper(kind);
+        let est = fitted_estimator(&preset, g.u64());
+        let mem = preset.memory_estimator();
+        let cfg = gen_cfg(g);
+        let pool = gen_pool(g, 200);
+        assert_corrected_bit_exact(pool, &est, &mem, &cfg, &mut scratch.borrow_mut(), "fitted")
+    });
+}
+
+#[test]
+fn corrected_bnb_matches_reference_on_opaque_estimators() {
+    // serve_affine == None everywhere: no certificates, pure bulk-kernel
+    // plateau evaluation — must still agree bit-for-bit.
+    let scratch = RefCell::new(DpScratch::new());
+    check("dp-corrected-differential-opaque", 200, |g| {
+        let est = Opaque(gen_estimator(g));
+        let mem = gen_memory(g);
+        let cfg = gen_cfg(g);
+        let pool = gen_pool(g, 120);
+        assert_corrected_bit_exact(pool, &est, &mem, &cfg, &mut scratch.borrow_mut(), "opaque")
+    });
+}
+
+#[test]
+fn corrected_bnb_matches_reference_under_tight_memory_and_caps() {
+    let scratch = RefCell::new(DpScratch::new());
+    check("dp-corrected-differential-tight", 200, |g| {
+        let est = fitted_estimator(&EnginePreset::paper(EngineKind::Ds), 7);
+        let delta = 1u64 << 20;
+        let n_cap = g.u32(1, 6) as u64;
+        let mem = MemoryEstimator::analytic(delta, n_cap * (1024 + 128) * delta, 1.0);
+        let cfg = DpBatcherConfig {
+            slice_len: 128,
+            max_batch_size: Some(g.u32(1, 4)),
+            pred_corrected: true,
+        };
+        let pool = gen_pool(g, 150);
+        assert_corrected_bit_exact(pool, &est, &mem, &cfg, &mut scratch.borrow_mut(), "tight")
+    });
+}
+
+#[test]
+fn corrected_bnb_matches_reference_on_adversarial_tables() {
+    // Abrupt window steps (descending tables) and capacity GROWING with
+    // length (ascending tables): the latter moves the DP window's left
+    // edge left mid-scan, which must rebuild the plateau deque and shut
+    // off the skip certificates rather than mis-certify.
+    let scratch = RefCell::new(DpScratch::new());
+    check("dp-corrected-differential-tables", 200, |g| {
+        let est = fitted_estimator(&EnginePreset::paper(EngineKind::Hf), 11);
+        let mem = if g.bool() {
+            MemoryEstimator {
+                rule: MemoryRule::Table(vec![
+                    (g.u32(700, 1100), g.u32(1, 4)),
+                    (g.u32(300, 699), g.u32(5, 20)),
+                    (0, g.u32(21, 64)),
+                ]),
+            }
+        } else {
+            MemoryEstimator {
+                rule: MemoryRule::Table(vec![
+                    (g.u32(200, 900), g.u32(8, 40)),
+                    (0, g.u32(1, 6)),
+                ]),
+            }
+        };
+        let cfg = gen_cfg(g);
+        let pool = gen_pool(g, 180);
+        assert_corrected_bit_exact(pool, &est, &mem, &cfg, &mut scratch.borrow_mut(), "table")
+    });
+}

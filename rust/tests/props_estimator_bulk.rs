@@ -1,0 +1,142 @@
+//! Property tests for the bulk estimator kernels: `serve_est_many` must be
+//! bit-identical to the scalar `serve_est` loop for BOTH estimator
+//! surfaces (the two-surface Eq. 1–4 estimator and the whole-slice
+//! real-engine surface), across randomized coefficients — including
+//! clamp-activating negative fits — and every chunk-remainder lane width.
+//! The DP planner's differential contracts read candidates out of
+//! bulk-filled buffers, so this bit-identity is what keeps them sound.
+//!
+//! Also covers the skip-certificate contract of `serve_affine_slack`:
+//! wherever `serve_affine` applies, every float `serve_est(n')` must sit
+//! at or above the certified affine lower bound anchored at any n ≤ n'.
+
+use scls::estimator::serving_time::{
+    LinearLatency, ServeEstimate, ServingTimeEstimator, SliceTimeEstimator,
+};
+use scls::prop_assert;
+use scls::testprop::{check, Gen};
+
+/// Random coefficients around fitted magnitudes, ~25% negative so the
+/// `max(0, ·)` clamps activate (and `serve_affine` returns `None` for
+/// some lengths).
+fn gen_surface(g: &mut Gen, scales: [f64; 4]) -> LinearLatency {
+    let mut coeff = |scale: f64| {
+        let x = g.f64(0.0, scale);
+        if g.u32(0, 3) == 0 {
+            -x
+        } else {
+            x
+        }
+    };
+    LinearLatency {
+        c1: coeff(scales[0]),
+        c2: coeff(scales[1]),
+        c3: coeff(scales[2]),
+        c4: coeff(scales[3]),
+    }
+}
+
+fn gen_two_surface(g: &mut Gen) -> ServingTimeEstimator {
+    ServingTimeEstimator {
+        prefill: gen_surface(g, [5e-4, 2e-3, 5e-4, 0.05]),
+        decode: gen_surface(g, [2e-6, 1e-3, 5e-6, 0.05]),
+    }
+}
+
+fn assert_bulk_matches_scalar(
+    est: &dyn ServeEstimate,
+    g: &mut Gen,
+    ctx: &str,
+) -> Result<(), scls::testprop::PropFail> {
+    let l_i = g.u32(0, 1400);
+    let s = *g.pick(&[0u32, 1, 16, 128, 512, 1024]);
+    let n0 = g.u32(1, 64);
+    // Lengths 0..=33 sweep every remainder width of the 8-lane chunks
+    // (0..LANES) plus multi-chunk bodies; an occasional long run checks
+    // deep into the chunked loop.
+    let len = if g.u32(0, 9) == 0 {
+        g.usize(64, 400)
+    } else {
+        g.usize(0, 33)
+    };
+    let mut out = vec![f64::NAN; len];
+    est.serve_est_many(n0..n0 + len as u32, l_i, s, &mut out);
+    for (k, &got) in out.iter().enumerate() {
+        let n = n0 + k as u32;
+        let want = est.serve_est(n, l_i, s);
+        prop_assert!(
+            got.to_bits() == want.to_bits(),
+            "{ctx}: serve_est_many[{k}] (n={n}, l_i={l_i}, s={s}) = {got:?} vs scalar {want:?}"
+        );
+    }
+    Ok(())
+}
+
+#[test]
+fn bulk_kernel_bit_identical_two_surface() {
+    check("bulk-kernel-two-surface", 300, |g| {
+        let est = gen_two_surface(g);
+        assert_bulk_matches_scalar(&est, g, "two-surface")
+    });
+}
+
+#[test]
+fn bulk_kernel_bit_identical_slice_surface() {
+    check("bulk-kernel-slice-surface", 300, |g| {
+        let est = SliceTimeEstimator {
+            surface: gen_surface(g, [2e-5, 3e-4, 1e-5, 0.02]),
+        };
+        assert_bulk_matches_scalar(&est, g, "slice-surface")
+    });
+}
+
+#[test]
+fn bulk_kernel_default_impl_is_the_scalar_loop() {
+    // A custom estimator that does NOT override the kernel must get the
+    // scalar loop verbatim (this is what keeps opaque estimators inside
+    // the planner's differential contract).
+    struct Weird;
+    impl ServeEstimate for Weird {
+        fn serve_est(&self, n: u32, l_i: u32, s: u32) -> f64 {
+            // Deliberately rounding-hostile: not affine, not monotone.
+            ((n as f64).sqrt() * 1e3 + (l_i as f64) / 7.0) * (s as f64 + 0.1).ln_1p()
+        }
+    }
+    check("bulk-kernel-default", 200, |g| {
+        assert_bulk_matches_scalar(&Weird, g, "default-impl")
+    });
+}
+
+#[test]
+fn affine_slack_certifies_random_surfaces() {
+    // Wherever the affine fast path applies, the certified slack must
+    // cover the float gap between serve_est and the affine anchor — the
+    // exact inequality the corrected planner's skip certificates assume:
+    //   serve_est(n') ≥ (a·n + b) + (n' − n)·a − σ   for 1 ≤ n ≤ n' ≤ N.
+    check("bulk-kernel-slack", 300, |g| {
+        let est = gen_two_surface(g);
+        let l_i = g.u32(0, 1400);
+        let s = *g.pick(&[1u32, 16, 128, 512, 1024]);
+        let Some((a, b)) = est.serve_affine(l_i, s) else {
+            return Ok(()); // clamp may fire: no certificate claimed
+        };
+        let n_max = g.u32(2, 4096);
+        let slack = est.serve_affine_slack(l_i, s, n_max);
+        prop_assert!(
+            slack.is_finite() && slack >= 0.0,
+            "slack {slack} not finite/non-negative"
+        );
+        for _ in 0..16 {
+            let hi = g.u32(1, n_max);
+            let lo = g.u32(1, hi);
+            let v = est.serve_est(hi, l_i, s);
+            let bound = (a * lo as f64 + b) + (hi - lo) as f64 * a - slack;
+            prop_assert!(
+                v >= bound,
+                "serve_est({hi},{l_i},{s})={v} below certified bound {bound} \
+                 (anchor n={lo}, n_max={n_max}, slack={slack})"
+            );
+        }
+        Ok(())
+    });
+}
