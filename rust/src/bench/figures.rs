@@ -751,6 +751,118 @@ pub fn fig_drift(fc: &FigureConfig) -> FigureResult {
 }
 
 // ---------------------------------------------------------------------------
+// Fault sweep — elastic-fleet robustness (extension figure)
+// ---------------------------------------------------------------------------
+
+/// The fault scenarios the robustness figure sweeps. Every scenario keeps
+/// at least one worker alive at all times, so the 100%-completion
+/// invariant is well-posed.
+fn fault_scenarios(fc: &FigureConfig) -> Vec<(&'static str, crate::sim::FaultPlan)> {
+    use crate::sim::FaultPlan;
+    let w = fc.workers;
+    // Rolling restart: drain each worker in turn, one joiner per drain —
+    // the last join must land inside the trace window.
+    let period = fc.duration / (w as f64 + 2.0);
+    // Correlated failure: half the fleet crashes at T/3 (a rack goes
+    // down); replacements join at 2T/3.
+    let half = (w / 2).max(1).min(w - 1);
+    let mut correlated = FaultPlan::none();
+    for i in 0..half {
+        correlated = correlated.crash(w - 1 - i, fc.duration / 3.0);
+    }
+    correlated = correlated.join(half as u32, 2.0 * fc.duration / 3.0);
+    vec![
+        ("none", FaultPlan::none()),
+        ("rolling", FaultPlan::rolling(w, period)),
+        ("correlated", correlated),
+    ]
+}
+
+/// One fault-sweep cell: run `which` through a fault plan and return the
+/// full metrics (the sweep reports the fleet counters, which `Summary`
+/// does not carry).
+fn run_fault_cell(
+    fc: &FigureConfig,
+    which: &str,
+    rate: f64,
+    plan: &crate::sim::FaultPlan,
+) -> crate::metrics::RunMetrics {
+    let trace = fc.trace(rate);
+    Simulation::new(fc.sim(EngineKind::Ds))
+        .run_named_faulted(&trace, which, fc.slice_len, plan)
+        .unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Extension figure: throughput and tail latency through worker churn.
+/// SCLS, ILS, and P-SCLS run through a rolling restart and a correlated
+/// half-fleet crash, against the no-fault baseline. The acceptance shape:
+/// every request completes in every scenario (the slice-boundary reclaim
+/// loses at most one slice per crashed batch, never a request), and the
+/// faulted runs trade throughput/tail latency, not completeness.
+pub fn fig_fault(fc: &FigureConfig) -> FigureResult {
+    let scenarios = fault_scenarios(fc);
+    let mut items: Vec<(&'static str, &'static str, crate::sim::FaultPlan)> = Vec::new();
+    for which in ["SCLS", "ILS", "P-SCLS"] {
+        for (label, plan) in &scenarios {
+            items.push((which, label, plan.clone()));
+        }
+    }
+    let sums = parallel_map(fc.jobs, items, |(which, label, plan)| {
+        let m = run_fault_cell(fc, which, 20.0, &plan);
+        let mut rts: Vec<f64> = m.completed.iter().map(|c| c.finished - c.arrival).collect();
+        rts.sort_by(f64::total_cmp);
+        let p99 = crate::util::stats::percentile_sorted(&rts, 0.99);
+        let fleet = (m.worker_crashes, m.reclaimed_requests, m.lost_slices, m.migrations);
+        (which, label, m.summarize(), p99, fleet)
+    });
+    let mut rows = Vec::new();
+    let mut arr = Vec::new();
+    for (which, label, s, p99, (crashes, reclaimed, lost, migrations)) in sums {
+        rows.push(vec![
+            which.to_string(),
+            label.to_string(),
+            f2(s.throughput),
+            f2(s.avg_response_time),
+            f2(p99),
+            s.completed.to_string(),
+            crashes.to_string(),
+            reclaimed.to_string(),
+            lost.to_string(),
+            migrations.to_string(),
+        ]);
+        let mut o = s.to_json();
+        o.set("scheduler", which)
+            .set("scenario", label)
+            .set("p99_response_time", p99)
+            .set("worker_crashes", crashes)
+            .set("reclaimed_requests", reclaimed)
+            .set("lost_slices", lost)
+            .set("migrations", migrations);
+        arr.push(o);
+    }
+    FigureResult {
+        id: "figfault".into(),
+        title: "Fault sweep: throughput/tail latency through rolling restart and \
+                correlated crash (DS, rate 20)"
+            .into(),
+        header: vec![
+            "scheduler".into(),
+            "scenario".into(),
+            "thpt".into(),
+            "avg RT".into(),
+            "p99 RT".into(),
+            "completed".into(),
+            "crashes".into(),
+            "reclaimed".into(),
+            "lost slices".into(),
+            "migrations".into(),
+        ],
+        rows,
+        json: Json::Arr(arr),
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Fig. 22 — scalability: throughput vs number of workers
 // ---------------------------------------------------------------------------
 
@@ -923,6 +1035,53 @@ mod tests {
             t_online >= t_static * 0.95,
             "online thpt {t_online} collapsed vs static {t_static}"
         );
+    }
+
+    #[test]
+    fn figfault_every_scenario_completes_everything() {
+        let r = fig_fault(&quick());
+        assert_eq!(r.rows.len(), 9, "3 policies x 3 scenarios");
+        let arr = r.json.as_arr().unwrap();
+        let cell = |which: &str, scen: &str| {
+            arr.iter()
+                .find(|o| {
+                    o.get("scheduler").and_then(Json::as_str) == Some(which)
+                        && o.get("scenario").and_then(Json::as_str) == Some(scen)
+                })
+                .unwrap_or_else(|| panic!("missing cell {which}/{scen}"))
+        };
+        let num = |which: &str, scen: &str, key: &str| {
+            cell(which, scen).get(key).unwrap().as_i64().unwrap()
+        };
+        for which in ["SCLS", "ILS", "P-SCLS"] {
+            // The no-fault baseline completes the whole trace and touches
+            // no fleet counter.
+            let base = num(which, "none", "completed");
+            assert!(base > 0);
+            for key in ["worker_crashes", "reclaimed_requests", "lost_slices", "migrations"] {
+                assert_eq!(num(which, "none", key), 0, "{which} none {key}");
+            }
+            for scen in ["rolling", "correlated"] {
+                // The headline invariant: churn costs work, never requests.
+                assert_eq!(
+                    num(which, scen, "completed"),
+                    base,
+                    "{which} lost requests under {scen}"
+                );
+                // Per-crash loss is bounded by the interrupted slice: only
+                // in-flight reclaims count as lost.
+                assert!(
+                    num(which, scen, "reclaimed_requests") >= num(which, scen, "lost_slices"),
+                    "{which}/{scen} counter identity"
+                );
+            }
+            assert_eq!(
+                num(which, "correlated", "worker_crashes"),
+                4,
+                "{which} must see the half-fleet crash"
+            );
+            assert_eq!(num(which, "rolling", "worker_crashes"), 0);
+        }
     }
 
     #[test]

@@ -75,9 +75,14 @@ impl ContinuousWorker {
                 break;
             }
             let mut req = self.waiting.pop_front().unwrap();
-            req.slices = 1; // continuous batching: one (and only) schedule
+            // Continuous batching normally schedules once (slices == 1);
+            // a crash-reclaimed re-admission counts as another schedule.
+            req.slices += 1;
             admit_prefill += self.engine.prefill_mean(1, req.input_len);
-            let remaining = req.target_gen_len.min(self.max_gen_len).max(1);
+            // Tokens still owed: the full target for a fresh request,
+            // target minus what survived the reclaim for a re-admission.
+            let total = req.target_gen_len.min(self.max_gen_len).max(1);
+            let remaining = total.saturating_sub(req.generated).max(1);
             self.running.push(Running {
                 cached: req.input_len,
                 remaining,
@@ -115,6 +120,18 @@ impl ContinuousWorker {
             }
         }
         exited
+    }
+
+    /// Crash path: surrender everything this worker holds. Returns
+    /// `(running, waiting)` — the running set at its **last completed
+    /// iteration boundary** (`finish_iteration` was never called for the
+    /// in-flight iteration, so each request's `generated` is exactly its
+    /// boundary state; only the interrupted iteration is lost) and the
+    /// untouched waiting queue.
+    pub fn abandon(&mut self) -> (Vec<Request>, Vec<Request>) {
+        let running = self.running.drain(..).map(|r| r.req).collect();
+        let waiting = self.waiting.drain(..).collect();
+        (running, waiting)
     }
 }
 
@@ -197,5 +214,47 @@ mod tests {
         w.waiting.push_back(req(0, 10, 10_000));
         w.begin_iteration().unwrap();
         assert_eq!(w.running[0].remaining, 8);
+    }
+
+    #[test]
+    fn abandon_surrenders_boundary_state_and_readmission_resumes() {
+        let mut w = worker(8);
+        w.waiting.push_back(req(0, 10, 5));
+        w.waiting.push_back(req(1, 10, 7));
+        w.waiting.push_back(req(2, 10, 3)); // stays waiting (cap below)
+        w.max_parallel = 2;
+        w.begin_iteration().unwrap();
+        w.finish_iteration(1.0);
+        w.begin_iteration().unwrap();
+        w.finish_iteration(2.0); // both running requests at generated == 2
+        w.begin_iteration().unwrap(); // in-flight iteration — lost on crash
+        let (running, waiting) = w.abandon();
+        assert!(w.running.is_empty() && w.waiting.is_empty());
+        assert_eq!(running.len(), 2);
+        assert!(running.iter().all(|r| r.generated == 2), "{running:?}");
+        assert_eq!(waiting.len(), 1);
+        assert_eq!(waiting[0].generated, 0);
+
+        // Re-admission elsewhere resumes from the boundary: a reclaimed
+        // request owes target - generated more tokens, and its slice count
+        // keeps climbing.
+        let mut w2 = worker(8);
+        let mut r = running.into_iter().next().unwrap();
+        r.input_len = r.orig_input_len + r.generated;
+        w2.waiting.push_back(r);
+        w2.begin_iteration().unwrap();
+        let owed = w2.running[0].req.target_gen_len - 2;
+        assert_eq!(w2.running[0].remaining, owed);
+        assert_eq!(w2.running[0].req.slices, 2);
+        for t in 0..owed {
+            let done = w2.finish_iteration(t as f64);
+            if t == owed - 1 {
+                assert_eq!(done.len(), 1);
+                let done = &done[0];
+                assert_eq!(done.generated, done.target_gen_len);
+            } else {
+                w2.begin_iteration().unwrap();
+            }
+        }
     }
 }

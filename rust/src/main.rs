@@ -28,6 +28,7 @@ use scls::predictor::PredictorSpec;
 use scls::scheduler::parse_policy_name;
 use scls::scheduler::spec::SchedulerSpec;
 use scls::sim::driver::{SimConfig, Simulation};
+use scls::sim::FaultPlan;
 use scls::util::cli::Args;
 use scls::util::jobs::parallel_map;
 use scls::util::logging;
@@ -73,6 +74,11 @@ SUBCOMMANDS:
       --pred-accuracy A  bucket/online classifier accuracy in [0,1] [0.85]
       --pred-corrected-dp  cost DP batches at their predicted early-return
                          budget instead of the full slice length (P-SCLS)
+      --faults SPEC      deterministic worker-lifecycle plan, comma list of
+                         crash:wIDX@TIME | drain:wIDX@TIME | join:N@TIME |
+                         rolling:PERIOD (e.g. crash:w3@120,join:2@300 or
+                         rolling:30s). Worker indices are 0-based; joiners
+                         get fresh indices.          [none]
   serve       Serve a scaled trace on the real PJRT cluster
       --artifacts DIR    AOT artifact dir            [artifacts]
       --workers W        worker threads              [2]
@@ -135,7 +141,7 @@ fn dispatch(args: &Args) -> Result<()> {
 fn figure_ids() -> Vec<&'static str> {
     vec![
         "fig5", "fig6", "fig8", "fig10", "fig11", "fig12", "fig15", "fig17", "fig18", "fig22",
-        "figpred", "figdrift",
+        "figpred", "figdrift", "figfault",
     ]
 }
 
@@ -170,6 +176,9 @@ fn run_figure(id: &str, fc: &FigureConfig) -> Result<Vec<FigureResult>> {
         "figpred" => vec![figures::fig_pred(fc, &[0.0, 0.1, 0.25, 0.5, 1.0])],
         // Extension: online predictor refit under a mid-run length drift.
         "figdrift" => vec![figures::fig_drift(fc)],
+        // Extension: throughput/P99 through rolling restarts and correlated
+        // failures (elastic fault-tolerant fleet).
+        "figfault" => vec![figures::fig_fault(fc)],
         other => bail!("unknown figure id '{other}' (known: {:?})", figure_ids()),
     })
 }
@@ -334,11 +343,22 @@ fn predictor_spec(args: &Args, workload: WorkloadKind) -> Result<PredictorSpec> 
     Ok(spec)
 }
 
+/// Parse `--faults` into a validated plan against the run's initial fleet
+/// size. Absent flag → the canonical empty plan (byte-identical runs to the
+/// fixed-fleet world).
+fn fault_plan(args: &Args, workers: usize) -> Result<FaultPlan> {
+    match args.str_opt("faults") {
+        Some(spec) => FaultPlan::parse(spec, workers).map_err(|e| anyhow!("--faults: {e}")),
+        None => Ok(FaultPlan::none()),
+    }
+}
+
 fn cmd_simulate(args: &Args) -> Result<()> {
     let cfg = experiment_config(args)?;
     // Case-insensitive; unknown names error with the valid-name list.
     let which = parse_policy_name(args.str_or("scheduler", "SCLS")).map_err(|e| anyhow!("{e}"))?;
     let pspec = predictor_spec(args, cfg.workload)?;
+    let plan = fault_plan(args, cfg.workers)?;
     let trace = Trace::generate(&TraceConfig {
         kind: cfg.workload,
         rate: cfg.rate,
@@ -374,7 +394,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         which
     );
     let metrics = sim
-        .run_named(&trace, which, cfg.slice_len)
+        .run_named_faulted(&trace, which, cfg.slice_len, &plan)
         .map_err(|e| anyhow!("{e}"))?;
     let s = metrics.summarize();
     println!("engine            {}", cfg.engine.name());
@@ -389,6 +409,13 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     println!("CT std            {:.2} s", s.ct_std);
     println!("early-return      {:.4}", s.early_return_ratio);
     println!("slices [1,2,3,4+] {:?}", s.slice_histogram);
+    if !plan.is_empty() {
+        println!("fault events      {}", plan.events.len());
+        println!("worker crashes    {}", metrics.worker_crashes);
+        println!("reclaimed reqs    {}", metrics.reclaimed_requests);
+        println!("lost slices       {}", metrics.lost_slices);
+        println!("migrations        {}", metrics.migrations);
+    }
     if matches!(which, "P-SCLS" | "P-CB") {
         println!("predictor         {}", pspec.describe());
         println!("underpredicted    {}", metrics.underpredicted);
@@ -606,6 +633,55 @@ mod tests {
         );
         // The equivalent registry spelling fails the same way.
         assert!(spec_of("simulate --predictor noisy:-0.5").is_err());
+    }
+
+    fn plan_of(s: &str, workers: usize) -> Result<FaultPlan> {
+        fault_plan(&args(s), workers)
+    }
+
+    #[test]
+    fn faults_flag_absent_is_the_empty_plan() {
+        assert_eq!(plan_of("simulate", 8).unwrap(), FaultPlan::none());
+    }
+
+    #[test]
+    fn faults_flag_parses_valid_specs() {
+        let plan = plan_of("simulate --faults crash:w3@120,join:2@300", 8).unwrap();
+        assert_eq!(plan.events.len(), 2);
+        // Rolling restarts expand to drain+join per initial worker.
+        let plan = plan_of("simulate --faults rolling:30s", 4).unwrap();
+        assert_eq!(plan.events.len(), 8);
+    }
+
+    #[test]
+    fn faults_unknown_worker_index_is_a_friendly_error() {
+        let err = plan_of("simulate --faults crash:w9@10", 8).unwrap_err().to_string();
+        assert!(err.contains("--faults"), "{err}");
+        assert!(err.contains("unknown worker"), "{err}");
+        // A join that fires first makes the index valid.
+        assert!(plan_of("simulate --faults join:2@5,crash:w9@10", 8).is_ok());
+    }
+
+    #[test]
+    fn faults_bad_times_are_friendly_errors() {
+        let err = plan_of("simulate --faults crash:w1@-5", 8).unwrap_err().to_string();
+        assert!(err.contains("negative"), "{err}");
+        let err = plan_of("simulate --faults drain:w1@nan", 8).unwrap_err().to_string();
+        assert!(err.contains("finite"), "{err}");
+    }
+
+    #[test]
+    fn faults_zero_join_count_is_a_friendly_error() {
+        let err = plan_of("simulate --faults join:0@5", 8).unwrap_err().to_string();
+        assert!(err.contains("at least 1"), "{err}");
+    }
+
+    #[test]
+    fn faults_junk_entries_are_friendly_errors() {
+        let err = plan_of("simulate --faults explode:w1@10", 8).unwrap_err().to_string();
+        assert!(err.contains("unknown fault op"), "{err}");
+        let err = plan_of("simulate --faults crash:w1", 8).unwrap_err().to_string();
+        assert!(err.contains("@TIME"), "{err}");
     }
 
     #[test]

@@ -39,6 +39,24 @@ pub struct PredictionRecord {
     pub wasted_tokens: u64,
 }
 
+/// What happened to the fleet at a lifecycle event (elastic-fleet runs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FleetEventKind {
+    Join,
+    Drain,
+    Crash,
+}
+
+/// One worker-lifecycle event as applied by a policy: `worker` joined,
+/// started draining, or crashed. Streamed through
+/// [`sink::MetricsSink::on_fleet`]; crashes also bump
+/// [`RunMetrics::worker_crashes`].
+#[derive(Debug, Clone, Copy)]
+pub struct FleetRecord {
+    pub worker: usize,
+    pub kind: FleetEventKind,
+}
+
 /// Per-batch-serving record.
 #[derive(Debug, Clone)]
 pub struct BatchRecord {
@@ -88,6 +106,19 @@ pub struct RunMetrics {
     /// a predicted budget strictly below the slice cap. Always 0 with the
     /// correction off.
     pub corrected_batches: u64,
+    /// Elastic-fleet runs only: workers that crashed (abrupt failures
+    /// applied by a fault-aware policy). Always 0 on `FaultPlan::none()`.
+    pub worker_crashes: u64,
+    /// Requests re-queued off a crashed worker (in-flight survivors plus
+    /// queued work it owned). Always 0 without crashes.
+    pub reclaimed_requests: u64,
+    /// In-flight requests whose *current* slice was lost to a crash and
+    /// must be re-served from the last completed slice boundary — the
+    /// per-crash work-loss bound (≤ one slice per surviving request).
+    pub lost_slices: u64,
+    /// Requests moved between workers at a slice boundary (drain handoffs
+    /// plus queued-work reassignment after a crash).
+    pub migrations: u64,
 }
 
 /// Headline summary of a run.
@@ -154,6 +185,10 @@ impl RunMetrics {
             .set("wasted_kv_token_steps", self.wasted_kv_token_steps)
             .set("predictor_refits", self.predictor_refits)
             .set("corrected_batches", self.corrected_batches)
+            .set("worker_crashes", self.worker_crashes)
+            .set("reclaimed_requests", self.reclaimed_requests)
+            .set("lost_slices", self.lost_slices)
+            .set("migrations", self.migrations)
             .set("makespan", self.makespan)
             .set("worker_completion", self.worker_completion.clone());
         let completed: Vec<Json> = self

@@ -12,7 +12,7 @@
 //! Sinks must be cheap and must not assume event ordering beyond
 //! monotonically non-decreasing `now` within one run.
 
-use super::{BatchRecord, CompletedRequest, PredictionRecord, RunMetrics};
+use super::{BatchRecord, CompletedRequest, FleetRecord, PredictionRecord, RunMetrics};
 
 /// Observer of one experiment run's event stream. All hooks default to
 /// no-ops so implementations override only what they consume.
@@ -34,6 +34,14 @@ pub trait MetricsSink {
     /// The DP batcher costed a batch at a predicted budget strictly below
     /// the slice cap (predicted-correction opt-in only).
     fn on_corrected_batch(&mut self, _now: f64) {}
+    /// A worker-lifecycle event was applied by a fault-aware policy
+    /// (elastic-fleet runs only; never fires on `FaultPlan::none()`).
+    fn on_fleet(&mut self, _now: f64, _rec: &FleetRecord) {}
+    /// A crash reclaimed stale work from `worker`: `in_flight` survivors
+    /// lost their current slice, `queued` requests were re-queued intact.
+    fn on_reclaim(&mut self, _now: f64, _worker: usize, _in_flight: usize, _queued: usize) {}
+    /// `count` requests migrated off `worker` at a slice boundary (drain).
+    fn on_migration(&mut self, _now: f64, _worker: usize, _count: usize) {}
     /// The run drained; `metrics` is the final event log.
     fn on_run_end(&mut self, _metrics: &RunMetrics) {}
 }
@@ -65,6 +73,12 @@ pub struct Tally {
     /// (see [`RunMetrics`]).
     pub predictor_refits: u64,
     pub corrected_batches: u64,
+    /// Elastic-fleet counters (see [`RunMetrics`]); all 0 on fault-free
+    /// runs.
+    pub worker_crashes: u64,
+    pub reclaimed_requests: u64,
+    pub lost_slices: u64,
+    pub migrations: u64,
 }
 
 impl MetricsSink for Tally {
@@ -99,6 +113,22 @@ impl MetricsSink for Tally {
 
     fn on_corrected_batch(&mut self, _now: f64) {
         self.corrected_batches += 1;
+    }
+
+    fn on_fleet(&mut self, _now: f64, rec: &FleetRecord) {
+        if rec.kind == super::FleetEventKind::Crash {
+            self.worker_crashes += 1;
+        }
+    }
+
+    fn on_reclaim(&mut self, _now: f64, _worker: usize, in_flight: usize, queued: usize) {
+        self.reclaimed_requests += (in_flight + queued) as u64;
+        self.lost_slices += in_flight as u64;
+        self.migrations += queued as u64;
+    }
+
+    fn on_migration(&mut self, _now: f64, _worker: usize, count: usize) {
+        self.migrations += count as u64;
     }
 }
 
@@ -139,6 +169,24 @@ impl MetricsSink for Fanout<'_> {
     fn on_corrected_batch(&mut self, now: f64) {
         for s in self.0.iter_mut() {
             s.on_corrected_batch(now);
+        }
+    }
+
+    fn on_fleet(&mut self, now: f64, rec: &FleetRecord) {
+        for s in self.0.iter_mut() {
+            s.on_fleet(now, rec);
+        }
+    }
+
+    fn on_reclaim(&mut self, now: f64, worker: usize, in_flight: usize, queued: usize) {
+        for s in self.0.iter_mut() {
+            s.on_reclaim(now, worker, in_flight, queued);
+        }
+    }
+
+    fn on_migration(&mut self, now: f64, worker: usize, count: usize) {
+        for s in self.0.iter_mut() {
+            s.on_migration(now, worker, count);
         }
     }
 

@@ -22,6 +22,11 @@ impl MaxMinOffloader {
     /// Allocation-lean variant for per-tick callers: drains `batches`
     /// (keeping its capacity) and pushes assignments into `out` (cleared
     /// first). Identical policy and ordering to [`Self::offload`].
+    ///
+    /// Only **accepting** workers are targeted (the ledger's mask — dead
+    /// or draining workers never receive work). If no worker accepts —
+    /// mid-fault, or an empty ledger — the batches are left in `batches`
+    /// for the caller to re-pool rather than assigned to a ghost index.
     pub fn offload_into(
         &self,
         batches: &mut Vec<Batch>,
@@ -31,6 +36,9 @@ impl MaxMinOffloader {
         out.clear();
         // Longest estimated serving time first.
         batches.sort_by(|a, b| b.est_serve_time.total_cmp(&a.est_serve_time));
+        if ledger.try_argmin().is_none() {
+            return; // nowhere to place work; leave batches with the caller
+        }
         out.reserve(batches.len());
         for b in batches.drain(..) {
             let w = ledger.argmin();
@@ -109,5 +117,42 @@ mod tests {
     fn empty_batches() {
         let mut ledger = LoadLedger::new(4);
         assert!(MaxMinOffloader.offload(vec![], &mut ledger).is_empty());
+    }
+
+    #[test]
+    fn all_but_one_dead_routes_everything_to_the_survivor() {
+        let mut ledger = LoadLedger::new(4);
+        for w in [0, 1, 3] {
+            ledger.set_accepting(w, false);
+        }
+        let mut batches = vec![batch(1, 9.0), batch(2, 1.0), batch(3, 4.0)];
+        let mut out = Vec::new();
+        MaxMinOffloader.offload_into(&mut batches, &mut ledger, &mut out);
+        assert!(batches.is_empty());
+        assert_eq!(out.len(), 3);
+        assert!(out.iter().all(|(w, _)| *w == 2), "{out:?}");
+        assert_eq!(ledger.load(2), 14.0);
+        assert_eq!(ledger.load(0), 0.0);
+    }
+
+    #[test]
+    fn no_accepting_worker_leaves_batches_with_caller() {
+        // Whole fleet masked out mid-fault …
+        let mut ledger = LoadLedger::new(2);
+        ledger.set_accepting(0, false);
+        ledger.set_accepting(1, false);
+        let mut batches = vec![batch(1, 2.0)];
+        let mut out = Vec::new();
+        MaxMinOffloader.offload_into(&mut batches, &mut ledger, &mut out);
+        assert_eq!(batches.len(), 1, "unplaceable batches must stay with the caller");
+        assert!(out.is_empty());
+
+        // … and the degenerate empty ledger (would previously have indexed
+        // out of bounds via argmin()==0).
+        let mut empty = LoadLedger::new(0);
+        let mut batches = vec![batch(2, 3.0)];
+        MaxMinOffloader.offload_into(&mut batches, &mut empty, &mut out);
+        assert_eq!(batches.len(), 1);
+        assert!(out.is_empty());
     }
 }

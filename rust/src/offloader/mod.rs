@@ -10,20 +10,48 @@ pub use roundrobin::RoundRobin;
 /// A worker-load ledger shared by offloaders and the scheduler (Eq. 11):
 /// the load of a worker is the estimated time to serve everything in its
 /// local queue (plus the batch it is currently serving).
+///
+/// The ledger also tracks a per-worker *accepting* flag for the elastic
+/// fleet: dead and draining workers are masked out of `argmin`/`min`/`max`
+/// so offloading only targets workers that may take new work. A ledger
+/// with every worker accepting (the fixed-fleet world) behaves exactly as
+/// it did before the mask existed.
 #[derive(Debug, Clone)]
 pub struct LoadLedger {
     loads: Vec<f64>,
+    accepting: Vec<bool>,
 }
 
 impl LoadLedger {
     pub fn new(workers: usize) -> LoadLedger {
         LoadLedger {
             loads: vec![0.0; workers],
+            accepting: vec![true; workers],
         }
     }
 
     pub fn workers(&self) -> usize {
         self.loads.len()
+    }
+
+    /// Register a cold joiner (zero load, accepting); returns its index.
+    pub fn add_worker(&mut self) -> usize {
+        self.loads.push(0.0);
+        self.accepting.push(true);
+        self.loads.len() - 1
+    }
+
+    /// Mark `w` as accepting new work (true) or masked out (false).
+    pub fn set_accepting(&mut self, w: usize, on: bool) {
+        self.accepting[w] = on;
+    }
+
+    pub fn is_accepting(&self, w: usize) -> bool {
+        self.accepting[w]
+    }
+
+    pub fn accepting_count(&self) -> usize {
+        self.accepting.iter().filter(|a| **a).count()
     }
 
     pub fn load(&self, w: usize) -> f64 {
@@ -41,23 +69,59 @@ impl LoadLedger {
         self.loads[w] = (self.loads[w] - est).max(0.0);
     }
 
-    /// Index of the least-loaded worker (ties → lowest index).
-    pub fn argmin(&self) -> usize {
-        let mut best = 0;
+    /// Drop all load charged to `w` — the crash path releases everything a
+    /// dead worker owned in one step.
+    pub fn reset(&mut self, w: usize) {
+        self.loads[w] = 0.0;
+    }
+
+    /// Index of the least-loaded **accepting** worker (ties → lowest
+    /// index), or `None` when no worker accepts work.
+    pub fn try_argmin(&self) -> Option<usize> {
+        let mut best: Option<usize> = None;
         for (i, &l) in self.loads.iter().enumerate() {
-            if l < self.loads[best] {
-                best = i;
+            if !self.accepting[i] {
+                continue;
+            }
+            match best {
+                Some(b) if l >= self.loads[b] => {}
+                _ => best = Some(i),
             }
         }
         best
     }
 
-    pub fn min(&self) -> f64 {
-        self.loads.iter().cloned().fold(f64::INFINITY, f64::min)
+    /// Index of the least-loaded accepting worker (ties → lowest index).
+    /// Panics if no worker accepts; callers on the elastic path should use
+    /// [`Self::try_argmin`].
+    pub fn argmin(&self) -> usize {
+        self.try_argmin().expect("argmin on a ledger with no accepting worker")
     }
 
+    /// Min load over accepting workers (0.0 when none accept).
+    pub fn min(&self) -> f64 {
+        let m = self
+            .loads
+            .iter()
+            .zip(&self.accepting)
+            .filter(|(_, a)| **a)
+            .map(|(l, _)| *l)
+            .fold(f64::INFINITY, f64::min);
+        if m.is_finite() {
+            m
+        } else {
+            0.0
+        }
+    }
+
+    /// Max load over accepting workers (0.0 when none accept).
     pub fn max(&self) -> f64 {
-        self.loads.iter().cloned().fold(0.0, f64::max)
+        self.loads
+            .iter()
+            .zip(&self.accepting)
+            .filter(|(_, a)| **a)
+            .map(|(l, _)| *l)
+            .fold(0.0, f64::max)
     }
 }
 

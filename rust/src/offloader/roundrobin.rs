@@ -19,6 +19,19 @@ impl RoundRobin {
         self.next = (self.next + 1) % self.workers;
         w
     }
+
+    /// Widen the cycle to `workers` (elastic fleet: joiners get fresh
+    /// trailing indices). The cursor is untouched, so the cycle before the
+    /// join is unchanged and the new indices enter rotation naturally.
+    pub fn grow(&mut self, workers: usize) {
+        debug_assert!(workers >= self.workers);
+        self.workers = workers;
+    }
+
+    /// Number of worker indices in the cycle.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
 }
 
 #[cfg(test)]

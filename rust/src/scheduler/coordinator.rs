@@ -14,6 +14,7 @@ use crate::core::{Batch, Request};
 use crate::estimator::serving_time::ServeEstimate;
 use crate::estimator::MemoryEstimator;
 use crate::offloader::{LoadLedger, MaxMinOffloader, RoundRobin};
+use crate::scheduler::fleet::{WorkerHealth, WorkerLedger};
 use crate::scheduler::spec::{BatchingSpec, IntervalSpec, OffloadSpec, SchedulerSpec};
 use crate::scheduler::{IntervalController, RequestPool};
 
@@ -25,6 +26,10 @@ pub struct SlicedCoordinator {
     pool: RequestPool,
     ledger: LoadLedger,
     rr: RoundRobin,
+    /// Worker-lifecycle ledger (heartbeats, in-flight ownership, progress
+    /// cursors). On a fixed fleet every worker stays `Alive` and this is
+    /// pure bookkeeping.
+    fleet: WorkerLedger,
     dp_cfg: Option<DpBatcherConfig>,
     interval: Option<IntervalController>,
     tick_reqs: Vec<Request>,
@@ -57,6 +62,7 @@ impl SlicedCoordinator {
             pool: RequestPool::new(),
             ledger: LoadLedger::new(workers),
             rr: RoundRobin::new(workers),
+            fleet: WorkerLedger::new(workers),
             dp_cfg,
             interval,
             tick_reqs: Vec::new(),
@@ -120,19 +126,38 @@ impl SlicedCoordinator {
     }
 
     /// Route one new or rescheduled request: pooled under coordinator
-    /// batching (`None`), otherwise round-robined to a worker whose local
-    /// queue the caller owns (the request is handed back for delivery).
+    /// batching (`None`), otherwise round-robined to an **accepting**
+    /// worker whose local queue the caller owns (the request is handed
+    /// back for delivery). If no worker currently accepts — mid-fault,
+    /// before a joiner arrives — the request parks in the pool
+    /// (`None` again) and is released by [`Self::take_parked`]. On a
+    /// fixed fleet the first round-robin probe always accepts, so the
+    /// routing sequence is exactly the pre-elastic one.
     pub fn admit(&mut self, r: Request) -> Option<(usize, Request)> {
         if self.coordinator_batching() {
             self.pool.push(r);
             None
         } else {
-            Some((self.rr.next_worker(), r))
+            for _ in 0..self.rr.workers() {
+                let w = self.rr.next_worker();
+                if self.fleet.accepts(w) {
+                    return Some((w, r));
+                }
+            }
+            self.pool.push(r);
+            None
         }
     }
 
     pub fn pool_is_empty(&self) -> bool {
         self.pool.is_empty()
+    }
+
+    /// Drain requests parked by [`Self::admit`] while no worker accepted
+    /// (worker-locus policies re-route them when a joiner arrives). `out`
+    /// is cleared first.
+    pub fn take_parked(&mut self, out: &mut Vec<Request>) {
+        self.pool.fetch_all_into(out);
     }
 
     /// Run one schedule tick: drain the pool (already incrementally
@@ -176,11 +201,28 @@ impl SlicedCoordinator {
             ),
             OffloadSpec::RoundRobin => {
                 self.assign_buf.clear();
-                for b in self.batch_buf.drain(..) {
-                    let w = self.rr.next_worker();
-                    self.ledger.add(w, b.est_serve_time);
-                    self.assign_buf.push((w, b));
+                if self.fleet.accepting_count() > 0 {
+                    for b in self.batch_buf.drain(..) {
+                        // Probe the cycle until an accepting worker turns
+                        // up (first probe, on a fixed fleet).
+                        let w = loop {
+                            let w = self.rr.next_worker();
+                            if self.fleet.accepts(w) {
+                                break w;
+                            }
+                        };
+                        self.ledger.add(w, b.est_serve_time);
+                        self.assign_buf.push((w, b));
+                    }
                 }
+            }
+        }
+        // Whatever the offloader could not place (no accepting worker)
+        // goes back to the pool intact; the next tick — or a joiner —
+        // picks it up.
+        for b in self.batch_buf.drain(..) {
+            for r in b.requests {
+                self.pool.push(r);
             }
         }
         drained
@@ -218,6 +260,62 @@ impl SlicedCoordinator {
 
     pub fn ledger(&self) -> &LoadLedger {
         &self.ledger
+    }
+
+    // -----------------------------------------------------------------
+    // Elastic fleet: lifecycle transitions + heartbeat bookkeeping
+    // -----------------------------------------------------------------
+
+    pub fn fleet(&self) -> &WorkerLedger {
+        &self.fleet
+    }
+
+    /// A cold worker joined: register it with the load ledger (zero load),
+    /// the lifecycle ledger, and the round-robin cycle. Returns its fresh
+    /// index.
+    pub fn worker_join(&mut self, now: f64) -> usize {
+        let w = self.ledger.add_worker();
+        let fw = self.fleet.add_worker(now);
+        debug_assert_eq!(w, fw);
+        self.rr.grow(self.fleet.workers());
+        w
+    }
+
+    /// `worker` starts draining: masked out of offloading, finishes what
+    /// it holds.
+    pub fn worker_drain(&mut self, worker: usize) {
+        self.fleet.set_health(worker, WorkerHealth::Draining);
+        self.ledger.set_accepting(worker, false);
+    }
+
+    /// `worker` crashed: dead, masked out, its charged load dropped (the
+    /// caller reclaims the actual requests and re-admits them), in-flight
+    /// ownership forgotten without progress credit.
+    pub fn worker_crash(&mut self, worker: usize) {
+        self.fleet.set_health(worker, WorkerHealth::Dead);
+        self.fleet.clear_in_flight(worker);
+        self.ledger.set_accepting(worker, false);
+        self.ledger.reset(worker);
+    }
+
+    /// A draining worker emptied its queues: it is gone for good.
+    pub fn worker_retired(&mut self, worker: usize) {
+        self.fleet.set_health(worker, WorkerHealth::Dead);
+    }
+
+    pub fn is_draining(&self, worker: usize) -> bool {
+        self.fleet.health(worker) == WorkerHealth::Draining
+    }
+
+    /// Heartbeat: a batch of `size` requests started serving on `worker`.
+    pub fn note_batch_start(&mut self, worker: usize, size: usize, now: f64) {
+        self.fleet.batch_started(worker, size, now);
+    }
+
+    /// Heartbeat: `worker` reached a slice boundary (its progress cursor
+    /// advances, in-flight ownership clears).
+    pub fn note_progress(&mut self, worker: usize, now: f64) {
+        self.fleet.batch_completed(worker, now);
     }
 }
 
@@ -286,5 +384,55 @@ mod tests {
             .collect();
         assert_eq!(ws, vec![0, 1, 2, 0, 1]);
         assert_eq!(c.next_interval(), None);
+    }
+
+    #[test]
+    fn worker_locus_admit_skips_lost_workers_and_parks_when_fleet_empty() {
+        let preset = EnginePreset::paper(EngineKind::Ds);
+        let mut c = SlicedCoordinator::new(&SchedulerSpec::sls(&preset, 1024), 3);
+        c.worker_drain(1);
+        c.worker_crash(2);
+        // Only worker 0 accepts: every admit lands there.
+        let ws: Vec<usize> = requests(3)
+            .into_iter()
+            .map(|r| c.admit(r).unwrap().0)
+            .collect();
+        assert_eq!(ws, vec![0, 0, 0]);
+        // Kill the last one: admits park instead of routing.
+        c.worker_crash(0);
+        assert!(c.admit(Request::new(99, 0.0, 16, 8)).is_none());
+        let mut parked = Vec::new();
+        c.take_parked(&mut parked);
+        assert_eq!(parked.len(), 1);
+        assert_eq!(parked[0].id, 99);
+        // A joiner restores routing under its fresh index.
+        let w = c.worker_join(1.0);
+        assert_eq!(w, 3);
+        assert_eq!(c.admit(parked.pop().unwrap()).unwrap().0, 3);
+    }
+
+    #[test]
+    fn unplaceable_tick_batches_return_to_pool() {
+        let preset = EnginePreset::paper(EngineKind::Ds);
+        let mut c = SlicedCoordinator::new(&SchedulerSpec::scls(&preset, 128), 2);
+        for r in requests(8) {
+            c.admit(r);
+        }
+        c.worker_crash(0);
+        c.worker_drain(1);
+        let est = fitted_estimator(&preset, 7);
+        let mem = preset.memory_estimator();
+        let drained = c.schedule_tick(&est, &mem);
+        assert_eq!(drained, 8);
+        assert!(c.take_assignments().is_empty(), "nothing placeable");
+        assert!(!c.pool_is_empty(), "requests must survive in the pool");
+        // A joiner makes the next tick place everything on it.
+        let w = c.worker_join(2.0);
+        let drained = c.schedule_tick(&est, &mem);
+        assert_eq!(drained, 8);
+        let a = c.take_assignments();
+        let total: usize = a.iter().map(|(_, b)| b.size()).sum();
+        assert_eq!(total, 8);
+        assert!(a.iter().all(|(aw, _)| *aw == w));
     }
 }

@@ -1,0 +1,178 @@
+//! Worker-lifecycle bookkeeping for the elastic fleet.
+//!
+//! [`WorkerLedger`] is the coordinator-side source of truth for which
+//! workers may be assigned work: per-worker health
+//! ([`WorkerHealth::Alive`] / `Draining` / `Dead`), a last-heartbeat
+//! clock, in-flight batch ownership, and the last slice boundary each
+//! worker completed. A crash consults the ledger to know exactly how much
+//! work was in flight (one slice at most — the SCLS structural gift: every
+//! slice boundary is a checkpoint), and the stale-work reclaim path
+//! re-queues survivors from that boundary.
+
+/// Lifecycle state of one worker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkerHealth {
+    /// Accepting and serving work.
+    Alive,
+    /// Finishing in-flight work; accepts nothing new. Transitions to
+    /// [`WorkerHealth::Dead`] once its queues empty.
+    Draining,
+    /// Gone: crashed, or a drain that finished. Never assigned work again
+    /// (worker indices are not reused; joiners get fresh indices).
+    Dead,
+}
+
+/// Per-worker lifecycle ledger: health, heartbeats, in-flight ownership,
+/// last completed slice boundary.
+#[derive(Debug, Clone, Default)]
+pub struct WorkerLedger {
+    health: Vec<WorkerHealth>,
+    last_heartbeat: Vec<f64>,
+    in_flight: Vec<usize>,
+    last_progress_slice: Vec<u64>,
+}
+
+impl WorkerLedger {
+    pub fn new(workers: usize) -> Self {
+        WorkerLedger {
+            health: vec![WorkerHealth::Alive; workers],
+            last_heartbeat: vec![0.0; workers],
+            in_flight: vec![0; workers],
+            last_progress_slice: vec![0; workers],
+        }
+    }
+
+    /// Register a cold joiner; returns its (fresh, never-reused) index.
+    pub fn add_worker(&mut self, now: f64) -> usize {
+        self.health.push(WorkerHealth::Alive);
+        self.last_heartbeat.push(now);
+        self.in_flight.push(0);
+        self.last_progress_slice.push(0);
+        self.health.len() - 1
+    }
+
+    /// Total workers ever registered (alive or not).
+    pub fn workers(&self) -> usize {
+        self.health.len()
+    }
+
+    pub fn health(&self, w: usize) -> WorkerHealth {
+        self.health[w]
+    }
+
+    pub fn set_health(&mut self, w: usize, h: WorkerHealth) {
+        self.health[w] = h;
+    }
+
+    /// May this worker be handed *new* work? (Only `Alive` accepts;
+    /// draining workers finish what they hold.)
+    pub fn accepts(&self, w: usize) -> bool {
+        self.health[w] == WorkerHealth::Alive
+    }
+
+    pub fn heartbeat(&mut self, w: usize, now: f64) {
+        self.last_heartbeat[w] = now;
+    }
+
+    pub fn last_heartbeat(&self, w: usize) -> f64 {
+        self.last_heartbeat[w]
+    }
+
+    /// A batch of `size` requests started serving on `w`.
+    pub fn batch_started(&mut self, w: usize, size: usize, now: f64) {
+        self.in_flight[w] = size;
+        self.last_heartbeat[w] = now;
+    }
+
+    /// The in-flight batch on `w` reached its slice boundary: ownership
+    /// clears, the progress cursor advances, the heartbeat refreshes.
+    pub fn batch_completed(&mut self, w: usize, now: f64) {
+        self.in_flight[w] = 0;
+        self.last_progress_slice[w] += 1;
+        self.last_heartbeat[w] = now;
+    }
+
+    /// Requests currently owned by an in-flight batch on `w` (0 when idle).
+    pub fn in_flight(&self, w: usize) -> usize {
+        self.in_flight[w]
+    }
+
+    /// Slice boundaries `w` has completed over its lifetime.
+    pub fn last_progress(&self, w: usize) -> u64 {
+        self.last_progress_slice[w]
+    }
+
+    /// Forget in-flight ownership without crediting progress — the crash
+    /// path: the slice being served is lost.
+    pub fn clear_in_flight(&mut self, w: usize) {
+        self.in_flight[w] = 0;
+    }
+
+    pub fn accepting_count(&self) -> usize {
+        self.health.iter().filter(|h| **h == WorkerHealth::Alive).count()
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.health
+            .iter()
+            .filter(|h| **h != WorkerHealth::Dead)
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_fleet_all_accepting() {
+        let l = WorkerLedger::new(3);
+        assert_eq!(l.workers(), 3);
+        assert_eq!(l.accepting_count(), 3);
+        assert!((0..3).all(|w| l.accepts(w)));
+    }
+
+    #[test]
+    fn joiner_gets_fresh_index() {
+        let mut l = WorkerLedger::new(2);
+        l.set_health(1, WorkerHealth::Dead);
+        let w = l.add_worker(5.0);
+        assert_eq!(w, 2); // dead index 1 is never reused
+        assert!(l.accepts(2));
+        assert_eq!(l.last_heartbeat(2), 5.0);
+        assert_eq!(l.accepting_count(), 2);
+    }
+
+    #[test]
+    fn draining_holds_work_but_accepts_nothing() {
+        let mut l = WorkerLedger::new(2);
+        l.batch_started(0, 4, 1.0);
+        l.set_health(0, WorkerHealth::Draining);
+        assert!(!l.accepts(0));
+        assert_eq!(l.in_flight(0), 4);
+        assert_eq!(l.alive_count(), 2);
+        assert_eq!(l.accepting_count(), 1);
+    }
+
+    #[test]
+    fn progress_cursor_advances_per_slice_boundary() {
+        let mut l = WorkerLedger::new(1);
+        l.batch_started(0, 3, 1.0);
+        l.batch_completed(0, 2.0);
+        assert_eq!(l.in_flight(0), 0);
+        assert_eq!(l.last_progress(0), 1);
+        assert_eq!(l.last_heartbeat(0), 2.0);
+    }
+
+    #[test]
+    fn crash_clears_ownership_without_progress() {
+        let mut l = WorkerLedger::new(1);
+        l.batch_started(0, 3, 1.0);
+        l.clear_in_flight(0);
+        l.set_health(0, WorkerHealth::Dead);
+        assert_eq!(l.in_flight(0), 0);
+        assert_eq!(l.last_progress(0), 0);
+        assert_eq!(l.accepting_count(), 0);
+        assert_eq!(l.alive_count(), 0);
+    }
+}

@@ -11,15 +11,17 @@
 //! the same coordinator brain ([`coordinator::SlicedCoordinator`]).
 
 pub mod coordinator;
+pub mod fleet;
 pub mod interval;
 pub mod policy;
 pub mod pool;
 pub mod spec;
 
 pub use coordinator::SlicedCoordinator;
+pub use fleet::{WorkerHealth, WorkerLedger};
 pub use interval::IntervalController;
 pub use policy::{
-    build_policy, canonical_policy_name, parse_policy_name, SchedulingPolicy, SimCtx,
+    build_policy, canonical_policy_name, parse_policy_name, SchedulingPolicy, SimCtx, WorkerLoss,
     BUILTIN_POLICIES,
 };
 pub use pool::RequestPool;

@@ -17,7 +17,7 @@
 
 use crate::core::Request;
 use crate::engine::presets::EnginePreset;
-use crate::metrics::{BatchRecord, MetricsSink, PredictionRecord, RunMetrics};
+use crate::metrics::{BatchRecord, FleetEventKind, FleetRecord, MetricsSink, PredictionRecord, RunMetrics};
 use crate::sim::events::EventQueue;
 
 /// DES event alphabet shared by every policy: the loop pops these in time
@@ -30,6 +30,20 @@ pub(crate) enum Ev {
     Tick,
     /// The batch/iteration a policy started on this worker completed.
     WorkerDone(usize),
+    /// Index into the fault plan's event list (elastic-fleet runs only).
+    Fleet(usize),
+}
+
+/// How a worker leaves the fleet (delivered to
+/// [`SchedulingPolicy::on_worker_lost`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkerLoss {
+    /// Graceful: stop accepting new work, finish the in-flight batch, then
+    /// migrate any queued work at the slice boundary.
+    Drain,
+    /// Abrupt: the in-flight slice is lost; surviving requests are
+    /// re-queued from the last completed slice boundary.
+    Crash,
 }
 
 /// What a policy sees and can do while handling one event: the virtual
@@ -135,6 +149,36 @@ impl<'a> SimCtx<'a> {
         self.metrics.corrected_batches += 1;
         self.sink.on_corrected_batch(self.now);
     }
+
+    /// Log an *applied* worker-lifecycle event (fault-aware policies call
+    /// this only for events that actually changed their fleet — e.g. a
+    /// crash of an already-dead worker is not re-recorded): bumps
+    /// `worker_crashes` for crashes and streams to sinks.
+    pub fn record_fleet(&mut self, rec: FleetRecord) {
+        if rec.kind == FleetEventKind::Crash {
+            self.metrics.worker_crashes += 1;
+        }
+        self.sink.on_fleet(self.now, &rec);
+    }
+
+    /// Log a crash-time stale-work reclaim from `worker`: `in_flight`
+    /// requests lost their current slice (re-served from the last
+    /// completed slice boundary), `queued` requests were re-queued intact.
+    /// Bumps `reclaimed_requests` by the total, `lost_slices` by
+    /// `in_flight`, and `migrations` by `queued`.
+    pub fn record_reclaim(&mut self, worker: usize, in_flight: usize, queued: usize) {
+        self.metrics.reclaimed_requests += (in_flight + queued) as u64;
+        self.metrics.lost_slices += in_flight as u64;
+        self.metrics.migrations += queued as u64;
+        self.sink.on_reclaim(self.now, worker, in_flight, queued);
+    }
+
+    /// Log `count` requests migrating off `worker` at a slice boundary
+    /// (the drain handoff path): bumps `migrations` and streams to sinks.
+    pub fn record_migration(&mut self, worker: usize, count: usize) {
+        self.metrics.migrations += count as u64;
+        self.sink.on_migration(self.now, worker, count);
+    }
 }
 
 /// A scheduling policy: the full decision surface of one cluster
@@ -160,6 +204,18 @@ pub trait SchedulingPolicy {
     /// outcomes, record completions, reschedule leftovers, refill the
     /// worker.
     fn on_worker_done(&mut self, worker: usize, ctx: &mut SimCtx);
+
+    /// Elastic fleet only: a cold worker joined under the (fresh,
+    /// never-reused) index `worker`. Default no-op — policies that ignore
+    /// fleet events behave exactly as on a fixed fleet, and fault-free
+    /// runs never deliver this hook.
+    fn on_worker_join(&mut self, _worker: usize, _ctx: &mut SimCtx) {}
+
+    /// Elastic fleet only: `worker` is leaving ([`WorkerLoss::Drain`]) or
+    /// gone ([`WorkerLoss::Crash`]). Fault-aware policies stop assigning
+    /// it work and reclaim/migrate what it held; the default no-op keeps
+    /// fault-ignorant policies byte-identical on fault-free traces.
+    fn on_worker_lost(&mut self, _worker: usize, _loss: WorkerLoss, _ctx: &mut SimCtx) {}
 
     /// Final accounting after the event queue drains (e.g. per-worker
     /// completion times).

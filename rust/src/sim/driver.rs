@@ -23,11 +23,12 @@ use crate::estimator::profiler::{profile_and_fit, ProfileGrid};
 use crate::estimator::ServingTimeEstimator;
 use crate::metrics::{MetricsSink, NullSink, RunMetrics};
 use crate::predictor::PredictorSpec;
-use crate::scheduler::policy::{Ev, SchedulingPolicy, SimCtx};
+use crate::scheduler::policy::{Ev, SchedulingPolicy, SimCtx, WorkerLoss};
 use crate::scheduler::spec::SchedulerSpec;
 use crate::workload::Trace;
 
 use super::events::EventQueue;
+use super::faults::{FaultKind, FaultPlan};
 use super::policies::{IlsPolicy, SclsCbPolicy, SlicedPolicy};
 
 /// Cluster-level simulation parameters.
@@ -94,11 +95,35 @@ pub fn run_policy(
     workers: usize,
     sink: &mut dyn MetricsSink,
 ) -> RunMetrics {
+    run_policy_faulted(trace, policy, workers, sink, &FaultPlan::none())
+}
+
+/// [`run_policy`] under a deterministic fault schedule: the plan's events
+/// are pushed onto the heap *after* the trace arrivals (delivery order at
+/// equal timestamps: arrivals, then fleet events in plan order, then any
+/// runtime `WorkerDone` pushed later — the queue's FIFO tie-break). Join
+/// events hand policies fresh, never-reused worker indices starting at
+/// `workers`. An empty plan is literally `run_policy`: the loop body and
+/// event stream are bit-identical.
+pub fn run_policy_faulted(
+    trace: &Trace,
+    policy: &mut dyn SchedulingPolicy,
+    workers: usize,
+    sink: &mut dyn MetricsSink,
+    plan: &FaultPlan,
+) -> RunMetrics {
     let mut metrics = RunMetrics::with_capacity(trace.len());
-    let mut q: EventQueue<Ev> = EventQueue::with_capacity(trace.len() + workers + 2);
+    let mut q: EventQueue<Ev> =
+        EventQueue::with_capacity(trace.len() + workers + plan.events.len() + 2);
     for (i, r) in trace.requests.iter().enumerate() {
         q.push(r.arrival, Ev::Arrival(i));
     }
+    for (i, ev) in plan.events.iter().enumerate() {
+        q.push(ev.at, Ev::Fleet(i));
+    }
+    // Joiners get fresh indices after the initial fleet; indices are never
+    // reused, so `next_worker` only grows.
+    let mut next_worker = workers;
     let mut arrivals_left = trace.len();
     {
         let mut ctx = SimCtx::new(0.0, arrivals_left, &mut q, &mut metrics, &mut *sink);
@@ -120,6 +145,24 @@ pub fn run_policy(
             Ev::WorkerDone(w) => {
                 let mut ctx = SimCtx::new(now, arrivals_left, &mut q, &mut metrics, &mut *sink);
                 policy.on_worker_done(w, &mut ctx);
+            }
+            Ev::Fleet(i) => {
+                let mut ctx = SimCtx::new(now, arrivals_left, &mut q, &mut metrics, &mut *sink);
+                match plan.events[i].kind {
+                    FaultKind::Join { count } => {
+                        for _ in 0..count {
+                            let w = next_worker;
+                            next_worker += 1;
+                            policy.on_worker_join(w, &mut ctx);
+                        }
+                    }
+                    FaultKind::Drain { worker } => {
+                        policy.on_worker_lost(worker, WorkerLoss::Drain, &mut ctx);
+                    }
+                    FaultKind::Crash { worker } => {
+                        policy.on_worker_lost(worker, WorkerLoss::Crash, &mut ctx);
+                    }
+                }
             }
         }
     }
@@ -268,6 +311,48 @@ impl Simulation {
     ) -> Result<RunMetrics, String> {
         let mut policy = crate::scheduler::policy::build_policy(name, &self.cfg, slice_len)?;
         Ok(self.run_with_sink(trace, policy.as_mut(), sink))
+    }
+
+    /// Run a policy object under a deterministic fault schedule
+    /// ([`FaultPlan`]). `FaultPlan::none()` is byte-identical to
+    /// [`Self::run`].
+    pub fn run_faulted(
+        &self,
+        trace: &Trace,
+        policy: &mut dyn SchedulingPolicy,
+        plan: &FaultPlan,
+    ) -> RunMetrics {
+        run_policy_faulted(trace, policy, self.cfg.workers, &mut NullSink, plan)
+    }
+
+    /// [`Self::run_named`] under a deterministic fault schedule.
+    pub fn run_named_faulted(
+        &self,
+        trace: &Trace,
+        name: &str,
+        slice_len: u32,
+        plan: &FaultPlan,
+    ) -> Result<RunMetrics, String> {
+        self.run_named_faulted_with_sink(trace, name, slice_len, plan, &mut NullSink)
+    }
+
+    /// [`Self::run_named_faulted`] with a streaming sink.
+    pub fn run_named_faulted_with_sink(
+        &self,
+        trace: &Trace,
+        name: &str,
+        slice_len: u32,
+        plan: &FaultPlan,
+        sink: &mut dyn MetricsSink,
+    ) -> Result<RunMetrics, String> {
+        let mut policy = crate::scheduler::policy::build_policy(name, &self.cfg, slice_len)?;
+        Ok(run_policy_faulted(
+            trace,
+            policy.as_mut(),
+            self.cfg.workers,
+            sink,
+            plan,
+        ))
     }
 }
 

@@ -1,7 +1,12 @@
 //! Deterministic time-ordered event queue for the DES.
 //!
 //! Ties at equal timestamps break by insertion order (monotone sequence
-//! number), so simulations are exactly reproducible.
+//! number), so simulations are exactly reproducible. This FIFO tie-break
+//! is load-bearing across event *kinds*, not just within one: the driver
+//! pushes all arrivals first and all fleet (join/drain/crash) events
+//! second, so at an equal timestamp an arrival is always delivered before
+//! the fault that would have re-routed it, and a `FaultPlan`'s
+//! `delivery_order()` (stable sort by time) matches heap order exactly.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -115,6 +120,26 @@ mod tests {
         assert_eq!(q.pop().unwrap().1, 1);
         assert_eq!(q.pop().unwrap().1, 2);
         assert_eq!(q.pop().unwrap().1, 3);
+    }
+
+    #[test]
+    fn equal_timestamp_ties_break_fifo_across_event_kinds() {
+        // The driver relies on push order to sequence different event
+        // kinds at the same instant: arrivals (pushed first) beat fleet
+        // events (pushed second) beat runtime completions (pushed last).
+        #[derive(Debug, PartialEq)]
+        enum Kind {
+            Arrival,
+            Fleet,
+            Done,
+        }
+        let mut q = EventQueue::new();
+        q.push(10.0, Kind::Arrival);
+        q.push(10.0, Kind::Fleet);
+        q.push(10.0, Kind::Done);
+        assert_eq!(q.pop().unwrap().1, Kind::Arrival);
+        assert_eq!(q.pop().unwrap().1, Kind::Fleet);
+        assert_eq!(q.pop().unwrap().1, Kind::Done);
     }
 
     #[test]

@@ -1,0 +1,336 @@
+//! Deterministic fault schedules for the elastic-fleet DES.
+//!
+//! A [`FaultPlan`] is an ordered list of worker-lifecycle events — joins,
+//! drains, crashes — stamped with simulation times. The driver turns each
+//! entry into an `Ev::Fleet` heap event *after* pushing the trace arrivals,
+//! so at equal timestamps arrivals are delivered first, then fleet events
+//! in plan order, then any runtime `WorkerDone` pushed later (the
+//! [`crate::sim::events::EventQueue`] FIFO tie-break). Delivery order is
+//! therefore exactly (time, plan index) — the same order [`FaultPlan::validate`]
+//! walks, so a plan that validates can never reference a worker the run
+//! has not yet materialized.
+//!
+//! The CLI spec grammar (`--faults`) is a comma-separated list of:
+//!
+//! - `crash:w3@120`  — worker 3 fails abruptly at t=120 (in-flight slice lost)
+//! - `drain:w2@60`   — worker 2 stops accepting at t=60, finishes in-flight work
+//! - `join:2@300`    — two cold workers join at t=300
+//! - `rolling:30s`   — rolling restart: drain worker *i* at `(i+1)·P`, replace
+//!   it with a fresh join one period later, for every initial worker
+//!
+//! Times accept an optional trailing `s` (`120` and `120s` are the same).
+
+use std::fmt;
+
+/// What happens to the fleet at a scheduled instant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// `count` cold workers join the fleet (empty queues, zero load).
+    Join { count: u32 },
+    /// Worker stops accepting new work but finishes what it holds.
+    Drain { worker: usize },
+    /// Worker dies abruptly; its in-flight slice is lost and survivors are
+    /// re-queued at the last completed slice boundary.
+    Crash { worker: usize },
+}
+
+impl fmt::Display for FaultKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FaultKind::Join { count } => write!(f, "join:{count}"),
+            FaultKind::Drain { worker } => write!(f, "drain:w{worker}"),
+            FaultKind::Crash { worker } => write!(f, "crash:w{worker}"),
+        }
+    }
+}
+
+/// One scheduled lifecycle event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// Simulation time the event fires (finite, ≥ 0).
+    pub at: f64,
+    pub kind: FaultKind,
+}
+
+/// A deterministic, validated schedule of fleet events.
+///
+/// Plans are pure data: the same plan against the same trace and seed
+/// reproduces the same run byte-for-byte. [`FaultPlan::none`] is the
+/// canonical empty plan; drivers treat it as "the fixed-fleet world" and
+/// produce event logs bit-identical to the pre-elastic code.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// The empty plan: no faults, byte-identical runs to a fixed fleet.
+    pub fn none() -> Self {
+        FaultPlan { events: Vec::new() }
+    }
+
+    pub fn new() -> Self {
+        Self::none()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Builder: schedule an abrupt failure of `worker` at `at`.
+    pub fn crash(mut self, worker: usize, at: f64) -> Self {
+        self.events.push(FaultEvent {
+            at,
+            kind: FaultKind::Crash { worker },
+        });
+        self
+    }
+
+    /// Builder: schedule a graceful drain of `worker` at `at`.
+    pub fn drain(mut self, worker: usize, at: f64) -> Self {
+        self.events.push(FaultEvent {
+            at,
+            kind: FaultKind::Drain { worker },
+        });
+        self
+    }
+
+    /// Builder: schedule `count` cold workers joining at `at`.
+    pub fn join(mut self, count: u32, at: f64) -> Self {
+        self.events.push(FaultEvent {
+            at,
+            kind: FaultKind::Join { count },
+        });
+        self
+    }
+
+    /// A rolling restart over an initial fleet of `workers`: worker *i*
+    /// drains at `(i+1)·period` and its replacement joins one period
+    /// later. At any instant at most one initial worker is draining and
+    /// the accepting capacity never drops below `workers - 1`.
+    pub fn rolling(workers: usize, period: f64) -> Self {
+        let mut plan = FaultPlan::none();
+        for w in 0..workers {
+            let t = (w as f64 + 1.0) * period;
+            plan = plan.drain(w, t).join(1, t + period);
+        }
+        plan
+    }
+
+    /// Events in delivery order: stable-sorted by time, plan order among
+    /// ties. The driver relies on this matching the heap's (t, seq) order.
+    pub fn delivery_order(&self) -> Vec<FaultEvent> {
+        let mut evs = self.events.clone();
+        evs.sort_by(|a, b| a.at.total_cmp(&b.at));
+        evs
+    }
+
+    /// Check the plan against an initial fleet of `workers`: every time
+    /// finite and non-negative, every join count ≥ 1, and every
+    /// drain/crash naming a worker index that exists by the time the
+    /// event fires (initial workers plus earlier joins).
+    pub fn validate(&self, workers: usize) -> Result<(), String> {
+        for ev in &self.events {
+            if !ev.at.is_finite() {
+                return Err(format!("fault time for '{}' is not a finite number", ev.kind));
+            }
+            if ev.at < 0.0 {
+                return Err(format!(
+                    "fault time for '{}' is negative ({}); times are seconds from t=0",
+                    ev.kind, ev.at
+                ));
+            }
+            if let FaultKind::Join { count: 0 } = ev.kind {
+                return Err("join count must be at least 1 (got 0)".to_string());
+            }
+        }
+        // Walk in delivery order so joins extend the known index range for
+        // everything that fires after them.
+        let mut known = workers;
+        for ev in self.delivery_order() {
+            match ev.kind {
+                FaultKind::Join { count } => known += count as usize,
+                FaultKind::Drain { worker } | FaultKind::Crash { worker } => {
+                    if worker >= known {
+                        return Err(format!(
+                            "'{}' at t={} names an unknown worker: only {} worker(s) \
+                             exist at that time (indices 0..{})",
+                            ev.kind, ev.at, known, known
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse the CLI `--faults` grammar against an initial fleet of
+    /// `workers`, validating as it goes. Errors are friendly, single-line
+    /// messages suitable for direct CLI display.
+    pub fn parse(spec: &str, workers: usize) -> Result<Self, String> {
+        let mut plan = FaultPlan::none();
+        for raw in spec.split(',') {
+            let entry = raw.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let (op, rest) = entry
+                .split_once(':')
+                .ok_or_else(|| format!("bad fault entry '{entry}': expected op:args, e.g. crash:w3@120"))?;
+            match op {
+                "crash" | "drain" => {
+                    let (wtok, ttok) = rest.split_once('@').ok_or_else(|| {
+                        format!("bad fault entry '{entry}': expected {op}:wN@TIME, e.g. {op}:w3@120")
+                    })?;
+                    let worker = parse_worker(wtok, entry)?;
+                    let at = parse_time(ttok, entry)?;
+                    plan = if op == "crash" {
+                        plan.crash(worker, at)
+                    } else {
+                        plan.drain(worker, at)
+                    };
+                }
+                "join" => {
+                    let (ctok, ttok) = rest.split_once('@').ok_or_else(|| {
+                        format!("bad fault entry '{entry}': expected join:COUNT@TIME, e.g. join:2@300")
+                    })?;
+                    let count: u32 = ctok
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("bad join count '{ctok}' in '{entry}'"))?;
+                    let at = parse_time(ttok, entry)?;
+                    plan = plan.join(count, at);
+                }
+                "rolling" => {
+                    let period = parse_time(rest, entry)?;
+                    if period <= 0.0 {
+                        return Err(format!(
+                            "rolling period must be positive (got '{rest}' in '{entry}')"
+                        ));
+                    }
+                    let rolled = FaultPlan::rolling(workers, period);
+                    plan.events.extend(rolled.events);
+                }
+                other => {
+                    return Err(format!(
+                        "unknown fault op '{other}' in '{entry}': expected crash, drain, join, or rolling"
+                    ))
+                }
+            }
+        }
+        plan.validate(workers)?;
+        Ok(plan)
+    }
+}
+
+fn parse_worker(tok: &str, entry: &str) -> Result<usize, String> {
+    let tok = tok.trim();
+    let digits = tok.strip_prefix('w').unwrap_or(tok);
+    digits
+        .parse()
+        .map_err(|_| format!("bad worker index '{tok}' in '{entry}': expected wN (e.g. w3)"))
+}
+
+fn parse_time(tok: &str, entry: &str) -> Result<f64, String> {
+    let tok = tok.trim();
+    let digits = tok.strip_suffix('s').unwrap_or(tok);
+    let t: f64 = digits
+        .parse()
+        .map_err(|_| format!("bad time '{tok}' in '{entry}': expected seconds, e.g. 120 or 120s"))?;
+    if !t.is_finite() {
+        return Err(format!("time '{tok}' in '{entry}' is not a finite number"));
+    }
+    if t < 0.0 {
+        return Err(format!("time '{tok}' in '{entry}' is negative; times are seconds from t=0"));
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_empty() {
+        assert!(FaultPlan::none().is_empty());
+        assert!(FaultPlan::none().validate(4).is_ok());
+    }
+
+    #[test]
+    fn parse_round_trip() {
+        let plan = FaultPlan::parse("crash:w3@120,join:2@300", 4).unwrap();
+        assert_eq!(plan.events.len(), 2);
+        assert_eq!(plan.events[0].kind, FaultKind::Crash { worker: 3 });
+        assert_eq!(plan.events[0].at, 120.0);
+        assert_eq!(plan.events[1].kind, FaultKind::Join { count: 2 });
+        assert_eq!(plan.events[1].at, 300.0);
+    }
+
+    #[test]
+    fn parse_accepts_seconds_suffix_and_bare_index() {
+        let plan = FaultPlan::parse("drain:2@60s", 4).unwrap();
+        assert_eq!(plan.events[0].kind, FaultKind::Drain { worker: 2 });
+        assert_eq!(plan.events[0].at, 60.0);
+    }
+
+    #[test]
+    fn rolling_expands_per_worker() {
+        let plan = FaultPlan::parse("rolling:30s", 3).unwrap();
+        // drain w0@30 join@60, drain w1@60 join@90, drain w2@90 join@120
+        assert_eq!(plan.events.len(), 6);
+        assert_eq!(plan.events[0].kind, FaultKind::Drain { worker: 0 });
+        assert_eq!(plan.events[0].at, 30.0);
+        assert_eq!(plan.events[1].kind, FaultKind::Join { count: 1 });
+        assert_eq!(plan.events[1].at, 60.0);
+        assert_eq!(plan.events[5].at, 120.0);
+    }
+
+    #[test]
+    fn unknown_worker_is_friendly() {
+        let err = FaultPlan::parse("crash:w7@10", 4).unwrap_err();
+        assert!(err.contains("unknown worker"), "{err}");
+        // ... but a join before the crash makes the index known.
+        let ok = FaultPlan::parse("join:4@5,crash:w7@10", 4);
+        assert!(ok.is_ok(), "{ok:?}");
+    }
+
+    #[test]
+    fn join_after_crash_time_does_not_legitimize_index() {
+        let err = FaultPlan::parse("crash:w5@10,join:4@50", 4).unwrap_err();
+        assert!(err.contains("unknown worker"), "{err}");
+    }
+
+    #[test]
+    fn negative_and_nan_times_rejected() {
+        let err = FaultPlan::parse("crash:w1@-5", 4).unwrap_err();
+        assert!(err.contains("negative"), "{err}");
+        let err = FaultPlan::parse("crash:w1@NaN", 4).unwrap_err();
+        assert!(err.contains("finite"), "{err}");
+    }
+
+    #[test]
+    fn zero_join_count_rejected() {
+        let err = FaultPlan::parse("join:0@10", 4).unwrap_err();
+        assert!(err.contains("at least 1"), "{err}");
+    }
+
+    #[test]
+    fn junk_rejected_with_context() {
+        assert!(FaultPlan::parse("explode:w1@10", 4)
+            .unwrap_err()
+            .contains("unknown fault op"));
+        assert!(FaultPlan::parse("crash:w1", 4).unwrap_err().contains("@TIME"));
+        assert!(FaultPlan::parse("crash:banana@10", 4)
+            .unwrap_err()
+            .contains("worker index"));
+    }
+
+    #[test]
+    fn delivery_order_is_time_then_plan_order() {
+        let plan = FaultPlan::none().crash(1, 50.0).drain(2, 10.0).join(1, 50.0);
+        let order = plan.delivery_order();
+        assert_eq!(order[0].kind, FaultKind::Drain { worker: 2 });
+        assert_eq!(order[1].kind, FaultKind::Crash { worker: 1 });
+        assert_eq!(order[2].kind, FaultKind::Join { count: 1 });
+    }
+}

@@ -1,11 +1,14 @@
 //! Discrete-event simulation substrate: the generic policy-driven loop
 //! ([`driver::run_policy`]), the built-in policies, the deterministic
-//! event queue, and the frozen pre-trait reference drivers.
+//! event queue, deterministic fault schedules ([`faults::FaultPlan`]),
+//! and the frozen pre-trait reference drivers.
 
 pub mod driver;
 pub mod events;
+pub mod faults;
 pub mod policies;
 pub mod reference;
 
 pub use driver::{ClusterBuilder, SimConfig, Simulation};
 pub use events::EventQueue;
+pub use faults::{FaultEvent, FaultKind, FaultPlan};

@@ -20,21 +20,36 @@
 //! pre-trait driver loop (`sim::reference`); the differential suite
 //! (`tests/props_policy_differential.rs`) asserts the ports are
 //! byte-identical on the full `RunMetrics` event log.
+//!
+//! **Elastic fleet.** [`SlicedPolicy`], [`IlsPolicy`], and
+//! [`PredictiveSlicedPolicy`] implement the optional
+//! `on_worker_join`/`on_worker_lost` hooks: joins add cold workers under
+//! fresh (never-reused) indices, drains stop accepting and migrate queued
+//! work at the slice boundary, and crashes reclaim everything the dead
+//! worker held — re-queued with generation advanced to the last completed
+//! slice boundary, so at most one slice of work is lost per surviving
+//! request (the structural gift of slicing: every boundary is a
+//! checkpoint). [`SclsCbPolicy`] and [`PredictiveCbPolicy`] deliberately
+//! keep the default no-op hooks (they are not part of the fault figure's
+//! trio); on fault-free traces every policy is byte-identical to the
+//! pre-elastic code.
 
 use std::collections::VecDeque;
 
 use crate::batcher::{dp_batch_sorted_into, fcfs_batches, DpBatcherConfig, DpScratch};
-use crate::core::{Batch, Request};
+use crate::core::{Batch, BatchOutcome, Request};
 use crate::engine::continuous::ContinuousWorker;
 use crate::engine::continuous_pred::PredictiveContinuousWorker;
 use crate::engine::continuous_scls::SlicedContinuousWorker;
+use crate::engine::presets::EnginePreset;
 use crate::engine::sim::SimEngine;
 use crate::estimator::{MemoryEstimator, ServingTimeEstimator};
-use crate::metrics::{BatchRecord, PredictionRecord, RunMetrics};
+use crate::metrics::{BatchRecord, FleetEventKind, FleetRecord, PredictionRecord, RunMetrics};
 use crate::offloader::{LoadLedger, RoundRobin};
 use crate::predictor::LengthPredictor;
 use crate::scheduler::coordinator::SlicedCoordinator;
-use crate::scheduler::policy::{SchedulingPolicy, SimCtx};
+use crate::scheduler::fleet::{WorkerHealth, WorkerLedger};
+use crate::scheduler::policy::{SchedulingPolicy, SimCtx, WorkerLoss};
 use crate::scheduler::spec::{BatchingSpec, IntervalSpec, OffloadSpec, SchedulerSpec};
 use crate::scheduler::{IntervalController, RequestPool};
 use crate::sim::driver::{fitted_estimator, SimConfig};
@@ -43,26 +58,35 @@ use crate::sim::driver::{fitted_estimator, SimConfig};
 // Shared static-batching serving start
 // ---------------------------------------------------------------------------
 
+/// A batch in flight on one static-batching worker: the batch paired with
+/// the slice outcome the engine already rolled, **not yet applied** to the
+/// requests. Outcomes are applied by [`settle_batch`] when the completion
+/// event fires — so a crash before the boundary can simply drop the slot's
+/// outcome and recover the requests in their exact last-boundary state
+/// (`input_len == orig_input_len + generated`), losing at most the one
+/// interrupted slice.
+struct ServingSlot {
+    batch: Batch,
+    outcome: BatchOutcome,
+    /// Batch input length at serving start (the padding target).
+    li: u32,
+}
+
 /// Serving-start accounting shared by every static-batching policy
-/// (sliced family and P-SCLS): charge each request its pads and a pass,
-/// serve one slice of `iter_limit` iterations, log the batch record,
-/// apply token outcomes (the SCLS reschedule prefill recomputes over
-/// input + generated), park the batch in the worker's serving slot, and
-/// schedule the completion event.
+/// (sliced family and P-SCLS): serve one slice of `iter_limit` iterations,
+/// log the batch record, park the batch + outcome in the worker's serving
+/// slot, and schedule the completion event. Request state is deliberately
+/// untouched until [`settle_batch`] at done-time.
 fn start_static_batch(
     engine: &mut SimEngine,
-    serving: &mut Option<Batch>,
+    serving: &mut Option<ServingSlot>,
     w: usize,
-    mut batch: Batch,
+    batch: Batch,
     iter_limit: u32,
     ctx: &mut SimCtx,
 ) {
     debug_assert!(serving.is_none(), "worker {w} already serving");
     let li = batch.input_len();
-    for r in &mut batch.requests {
-        r.slices += 1;
-        r.pad_tokens += (li - r.input_len) as u64;
-    }
     let outcome = engine.serve_slice(&batch, iter_limit);
     ctx.record_batch(BatchRecord {
         start: ctx.now,
@@ -74,22 +98,36 @@ fn start_static_batch(
         actual_serve_time: outcome.duration,
         early_return: outcome.early_return,
     });
-    // Apply token effects now, deliver at done-time (the serving slot
-    // pairs the batch with its outcome).
     let done_at = ctx.now + outcome.duration;
+    *serving = Some(ServingSlot { batch, outcome, li });
+    ctx.complete_at(done_at, w);
+}
+
+/// Apply a slice outcome at its completion boundary: charge each request
+/// its pads and a pass, apply token effects (the SCLS reschedule prefill
+/// recomputes over input + generated), stamp finish times. `now` is the
+/// completion event's timestamp — bit-identical to the `done_at` computed
+/// at serving start, because the event time IS that f64.
+fn settle_batch(slot: ServingSlot, now: f64) -> Batch {
+    let ServingSlot {
+        mut batch,
+        outcome,
+        li,
+    } = slot;
     for (r, o) in batch.requests.iter_mut().zip(&outcome.per_request) {
         debug_assert_eq!(r.id, o.id);
+        r.slices += 1;
+        r.pad_tokens += (li - r.input_len) as u64;
         r.generated += o.new_tokens;
         r.invalid_tokens += o.invalid_tokens as u64;
         // SCLS reschedule: the next prefill recomputes over input +
         // everything generated so far.
         r.input_len += o.new_tokens;
         if o.finished {
-            r.finished_at = Some(done_at);
+            r.finished_at = Some(now);
         }
     }
-    *serving = Some(batch);
-    ctx.complete_at(done_at, w);
+    batch
 }
 
 // ---------------------------------------------------------------------------
@@ -102,10 +140,28 @@ struct WorkerState {
     batch_queue: VecDeque<Batch>,
     /// Worker-locus FCFS: raw requests waiting locally (SLS/SO).
     req_queue: VecDeque<Request>,
-    /// The batch currently being served (None = idle).
-    serving: Option<Batch>,
+    /// The batch + pending outcome currently in flight (None = idle).
+    serving: Option<ServingSlot>,
     engine: SimEngine,
     last_done: f64,
+}
+
+impl WorkerState {
+    /// A cold worker under (fresh, never-reused) index `w`: the engine
+    /// seed stream is decorrelated per index exactly like the initial
+    /// fleet's.
+    fn cold(preset: &EnginePreset, seed: u64, max_gen_len: u32, w: usize) -> WorkerState {
+        WorkerState {
+            batch_queue: VecDeque::new(),
+            req_queue: VecDeque::new(),
+            serving: None,
+            engine: SimEngine::new(
+                preset.latency(seed ^ (w as u64).wrapping_mul(0x9E37)),
+                max_gen_len,
+            ),
+            last_done: 0.0,
+        }
+    }
 }
 
 /// Static-batching sliced-family scheduler: any `SchedulerSpec` point
@@ -115,6 +171,16 @@ pub struct SlicedPolicy {
     est: ServingTimeEstimator,
     mem: MemoryEstimator,
     workers: Vec<WorkerState>,
+    /// Engine preset + base seed + generation cap, kept to build joiners'
+    /// engines mid-run.
+    preset: EnginePreset,
+    seed: u64,
+    max_gen_len: u32,
+    /// Whether a tick event is currently scheduled (ticked specs only) —
+    /// joins re-arm a tick that died while the whole fleet was down.
+    tick_armed: bool,
+    /// Scratch for draining the coordinator's parked requests on a join.
+    park_buf: Vec<Request>,
 }
 
 impl SlicedPolicy {
@@ -126,16 +192,7 @@ impl SlicedPolicy {
         let est = fitted_estimator(&cfg.engine, cfg.seed);
         let mem = cfg.engine.memory_estimator();
         let workers: Vec<WorkerState> = (0..cfg.workers)
-            .map(|w| WorkerState {
-                batch_queue: VecDeque::new(),
-                req_queue: VecDeque::new(),
-                serving: None,
-                engine: SimEngine::new(
-                    cfg.engine.latency(cfg.seed ^ (w as u64).wrapping_mul(0x9E37)),
-                    cfg.max_gen_len,
-                ),
-                last_done: 0.0,
-            })
+            .map(|w| WorkerState::cold(&cfg.engine, cfg.seed, cfg.max_gen_len, w))
             .collect();
         // `pred_corrected_dp` is deliberately NOT forwarded here: plain
         // sliced policies never stamp `predicted_gen`, so the correction
@@ -149,6 +206,11 @@ impl SlicedPolicy {
             est,
             mem,
             workers,
+            preset: cfg.engine.clone(),
+            seed: cfg.seed,
+            max_gen_len: cfg.max_gen_len,
+            tick_armed: false,
+            park_buf: Vec::new(),
         }
     }
 
@@ -173,7 +235,28 @@ impl SlicedPolicy {
         let Some(batch) = ws.batch_queue.pop_front() else {
             return;
         };
+        let size = batch.size();
         start_static_batch(&mut ws.engine, &mut ws.serving, w, batch, slice_len, ctx);
+        self.coord.note_batch_start(w, size, ctx.now);
+    }
+
+    /// Route a reclaimed/migrated/parked request back through the
+    /// coordinator (pooled specs pick it up at the next tick).
+    fn readmit(&mut self, r: Request, ctx: &mut SimCtx) {
+        if let Some((tw, r)) = self.coord.admit(r) {
+            self.workers[tw].req_queue.push_back(r);
+            self.try_start(tw, ctx);
+        }
+    }
+
+    /// Re-arm a stopped tick: joins and reclaims can create work while no
+    /// tick is scheduled (the loop parks once the whole fleet is down
+    /// instead of ticking forever).
+    fn ensure_tick(&mut self, ctx: &mut SimCtx) {
+        if self.coord.has_ticks() && !self.tick_armed {
+            ctx.tick_at(ctx.now);
+            self.tick_armed = true;
+        }
     }
 }
 
@@ -182,6 +265,7 @@ impl SchedulingPolicy for SlicedPolicy {
         self.coord.reserve_pool(ctx.arrivals_left().min(1 << 16));
         if self.coord.has_ticks() {
             ctx.tick_at(0.0);
+            self.tick_armed = true;
         }
     }
 
@@ -197,6 +281,7 @@ impl SchedulingPolicy for SlicedPolicy {
         if !self.coord.has_ticks() {
             return;
         }
+        self.tick_armed = false;
         let drained = self.coord.schedule_tick(&self.est, &self.mem);
         if drained > 0 {
             ctx.observe_pool(drained);
@@ -207,25 +292,35 @@ impl SchedulingPolicy for SlicedPolicy {
             }
             self.coord.recycle_assignments(assign);
         }
-        // Re-arm the tick while any work can still appear.
+        // Re-arm the tick while any work can still appear AND the fleet
+        // can still move it (no accepting worker and nothing serving =
+        // park until a joiner re-arms; ticking would spin forever).
         let work_pending = ctx.arrivals_left() > 0
             || !self.coord.pool_is_empty()
             || self
                 .workers
                 .iter()
                 .any(|w| w.serving.is_some() || !w.batch_queue.is_empty());
-        if work_pending {
+        let can_progress = self.coord.fleet().accepting_count() > 0
+            || self.workers.iter().any(|w| w.serving.is_some());
+        if work_pending && can_progress {
             let t = self
                 .coord
                 .next_interval()
                 .expect("on_tick only fires for ticked policies");
             ctx.tick_at(ctx.now + t.max(1e-3));
+            self.tick_armed = true;
         }
     }
 
     fn on_worker_done(&mut self, w: usize, ctx: &mut SimCtx) {
-        let batch = self.workers[w].serving.take().expect("done without serving");
+        // A completion racing a crash: the slot was already reclaimed.
+        let Some(slot) = self.workers[w].serving.take() else {
+            return;
+        };
+        let batch = settle_batch(slot, ctx.now);
         self.coord.batch_done(w, batch.est_serve_time);
+        self.coord.note_progress(w, ctx.now);
         self.workers[w].last_done = ctx.now;
         for r in batch.requests {
             if r.is_finished() {
@@ -236,7 +331,108 @@ impl SchedulingPolicy for SlicedPolicy {
                 self.try_start(tw, ctx);
             }
         }
+        if self.coord.is_draining(w) {
+            // Queued work migrated when the drain landed; this boundary
+            // retires the worker.
+            self.coord.worker_retired(w);
+            return;
+        }
         self.try_start(w, ctx);
+    }
+
+    fn on_worker_join(&mut self, w: usize, ctx: &mut SimCtx) {
+        debug_assert_eq!(w, self.workers.len(), "join indices are dense");
+        self.workers
+            .push(WorkerState::cold(&self.preset, self.seed, self.max_gen_len, w));
+        let registered = self.coord.worker_join(ctx.now);
+        debug_assert_eq!(registered, w);
+        ctx.record_fleet(FleetRecord {
+            worker: w,
+            kind: FleetEventKind::Join,
+        });
+        // Worker-locus specs park arrivals while nothing accepts: hand the
+        // backlog to the restored fleet. Pooled specs keep the backlog in
+        // the pool; the re-armed tick below drains it.
+        if !self.coord.has_ticks() {
+            let mut parked = std::mem::take(&mut self.park_buf);
+            self.coord.take_parked(&mut parked);
+            for r in parked.drain(..) {
+                self.readmit(r, ctx);
+            }
+            self.park_buf = parked;
+        }
+        self.ensure_tick(ctx);
+    }
+
+    fn on_worker_lost(&mut self, w: usize, loss: WorkerLoss, ctx: &mut SimCtx) {
+        match loss {
+            WorkerLoss::Drain => {
+                if self.coord.fleet().health(w) != WorkerHealth::Alive {
+                    return;
+                }
+                self.coord.worker_drain(w);
+                ctx.record_fleet(FleetRecord {
+                    worker: w,
+                    kind: FleetEventKind::Drain,
+                });
+                // Migrate everything not yet started — queued batches and
+                // raw requests all sit at a slice boundary by construction
+                // — and release their charged load.
+                let ws = &mut self.workers[w];
+                let mut moved: Vec<Request> = Vec::new();
+                let mut freed = 0.0;
+                for b in ws.batch_queue.drain(..) {
+                    freed += b.est_serve_time;
+                    moved.extend(b.requests);
+                }
+                moved.extend(ws.req_queue.drain(..));
+                if freed > 0.0 {
+                    self.coord.batch_done(w, freed);
+                }
+                if !moved.is_empty() {
+                    ctx.record_migration(w, moved.len());
+                    for r in moved {
+                        self.readmit(r, ctx);
+                    }
+                }
+                if self.workers[w].serving.is_none() {
+                    self.coord.worker_retired(w);
+                }
+                self.ensure_tick(ctx);
+            }
+            WorkerLoss::Crash => {
+                if self.coord.fleet().health(w) == WorkerHealth::Dead {
+                    return;
+                }
+                self.coord.worker_crash(w);
+                ctx.record_fleet(FleetRecord {
+                    worker: w,
+                    kind: FleetEventKind::Crash,
+                });
+                // Reclaim: dropping the serving slot's unapplied outcome
+                // recovers its requests in their exact last-boundary state
+                // (≤ one slice of work lost); queued work never started.
+                let ws = &mut self.workers[w];
+                let mut in_flight = 0usize;
+                let mut reclaimed: Vec<Request> = Vec::new();
+                if let Some(slot) = ws.serving.take() {
+                    in_flight = slot.batch.size();
+                    reclaimed.extend(slot.batch.requests);
+                }
+                for b in ws.batch_queue.drain(..) {
+                    reclaimed.extend(b.requests);
+                }
+                reclaimed.extend(ws.req_queue.drain(..));
+                let queued = reclaimed.len() - in_flight;
+                if in_flight + queued > 0 {
+                    ctx.record_reclaim(w, in_flight, queued);
+                }
+                for r in reclaimed {
+                    self.readmit(r, ctx);
+                }
+                self.ensure_tick(ctx);
+            }
+        }
     }
 
     fn finish(&mut self, metrics: &mut RunMetrics) {
@@ -256,9 +452,16 @@ pub struct IlsPolicy {
     workers: Vec<ContinuousWorker>,
     looping: Vec<bool>,
     last_done: Vec<f64>,
+    health: Vec<WorkerHealth>,
+    /// Requests with nowhere to go (whole fleet down) until a joiner.
+    parked: VecDeque<Request>,
     rr: RoundRobin,
     kv_budget: u64,
     max_kv_seen: u64,
+    /// Engine preset + base seed + generation cap for building joiners.
+    preset: EnginePreset,
+    seed: u64,
+    max_gen_len: u32,
 }
 
 impl IlsPolicy {
@@ -282,9 +485,14 @@ impl IlsPolicy {
             workers,
             looping: vec![false; n],
             last_done: vec![0.0; n],
+            health: vec![WorkerHealth::Alive; n],
+            parked: VecDeque::new(),
             rr: RoundRobin::new(n),
             kv_budget,
             max_kv_seen: 0,
+            preset: cfg.engine.clone(),
+            seed: cfg.seed,
+            max_gen_len: cfg.max_gen_len,
         }
     }
 
@@ -309,16 +517,41 @@ impl IlsPolicy {
             }
         }
     }
+
+    /// Next alive worker in round-robin order, or `None` if the whole
+    /// fleet is down/draining. On a fixed fleet the first probe is alive,
+    /// so the cursor advances exactly as pre-elastic.
+    fn route(&mut self) -> Option<usize> {
+        for _ in 0..self.rr.workers() {
+            let w = self.rr.next_worker();
+            if self.health[w] == WorkerHealth::Alive {
+                return Some(w);
+            }
+        }
+        None
+    }
+
+    /// Route to an alive worker or park until one joins.
+    fn reroute(&mut self, req: Request, ctx: &mut SimCtx) {
+        match self.route() {
+            Some(w) => {
+                self.workers[w].waiting.push_back(req);
+                self.kick(w, ctx);
+            }
+            None => self.parked.push_back(req),
+        }
+    }
 }
 
 impl SchedulingPolicy for IlsPolicy {
     fn on_arrival(&mut self, req: Request, ctx: &mut SimCtx) {
-        let w = self.rr.next_worker();
-        self.workers[w].waiting.push_back(req);
-        self.kick(w, ctx);
+        self.reroute(req, ctx);
     }
 
     fn on_worker_done(&mut self, wi: usize, ctx: &mut SimCtx) {
+        if self.health[wi] == WorkerHealth::Dead {
+            return; // stale completion from a crashed worker
+        }
         for r in self.workers[wi].finish_iteration(ctx.now) {
             self.last_done[wi] = ctx.now;
             ctx.record_completion(&r);
@@ -328,6 +561,87 @@ impl SchedulingPolicy for IlsPolicy {
             ctx.complete_at(ctx.now + d, wi);
         } else {
             self.looping[wi] = false;
+            if self.health[wi] == WorkerHealth::Draining {
+                // Drained dry — retired for good.
+                self.health[wi] = WorkerHealth::Dead;
+            }
+        }
+    }
+
+    fn on_worker_join(&mut self, w: usize, ctx: &mut SimCtx) {
+        debug_assert_eq!(w, self.workers.len(), "join indices are dense");
+        self.workers.push(ContinuousWorker::new(
+            self.preset
+                .latency(self.seed ^ (w as u64).wrapping_mul(0xA5A5)),
+            self.preset.ils_max_parallel,
+            self.kv_budget,
+            self.preset.kv_delta,
+            self.max_gen_len,
+        ));
+        self.looping.push(false);
+        self.last_done.push(0.0);
+        self.health.push(WorkerHealth::Alive);
+        self.rr.grow(self.workers.len());
+        ctx.record_fleet(FleetRecord {
+            worker: w,
+            kind: FleetEventKind::Join,
+        });
+        while let Some(r) = self.parked.pop_front() {
+            let t = self.route().expect("a worker just joined");
+            self.workers[t].waiting.push_back(r);
+            self.kick(t, ctx);
+        }
+    }
+
+    fn on_worker_lost(&mut self, w: usize, loss: WorkerLoss, ctx: &mut SimCtx) {
+        match loss {
+            WorkerLoss::Drain => {
+                if self.health[w] != WorkerHealth::Alive {
+                    return;
+                }
+                self.health[w] = WorkerHealth::Draining;
+                ctx.record_fleet(FleetRecord {
+                    worker: w,
+                    kind: FleetEventKind::Drain,
+                });
+                // ILS admits at iteration boundaries: the waiting queue
+                // never started, so it migrates wholesale; the running set
+                // finishes in place.
+                let moved: Vec<Request> = self.workers[w].waiting.drain(..).collect();
+                if !moved.is_empty() {
+                    ctx.record_migration(w, moved.len());
+                    for r in moved {
+                        self.reroute(r, ctx);
+                    }
+                }
+                if !self.looping[w] {
+                    self.health[w] = WorkerHealth::Dead; // idle — retired now
+                }
+            }
+            WorkerLoss::Crash => {
+                if self.health[w] == WorkerHealth::Dead {
+                    return;
+                }
+                self.health[w] = WorkerHealth::Dead;
+                self.looping[w] = false;
+                ctx.record_fleet(FleetRecord {
+                    worker: w,
+                    kind: FleetEventKind::Crash,
+                });
+                let (running, waiting) = self.workers[w].abandon();
+                if running.len() + waiting.len() > 0 {
+                    ctx.record_reclaim(w, running.len(), waiting.len());
+                }
+                for mut r in running {
+                    // Recovered at the last completed iteration boundary;
+                    // the re-prefill covers everything generated so far.
+                    r.input_len = r.orig_input_len + r.generated;
+                    self.reroute(r, ctx);
+                }
+                for r in waiting {
+                    self.reroute(r, ctx);
+                }
+            }
         }
     }
 
@@ -455,10 +769,26 @@ impl SchedulingPolicy for SclsCbPolicy {
 struct PredWorkerState {
     /// (iteration budget, batch) pairs waiting in the local queue.
     batch_queue: VecDeque<(u32, Batch)>,
-    /// The batch currently being served (None = idle).
-    serving: Option<Batch>,
+    /// The batch + pending outcome currently in flight (None = idle).
+    serving: Option<ServingSlot>,
     engine: SimEngine,
     last_done: f64,
+}
+
+impl PredWorkerState {
+    /// A cold worker under (fresh, never-reused) index `w`, on the P-SCLS
+    /// seed stream.
+    fn cold(preset: &EnginePreset, seed: u64, max_gen_len: u32, w: usize) -> PredWorkerState {
+        PredWorkerState {
+            batch_queue: VecDeque::new(),
+            serving: None,
+            engine: SimEngine::new(
+                preset.latency(seed ^ (w as u64).wrapping_mul(0x7A3D)),
+                max_gen_len,
+            ),
+            last_done: 0.0,
+        }
+    }
 }
 
 /// **P-SCLS** — SCLS with prediction-seeded ladder entry.
@@ -504,13 +834,21 @@ pub struct PredictiveSlicedPolicy {
     mem: MemoryEstimator,
     ledger: LoadLedger,
     rr: RoundRobin,
+    /// Worker-lifecycle ledger (health, heartbeats, in-flight ownership).
+    fleet: WorkerLedger,
     interval: IntervalController,
     /// One pool per rung: `pools[b-1]` holds requests whose next pass gets
     /// an iteration budget of `b·S` (requeues always land on rung 1).
     pools: Vec<RequestPool>,
     workers: Vec<PredWorkerState>,
+    /// Engine preset + base seed for building joiners mid-run.
+    preset: EnginePreset,
+    seed: u64,
     max_gen_len: u32,
     max_rung: u32,
+    /// Whether a tick event is currently scheduled — joins re-arm a tick
+    /// that died while the whole fleet was down.
+    tick_armed: bool,
     /// Cost rung batches at their predicted budget (`SimConfig::pred_corrected_dp`).
     pred_corrected: bool,
     // Reused per-tick buffers (allocation-lean discipline from PR 1).
@@ -533,15 +871,7 @@ impl PredictiveSlicedPolicy {
         let est = fitted_estimator(&cfg.engine, cfg.seed);
         let mem = cfg.engine.memory_estimator();
         let workers: Vec<PredWorkerState> = (0..cfg.workers)
-            .map(|w| PredWorkerState {
-                batch_queue: VecDeque::new(),
-                serving: None,
-                engine: SimEngine::new(
-                    cfg.engine.latency(cfg.seed ^ (w as u64).wrapping_mul(0x7A3D)),
-                    cfg.max_gen_len,
-                ),
-                last_done: 0.0,
-            })
+            .map(|w| PredWorkerState::cold(&cfg.engine, cfg.seed, cfg.max_gen_len, w))
             .collect();
         let interval = match spec.interval {
             IntervalSpec::Fixed(t) => IntervalController::Fixed(t),
@@ -558,11 +888,15 @@ impl PredictiveSlicedPolicy {
             mem,
             ledger: LoadLedger::new(cfg.workers),
             rr: RoundRobin::new(cfg.workers),
+            fleet: WorkerLedger::new(cfg.workers),
             interval,
             pools: (0..max_rung).map(|_| RequestPool::new()).collect(),
             workers,
+            preset: cfg.engine.clone(),
+            seed: cfg.seed,
             max_gen_len: cfg.max_gen_len,
             max_rung,
+            tick_armed: false,
             pred_corrected: cfg.pred_corrected_dp,
             tick_reqs: Vec::new(),
             batch_buf: Vec::new(),
@@ -596,8 +930,32 @@ impl PredictiveSlicedPolicy {
         let Some((budget, batch)) = self.workers[w].batch_queue.pop_front() else {
             return;
         };
+        let size = batch.size();
         let ws = &mut self.workers[w];
         start_static_batch(&mut ws.engine, &mut ws.serving, w, batch, budget, ctx);
+        self.fleet.batch_started(w, size, ctx.now);
+    }
+
+    /// Re-queue a reclaimed request at the rung matching what it still
+    /// owes (its prediction minus what survived the reclaim) — a crashed
+    /// pass costs at most its interrupted slice, not a restart from rung 1.
+    fn requeue_reclaimed(&mut self, r: Request) {
+        let owed = r
+            .predicted_gen
+            .unwrap_or(1)
+            .saturating_sub(r.generated)
+            .max(1);
+        let rung = self.rung_of(owed);
+        self.pools[rung as usize - 1].push(r);
+    }
+
+    /// Re-arm a stopped tick (joins and reclaims can create work while no
+    /// tick is scheduled — the loop parks once the whole fleet is down).
+    fn ensure_tick(&mut self, ctx: &mut SimCtx) {
+        if !self.tick_armed {
+            ctx.tick_at(ctx.now);
+            self.tick_armed = true;
+        }
     }
 }
 
@@ -605,6 +963,7 @@ impl SchedulingPolicy for PredictiveSlicedPolicy {
     fn init(&mut self, ctx: &mut SimCtx) {
         self.pools[0].reserve(ctx.arrivals_left().min(1 << 16));
         ctx.tick_at(0.0);
+        self.tick_armed = true;
     }
 
     fn on_arrival(&mut self, mut req: Request, _ctx: &mut SimCtx) {
@@ -616,6 +975,7 @@ impl SchedulingPolicy for PredictiveSlicedPolicy {
     }
 
     fn on_tick(&mut self, ctx: &mut SimCtx) {
+        self.tick_armed = false;
         let drained = self.pooled();
         if drained > 0 {
             ctx.observe_pool(drained);
@@ -651,23 +1011,54 @@ impl SchedulingPolicy for PredictiveSlicedPolicy {
                 self.staged
                     .extend(self.batch_buf.drain(..).map(|batch| (budget, batch)));
             }
+            // Unplaceable batches (whole fleet down mid-fault) dissolve
+            // back to their rung's pool until a joiner re-arms the tick.
+            let s = self.spec.slice_len.max(1);
+            let max_rung = self.max_rung;
+            let rung_idx = |budget: u32| (((budget + s - 1) / s).clamp(1, max_rung) - 1) as usize;
             match self.spec.offload {
                 OffloadSpec::MaxMin => {
                     // LPT over all rung batches: longest estimate first to
-                    // the least-loaded worker (paper §4.5).
+                    // the least-loaded accepting worker (paper §4.5).
                     self.staged
                         .sort_by(|a, b| b.1.est_serve_time.total_cmp(&a.1.est_serve_time));
                     for (budget, batch) in self.staged.drain(..) {
-                        let w = self.ledger.argmin();
-                        self.ledger.add(w, batch.est_serve_time);
-                        self.assign_buf.push((w, budget, batch));
+                        match self.ledger.try_argmin() {
+                            Some(w) => {
+                                self.ledger.add(w, batch.est_serve_time);
+                                self.assign_buf.push((w, budget, batch));
+                            }
+                            None => {
+                                let b = rung_idx(budget);
+                                for r in batch.requests {
+                                    self.pools[b].push(r);
+                                }
+                            }
+                        }
                     }
                 }
                 OffloadSpec::RoundRobin => {
                     for (budget, batch) in self.staged.drain(..) {
-                        let w = self.rr.next_worker();
-                        self.ledger.add(w, batch.est_serve_time);
-                        self.assign_buf.push((w, budget, batch));
+                        let mut placed = None;
+                        for _ in 0..self.rr.workers() {
+                            let w = self.rr.next_worker();
+                            if self.ledger.is_accepting(w) {
+                                placed = Some(w);
+                                break;
+                            }
+                        }
+                        match placed {
+                            Some(w) => {
+                                self.ledger.add(w, batch.est_serve_time);
+                                self.assign_buf.push((w, budget, batch));
+                            }
+                            None => {
+                                let b = rung_idx(budget);
+                                for r in batch.requests {
+                                    self.pools[b].push(r);
+                                }
+                            }
+                        }
                     }
                 }
             }
@@ -678,22 +1069,31 @@ impl SchedulingPolicy for PredictiveSlicedPolicy {
             }
             self.assign_buf = assign;
         }
-        // Re-arm the tick while any work can still appear.
+        // Re-arm the tick while any work can still appear AND the fleet
+        // can still move it (park otherwise; a joiner re-arms).
         let work_pending = ctx.arrivals_left() > 0
             || self.pooled() > 0
             || self
                 .workers
                 .iter()
                 .any(|w| w.serving.is_some() || !w.batch_queue.is_empty());
-        if work_pending {
+        let can_progress = self.ledger.accepting_count() > 0
+            || self.workers.iter().any(|w| w.serving.is_some());
+        if work_pending && can_progress {
             let t = self.interval.next_interval(&self.ledger);
             ctx.tick_at(ctx.now + t.max(1e-3));
+            self.tick_armed = true;
         }
     }
 
     fn on_worker_done(&mut self, w: usize, ctx: &mut SimCtx) {
-        let batch = self.workers[w].serving.take().expect("done without serving");
+        // A completion racing a crash: the slot was already reclaimed.
+        let Some(slot) = self.workers[w].serving.take() else {
+            return;
+        };
+        let batch = settle_batch(slot, ctx.now);
         self.ledger.complete(w, batch.est_serve_time);
+        self.fleet.batch_completed(w, ctx.now);
         self.workers[w].last_done = ctx.now;
         let s = self.spec.slice_len.max(1);
         for r in batch.requests {
@@ -727,7 +1127,101 @@ impl SchedulingPolicy for PredictiveSlicedPolicy {
                 self.pools[0].push(r);
             }
         }
+        if self.fleet.health(w) == WorkerHealth::Draining && self.workers[w].batch_queue.is_empty()
+        {
+            // Queued batches migrated when the drain landed; this boundary
+            // retires the worker.
+            self.fleet.set_health(w, WorkerHealth::Dead);
+            return;
+        }
         self.try_start(w, ctx);
+    }
+
+    fn on_worker_join(&mut self, w: usize, ctx: &mut SimCtx) {
+        debug_assert_eq!(w, self.workers.len(), "join indices are dense");
+        self.workers
+            .push(PredWorkerState::cold(&self.preset, self.seed, self.max_gen_len, w));
+        let lw = self.ledger.add_worker();
+        let fw = self.fleet.add_worker(ctx.now);
+        debug_assert_eq!(lw, w);
+        debug_assert_eq!(fw, w);
+        self.rr.grow(self.workers.len());
+        ctx.record_fleet(FleetRecord {
+            worker: w,
+            kind: FleetEventKind::Join,
+        });
+        self.ensure_tick(ctx);
+    }
+
+    fn on_worker_lost(&mut self, w: usize, loss: WorkerLoss, ctx: &mut SimCtx) {
+        match loss {
+            WorkerLoss::Drain => {
+                if self.fleet.health(w) != WorkerHealth::Alive {
+                    return;
+                }
+                self.fleet.set_health(w, WorkerHealth::Draining);
+                self.ledger.set_accepting(w, false);
+                ctx.record_fleet(FleetRecord {
+                    worker: w,
+                    kind: FleetEventKind::Drain,
+                });
+                // Migrate queued (unstarted) batches back to their rung
+                // pools and release their charged load; the in-flight
+                // slice finishes in place.
+                let queue: Vec<(u32, Batch)> = self.workers[w].batch_queue.drain(..).collect();
+                let mut moved = 0usize;
+                for (budget, batch) in queue {
+                    self.ledger.complete(w, batch.est_serve_time);
+                    moved += batch.size();
+                    let rung = self.rung_of(budget) as usize - 1;
+                    for r in batch.requests {
+                        self.pools[rung].push(r);
+                    }
+                }
+                if moved > 0 {
+                    ctx.record_migration(w, moved);
+                }
+                if self.workers[w].serving.is_none() {
+                    self.fleet.set_health(w, WorkerHealth::Dead);
+                }
+                self.ensure_tick(ctx);
+            }
+            WorkerLoss::Crash => {
+                if self.fleet.health(w) == WorkerHealth::Dead {
+                    return;
+                }
+                self.fleet.set_health(w, WorkerHealth::Dead);
+                self.fleet.clear_in_flight(w);
+                self.ledger.set_accepting(w, false);
+                self.ledger.reset(w);
+                ctx.record_fleet(FleetRecord {
+                    worker: w,
+                    kind: FleetEventKind::Crash,
+                });
+                // Dropping the slot's unapplied outcome recovers the
+                // serving requests at their last boundary; each re-enters
+                // the ladder at the rung it still owes.
+                let mut in_flight = 0usize;
+                if let Some(slot) = self.workers[w].serving.take() {
+                    in_flight = slot.batch.size();
+                    for r in slot.batch.requests {
+                        self.requeue_reclaimed(r);
+                    }
+                }
+                let queue: Vec<(u32, Batch)> = self.workers[w].batch_queue.drain(..).collect();
+                let mut queued = 0usize;
+                for (_, batch) in queue {
+                    queued += batch.size();
+                    for r in batch.requests {
+                        self.requeue_reclaimed(r);
+                    }
+                }
+                if in_flight + queued > 0 {
+                    ctx.record_reclaim(w, in_flight, queued);
+                }
+                self.ensure_tick(ctx);
+            }
+        }
     }
 
     fn finish(&mut self, metrics: &mut RunMetrics) {

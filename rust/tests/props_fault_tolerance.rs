@@ -1,0 +1,276 @@
+//! Property suite for the elastic fault-tolerant fleet (join / drain /
+//! crash with slice-boundary migration and stale-work reclaim).
+//!
+//! Two families of guarantees:
+//!
+//! 1. **Fault-free identity** — running any policy through the faulted
+//!    loop with [`FaultPlan::none`] is *byte-identical* (on the
+//!    `RunMetrics::to_json` event log) to the unfaulted loop, and — for
+//!    the policies with frozen pre-trait drivers — to `sim::reference`.
+//!    The elastic-fleet machinery must be invisible until a plan says
+//!    otherwise.
+//!
+//! 2. **No lost work** — under randomized traces and randomized fault
+//!    plans that keep worker 0 untouched (so at least one worker is
+//!    always alive), every request completes exactly once with its full
+//!    generation length: a crash loses at most the in-flight slice, never
+//!    a request. Counter identities ride along: `reclaimed_requests ≥
+//!    lost_slices`, and crash-free plans keep every crash counter at 0.
+
+use std::collections::HashMap;
+
+use scls::engine::presets::{EngineKind, EnginePreset};
+use scls::sim::driver::{SimConfig, Simulation};
+use scls::sim::reference::{run_ils_reference, run_scls_cb_reference, run_sliced_reference};
+use scls::sim::FaultPlan;
+use scls::scheduler::spec::SchedulerSpec;
+use scls::testprop::{check, Gen};
+use scls::workload::distributions::WorkloadKind;
+use scls::workload::{Trace, TraceConfig};
+use scls::{prop_assert, prop_assert_eq};
+
+fn trace(kind: WorkloadKind, rate: f64, duration: f64, seed: u64) -> Trace {
+    Trace::generate(&TraceConfig {
+        kind,
+        rate,
+        duration,
+        max_input_len: 1024,
+        max_gen_len: 1024,
+        seed,
+    })
+}
+
+fn cfg(workers: usize, kind: EngineKind, seed: u64) -> SimConfig {
+    SimConfig::new(workers, EnginePreset::paper(kind), 1024, seed)
+}
+
+/// The byte-level fingerprint two runs must share to count as identical.
+fn fingerprint(m: &scls::metrics::RunMetrics) -> String {
+    m.to_json().to_string_pretty()
+}
+
+/// Policies with fault hooks wired (the other registry names keep the
+/// default no-op hooks and are covered by the identity tests only).
+const ELASTIC: [&str; 3] = ["scls", "ils", "p-scls"];
+
+/// Every completed request appears exactly once with its full generation
+/// length (target capped by the run's max-gen limit).
+fn assert_complete(
+    m: &scls::metrics::RunMetrics,
+    t: &Trace,
+    label: &str,
+) -> scls::testprop::PropResult {
+    prop_assert_eq!(
+        m.completed.len(),
+        t.len(),
+        "{label}: {} of {} requests completed",
+        m.completed.len(),
+        t.len()
+    );
+    let mut seen: HashMap<u64, u32> = HashMap::new();
+    for c in &m.completed {
+        prop_assert!(
+            seen.insert(c.id, c.generated).is_none(),
+            "{label}: request {} completed twice",
+            c.id
+        );
+    }
+    for r in &t.requests {
+        let want = r.target_gen_len.min(1024).max(1);
+        let got = seen.get(&r.id).copied();
+        prop_assert_eq!(
+            got,
+            Some(want),
+            "{label}: request {} generated {:?}, wanted {}",
+            r.id,
+            got,
+            want
+        );
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// 1. Fault-free identity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn none_plan_is_byte_identical_for_every_policy() {
+    let names = [
+        "sls", "so", "pm", "ab", "lb", "scls", "ils", "scls-cb", "p-scls", "p-cb",
+    ];
+    for kind in [EngineKind::Hf, EngineKind::Ds] {
+        let t = trace(WorkloadKind::CodeFuse, 5.0, 30.0, 601);
+        let c = cfg(4, kind, 601);
+        let sim = Simulation::new(c);
+        for name in names {
+            let plain = sim.run_named(&t, name, 128).unwrap();
+            let faulted = sim.run_named_faulted(&t, name, 128, &FaultPlan::none()).unwrap();
+            assert_eq!(
+                fingerprint(&plain),
+                fingerprint(&faulted),
+                "{name} on {} diverged under the empty fault plan",
+                kind.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn none_plan_matches_frozen_references() {
+    let preset = EnginePreset::paper(EngineKind::Ds);
+    let t = trace(WorkloadKind::CodeFuse, 6.0, 35.0, 602);
+    let c = cfg(4, EngineKind::Ds, 602);
+    let sim = Simulation::new(c.clone());
+    let none = FaultPlan::none();
+    assert_eq!(
+        fingerprint(&run_sliced_reference(&t, &SchedulerSpec::scls(&preset, 128), &c)),
+        fingerprint(&sim.run_named_faulted(&t, "scls", 128, &none).unwrap()),
+        "SCLS faulted-loop diverged from the pre-trait driver"
+    );
+    assert_eq!(
+        fingerprint(&run_ils_reference(&t, &c)),
+        fingerprint(&sim.run_named_faulted(&t, "ils", 128, &none).unwrap()),
+        "ILS faulted-loop diverged from the pre-trait driver"
+    );
+    assert_eq!(
+        fingerprint(&run_scls_cb_reference(&t, &c, 128)),
+        fingerprint(&sim.run_named_faulted(&t, "scls-cb", 128, &none).unwrap()),
+        "SCLS-CB faulted-loop diverged from the pre-trait driver"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 2. No lost work under randomized fault plans
+// ---------------------------------------------------------------------------
+
+/// A random plan over `workers` initial workers that never touches worker
+/// 0, so the accepting fleet is never empty. Returns the plan and how many
+/// crash events it contains.
+fn random_plan(g: &mut Gen, workers: usize, horizon: f64) -> (FaultPlan, usize) {
+    let mut plan = FaultPlan::none();
+    let mut crashes = 0;
+    for _ in 0..g.usize(1, 4) {
+        let at = g.f64(1.0, horizon);
+        match g.usize(0, 2) {
+            0 => {
+                plan = plan.crash(g.usize(1, workers - 1), at);
+                crashes += 1;
+            }
+            1 => plan = plan.drain(g.usize(1, workers - 1), at),
+            _ => plan = plan.join(g.u32(1, 2), at),
+        }
+    }
+    (plan, crashes)
+}
+
+#[test]
+fn randomized_faults_lose_no_requests() {
+    check("fault-no-lost-work", 10, |g: &mut Gen| {
+        let kind = if g.bool() { EngineKind::Hf } else { EngineKind::Ds };
+        let workload = if g.bool() {
+            WorkloadKind::CodeFuse
+        } else {
+            WorkloadKind::ShareGpt
+        };
+        let rate = *g.pick(&[3.0, 6.0]);
+        let workers = *g.pick(&[2usize, 3, 5]);
+        let seed = g.u64();
+        let t = trace(workload, rate, 25.0, seed);
+        let (plan, crashes) = random_plan(g, workers, 40.0);
+        let sim = Simulation::new(cfg(workers, kind, seed));
+        for name in ELASTIC {
+            let m = sim.run_named_faulted(&t, name, 128, &plan).unwrap();
+            let label = format!("{name} ({workers}w seed {seed} plan {plan:?})");
+            assert_complete(&m, &t, &label)?;
+            prop_assert!(
+                m.reclaimed_requests >= m.lost_slices,
+                "{label}: reclaimed {} < lost slices {}",
+                m.reclaimed_requests,
+                m.lost_slices
+            );
+            prop_assert!(
+                m.worker_crashes as usize <= crashes,
+                "{label}: {} crashes recorded, {} scheduled",
+                m.worker_crashes,
+                crashes
+            );
+            if crashes == 0 {
+                prop_assert_eq!(m.worker_crashes, 0, "{label}: phantom crash");
+                prop_assert_eq!(m.lost_slices, 0, "{label}: lost slices without a crash");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn drain_only_plans_migrate_without_loss() {
+    // Stagger a drain of every worker but 0, with replacements joining
+    // later: graceful handoff must never count a crash or lose a slice.
+    for workers in [2usize, 4] {
+        let t = trace(WorkloadKind::CodeFuse, 5.0, 30.0, 611);
+        let mut plan = FaultPlan::none();
+        for w in 1..workers {
+            plan = plan.drain(w, 5.0 * w as f64);
+        }
+        plan = plan.join(workers as u32 - 1, 20.0);
+        let sim = Simulation::new(cfg(workers, EngineKind::Ds, 611));
+        for name in ELASTIC {
+            let m = sim.run_named_faulted(&t, name, 128, &plan).unwrap();
+            assert_eq!(m.completed.len(), t.len(), "{name} lost requests on drain");
+            assert_eq!(m.worker_crashes, 0, "{name} counted a crash on drain");
+            assert_eq!(m.lost_slices, 0, "{name} lost a slice on drain");
+        }
+    }
+}
+
+#[test]
+fn rolling_restart_completes_everything() {
+    let workers = 4usize;
+    let t = trace(WorkloadKind::CodeFuse, 5.0, 30.0, 612);
+    let plan = FaultPlan::rolling(workers, 6.0);
+    let sim = Simulation::new(cfg(workers, EngineKind::Ds, 612));
+    for name in ELASTIC {
+        let m = sim.run_named_faulted(&t, name, 128, &plan).unwrap();
+        assert_eq!(m.completed.len(), t.len(), "{name} lost requests in rolling restart");
+        assert_eq!(m.worker_crashes, 0, "{name}: rolling restarts are graceful");
+        assert_eq!(m.lost_slices, 0, "{name}: rolling restarts lose nothing");
+    }
+}
+
+#[test]
+fn crash_reclaims_and_recompletes() {
+    // A mid-run crash of a loaded worker: survivors resume at the last
+    // slice boundary and everything still completes exactly once.
+    let workers = 3usize;
+    let t = trace(WorkloadKind::CodeFuse, 8.0, 25.0, 613);
+    let plan = FaultPlan::none().crash(1, 6.0).crash(2, 12.0).join(2, 15.0);
+    let sim = Simulation::new(cfg(workers, EngineKind::Ds, 613));
+    for name in ELASTIC {
+        let m = sim.run_named_faulted(&t, name, 128, &plan).unwrap();
+        assert_eq!(m.completed.len(), t.len(), "{name} lost requests on crash");
+        assert_eq!(m.worker_crashes, 2, "{name} miscounted crashes");
+        assert!(
+            m.reclaimed_requests >= m.lost_slices,
+            "{name}: reclaimed {} < lost slices {}",
+            m.reclaimed_requests,
+            m.lost_slices
+        );
+    }
+}
+
+#[test]
+fn join_only_plans_touch_no_fault_counters() {
+    let t = trace(WorkloadKind::CodeFuse, 6.0, 25.0, 614);
+    let plan = FaultPlan::none().join(2, 8.0);
+    let sim = Simulation::new(cfg(2, EngineKind::Ds, 614));
+    for name in ELASTIC {
+        let m = sim.run_named_faulted(&t, name, 128, &plan).unwrap();
+        assert_eq!(m.completed.len(), t.len(), "{name} lost requests on join");
+        assert_eq!(m.worker_crashes, 0);
+        assert_eq!(m.reclaimed_requests, 0);
+        assert_eq!(m.lost_slices, 0);
+        assert_eq!(m.migrations, 0);
+    }
+}
