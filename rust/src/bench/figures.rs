@@ -863,6 +863,95 @@ pub fn fig_fault(fc: &FigureConfig) -> FigureResult {
 }
 
 // ---------------------------------------------------------------------------
+// SLO sweep — arrival rate vs SLO attainment (extension figure)
+// ---------------------------------------------------------------------------
+
+/// One SLO-sweep cell: stamp the trace with a 4-tenant mix and the sweep's
+/// base SLO (tighter tiers for lower-numbered tenants, per
+/// [`crate::slo::stamp_trace`]), then run `which` and return the full
+/// metrics (the sweep reports the goodput counters, which `Summary` does
+/// not carry).
+fn run_slo_cell(fc: &FigureConfig, which: &str, rate: f64) -> crate::metrics::RunMetrics {
+    use crate::slo::{stamp_trace, SloSpec, TenantMix};
+    let mut trace = fc.trace(rate);
+    let mix = TenantMix::uniform(4);
+    let base = SloSpec::parse("ttft:10,tpot:1,deadline:60").expect("static spec");
+    stamp_trace(&mut trace, &mix, &base, fc.seed ^ 0x510);
+    Simulation::new(fc.sim(EngineKind::Ds))
+        .run_named(&trace, which, fc.slice_len)
+        .unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Extension figure: SLO attainment (goodput) vs arrival rate. The
+/// SLO-aware trio (D-SCLS, P-SRPT, SW-SLO) runs against the SLS / ILS /
+/// SCLS baselines over SLO-stamped traces. The acceptance shape: at the
+/// underloaded end everyone attains nearly everything and the SLO-aware
+/// rows hold throughput within 10% of SCLS; past saturation the
+/// deadline-aware rows degrade gracefully (shed infeasible work early,
+/// keep the rest inside deadline) while the oblivious rows collapse.
+pub fn fig_slo(fc: &FigureConfig, rates: &[f64]) -> FigureResult {
+    let policies = ["SLS", "ILS", "SCLS", "D-SCLS", "P-SRPT", "SW-SLO"];
+    let mut items: Vec<(&'static str, f64)> = Vec::new();
+    for &rate in rates {
+        for which in policies {
+            items.push((which, rate));
+        }
+    }
+    let sums = parallel_map(fc.jobs, items, |(which, rate)| {
+        let m = run_slo_cell(fc, which, rate);
+        let slo = (
+            m.slo.tracked,
+            m.slo.attainment(),
+            m.slo.ttft_p99(),
+            m.slo.deadline_misses,
+            m.shed_requests,
+        );
+        (which, rate, m.summarize(), slo)
+    });
+    let mut rows = Vec::new();
+    let mut arr = Vec::new();
+    for (which, rate, s, (tracked, attainment, ttft_p99, misses, shed)) in sums {
+        rows.push(vec![
+            which.to_string(),
+            format!("{rate:.0}"),
+            f2(s.throughput),
+            f3(attainment),
+            f2(ttft_p99),
+            misses.to_string(),
+            shed.to_string(),
+            s.completed.to_string(),
+        ]);
+        let mut o = s.to_json();
+        o.set("scheduler", which)
+            .set("rate", rate)
+            .set("slo_tracked", tracked)
+            .set("slo_attainment", attainment)
+            .set("ttft_p99", ttft_p99)
+            .set("deadline_misses", misses)
+            .set("shed_requests", shed);
+        arr.push(o);
+    }
+    FigureResult {
+        id: "figslo".into(),
+        title: "SLO sweep: attainment/goodput vs arrival rate, 4 tenants \
+                (DS, ttft:10 tpot:1 deadline:60)"
+            .into(),
+        header: vec![
+            "scheduler".into(),
+            "rate".into(),
+            "thpt".into(),
+            "attain".into(),
+            "ttft p99".into(),
+            "ddl miss".into(),
+            "shed".into(),
+            "completed".into(),
+        ],
+        rows,
+        json: Json::Arr(arr),
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Fig. 22 — scalability: throughput vs number of workers
 // ---------------------------------------------------------------------------
 
@@ -1081,6 +1170,27 @@ mod tests {
                 "{which} must see the half-fleet crash"
             );
             assert_eq!(num(which, "rolling", "worker_crashes"), 0);
+        }
+    }
+
+    #[test]
+    fn figslo_cells_cover_policies_and_bound_attainment() {
+        let r = fig_slo(&quick(), &[10.0, 30.0]);
+        assert_eq!(r.rows.len(), 12, "6 policies x 2 rates");
+        for o in r.json.as_arr().unwrap() {
+            let which = o.get("scheduler").and_then(Json::as_str).unwrap();
+            let a = o.get("slo_attainment").unwrap().as_f64().unwrap();
+            assert!((0.0..=1.0).contains(&a), "{which} attainment {a}");
+            let tracked = o.get("slo_tracked").unwrap().as_i64().unwrap();
+            assert!(tracked > 0, "{which} tracked no SLOs");
+            assert!(o.get("completed").unwrap().as_i64().unwrap() > 0);
+            assert!(o.get("ttft_p99").unwrap().as_f64().unwrap() >= 0.0);
+            // Only the deadline-aware admission sheds; every other policy
+            // serves the whole trace.
+            if which != "D-SCLS" {
+                let shed = o.get("shed_requests").unwrap().as_i64().unwrap();
+                assert_eq!(shed, 0, "{which} must not shed");
+            }
         }
     }
 

@@ -6,6 +6,8 @@
 //! `target_gen_len` as its EOS oracle, the real engine discovers EOS from
 //! the model's actual output tokens.
 
+use crate::slo::SloSpec;
+
 pub type RequestId = u64;
 
 #[derive(Debug, Clone)]
@@ -41,6 +43,18 @@ pub struct Request {
     pub predicted_gen: Option<u32>,
     /// Set when the response is returned to the user.
     pub finished_at: Option<f64>,
+    /// Owning tenant (0 = default single-tenant world).
+    pub tenant: u32,
+    /// Priority class, 0 = most urgent (mirrors the tenant tier under
+    /// [`crate::slo::stamp_trace`]; free-form for custom embedders).
+    pub priority: u8,
+    /// Service-level objective (TTFT / TPOT / deadline targets);
+    /// [`SloSpec::none`] keeps the request invisible to SLO accounting.
+    pub slo: SloSpec,
+    /// When the first generated token was delivered (stamped by
+    /// static-batching policies at the end of the first served slice;
+    /// `None` means SLO evaluation falls back to `finished_at`).
+    pub first_token_at: Option<f64>,
     /// Real-engine only: concrete token ids of the current input (original
     /// prompt + generated so far, in order). Empty in sim mode.
     pub tokens: Vec<i32>,
@@ -62,6 +76,10 @@ impl Request {
             invalid_tokens: 0,
             predicted_gen: None,
             finished_at: None,
+            tenant: 0,
+            priority: 0,
+            slo: SloSpec::none(),
+            first_token_at: None,
             tokens: Vec::new(),
             eos_seen: false,
         }
@@ -102,6 +120,10 @@ mod tests {
         assert!(!r.is_finished());
         assert_eq!(r.response_time(), None);
         assert_eq!(r.remaining_to_eos(), 40);
+        assert_eq!(r.tenant, 0);
+        assert_eq!(r.priority, 0);
+        assert!(r.slo.is_none());
+        assert_eq!(r.first_token_at, None);
     }
 
     #[test]

@@ -38,6 +38,7 @@ pub mod predictor;
 pub mod runtime;
 pub mod scheduler;
 pub mod sim;
+pub mod slo;
 pub mod testprop;
 pub mod util;
 pub mod worker;

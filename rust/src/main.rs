@@ -29,6 +29,7 @@ use scls::scheduler::parse_policy_name;
 use scls::scheduler::spec::SchedulerSpec;
 use scls::sim::driver::{SimConfig, Simulation};
 use scls::sim::FaultPlan;
+use scls::slo::{stamp_trace, SloSpec, TenantMix};
 use scls::util::cli::Args;
 use scls::util::jobs::parallel_map;
 use scls::util::logging;
@@ -55,8 +56,8 @@ SUBCOMMANDS:
   figure ID   Regenerate one figure (same flags as `figures`)
   simulate    Run one experiment cell on the calibrated DES
       --engine hf|ds     inference engine            [ds]
-      --scheduler NAME   SLS|ILS|SO|PM|AB|LB|SCLS|SCLS-CB|P-SCLS|P-CB
-                         (case-insensitive)          [SCLS]
+      --scheduler NAME   SLS|ILS|SO|PM|AB|LB|SCLS|SCLS-CB|P-SCLS|P-CB|
+                         D-SCLS|P-SRPT|SW-SLO (case-insensitive) [SCLS]
       --rate R           arrival rate req/s          [20]
       --workers W        LLM instances               [8]
       --duration SECS    trace duration              [600]
@@ -79,6 +80,14 @@ SUBCOMMANDS:
                          rolling:PERIOD (e.g. crash:w3@120,join:2@300 or
                          rolling:30s). Worker indices are 0-based; joiners
                          get fresh indices.          [none]
+      --tenants SPEC     multi-tenant mix: a count N (uniform) or
+                         N:w1,...,wN (weighted, e.g. 4:4,2,1,1). The
+                         weights also drive the coordinator's
+                         deficit-weighted fair service. [1 tenant]
+      --slo SPEC         per-request SLO targets stamped on the trace,
+                         comma list of ttft:SECS | tpot:SECS |
+                         deadline:SECS (e.g. ttft:2,deadline:120);
+                         lower-numbered tenants get tighter tiers [none]
   serve       Serve a scaled trace on the real PJRT cluster
       --artifacts DIR    AOT artifact dir            [artifacts]
       --workers W        worker threads              [2]
@@ -141,7 +150,7 @@ fn dispatch(args: &Args) -> Result<()> {
 fn figure_ids() -> Vec<&'static str> {
     vec![
         "fig5", "fig6", "fig8", "fig10", "fig11", "fig12", "fig15", "fig17", "fig18", "fig22",
-        "figpred", "figdrift", "figfault",
+        "figpred", "figdrift", "figfault", "figslo",
     ]
 }
 
@@ -179,6 +188,10 @@ fn run_figure(id: &str, fc: &FigureConfig) -> Result<Vec<FigureResult>> {
         // Extension: throughput/P99 through rolling restarts and correlated
         // failures (elastic fault-tolerant fleet).
         "figfault" => vec![figures::fig_fault(fc)],
+        // Extension: SLO attainment vs arrival rate — the sweep runs past
+        // saturation so the deadline-aware policies separate from the
+        // oblivious ladder.
+        "figslo" => vec![figures::fig_slo(fc, &[8.0, 16.0, 24.0, 32.0, 40.0])],
         other => bail!("unknown figure id '{other}' (known: {:?})", figure_ids()),
     })
 }
@@ -267,7 +280,44 @@ fn experiment_config(args: &Args) -> Result<ExperimentConfig> {
     cfg.max_input_len = args.u32_or("max-input-len", cfg.max_input_len);
     cfg.max_gen_len = args.u32_or("max-gen-len", cfg.max_gen_len);
     cfg.seed = args.u64_or("seed", cfg.seed);
+    // A NaN/∞/non-positive rate or duration would silently produce an
+    // empty (or never-ending) Poisson trace — fail loudly instead.
+    if !(cfg.rate.is_finite() && cfg.rate > 0.0) {
+        return Err(anyhow!(
+            "--rate must be a finite, positive arrival rate in req/s (got {})",
+            cfg.rate
+        ));
+    }
+    if !(cfg.duration.is_finite() && cfg.duration > 0.0) {
+        return Err(anyhow!(
+            "--duration must be a finite, positive number of seconds (got {})",
+            cfg.duration
+        ));
+    }
     Ok(cfg)
+}
+
+/// Parse `--tenants` / `--slo` into the trace-stamping inputs. Either flag
+/// alone works: `--slo` without `--tenants` stamps a single tenant, and
+/// `--tenants` without `--slo` stamps tenancy (and turns on weighted fair
+/// service) with no SLO targets.
+fn tenancy_spec(args: &Args) -> Result<(Option<TenantMix>, Option<SloSpec>)> {
+    let mix = match args.str_opt("tenants") {
+        Some(s) => Some(TenantMix::parse(s).map_err(|e| anyhow!("--tenants: {e}"))?),
+        None => None,
+    };
+    let slo = match args.str_opt("slo") {
+        Some(s) => {
+            let spec = SloSpec::parse(s).map_err(|e| anyhow!("--slo: {e}"))?;
+            if spec.is_none() {
+                None
+            } else {
+                Some(spec)
+            }
+        }
+        None => None,
+    };
+    Ok((mix, slo))
 }
 
 /// Assemble the predictor spec from `--predictor` plus the dedicated
@@ -359,7 +409,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let which = parse_policy_name(args.str_or("scheduler", "SCLS")).map_err(|e| anyhow!("{e}"))?;
     let pspec = predictor_spec(args, cfg.workload)?;
     let plan = fault_plan(args, cfg.workers)?;
-    let trace = Trace::generate(&TraceConfig {
+    let (mix, slo) = tenancy_spec(args)?;
+    let mut trace = Trace::generate(&TraceConfig {
         kind: cfg.workload,
         rate: cfg.rate,
         duration: cfg.duration,
@@ -367,6 +418,18 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         max_gen_len: cfg.max_gen_len,
         seed: cfg.seed,
     });
+    if mix.is_some() || slo.is_some() {
+        let m = mix.clone().unwrap_or_else(|| TenantMix::uniform(1));
+        let base = slo.clone().unwrap_or_else(SloSpec::none);
+        stamp_trace(&mut trace, &m, &base, cfg.seed);
+    }
+    // Multi-tenant runs drive the coordinator's deficit-weighted fair
+    // service off the mix weights; single-tenant runs keep the legacy
+    // drain path.
+    let tenant_weights = mix
+        .as_ref()
+        .filter(|m| m.tenants() > 1)
+        .map(|m| m.weights.clone());
     // bool_or handles all spellings: absent → false, bare flag → true,
     // `--pred-corrected-dp false` → false.
     let pred_corrected = args.bool_or("pred-corrected-dp", false);
@@ -384,7 +447,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             cfg.seed,
         )
         .with_predictor(pspec.clone())
-        .with_pred_corrected_dp(pred_corrected),
+        .with_pred_corrected_dp(pred_corrected)
+        .with_tenant_weights(tenant_weights),
     );
     log::info!(
         "simulate: {} requests, {} workers, engine {}, scheduler {}",
@@ -415,6 +479,25 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         println!("reclaimed reqs    {}", metrics.reclaimed_requests);
         println!("lost slices       {}", metrics.lost_slices);
         println!("migrations        {}", metrics.migrations);
+    }
+    if slo.is_some() {
+        println!(
+            "slo attained      {}/{} ({:.3})",
+            metrics.slo.attained,
+            metrics.slo.tracked,
+            metrics.slo.attainment()
+        );
+        println!("ttft p99          {:.2} s", metrics.slo.ttft_p99());
+        println!("ttft misses       {}", metrics.slo.ttft_misses);
+        println!("tpot misses       {}", metrics.slo.tpot_misses);
+        println!("deadline misses   {}", metrics.slo.deadline_misses);
+        println!("shed requests     {}", metrics.shed_requests);
+        for (t, ts) in &metrics.slo.per_tenant {
+            println!(
+                "  tenant {t:<3}     {}/{} attained, {} shed",
+                ts.attained, ts.tracked, ts.shed
+            );
+        }
     }
     if matches!(which, "P-SCLS" | "P-CB") {
         println!("predictor         {}", pspec.describe());
@@ -682,6 +765,61 @@ mod tests {
         assert!(err.contains("unknown fault op"), "{err}");
         let err = plan_of("simulate --faults crash:w1", 8).unwrap_err().to_string();
         assert!(err.contains("@TIME"), "{err}");
+    }
+
+    #[test]
+    fn simulate_rejects_non_finite_or_non_positive_rate_and_duration() {
+        for bad in ["nan", "inf", "-inf", "-3", "0"] {
+            let err = experiment_config(&args(&format!("simulate --rate {bad}")))
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("--rate"), "rate {bad}: {err}");
+            assert!(err.contains("finite, positive"), "rate {bad}: {err}");
+            let err = experiment_config(&args(&format!("simulate --duration {bad}")))
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("--duration"), "duration {bad}: {err}");
+        }
+        // The defaults and ordinary values stay valid.
+        assert!(experiment_config(&args("simulate")).is_ok());
+        assert!(experiment_config(&args("simulate --rate 2.5 --duration 30")).is_ok());
+    }
+
+    #[test]
+    fn tenant_and_slo_flags_parse() {
+        let (mix, slo) =
+            tenancy_spec(&args("simulate --tenants 4 --slo ttft:2,deadline:120")).unwrap();
+        assert_eq!(mix.unwrap().tenants(), 4);
+        let slo = slo.unwrap();
+        assert_eq!(slo.ttft, Some(2.0));
+        assert_eq!(slo.deadline, Some(120.0));
+        assert_eq!(slo.tpot, None);
+        // Weighted spelling.
+        let (mix, slo) = tenancy_spec(&args("simulate --tenants 2:3,1")).unwrap();
+        assert_eq!(mix.unwrap().weights, vec![3.0, 1.0]);
+        assert!(slo.is_none());
+        // `--slo none` is the explicit SLO-free default.
+        let (_, slo) = tenancy_spec(&args("simulate --slo none")).unwrap();
+        assert!(slo.is_none());
+        // Absent flags stamp nothing.
+        let (mix, slo) = tenancy_spec(&args("simulate")).unwrap();
+        assert!(mix.is_none() && slo.is_none());
+    }
+
+    #[test]
+    fn tenant_and_slo_junk_is_a_friendly_error() {
+        for bad in ["0", "2:1", "x", "2:1,nan", "2:1,-4"] {
+            let err = tenancy_spec(&args(&format!("simulate --tenants {bad}")))
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("--tenants"), "tenants {bad}: {err}");
+        }
+        for bad in ["bogus:5", "ttft:-2", "ttft:nan", "ttft", "ttft:1,ttft:2"] {
+            let err = tenancy_spec(&args(&format!("simulate --slo {bad}")))
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("--slo"), "slo {bad}: {err}");
+        }
     }
 
     #[test]

@@ -7,6 +7,7 @@ pub mod sink;
 
 pub use sink::{Fanout, MetricsSink, NullSink, Tally};
 
+use crate::slo::{SloOutcome, SloTracker};
 use crate::util::json::Json;
 use crate::util::stats;
 
@@ -119,6 +120,14 @@ pub struct RunMetrics {
     /// Requests moved between workers at a slice boundary (drain handoffs
     /// plus queued-work reassignment after a crash).
     pub migrations: u64,
+    /// Requests shed before service (deadline-infeasible admissions under
+    /// SLO-aware policies). Always 0 under the throughput-only policies.
+    pub shed_requests: u64,
+    /// SLO attainment accounting: every completion (or shed) of a request
+    /// carrying a non-empty [`crate::slo::SloSpec`] is folded in here.
+    /// SLO-free traces never touch it, so the serialized counters stay
+    /// all-zero and the frozen differential fingerprints are unchanged.
+    pub slo: SloTracker,
 }
 
 /// Headline summary of a run.
@@ -158,7 +167,16 @@ impl RunMetrics {
         }
     }
 
-    pub fn record_completion(&mut self, req: &crate::core::Request, now: f64) {
+    /// Log one completion. When the request carries a non-empty SLO the
+    /// outcome is judged and folded into the tracker, and returned so the
+    /// caller can stream it (`MetricsSink::on_slo`); SLO-free requests —
+    /// including everything the frozen reference drivers replay — return
+    /// `None` and leave the SLO counters untouched.
+    pub fn record_completion(
+        &mut self,
+        req: &crate::core::Request,
+        now: f64,
+    ) -> Option<SloOutcome> {
         self.completed.push(CompletedRequest {
             id: req.id,
             arrival: req.arrival,
@@ -169,6 +187,22 @@ impl RunMetrics {
             invalid_tokens: req.invalid_tokens,
         });
         self.makespan = self.makespan.max(now);
+        if req.slo.is_none() {
+            return None;
+        }
+        let outcome = req.slo.evaluate(req, now);
+        self.slo.observe(&outcome);
+        Some(outcome)
+    }
+
+    /// Log one shed (a request dropped before service by an SLO-aware
+    /// policy). SLO-carrying sheds count as tracked-but-missed, so
+    /// shedding lowers goodput honestly instead of hiding the miss.
+    pub fn record_shed(&mut self, req: &crate::core::Request) {
+        self.shed_requests += 1;
+        if !req.slo.is_none() {
+            self.slo.observe_shed(req.tenant);
+        }
     }
 
     /// Serialize the *entire* event log deterministically — the byte-level
@@ -189,8 +223,32 @@ impl RunMetrics {
             .set("reclaimed_requests", self.reclaimed_requests)
             .set("lost_slices", self.lost_slices)
             .set("migrations", self.migrations)
+            .set("shed_requests", self.shed_requests)
+            .set("slo_tracked", self.slo.tracked)
+            .set("slo_attained", self.slo.attained)
+            .set("slo_ttft_misses", self.slo.ttft_misses)
+            .set("slo_tpot_misses", self.slo.tpot_misses)
+            .set("deadline_misses", self.slo.deadline_misses)
+            .set("ttft_p99", self.slo.ttft_p99())
             .set("makespan", self.makespan)
             .set("worker_completion", self.worker_completion.clone());
+        let tenants: Vec<Json> = self
+            .slo
+            .per_tenant
+            .iter()
+            .map(|(tenant, t)| {
+                let mut j = Json::obj();
+                j.set("tenant", *tenant)
+                    .set("tracked", t.tracked)
+                    .set("attained", t.attained)
+                    .set("ttft_misses", t.ttft_misses)
+                    .set("tpot_misses", t.tpot_misses)
+                    .set("deadline_misses", t.deadline_misses)
+                    .set("shed", t.shed);
+                j
+            })
+            .collect();
+        o.set("slo_tenants", Json::Arr(tenants));
         let completed: Vec<Json> = self
             .completed
             .iter()
@@ -379,6 +437,53 @@ mod tests {
         assert_eq!(m.events, 0);
         assert_eq!(m.peak_pool, 0);
         assert_eq!(m.summarize().completed, 0);
+    }
+
+    #[test]
+    fn slo_free_completions_leave_slo_counters_zero() {
+        let mut m = RunMetrics::default();
+        assert!(m.record_completion(&Request::new(1, 0.0, 10, 5), 1.0).is_none());
+        assert!(m.slo.is_empty());
+        let j = m.to_json();
+        assert_eq!(j.get("slo_tracked").unwrap().as_i64(), Some(0));
+        assert_eq!(j.get("slo_attained").unwrap().as_i64(), Some(0));
+        assert_eq!(j.get("shed_requests").unwrap().as_i64(), Some(0));
+        assert_eq!(j.get("ttft_p99").unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.get("slo_tenants").unwrap().as_arr().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn slo_completions_and_sheds_are_tracked() {
+        let mut m = RunMetrics::default();
+        let mut r = Request::new(1, 0.0, 10, 5);
+        r.generated = 5;
+        r.tenant = 2;
+        r.slo.deadline = Some(3.0);
+        r.first_token_at = Some(0.5);
+        let o = m.record_completion(&r, 2.0).expect("SLO-carrying");
+        assert!(o.attained && o.deadline_ok);
+        let mut late = Request::new(2, 0.0, 10, 5);
+        late.generated = 5;
+        late.slo.deadline = Some(1.0);
+        assert!(!m.record_completion(&late, 2.0).unwrap().attained);
+        let mut shed = Request::new(3, 0.0, 10, 5);
+        shed.slo.deadline = Some(0.5);
+        shed.tenant = 2;
+        m.record_shed(&shed);
+        // An SLO-free shed still counts the shed, not the tracker.
+        m.record_shed(&Request::new(4, 0.0, 10, 5));
+        assert_eq!(m.shed_requests, 2);
+        assert_eq!(m.slo.tracked, 3);
+        assert_eq!(m.slo.attained, 1);
+        assert_eq!(m.slo.deadline_misses, 2);
+        assert_eq!(m.slo.shed, 1);
+        let j = m.to_json();
+        assert_eq!(j.get("slo_tracked").unwrap().as_i64(), Some(3));
+        assert_eq!(j.get("deadline_misses").unwrap().as_i64(), Some(2));
+        let tenants = j.get("slo_tenants").unwrap().as_arr().unwrap();
+        assert_eq!(tenants.len(), 2, "tenants 0 and 2");
+        assert_eq!(tenants[1].get("tenant").unwrap().as_i64(), Some(2));
+        assert_eq!(tenants[1].get("shed").unwrap().as_i64(), Some(1));
     }
 
     #[test]

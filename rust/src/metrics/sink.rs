@@ -13,6 +13,8 @@
 //! monotonically non-decreasing `now` within one run.
 
 use super::{BatchRecord, CompletedRequest, FleetRecord, PredictionRecord, RunMetrics};
+use crate::core::Request;
+use crate::slo::SloOutcome;
 
 /// Observer of one experiment run's event stream. All hooks default to
 /// no-ops so implementations override only what they consume.
@@ -42,6 +44,12 @@ pub trait MetricsSink {
     fn on_reclaim(&mut self, _now: f64, _worker: usize, _in_flight: usize, _queued: usize) {}
     /// `count` requests migrated off `worker` at a slice boundary (drain).
     fn on_migration(&mut self, _now: f64, _worker: usize, _count: usize) {}
+    /// An SLO-carrying request completed and was judged (never fires for
+    /// SLO-free requests, so SLO-free runs see no new events).
+    fn on_slo(&mut self, _now: f64, _outcome: &SloOutcome) {}
+    /// An SLO-aware policy shed `req` before service (deadline-infeasible
+    /// admission or an expired requeue).
+    fn on_shed(&mut self, _now: f64, _req: &Request) {}
     /// The run drained; `metrics` is the final event log.
     fn on_run_end(&mut self, _metrics: &RunMetrics) {}
 }
@@ -79,6 +87,11 @@ pub struct Tally {
     pub reclaimed_requests: u64,
     pub lost_slices: u64,
     pub migrations: u64,
+    /// SLO counters (see [`RunMetrics`]); all 0 on SLO-free runs.
+    pub slo_tracked: u64,
+    pub slo_attained: u64,
+    pub deadline_misses: u64,
+    pub shed_requests: u64,
 }
 
 impl MetricsSink for Tally {
@@ -129,6 +142,24 @@ impl MetricsSink for Tally {
 
     fn on_migration(&mut self, _now: f64, _worker: usize, count: usize) {
         self.migrations += count as u64;
+    }
+
+    fn on_slo(&mut self, _now: f64, outcome: &SloOutcome) {
+        self.slo_tracked += 1;
+        if outcome.attained {
+            self.slo_attained += 1;
+        }
+        if !outcome.deadline_ok {
+            self.deadline_misses += 1;
+        }
+    }
+
+    fn on_shed(&mut self, _now: f64, req: &Request) {
+        self.shed_requests += 1;
+        if !req.slo.is_none() {
+            self.slo_tracked += 1;
+            self.deadline_misses += 1;
+        }
     }
 }
 
@@ -187,6 +218,18 @@ impl MetricsSink for Fanout<'_> {
     fn on_migration(&mut self, now: f64, worker: usize, count: usize) {
         for s in self.0.iter_mut() {
             s.on_migration(now, worker, count);
+        }
+    }
+
+    fn on_slo(&mut self, now: f64, outcome: &SloOutcome) {
+        for s in self.0.iter_mut() {
+            s.on_slo(now, outcome);
+        }
+    }
+
+    fn on_shed(&mut self, now: f64, req: &Request) {
+        for s in self.0.iter_mut() {
+            s.on_shed(now, req);
         }
     }
 
@@ -267,6 +310,44 @@ mod tests {
         t.on_corrected_batch(5.0);
         assert_eq!(t.predictor_refits, 2);
         assert_eq!(t.corrected_batches, 1);
+    }
+
+    #[test]
+    fn tally_slo_counters() {
+        let mut t = Tally::default();
+        t.on_slo(
+            1.0,
+            &SloOutcome {
+                tenant: 0,
+                ttft: 0.2,
+                tpot: 0.01,
+                ttft_ok: true,
+                tpot_ok: true,
+                deadline_ok: true,
+                attained: true,
+            },
+        );
+        t.on_slo(
+            2.0,
+            &SloOutcome {
+                tenant: 1,
+                ttft: 5.0,
+                tpot: 0.01,
+                ttft_ok: false,
+                tpot_ok: true,
+                deadline_ok: false,
+                attained: false,
+            },
+        );
+        let mut shed = Request::new(7, 0.0, 8, 8);
+        shed.slo.deadline = Some(1.0);
+        t.on_shed(3.0, &shed);
+        // SLO-free sheds count the shed only.
+        t.on_shed(4.0, &Request::new(8, 0.0, 8, 8));
+        assert_eq!(t.slo_tracked, 3);
+        assert_eq!(t.slo_attained, 1);
+        assert_eq!(t.deadline_misses, 2);
+        assert_eq!(t.shed_requests, 2);
     }
 
     #[test]

@@ -18,6 +18,14 @@ use crate::scheduler::fleet::{WorkerHealth, WorkerLedger};
 use crate::scheduler::spec::{BatchingSpec, IntervalSpec, OffloadSpec, SchedulerSpec};
 use crate::scheduler::{IntervalController, RequestPool};
 
+/// Per-tick fair-service quantum, in KV token-slots per accepting worker:
+/// with weighted fairness on, each tick distributes
+/// `FAIR_TOKENS_PER_WORKER × accepting_workers` of admission capacity
+/// across tenants in proportion to their weights (one request costs
+/// `input_len + slice_len` slots — the KV footprint its next pass
+/// reserves).
+const FAIR_TOKENS_PER_WORKER: f64 = 16_384.0;
+
 /// Coordinator state for one sliced-family scheduler over `workers`
 /// instances. All per-tick buffers are reused across the whole run (the
 /// allocation-lean discipline from the PR 1 hot-path work).
@@ -32,9 +40,19 @@ pub struct SlicedCoordinator {
     fleet: WorkerLedger,
     dp_cfg: Option<DpBatcherConfig>,
     interval: Option<IntervalController>,
+    /// Weighted-fairness opt-in ([`Self::set_tenant_weights`]); `None`
+    /// keeps the exact legacy drain path.
+    tenant_weights: Option<Vec<f64>>,
+    /// Deficit counters (KV token-slots) per tenant, classic DRR: grow by
+    /// the weighted quantum each tick, pay per admitted request, reset
+    /// when the tenant has no queued work.
+    deficits: Vec<f64>,
+    tenant_seen: Vec<bool>,
     tick_reqs: Vec<Request>,
     batch_buf: Vec<Batch>,
     assign_buf: Vec<(usize, Batch)>,
+    fair_scratch: Vec<Request>,
+    defer_buf: Vec<Request>,
     dp_scratch: DpScratch,
 }
 
@@ -65,11 +83,46 @@ impl SlicedCoordinator {
             fleet: WorkerLedger::new(workers),
             dp_cfg,
             interval,
+            tenant_weights: None,
+            deficits: Vec::new(),
+            tenant_seen: Vec::new(),
             tick_reqs: Vec::new(),
             batch_buf: Vec::new(),
             assign_buf: Vec::new(),
+            fair_scratch: Vec::new(),
+            defer_buf: Vec::new(),
             dp_scratch: DpScratch::new(),
         }
+    }
+
+    /// Opt in to deficit-weighted per-tenant service (`weights[t]` is
+    /// tenant `t`'s share; requests from tenants beyond the vector clamp
+    /// to its last entry). Each tick admits requests against a per-tenant
+    /// KV-token budget — `FAIR_TOKENS_PER_WORKER × accepting workers`
+    /// split by weight, with unspent budget carried as classic
+    /// deficit-round-robin credit — and defers the rest to later ticks.
+    /// Any tenant with a positive weight accumulates credit every tick it
+    /// stays backlogged, so no tenant starves under sustained overload
+    /// (`tests/props_slo.rs` hammers this). `None` (the default) restores
+    /// the exact legacy drain-everything path, byte for byte.
+    pub fn set_tenant_weights(&mut self, weights: Option<Vec<f64>>) {
+        if let Some(w) = &weights {
+            assert!(
+                !w.is_empty() && w.iter().all(|x| x.is_finite() && *x > 0.0),
+                "tenant weights must be finite and positive"
+            );
+            self.deficits = vec![0.0; w.len()];
+            self.tenant_seen = vec![false; w.len()];
+        } else {
+            self.deficits.clear();
+            self.tenant_seen.clear();
+        }
+        self.tenant_weights = weights;
+    }
+
+    /// The active weighted-fairness shares, if any.
+    pub fn tenant_weights(&self) -> Option<&[f64]> {
+        self.tenant_weights.as_deref()
     }
 
     pub fn spec(&self) -> &SchedulerSpec {
@@ -181,6 +234,17 @@ impl SlicedCoordinator {
             self.dp_scratch.reset_corrected_batches();
             return 0;
         }
+        if self.tenant_weights.is_some() {
+            self.fair_admission_pass();
+            if self.tick_reqs.is_empty() {
+                // Every drained request was deferred: nothing to batch
+                // this tick, but the deferred work is back in the pool so
+                // the caller keeps ticking.
+                self.assign_buf.clear();
+                self.dp_scratch.reset_corrected_batches();
+                return drained;
+            }
+        }
         let dp_cfg = self
             .dp_cfg
             .as_ref()
@@ -226,6 +290,49 @@ impl SlicedCoordinator {
             }
         }
         drained
+    }
+
+    /// Deficit-weighted admission over the drained (input-length-sorted)
+    /// request list. A stable filter: kept requests stay in sorted order
+    /// (the DP batcher's contract), deferred ones go straight back to the
+    /// pool for a later tick. Deficits follow classic DRR — accrue the
+    /// weighted quantum, pay `input_len + slice_len` token-slots per
+    /// admitted request, reset when the tenant has no queued work (so an
+    /// idle tenant cannot bank an unbounded burst).
+    fn fair_admission_pass(&mut self) {
+        let weights = self
+            .tenant_weights
+            .as_ref()
+            .expect("fairness pass requires weights");
+        let total: f64 = weights.iter().sum();
+        let quantum = FAIR_TOKENS_PER_WORKER * self.fleet.accepting_count().max(1) as f64;
+        for (t, w) in weights.iter().enumerate() {
+            self.deficits[t] += quantum * w / total;
+        }
+        self.tenant_seen.fill(false);
+        let slice_len = self.spec.slice_len as f64;
+        let mut reqs =
+            std::mem::replace(&mut self.tick_reqs, std::mem::take(&mut self.fair_scratch));
+        for r in reqs.drain(..) {
+            let t = (r.tenant as usize).min(weights.len() - 1);
+            self.tenant_seen[t] = true;
+            let cost = r.input_len as f64 + slice_len;
+            if self.deficits[t] >= cost {
+                self.deficits[t] -= cost;
+                self.tick_reqs.push(r);
+            } else {
+                self.defer_buf.push(r);
+            }
+        }
+        self.fair_scratch = reqs;
+        for t in 0..self.deficits.len() {
+            if !self.tenant_seen[t] {
+                self.deficits[t] = 0.0;
+            }
+        }
+        for r in self.defer_buf.drain(..) {
+            self.pool.push(r);
+        }
     }
 
     /// Hand out the tick's assignment buffer (drain it, then give it back
@@ -370,6 +477,59 @@ mod tests {
         let mut f = SlicedCoordinator::new(&SchedulerSpec::sls(&preset, 1024), 2);
         f.set_pred_correction(true);
         assert!(!f.pred_correction());
+    }
+
+    #[test]
+    fn weighted_fairness_admits_tenants_by_share_without_starvation() {
+        let preset = EnginePreset::paper(EngineKind::Ds);
+        let spec = SchedulerSpec::scls(&preset, 128);
+        let mut c = SlicedCoordinator::new(&spec, 2);
+        c.set_tenant_weights(Some(vec![1.0, 1.0]));
+        assert_eq!(c.tenant_weights(), Some(&[1.0, 1.0][..]));
+        for i in 0..200u64 {
+            let mut r = Request::new(i, 0.0, 1024, 200);
+            r.tenant = (i % 2) as u32;
+            assert!(c.admit(r).is_none());
+        }
+        let est = fitted_estimator(&preset, 7);
+        let mem = preset.memory_estimator();
+        let drained = c.schedule_tick(&est, &mem);
+        assert_eq!(drained, 200, "deferred requests still count as drained");
+        let mut a = c.take_assignments();
+        let by_tenant = |t: u32, a: &[(usize, Batch)]| -> usize {
+            a.iter()
+                .flat_map(|(_, b)| b.requests.iter())
+                .filter(|r| r.tenant == t)
+                .count()
+        };
+        let (t0, t1) = (by_tenant(0, &a), by_tenant(1, &a));
+        assert!(t0 > 0 && t1 > 0, "both tenants served in the first tick");
+        assert_eq!(t0, t1, "equal weights admit equal counts");
+        assert!(t0 + t1 < 200, "the per-tick budget defers the overflow");
+        assert!(!c.pool_is_empty());
+        for (w, b) in a.drain(..) {
+            c.batch_done(w, b.est_serve_time);
+        }
+        c.recycle_assignments(a);
+        // Deficit carryover drains the whole backlog in bounded ticks
+        // even under a lopsided 8:1 share — the light tenant never
+        // starves.
+        c.set_tenant_weights(Some(vec![8.0, 1.0]));
+        let mut served = t0 + t1;
+        for _ in 0..200 {
+            if c.pool_is_empty() {
+                break;
+            }
+            c.schedule_tick(&est, &mem);
+            let mut a = c.take_assignments();
+            served += a.iter().map(|(_, b)| b.size()).sum::<usize>();
+            for (w, b) in a.drain(..) {
+                c.batch_done(w, b.est_serve_time);
+            }
+            c.recycle_assignments(a);
+        }
+        assert!(c.pool_is_empty(), "backlog fully drained under 8:1 weights");
+        assert_eq!(served, 200, "every request was eventually admitted");
     }
 
     #[test]

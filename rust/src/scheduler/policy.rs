@@ -9,9 +9,10 @@
 //! queue, and the metrics log; the policy owns every decision and all
 //! worker-model state.
 //!
-//! The ten built-in policies (SLS, SO, PM, AB, LB, SCLS, ILS, SCLS-CB,
-//! plus the prediction-aware P-SCLS and P-CB)
-//! live in [`crate::sim::policies`]; [`build_policy`] constructs them by
+//! The thirteen built-in policies (SLS, SO, PM, AB, LB, SCLS, ILS,
+//! SCLS-CB, the prediction-aware P-SCLS and P-CB, plus the SLO-aware
+//! D-SCLS, P-SRPT, and SW-SLO) live in [`crate::sim::policies`] and
+//! [`crate::sim::slo_policies`]; [`build_policy`] constructs them by
 //! name for the CLI and the figure suite. Implementing a new scheduler
 //! takes ~20 lines — see `examples/custom_policy.rs`.
 
@@ -103,15 +104,29 @@ impl<'a> SimCtx<'a> {
         self.metrics.batches.push(rec);
     }
 
-    /// Log a request completion at the current virtual time.
+    /// Log a request completion at the current virtual time. SLO-carrying
+    /// requests are judged against their spec and streamed through
+    /// `MetricsSink::on_slo`; SLO-free requests produce no extra event.
     pub fn record_completion(&mut self, req: &Request) {
-        self.metrics.record_completion(req, self.now);
+        let outcome = self.metrics.record_completion(req, self.now);
         let c = self
             .metrics
             .completed
             .last()
             .expect("record_completion just pushed");
         self.sink.on_completion(self.now, c);
+        if let Some(o) = outcome {
+            self.sink.on_slo(self.now, &o);
+        }
+    }
+
+    /// Log a shed: an SLO-aware policy dropped `req` before service
+    /// (deadline-infeasible admission or an expired requeue). Bumps
+    /// `shed_requests`, folds SLO-carrying sheds into the attainment
+    /// tracker as misses, and streams to sinks.
+    pub fn record_shed(&mut self, req: &Request) {
+        self.metrics.record_shed(req);
+        self.sink.on_shed(self.now, req);
     }
 
     /// Note a schedule tick drained `depth` pooled requests (tracks the
@@ -226,10 +241,12 @@ pub trait SchedulingPolicy {
 // Built-in policy registry (CLI / figure-suite construction by name)
 // ---------------------------------------------------------------------------
 
-/// Canonical names of the ten built-in policies: the paper's eight in
-/// paper order, then the prediction-aware pair (P-SCLS, P-CB).
-pub const BUILTIN_POLICIES: [&str; 10] = [
-    "SLS", "SO", "PM", "AB", "LB", "SCLS", "ILS", "SCLS-CB", "P-SCLS", "P-CB",
+/// Canonical names of the thirteen built-in policies: the paper's eight in
+/// paper order, the prediction-aware pair (P-SCLS, P-CB), then the
+/// SLO-aware trio (D-SCLS, P-SRPT, SW-SLO).
+pub const BUILTIN_POLICIES: [&str; 13] = [
+    "SLS", "SO", "PM", "AB", "LB", "SCLS", "ILS", "SCLS-CB", "P-SCLS", "P-CB", "D-SCLS", "P-SRPT",
+    "SW-SLO",
 ];
 
 /// Case-insensitive canonicalization of a scheduler name (accepts the
@@ -247,6 +264,9 @@ pub fn canonical_policy_name(s: &str) -> Option<&'static str> {
         "SCLS-CB" | "SCLSCB" => Some("SCLS-CB"),
         "P-SCLS" | "PSCLS" | "PRED-SCLS" => Some("P-SCLS"),
         "P-CB" | "PCB" | "PRED-CB" => Some("P-CB"),
+        "D-SCLS" | "DSCLS" | "DEADLINE-SCLS" => Some("D-SCLS"),
+        "P-SRPT" | "PSRPT" | "SRPT" => Some("P-SRPT"),
+        "SW-SLO" | "SWSLO" | "SLO-WINDOW" => Some("SW-SLO"),
         _ => None,
     }
 }
@@ -276,6 +296,7 @@ pub fn build_policy(
     use crate::sim::policies::{
         IlsPolicy, PredictiveCbPolicy, PredictiveSlicedPolicy, SclsCbPolicy, SlicedPolicy,
     };
+    use crate::sim::slo_policies::{DeadlineSclsPolicy, RankKey, RankedSlicePolicy};
 
     let preset: &EnginePreset = &cfg.engine;
     Ok(match parse_policy_name(name)? {
@@ -314,6 +335,22 @@ pub fn build_policy(
             &SchedulerSpec::scls(preset, slice_len),
             cfg,
         )),
+        "D-SCLS" => Box::new(DeadlineSclsPolicy::new(
+            &SchedulerSpec::d_scls(preset, slice_len),
+            cfg,
+        )),
+        "P-SRPT" => Box::new(RankedSlicePolicy::new(
+            &SchedulerSpec::p_srpt(preset, slice_len),
+            cfg,
+            RankKey::PredictedRemaining,
+            Some(cfg.predictor.build(cfg.max_gen_len, cfg.seed)),
+        )),
+        "SW-SLO" => Box::new(RankedSlicePolicy::new(
+            &SchedulerSpec::sw_slo(preset, slice_len),
+            cfg,
+            RankKey::DeadlineSlack,
+            None,
+        )),
         other => unreachable!("canonical name {other} not constructed"),
     })
 }
@@ -336,6 +373,13 @@ mod tests {
         assert_eq!(parse_policy_name("Pred-SCLS"), Ok("P-SCLS"));
         assert_eq!(parse_policy_name("P-CB"), Ok("P-CB"));
         assert_eq!(parse_policy_name("pcb"), Ok("P-CB"));
+        assert_eq!(parse_policy_name("d-scls"), Ok("D-SCLS"));
+        assert_eq!(parse_policy_name("deadline-scls"), Ok("D-SCLS"));
+        assert_eq!(parse_policy_name("deadline_scls"), Ok("D-SCLS"));
+        assert_eq!(parse_policy_name("srpt"), Ok("P-SRPT"));
+        assert_eq!(parse_policy_name("p_srpt"), Ok("P-SRPT"));
+        assert_eq!(parse_policy_name("sw-slo"), Ok("SW-SLO"));
+        assert_eq!(parse_policy_name("slo-window"), Ok("SW-SLO"));
     }
 
     #[test]

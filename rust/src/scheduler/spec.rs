@@ -183,6 +183,38 @@ impl SchedulerSpec {
         }
     }
 
+    /// Deadline-aware SCLS (D-SCLS): the SCLS axes interpreted by
+    /// [`crate::sim::slo_policies::DeadlineSclsPolicy`], which seeds each
+    /// request's slice-ladder rung from its deadline slack (tight slack ⇒
+    /// one big pass) and sheds deadline-infeasible requests early.
+    pub fn d_scls(preset: &EnginePreset, slice_len: u32) -> SchedulerSpec {
+        SchedulerSpec {
+            name: "D-SCLS".into(),
+            ..SchedulerSpec::scls(preset, slice_len)
+        }
+    }
+
+    /// Predicted-SRPT (P-SRPT): the SCLS axes interpreted by
+    /// [`crate::sim::slo_policies::RankedSlicePolicy`] ordering the pool
+    /// by predicted remaining work (shortest first) each tick.
+    pub fn p_srpt(preset: &EnginePreset, slice_len: u32) -> SchedulerSpec {
+        SchedulerSpec {
+            name: "P-SRPT".into(),
+            ..SchedulerSpec::scls(preset, slice_len)
+        }
+    }
+
+    /// Sliding-window SLO-aware batching (SW-SLO): the SCLS axes
+    /// interpreted by [`crate::sim::slo_policies::RankedSlicePolicy`]
+    /// admitting a bounded window of the most deadline-critical pooled
+    /// requests per tick instead of the whole FCFS pool.
+    pub fn sw_slo(preset: &EnginePreset, slice_len: u32) -> SchedulerSpec {
+        SchedulerSpec {
+            name: "SW-SLO".into(),
+            ..SchedulerSpec::scls(preset, slice_len)
+        }
+    }
+
     /// The §5.4 ablation ladder in paper order.
     pub fn ablation_ladder(preset: &EnginePreset, slice_len: u32, max_gen: u32) -> Vec<SchedulerSpec> {
         vec![

@@ -5,10 +5,12 @@
 //! so runs are exactly reproducible from the seed), and the `RunMetrics`
 //! event log; every scheduling decision is delegated to a
 //! [`SchedulingPolicy`] object through three hooks (`on_arrival`,
-//! `on_tick`, `on_worker_done`). The eight built-in policies — the
+//! `on_tick`, `on_worker_done`). The built-in policies — the
 //! SLS → SO → PM → AB → LB → SCLS sliced ladder plus ILS and the §7
-//! SCLS-CB extension — live in [`crate::sim::policies`]; user-defined
-//! policies implement the same trait (see `examples/custom_policy.rs`).
+//! SCLS-CB extension — live in [`crate::sim::policies`], and the
+//! SLO-aware trio (D-SCLS, P-SRPT, SW-SLO) in
+//! [`crate::sim::slo_policies`]; user-defined policies implement the same
+//! trait (see `examples/custom_policy.rs`).
 //!
 //! [`Simulation`] / [`ClusterBuilder`] are the facade: configure a
 //! cluster, attach streaming [`MetricsSink`]s, and run policies by object,
@@ -48,6 +50,11 @@ pub struct SimConfig {
     /// predictions fall below the slice cap are costed at the predicted
     /// budget. Off by default — the legacy DP path stays bit-exact.
     pub pred_corrected_dp: bool,
+    /// Per-tenant service weights for the coordinator's weighted-fairness
+    /// path (`weights[t]` is tenant `t`'s share). `None` (the default)
+    /// keeps the exact legacy FCFS drain order — byte-identical to the
+    /// pre-tenancy code.
+    pub tenant_weights: Option<Vec<f64>>,
 }
 
 impl SimConfig {
@@ -59,6 +66,7 @@ impl SimConfig {
             seed,
             predictor: PredictorSpec::Oracle,
             pred_corrected_dp: false,
+            tenant_weights: None,
         }
     }
 
@@ -71,6 +79,13 @@ impl SimConfig {
     /// Toggle predicted early-return correction in the DP batcher.
     pub fn with_pred_corrected_dp(mut self, on: bool) -> SimConfig {
         self.pred_corrected_dp = on;
+        self
+    }
+
+    /// Opt in to deficit-weighted per-tenant fairness in the sliced
+    /// coordinator (see [`crate::scheduler::SlicedCoordinator`]).
+    pub fn with_tenant_weights(mut self, weights: Option<Vec<f64>>) -> SimConfig {
+        self.tenant_weights = weights;
         self
     }
 }
@@ -185,6 +200,7 @@ pub struct ClusterBuilder {
     seed: u64,
     predictor: PredictorSpec,
     pred_corrected_dp: bool,
+    tenant_weights: Option<Vec<f64>>,
 }
 
 impl Default for ClusterBuilder {
@@ -197,6 +213,7 @@ impl Default for ClusterBuilder {
             seed: 42,
             predictor: PredictorSpec::Oracle,
             pred_corrected_dp: false,
+            tenant_weights: None,
         }
     }
 }
@@ -239,11 +256,19 @@ impl ClusterBuilder {
         self
     }
 
+    /// Per-tenant service weights for the coordinator-batched policies
+    /// (deficit-weighted admission; `None` keeps the legacy drain path).
+    pub fn tenant_weights(mut self, weights: Option<Vec<f64>>) -> Self {
+        self.tenant_weights = weights;
+        self
+    }
+
     pub fn build(self) -> Simulation {
         Simulation::new(
             SimConfig::new(self.workers, self.engine, self.max_gen_len, self.seed)
                 .with_predictor(self.predictor)
-                .with_pred_corrected_dp(self.pred_corrected_dp),
+                .with_pred_corrected_dp(self.pred_corrected_dp)
+                .with_tenant_weights(self.tenant_weights),
         )
     }
 }

@@ -8,6 +8,7 @@ pub mod events;
 pub mod faults;
 pub mod policies;
 pub mod reference;
+pub mod slo_policies;
 
 pub use driver::{ClusterBuilder, SimConfig, Simulation};
 pub use events::EventQueue;

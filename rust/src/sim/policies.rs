@@ -16,6 +16,10 @@
 //!   against *predicted* KV demand instead of the worst case, with
 //!   eviction/re-admission recovery when predictions fall short.
 //!
+//! The SLO-aware policies (D-SCLS, P-SRPT, SW-SLO) live in
+//! [`crate::sim::slo_policies`] and reuse this module's static-batching
+//! serving helpers ([`start_static_batch`] / [`settle_batch`]).
+//!
 //! Each pre-existing policy is a faithful port of the corresponding
 //! pre-trait driver loop (`sim::reference`); the differential suite
 //! (`tests/props_policy_differential.rs`) asserts the ports are
@@ -65,8 +69,8 @@ use crate::sim::driver::{fitted_estimator, SimConfig};
 /// outcome and recover the requests in their exact last-boundary state
 /// (`input_len == orig_input_len + generated`), losing at most the one
 /// interrupted slice.
-struct ServingSlot {
-    batch: Batch,
+pub(crate) struct ServingSlot {
+    pub(crate) batch: Batch,
     outcome: BatchOutcome,
     /// Batch input length at serving start (the padding target).
     li: u32,
@@ -77,7 +81,7 @@ struct ServingSlot {
 /// log the batch record, park the batch + outcome in the worker's serving
 /// slot, and schedule the completion event. Request state is deliberately
 /// untouched until [`settle_batch`] at done-time.
-fn start_static_batch(
+pub(crate) fn start_static_batch(
     engine: &mut SimEngine,
     serving: &mut Option<ServingSlot>,
     w: usize,
@@ -108,7 +112,7 @@ fn start_static_batch(
 /// recomputes over input + generated), stamp finish times. `now` is the
 /// completion event's timestamp — bit-identical to the `done_at` computed
 /// at serving start, because the event time IS that f64.
-fn settle_batch(slot: ServingSlot, now: f64) -> Batch {
+pub(crate) fn settle_batch(slot: ServingSlot, now: f64) -> Batch {
     let ServingSlot {
         mut batch,
         outcome,
@@ -118,6 +122,11 @@ fn settle_batch(slot: ServingSlot, now: f64) -> Batch {
         debug_assert_eq!(r.id, o.id);
         r.slices += 1;
         r.pad_tokens += (li - r.input_len) as u64;
+        // First-token stamp for TTFT accounting: this boundary emitted the
+        // request's first generated token.
+        if r.generated == 0 && o.new_tokens > 0 {
+            r.first_token_at = Some(now);
+        }
         r.generated += o.new_tokens;
         r.invalid_tokens += o.invalid_tokens as u64;
         // SCLS reschedule: the next prefill recomputes over input +
@@ -201,8 +210,13 @@ impl SlicedPolicy {
         // callers that share this coordinator (the real-mode driver, or a
         // custom policy stamping predictions before `admit`) opt in via
         // `SlicedCoordinator::set_pred_correction`.
+        let mut coord = SlicedCoordinator::new(spec, cfg.workers);
+        // `None` weights leave the coordinator on the exact legacy drain
+        // path (byte-identical); `Some` switches `schedule_tick` to
+        // deficit-weighted per-tenant admission.
+        coord.set_tenant_weights(cfg.tenant_weights.clone());
         SlicedPolicy {
-            coord: SlicedCoordinator::new(spec, cfg.workers),
+            coord,
             est,
             mem,
             workers,

@@ -1,0 +1,695 @@
+//! SLO-aware scheduling policies on the slice ladder.
+//!
+//! Three policies that spend slicing's predictable per-batch serving time
+//! on deadlines instead of raw throughput:
+//!
+//! * [`DeadlineSclsPolicy`] (**D-SCLS**) — SCLS whose ladder entry rung is
+//!   seeded from *deadline slack* instead of a length prediction: a
+//!   request that can only afford k more passes before its deadline enters
+//!   at the rung whose budget covers the remaining ladder in k passes
+//!   (tight slack ⇒ one big pass, no re-prefill churn). Requests that are
+//!   deadline-infeasible at admission — or whose deadline expires while
+//!   re-queued — are *shed* and counted ([`SimCtx::record_shed`]) rather
+//!   than served into a guaranteed miss.
+//! * [`RankedSlicePolicy`] with [`RankKey::PredictedRemaining`]
+//!   (**P-SRPT**) — preemptive shortest-remaining-predicted-time: each
+//!   tick the pool is ordered by predicted remaining generation (from the
+//!   [`LengthPredictor`]) and the shortest work is batched and placed
+//!   first, which minimizes mean sojourn and drags TTFT/deadline tails
+//!   down under overload. Slice boundaries are the preemption points.
+//! * [`RankedSlicePolicy`] with [`RankKey::DeadlineSlack`] (**SW-SLO**) —
+//!   sliding-window SLO-aware batching: per tick only the `window` most
+//!   deadline-critical pooled requests are admitted to the DP batcher
+//!   (earliest-slack-first), so under overload the batcher composes
+//!   batches from requests that can still make their deadlines instead of
+//!   the whole FCFS backlog.
+//!
+//! All three interpret the SCLS spec axes (uncapped DP batching, max-min
+//! offload, Eq. (12) adaptive interval) and reuse the static-batching
+//! serving helpers from [`crate::sim::policies`]. Like SCLS-CB / P-CB they
+//! keep the default no-op elastic-fleet hooks: on fault-free traces they
+//! are deterministic, and `FaultPlan::none()` runs are byte-identical to
+//! plain [`crate::sim::driver::run_policy`].
+
+use std::collections::VecDeque;
+
+use crate::batcher::{dp_batch_sorted_into, DpBatcherConfig, DpScratch};
+use crate::core::{Batch, Request};
+use crate::engine::presets::EnginePreset;
+use crate::engine::sim::SimEngine;
+use crate::estimator::{MemoryEstimator, ServingTimeEstimator};
+use crate::metrics::RunMetrics;
+use crate::offloader::{LoadLedger, RoundRobin};
+use crate::predictor::LengthPredictor;
+use crate::scheduler::policy::{SchedulingPolicy, SimCtx};
+use crate::scheduler::spec::{BatchingSpec, IntervalSpec, OffloadSpec, SchedulerSpec};
+use crate::scheduler::{IntervalController, RequestPool};
+use crate::sim::driver::{fitted_estimator, SimConfig};
+use crate::sim::policies::{settle_batch, start_static_batch, ServingSlot};
+
+/// Per-worker state shared by the SLO-aware static-batching policies:
+/// queued `(iteration budget, batch)` pairs plus the in-flight slot.
+struct SloWorkerState {
+    batch_queue: VecDeque<(u32, Batch)>,
+    serving: Option<ServingSlot>,
+    engine: SimEngine,
+    last_done: f64,
+}
+
+impl SloWorkerState {
+    /// A cold worker under index `w` on a `salt`-decorrelated seed stream
+    /// (each policy family uses its own salt, like the built-ins).
+    fn cold(preset: &EnginePreset, seed: u64, max_gen_len: u32, w: usize, salt: u64) -> Self {
+        SloWorkerState {
+            batch_queue: VecDeque::new(),
+            serving: None,
+            engine: SimEngine::new(
+                preset.latency(seed ^ (w as u64).wrapping_mul(salt)),
+                max_gen_len,
+            ),
+            last_done: 0.0,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// D-SCLS: deadline-seeded slice ladder with infeasibility shedding
+// ---------------------------------------------------------------------------
+
+/// **D-SCLS** — deadline-aware SCLS (see the module docs).
+///
+/// Admission: a request with a deadline is shed immediately if even one
+/// single-request pass cannot finish before it; otherwise its entry rung
+/// is `⌈max_rung / passes_affordable⌉` where `passes_affordable` is how
+/// many single-pass estimates fit in the remaining slack. Deadline-free
+/// requests enter at rung 1 and behave exactly like vanilla SCLS traffic.
+/// Unfinished requests re-queue to rung 1 (one more pass of S from there
+/// on) unless their deadline has already expired, in which case they are
+/// shed at the boundary instead of burning further cluster time.
+pub struct DeadlineSclsPolicy {
+    spec: SchedulerSpec,
+    est: ServingTimeEstimator,
+    mem: MemoryEstimator,
+    ledger: LoadLedger,
+    rr: RoundRobin,
+    interval: IntervalController,
+    /// One pool per rung: `pools[b-1]` gets an iteration budget of `b·S`.
+    pools: Vec<RequestPool>,
+    workers: Vec<SloWorkerState>,
+    max_gen_len: u32,
+    max_rung: u32,
+    tick_armed: bool,
+    // Reused per-tick buffers (allocation-lean discipline from PR 1).
+    tick_reqs: Vec<Request>,
+    batch_buf: Vec<Batch>,
+    staged: Vec<(u32, Batch)>,
+    dp_scratch: DpScratch,
+}
+
+impl DeadlineSclsPolicy {
+    pub fn new(spec: &SchedulerSpec, cfg: &SimConfig) -> DeadlineSclsPolicy {
+        assert!(cfg.workers > 0);
+        let s = spec.slice_len.max(1);
+        let max_rung = ((cfg.max_gen_len + s - 1) / s).max(1);
+        let workers: Vec<SloWorkerState> = (0..cfg.workers)
+            .map(|w| SloWorkerState::cold(&cfg.engine, cfg.seed, cfg.max_gen_len, w, 0xD51C))
+            .collect();
+        let interval = match spec.interval {
+            IntervalSpec::Fixed(t) => IntervalController::Fixed(t),
+            IntervalSpec::Adaptive { lambda, gamma } => {
+                IntervalController::Adaptive { lambda, gamma }
+            }
+            // Deadline seeding pools per rung, so the policy is inherently
+            // ticked even under an immediate-interval spec.
+            IntervalSpec::Immediate => IntervalController::Fixed(cfg.engine.gamma),
+        };
+        DeadlineSclsPolicy {
+            spec: spec.clone(),
+            est: fitted_estimator(&cfg.engine, cfg.seed),
+            mem: cfg.engine.memory_estimator(),
+            ledger: LoadLedger::new(cfg.workers),
+            rr: RoundRobin::new(cfg.workers),
+            interval,
+            pools: (0..max_rung).map(|_| RequestPool::new()).collect(),
+            workers,
+            max_gen_len: cfg.max_gen_len,
+            max_rung,
+            tick_armed: false,
+            tick_reqs: Vec::new(),
+            batch_buf: Vec::new(),
+            staged: Vec::new(),
+            dp_scratch: DpScratch::new(),
+        }
+    }
+
+    /// Iteration budget of rung `b` (the whole ladder up to the rung).
+    fn rung_budget(&self, b: u32) -> u32 {
+        (b * self.spec.slice_len).min(self.max_gen_len).max(1)
+    }
+
+    fn pooled(&self) -> usize {
+        self.pools.iter().map(|p| p.len()).sum()
+    }
+
+    /// Start serving on worker `w` if idle and work is queued.
+    fn try_start(&mut self, w: usize, ctx: &mut SimCtx) {
+        let ws = &mut self.workers[w];
+        if ws.serving.is_some() {
+            return;
+        }
+        let Some((budget, batch)) = ws.batch_queue.pop_front() else {
+            return;
+        };
+        start_static_batch(&mut ws.engine, &mut ws.serving, w, batch, budget, ctx);
+    }
+}
+
+impl SchedulingPolicy for DeadlineSclsPolicy {
+    fn init(&mut self, ctx: &mut SimCtx) {
+        self.pools[0].reserve(ctx.arrivals_left().min(1 << 16));
+        ctx.tick_at(0.0);
+        self.tick_armed = true;
+    }
+
+    fn on_arrival(&mut self, req: Request, ctx: &mut SimCtx) {
+        let s = self.spec.slice_len.max(1);
+        let Some(d) = req.slo.deadline else {
+            // No deadline: vanilla SCLS bottom-of-ladder entry.
+            self.pools[0].push(req);
+            return;
+        };
+        let due = req.arrival + d;
+        let est_pass = self.est.serve_est(1, req.input_len, s);
+        if ctx.now + est_pass > due {
+            // Even an immediate dedicated pass misses: shed at admission.
+            ctx.record_shed(&req);
+            return;
+        }
+        let slack = due - ctx.now;
+        // How many single-pass estimates still fit before the deadline
+        // (the f64→u32 cast saturates on huge slacks).
+        let affordable = ((slack / est_pass).floor() as u32).max(1);
+        let rung = ((self.max_rung + affordable - 1) / affordable).clamp(1, self.max_rung);
+        self.pools[rung as usize - 1].push(req);
+    }
+
+    fn on_tick(&mut self, ctx: &mut SimCtx) {
+        self.tick_armed = false;
+        let drained = self.pooled();
+        if drained > 0 {
+            ctx.observe_pool(drained);
+            // DP-batch each rung with the rung's iteration budget, then
+            // offload everything together (urgent rungs batch like any
+            // other — urgency was spent deciding the budget).
+            for b in 1..=self.max_rung {
+                if self.pools[b as usize - 1].is_empty() {
+                    continue;
+                }
+                let budget = self.rung_budget(b);
+                self.pools[b as usize - 1].drain_sorted_into(&mut self.tick_reqs);
+                let dp_cfg = DpBatcherConfig {
+                    slice_len: budget,
+                    max_batch_size: match self.spec.batching {
+                        BatchingSpec::Dp { max_batch_size } => max_batch_size,
+                        BatchingSpec::WorkerFcfs { batch_size } => Some(batch_size),
+                    },
+                    // D-SCLS stamps no predictions, so the corrected DP
+                    // would change nothing — keep the optimized planner.
+                    pred_corrected: false,
+                };
+                dp_batch_sorted_into(
+                    &mut self.tick_reqs,
+                    &self.est,
+                    &self.mem,
+                    &dp_cfg,
+                    &mut self.dp_scratch,
+                    &mut self.batch_buf,
+                );
+                self.staged
+                    .extend(self.batch_buf.drain(..).map(|batch| (budget, batch)));
+            }
+            match self.spec.offload {
+                OffloadSpec::MaxMin => {
+                    // LPT over all rung batches (paper §4.5).
+                    self.staged
+                        .sort_by(|a, b| b.1.est_serve_time.total_cmp(&a.1.est_serve_time));
+                    let mut staged = std::mem::take(&mut self.staged);
+                    for (budget, batch) in staged.drain(..) {
+                        let w = self.ledger.try_argmin().expect("fixed fleet never drains");
+                        self.ledger.add(w, batch.est_serve_time);
+                        self.workers[w].batch_queue.push_back((budget, batch));
+                        self.try_start(w, ctx);
+                    }
+                    self.staged = staged;
+                }
+                OffloadSpec::RoundRobin => {
+                    let mut staged = std::mem::take(&mut self.staged);
+                    for (budget, batch) in staged.drain(..) {
+                        let w = self.rr.next_worker();
+                        self.ledger.add(w, batch.est_serve_time);
+                        self.workers[w].batch_queue.push_back((budget, batch));
+                        self.try_start(w, ctx);
+                    }
+                    self.staged = staged;
+                }
+            }
+        }
+        // Re-arm while any work can still appear.
+        let work_pending = ctx.arrivals_left() > 0
+            || self.pooled() > 0
+            || self
+                .workers
+                .iter()
+                .any(|w| w.serving.is_some() || !w.batch_queue.is_empty());
+        if work_pending {
+            let t = self.interval.next_interval(&self.ledger);
+            ctx.tick_at(ctx.now + t.max(1e-3));
+            self.tick_armed = true;
+        }
+    }
+
+    fn on_worker_done(&mut self, w: usize, ctx: &mut SimCtx) {
+        let Some(slot) = self.workers[w].serving.take() else {
+            return;
+        };
+        let batch = settle_batch(slot, ctx.now);
+        self.ledger.complete(w, batch.est_serve_time);
+        self.workers[w].last_done = ctx.now;
+        for r in batch.requests {
+            if r.is_finished() {
+                ctx.record_completion(&r);
+            } else if r.slo.deadline.is_some_and(|d| ctx.now >= r.arrival + d) {
+                // The deadline expired mid-ladder: shed instead of burning
+                // more passes on a guaranteed miss.
+                ctx.record_shed(&r);
+            } else {
+                // One more pass of S — vanilla SCLS from here on.
+                self.pools[0].push(r);
+            }
+        }
+        self.try_start(w, ctx);
+    }
+
+    fn finish(&mut self, metrics: &mut RunMetrics) {
+        metrics.worker_completion = self.workers.iter().map(|w| w.last_done).collect();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// P-SRPT / SW-SLO: rank-ordered slice scheduling
+// ---------------------------------------------------------------------------
+
+/// What [`RankedSlicePolicy`] orders the pool by each tick (ascending:
+/// smaller key = more urgent = batched and placed first).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RankKey {
+    /// Predicted remaining generation length (P-SRPT): shortest predicted
+    /// remaining work first.
+    PredictedRemaining,
+    /// Seconds until the deadline (SW-SLO): earliest slack first;
+    /// deadline-free requests rank last (+∞).
+    DeadlineSlack,
+}
+
+/// Rank of one pooled request at virtual time `now` (free function so the
+/// sort closure doesn't fight the borrow checker over `self`).
+fn rank_of(key: RankKey, max_gen_len: u32, now: f64, r: &Request) -> f64 {
+    match key {
+        RankKey::PredictedRemaining => r
+            .predicted_gen
+            .unwrap_or(max_gen_len)
+            .saturating_sub(r.generated)
+            .max(1) as f64,
+        RankKey::DeadlineSlack => match r.slo.deadline {
+            Some(d) => r.arrival + d - now,
+            None => f64::INFINITY,
+        },
+    }
+}
+
+/// Rank-ordered chunks this many requests wide are handed to the DP
+/// batcher, so batches never mix very different urgencies.
+const RANK_CHUNK: usize = 64;
+
+/// Admission window per worker for the sliding-window mode
+/// ([`RankKey::DeadlineSlack`]), floored at [`RANK_CHUNK`].
+const WINDOW_PER_WORKER: usize = 16;
+
+/// **P-SRPT** / **SW-SLO** — rank-ordered slice scheduling (see the
+/// module docs). Each tick the pool is sorted by the [`RankKey`]
+/// (ascending, ties by request id), optionally truncated to the `window`
+/// most urgent requests, cut into rank-ordered [`RANK_CHUNK`]-wide chunks,
+/// DP-batched within each chunk, and placed most-urgent-first so the
+/// least-loaded workers serve the most critical work. Unfinished requests
+/// re-enter the pool at the slice boundary and are re-ranked next tick —
+/// for P-SRPT their remaining work has shrunk by a slice, which is exactly
+/// the preemptive part of SRPT.
+pub struct RankedSlicePolicy {
+    spec: SchedulerSpec,
+    key: RankKey,
+    /// Ranks P-SRPT's pool; also fed completion feedback so online
+    /// predictors refit. `None` for SW-SLO.
+    predictor: Option<Box<dyn LengthPredictor>>,
+    /// Per-tick admission cap (SW-SLO); `None` admits the whole pool.
+    window: Option<usize>,
+    est: ServingTimeEstimator,
+    mem: MemoryEstimator,
+    ledger: LoadLedger,
+    rr: RoundRobin,
+    interval: IntervalController,
+    pool: Vec<Request>,
+    workers: Vec<SloWorkerState>,
+    max_gen_len: u32,
+    tick_armed: bool,
+    pred_corrected: bool,
+    // Reused per-tick buffers.
+    admit_buf: Vec<Request>,
+    tick_reqs: Vec<Request>,
+    batch_buf: Vec<Batch>,
+    staged: Vec<Batch>,
+    dp_scratch: DpScratch,
+}
+
+impl RankedSlicePolicy {
+    pub fn new(
+        spec: &SchedulerSpec,
+        cfg: &SimConfig,
+        key: RankKey,
+        predictor: Option<Box<dyn LengthPredictor>>,
+    ) -> RankedSlicePolicy {
+        assert!(cfg.workers > 0);
+        let workers: Vec<SloWorkerState> = (0..cfg.workers)
+            .map(|w| SloWorkerState::cold(&cfg.engine, cfg.seed, cfg.max_gen_len, w, 0x4A7B))
+            .collect();
+        let interval = match spec.interval {
+            IntervalSpec::Fixed(t) => IntervalController::Fixed(t),
+            IntervalSpec::Adaptive { lambda, gamma } => {
+                IntervalController::Adaptive { lambda, gamma }
+            }
+            IntervalSpec::Immediate => IntervalController::Fixed(cfg.engine.gamma),
+        };
+        let window = match key {
+            RankKey::DeadlineSlack => Some((cfg.workers * WINDOW_PER_WORKER).max(RANK_CHUNK)),
+            RankKey::PredictedRemaining => None,
+        };
+        // The corrected DP only helps when predictions are stamped.
+        let pred_corrected = cfg.pred_corrected_dp && predictor.is_some();
+        RankedSlicePolicy {
+            spec: spec.clone(),
+            key,
+            predictor,
+            window,
+            est: fitted_estimator(&cfg.engine, cfg.seed),
+            mem: cfg.engine.memory_estimator(),
+            ledger: LoadLedger::new(cfg.workers),
+            rr: RoundRobin::new(cfg.workers),
+            interval,
+            pool: Vec::new(),
+            workers,
+            max_gen_len: cfg.max_gen_len,
+            tick_armed: false,
+            pred_corrected,
+            admit_buf: Vec::new(),
+            tick_reqs: Vec::new(),
+            batch_buf: Vec::new(),
+            staged: Vec::new(),
+            dp_scratch: DpScratch::new(),
+        }
+    }
+
+    /// Start serving on worker `w` if idle and work is queued.
+    fn try_start(&mut self, w: usize, ctx: &mut SimCtx) {
+        let ws = &mut self.workers[w];
+        if ws.serving.is_some() {
+            return;
+        }
+        let Some((budget, batch)) = ws.batch_queue.pop_front() else {
+            return;
+        };
+        start_static_batch(&mut ws.engine, &mut ws.serving, w, batch, budget, ctx);
+    }
+
+    /// Place one batch per the spec's offload axis (most urgent batches
+    /// are placed first, so max-min hands them the least-loaded workers).
+    fn place(&mut self, batch: Batch, ctx: &mut SimCtx) {
+        let w = match self.spec.offload {
+            OffloadSpec::MaxMin => self.ledger.try_argmin().expect("fixed fleet never drains"),
+            OffloadSpec::RoundRobin => self.rr.next_worker(),
+        };
+        self.ledger.add(w, batch.est_serve_time);
+        self.workers[w]
+            .batch_queue
+            .push_back((self.spec.slice_len.max(1), batch));
+        self.try_start(w, ctx);
+    }
+}
+
+impl SchedulingPolicy for RankedSlicePolicy {
+    fn init(&mut self, ctx: &mut SimCtx) {
+        self.pool.reserve(ctx.arrivals_left().min(1 << 16));
+        ctx.tick_at(0.0);
+        self.tick_armed = true;
+    }
+
+    fn on_arrival(&mut self, mut req: Request, _ctx: &mut SimCtx) {
+        if let Some(p) = self.predictor.as_ref() {
+            req.predicted_gen = Some(p.predict(&req).max(1));
+        }
+        self.pool.push(req);
+    }
+
+    fn on_tick(&mut self, ctx: &mut SimCtx) {
+        self.tick_armed = false;
+        if !self.pool.is_empty() {
+            let (key, mgl, now) = (self.key, self.max_gen_len, ctx.now);
+            self.pool.sort_by(|a, b| {
+                rank_of(key, mgl, now, a)
+                    .total_cmp(&rank_of(key, mgl, now, b))
+                    .then(a.id.cmp(&b.id))
+            });
+            let admit = match self.window {
+                Some(w) => self.pool.len().min(w),
+                None => self.pool.len(),
+            };
+            ctx.observe_pool(admit);
+            let mut admitted = std::mem::take(&mut self.admit_buf);
+            admitted.extend(self.pool.drain(..admit));
+            while !admitted.is_empty() {
+                let take = admitted.len().min(RANK_CHUNK);
+                self.tick_reqs.extend(admitted.drain(..take));
+                // The DP batcher needs input-length order within the chunk
+                // (Alg. 1's contiguity argument); rank order is preserved
+                // *across* chunks.
+                self.tick_reqs
+                    .sort_by(|a, b| a.input_len.cmp(&b.input_len).then(a.id.cmp(&b.id)));
+                let dp_cfg = DpBatcherConfig {
+                    slice_len: self.spec.slice_len.max(1),
+                    max_batch_size: match self.spec.batching {
+                        BatchingSpec::Dp { max_batch_size } => max_batch_size,
+                        BatchingSpec::WorkerFcfs { batch_size } => Some(batch_size),
+                    },
+                    pred_corrected: self.pred_corrected,
+                };
+                dp_batch_sorted_into(
+                    &mut self.tick_reqs,
+                    &self.est,
+                    &self.mem,
+                    &dp_cfg,
+                    &mut self.dp_scratch,
+                    &mut self.batch_buf,
+                );
+                for _ in 0..self.dp_scratch.corrected_batches() {
+                    ctx.record_corrected_batch();
+                }
+                self.staged.extend(self.batch_buf.drain(..));
+            }
+            self.admit_buf = admitted;
+            let mut staged = std::mem::take(&mut self.staged);
+            for batch in staged.drain(..) {
+                self.place(batch, ctx);
+            }
+            self.staged = staged;
+        }
+        let work_pending = ctx.arrivals_left() > 0
+            || !self.pool.is_empty()
+            || self
+                .workers
+                .iter()
+                .any(|w| w.serving.is_some() || !w.batch_queue.is_empty());
+        if work_pending {
+            let t = self.interval.next_interval(&self.ledger);
+            ctx.tick_at(ctx.now + t.max(1e-3));
+            self.tick_armed = true;
+        }
+    }
+
+    fn on_worker_done(&mut self, w: usize, ctx: &mut SimCtx) {
+        let Some(slot) = self.workers[w].serving.take() else {
+            return;
+        };
+        let batch = settle_batch(slot, ctx.now);
+        self.ledger.complete(w, batch.est_serve_time);
+        self.workers[w].last_done = ctx.now;
+        for r in batch.requests {
+            if r.is_finished() {
+                if let Some(p) = self.predictor.as_mut() {
+                    if p.observe(&r, r.generated) {
+                        ctx.record_refit();
+                    }
+                }
+                ctx.record_completion(&r);
+            } else {
+                // Back to the pool for re-ranking: preemption at the
+                // slice boundary.
+                self.pool.push(r);
+            }
+        }
+        self.try_start(w, ctx);
+    }
+
+    fn finish(&mut self, metrics: &mut RunMetrics) {
+        metrics.worker_completion = self.workers.iter().map(|w| w.last_done).collect();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::presets::{EngineKind, EnginePreset};
+    use crate::metrics::NullSink;
+    use crate::sim::driver::run_policy;
+    use crate::slo::{stamp_trace, SloSpec, TenantMix};
+    use crate::workload::distributions::WorkloadKind;
+    use crate::workload::{Trace, TraceConfig};
+
+    fn small_trace(rate: f64, duration: f64, seed: u64) -> Trace {
+        Trace::generate(&TraceConfig {
+            kind: WorkloadKind::CodeFuse,
+            rate,
+            duration,
+            max_input_len: 512,
+            max_gen_len: 512,
+            seed,
+        })
+    }
+
+    fn cfg() -> SimConfig {
+        SimConfig::new(4, EnginePreset::paper(EngineKind::Ds), 512, 7)
+    }
+
+    fn stamped_trace(rate: f64, duration: f64, seed: u64, slo: &str) -> Trace {
+        let mut t = small_trace(rate, duration, seed);
+        let mix = TenantMix::parse("2:3,1").unwrap();
+        let base = SloSpec::parse(slo).unwrap();
+        stamp_trace(&mut t, &mix, &base, seed);
+        t
+    }
+
+    #[test]
+    fn d_scls_conserves_requests_and_tracks_every_slo() {
+        let trace = stamped_trace(4.0, 30.0, 1, "ttft:5,deadline:60");
+        let c = cfg();
+        let spec = SchedulerSpec::d_scls(&c.engine, 64);
+        let mut p = DeadlineSclsPolicy::new(&spec, &c);
+        let m = run_policy(&trace, &mut p, c.workers, &mut NullSink);
+        // Every request either completes or is shed — none lost.
+        assert_eq!(
+            m.completed.len() as u64 + m.shed_requests,
+            trace.len() as u64
+        );
+        // Every stamped request carries an SLO, so all are tracked.
+        assert_eq!(m.slo.tracked, trace.len() as u64);
+        assert_eq!(m.slo.shed, m.shed_requests);
+    }
+
+    #[test]
+    fn d_scls_sheds_infeasible_deadlines() {
+        // Millisecond deadlines no pass can meet: D-SCLS must shed rather
+        // than serve guaranteed misses.
+        let trace = stamped_trace(4.0, 20.0, 2, "deadline:0.001");
+        let c = cfg();
+        let spec = SchedulerSpec::d_scls(&c.engine, 64);
+        let mut p = DeadlineSclsPolicy::new(&spec, &c);
+        let m = run_policy(&trace, &mut p, c.workers, &mut NullSink);
+        assert!(m.shed_requests > 0, "nothing shed under 1ms deadlines");
+        assert_eq!(
+            m.completed.len() as u64 + m.shed_requests,
+            trace.len() as u64
+        );
+        assert!(m.slo.deadline_misses >= m.slo.shed);
+    }
+
+    #[test]
+    fn d_scls_generous_deadlines_complete_everything() {
+        let trace = stamped_trace(3.0, 20.0, 3, "deadline:100000");
+        let c = cfg();
+        let spec = SchedulerSpec::d_scls(&c.engine, 64);
+        let mut p = DeadlineSclsPolicy::new(&spec, &c);
+        let m = run_policy(&trace, &mut p, c.workers, &mut NullSink);
+        assert_eq!(m.completed.len(), trace.len());
+        assert_eq!(m.shed_requests, 0);
+        assert_eq!(m.slo.tracked, trace.len() as u64);
+    }
+
+    #[test]
+    fn ranked_policies_complete_all_requests() {
+        let trace = small_trace(4.0, 30.0, 4);
+        let c = cfg();
+        let mut srpt = RankedSlicePolicy::new(
+            &SchedulerSpec::p_srpt(&c.engine, 64),
+            &c,
+            RankKey::PredictedRemaining,
+            Some(c.predictor.build(c.max_gen_len, c.seed)),
+        );
+        let m = run_policy(&trace, &mut srpt, c.workers, &mut NullSink);
+        assert_eq!(m.completed.len(), trace.len());
+        assert_eq!(m.shed_requests, 0, "P-SRPT never sheds");
+        let mut sw = RankedSlicePolicy::new(
+            &SchedulerSpec::sw_slo(&c.engine, 64),
+            &c,
+            RankKey::DeadlineSlack,
+            None,
+        );
+        let m = run_policy(&trace, &mut sw, c.workers, &mut NullSink);
+        assert_eq!(m.completed.len(), trace.len(), "the window only throttles");
+        assert_eq!(m.shed_requests, 0, "SW-SLO never sheds");
+    }
+
+    #[test]
+    fn slo_policies_are_deterministic() {
+        let trace = stamped_trace(4.0, 20.0, 5, "ttft:3,deadline:45");
+        let c = cfg();
+        let spec = SchedulerSpec::d_scls(&c.engine, 64);
+        let run = || {
+            let mut p = DeadlineSclsPolicy::new(&spec, &c);
+            run_policy(&trace, &mut p, c.workers, &mut NullSink)
+                .to_json()
+                .to_string_pretty()
+        };
+        assert_eq!(run(), run());
+        let run_sw = || {
+            let mut p = RankedSlicePolicy::new(
+                &SchedulerSpec::sw_slo(&c.engine, 64),
+                &c,
+                RankKey::DeadlineSlack,
+                None,
+            );
+            run_policy(&trace, &mut p, c.workers, &mut NullSink)
+                .to_json()
+                .to_string_pretty()
+        };
+        assert_eq!(run_sw(), run_sw());
+    }
+
+    #[test]
+    fn static_policies_stamp_first_token_times() {
+        let trace = stamped_trace(3.0, 20.0, 6, "ttft:5,deadline:120");
+        let c = cfg();
+        let spec = SchedulerSpec::d_scls(&c.engine, 64);
+        let mut p = DeadlineSclsPolicy::new(&spec, &c);
+        let m = run_policy(&trace, &mut p, c.workers, &mut NullSink);
+        // TTFT samples exist and sit strictly before (or at) completion.
+        assert_eq!(m.slo.ttft_samples.len(), m.completed.len());
+        assert!(m.slo.ttft_p99() > 0.0);
+    }
+}

@@ -1,0 +1,496 @@
+//! Service-level objectives and multi-tenancy: per-request SLO targets
+//! (TTFT / TPOT / completion deadline), tenant profiles, and the
+//! attainment accounting the goodput metrics are built on.
+//!
+//! The paper buys *predictable* serving time per batch by slicing; this
+//! module spends that predictability on deadlines. A [`SloSpec`] rides on
+//! every [`Request`] (`SloSpec::none()` by default, so SLO-free traces
+//! behave — and serialize — exactly as before). [`TenantMix`] describes a
+//! weighted tenant population, [`stamp_trace`] samples per-request
+//! tenant / priority / SLO assignments deterministically from a seed, and
+//! [`SloTracker`] folds per-completion [`SloOutcome`]s into the
+//! goodput/attainment counters surfaced by `RunMetrics`.
+//!
+//! **TTFT measurement caveat:** static-batching engines deliver all of a
+//! slice's tokens at the slice boundary, so the first-token timestamp is
+//! the end of the request's first scheduled slice. Policies that never
+//! stamp `Request::first_token_at` (the continuous-batching family, which
+//! streams tokens internally) fall back to `finished_at` as the
+//! first-token time — a conservative over-estimate that can only *miss*
+//! a TTFT target, never falsely attain it.
+
+use std::collections::BTreeMap;
+
+use crate::core::Request;
+use crate::util::rng::Rng;
+use crate::util::stats::percentile;
+use crate::workload::Trace;
+
+/// Per-request service-level objective: any subset of a time-to-first-token
+/// bound, a time-per-output-token bound, and a completion deadline (all in
+/// seconds, measured from arrival; TPOT is per decoded token). `None`
+/// fields are unconstrained; an all-`None` spec is SLO-free and keeps the
+/// request invisible to every attainment counter.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct SloSpec {
+    /// Time-to-first-token bound (seconds from arrival).
+    pub ttft: Option<f64>,
+    /// Time-per-output-token bound (seconds per decoded token).
+    pub tpot: Option<f64>,
+    /// End-to-end completion deadline (seconds from arrival).
+    pub deadline: Option<f64>,
+}
+
+impl SloSpec {
+    /// The SLO-free spec every request starts with.
+    pub fn none() -> SloSpec {
+        SloSpec::default()
+    }
+
+    /// True when no target is set (the request is untracked).
+    pub fn is_none(&self) -> bool {
+        self.ttft.is_none() && self.tpot.is_none() && self.deadline.is_none()
+    }
+
+    /// Parse the `--slo` grammar: a comma list of `ttft:SECS`, `tpot:SECS`,
+    /// `deadline:SECS`, each key at most once, every value finite and
+    /// positive. `"none"` (or the empty string) is the SLO-free spec.
+    pub fn parse(s: &str) -> Result<SloSpec, String> {
+        let s = s.trim();
+        if s.is_empty() || s.eq_ignore_ascii_case("none") {
+            return Ok(SloSpec::none());
+        }
+        let mut spec = SloSpec::none();
+        for part in s.split(',') {
+            let part = part.trim();
+            let (key, val) = part.split_once(':').ok_or_else(|| {
+                format!("bad --slo clause '{part}': expected ttft:SECS, tpot:SECS, or deadline:SECS")
+            })?;
+            let secs: f64 = val
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad --slo value in '{part}': '{}' is not a number", val.trim()))?;
+            if !secs.is_finite() || secs <= 0.0 {
+                return Err(format!(
+                    "bad --slo value in '{part}': must be finite and positive (got {secs})"
+                ));
+            }
+            let slot = match key.trim().to_ascii_lowercase().as_str() {
+                "ttft" => &mut spec.ttft,
+                "tpot" => &mut spec.tpot,
+                "deadline" => &mut spec.deadline,
+                other => {
+                    return Err(format!(
+                        "unknown --slo key '{other}': valid keys are ttft, tpot, deadline"
+                    ))
+                }
+            };
+            if slot.replace(secs).is_some() {
+                return Err(format!("duplicate --slo key '{}'", key.trim()));
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Every set target multiplied by `factor` (per-tenant tier scaling).
+    pub fn scaled(&self, factor: f64) -> SloSpec {
+        SloSpec {
+            ttft: self.ttft.map(|t| t * factor),
+            tpot: self.tpot.map(|t| t * factor),
+            deadline: self.deadline.map(|d| d * factor),
+        }
+    }
+
+    /// Judge a completed request against this spec at `finished_at`.
+    ///
+    /// TTFT uses `Request::first_token_at` when a policy stamped it, else
+    /// falls back to `finished_at` (see the module docs); TPOT spreads the
+    /// post-first-token span over the decoded tokens and is trivially
+    /// attained when at most one token was generated.
+    pub fn evaluate(&self, req: &Request, finished_at: f64) -> SloOutcome {
+        let first = req.first_token_at.unwrap_or(finished_at);
+        let ttft = (first - req.arrival).max(0.0);
+        let decode_tokens = req.generated.saturating_sub(1);
+        let tpot = if decode_tokens == 0 {
+            0.0
+        } else {
+            ((finished_at - first).max(0.0)) / decode_tokens as f64
+        };
+        let ttft_ok = self.ttft.is_none_or(|t| ttft <= t);
+        let tpot_ok = self.tpot.is_none_or(|t| tpot <= t);
+        let deadline_ok = self.deadline.is_none_or(|d| finished_at - req.arrival <= d);
+        SloOutcome {
+            tenant: req.tenant,
+            ttft,
+            tpot,
+            ttft_ok,
+            tpot_ok,
+            deadline_ok,
+            attained: ttft_ok && tpot_ok && deadline_ok,
+        }
+    }
+}
+
+/// The judged result of one SLO-tracked completion (streamed through
+/// `MetricsSink::on_slo` and folded into [`SloTracker`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloOutcome {
+    pub tenant: u32,
+    /// Measured time to first token (seconds).
+    pub ttft: f64,
+    /// Measured time per output token (seconds; 0 when ≤ 1 token).
+    pub tpot: f64,
+    pub ttft_ok: bool,
+    pub tpot_ok: bool,
+    pub deadline_ok: bool,
+    /// All set targets met.
+    pub attained: bool,
+}
+
+/// A weighted tenant population: `weights[t]` is tenant `t`'s arrival
+/// share (unnormalized) — also the default service weight for the
+/// coordinator's weighted-fairness path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantMix {
+    pub weights: Vec<f64>,
+}
+
+impl TenantMix {
+    /// `n` equally weighted tenants.
+    pub fn uniform(n: usize) -> TenantMix {
+        assert!(n > 0);
+        TenantMix {
+            weights: vec![1.0; n],
+        }
+    }
+
+    /// Parse the `--tenants` grammar: `N` (uniform) or `N:w1,...,wN`
+    /// (explicit positive finite weights, one per tenant).
+    pub fn parse(s: &str) -> Result<TenantMix, String> {
+        let s = s.trim();
+        let (count, weights) = match s.split_once(':') {
+            None => (s, None),
+            Some((c, w)) => (c.trim(), Some(w)),
+        };
+        let n: usize = count
+            .parse()
+            .map_err(|_| format!("bad --tenants count '{count}': expected a positive integer"))?;
+        if n == 0 {
+            return Err("--tenants needs at least 1 tenant".into());
+        }
+        let Some(wspec) = weights else {
+            return Ok(TenantMix::uniform(n));
+        };
+        let ws: Vec<f64> = wspec
+            .split(',')
+            .map(|w| {
+                let w = w.trim();
+                w.parse::<f64>()
+                    .map_err(|_| format!("bad --tenants weight '{w}': not a number"))
+                    .and_then(|x| {
+                        if x.is_finite() && x > 0.0 {
+                            Ok(x)
+                        } else {
+                            Err(format!(
+                                "bad --tenants weight '{w}': must be finite and positive"
+                            ))
+                        }
+                    })
+            })
+            .collect::<Result<_, _>>()?;
+        if ws.len() != n {
+            return Err(format!(
+                "--tenants {n} declares {n} tenants but lists {} weights",
+                ws.len()
+            ));
+        }
+        Ok(TenantMix { weights: ws })
+    }
+
+    pub fn tenants(&self) -> usize {
+        self.weights.len()
+    }
+}
+
+/// Per-tenant SLO tier scale: tenant 0 is the premium (tightest) tier;
+/// each subsequent tenant's targets relax by 50%.
+fn tenant_tier(tenant: u32) -> f64 {
+    1.0 + 0.5 * tenant as f64
+}
+
+/// Stamp every request of `trace` with a tenant, a priority class, and a
+/// per-tenant-scaled SLO, deterministically from `seed` (each request gets
+/// its own splitmix-decorrelated stream, so stamping is order-independent
+/// and stable under trace slicing). Tenant = weighted draw from `mix`;
+/// priority mirrors the tenant class (0 = most urgent); SLO targets are
+/// `base` scaled by the tenant tier, with ±10% per-request jitter on the
+/// deadline so deadline ties don't collapse into one urgency class.
+pub fn stamp_trace(trace: &mut Trace, mix: &TenantMix, base: &SloSpec, seed: u64) {
+    for r in &mut trace.requests {
+        let mut rng = Rng::new(seed ^ r.id.wrapping_mul(0x9E3779B97F4A7C15));
+        let tenant = rng.weighted_index(&mix.weights) as u32;
+        r.tenant = tenant;
+        r.priority = tenant.min(u8::MAX as u32) as u8;
+        let mut slo = base.scaled(tenant_tier(tenant));
+        slo.deadline = slo.deadline.map(|d| d * (0.9 + 0.2 * rng.f64()));
+        r.slo = slo;
+    }
+}
+
+/// Per-tenant slice of the attainment counters.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TenantSlo {
+    pub tracked: u64,
+    pub attained: u64,
+    pub ttft_misses: u64,
+    pub tpot_misses: u64,
+    pub deadline_misses: u64,
+    /// Requests shed before service (counted as tracked-but-missed).
+    pub shed: u64,
+}
+
+/// Run-level SLO accounting: every SLO-carrying completion or shed is
+/// folded in; SLO-free requests never touch it (so SLO-free runs report
+/// all-zero counters and stay byte-identical to the pre-SLO world).
+#[derive(Debug, Clone, Default)]
+pub struct SloTracker {
+    /// SLO-carrying requests judged (completions + sheds).
+    pub tracked: u64,
+    /// Tracked requests that met every set target.
+    pub attained: u64,
+    pub ttft_misses: u64,
+    pub tpot_misses: u64,
+    pub deadline_misses: u64,
+    /// SLO-carrying requests shed before service.
+    pub shed: u64,
+    /// Measured TTFT of every tracked completion (for the p99).
+    pub ttft_samples: Vec<f64>,
+    pub per_tenant: BTreeMap<u32, TenantSlo>,
+}
+
+impl SloTracker {
+    /// Fold one judged completion in.
+    pub fn observe(&mut self, o: &SloOutcome) {
+        self.tracked += 1;
+        self.ttft_samples.push(o.ttft);
+        let t = self.per_tenant.entry(o.tenant).or_default();
+        t.tracked += 1;
+        if o.attained {
+            self.attained += 1;
+            t.attained += 1;
+        }
+        if !o.ttft_ok {
+            self.ttft_misses += 1;
+            t.ttft_misses += 1;
+        }
+        if !o.tpot_ok {
+            self.tpot_misses += 1;
+            t.tpot_misses += 1;
+        }
+        if !o.deadline_ok {
+            self.deadline_misses += 1;
+            t.deadline_misses += 1;
+        }
+    }
+
+    /// An SLO-carrying request was shed before service: tracked, not
+    /// attained, and its deadline counts as missed — shedding must lower
+    /// goodput honestly, not hide the miss.
+    pub fn observe_shed(&mut self, tenant: u32) {
+        self.tracked += 1;
+        self.shed += 1;
+        self.deadline_misses += 1;
+        let t = self.per_tenant.entry(tenant).or_default();
+        t.tracked += 1;
+        t.shed += 1;
+        t.deadline_misses += 1;
+    }
+
+    /// Fraction of tracked requests that attained (1.0 when none tracked).
+    pub fn attainment(&self) -> f64 {
+        if self.tracked == 0 {
+            1.0
+        } else {
+            self.attained as f64 / self.tracked as f64
+        }
+    }
+
+    /// P99 of measured TTFT across tracked completions (0 when none).
+    pub fn ttft_p99(&self) -> f64 {
+        percentile(&self.ttft_samples, 99.0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tracked == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::distributions::WorkloadKind;
+    use crate::workload::TraceConfig;
+
+    #[test]
+    fn parse_slo_grammar() {
+        assert_eq!(SloSpec::parse("").unwrap(), SloSpec::none());
+        assert_eq!(SloSpec::parse("none").unwrap(), SloSpec::none());
+        let s = SloSpec::parse("ttft:2,deadline:120").unwrap();
+        assert_eq!(s.ttft, Some(2.0));
+        assert_eq!(s.tpot, None);
+        assert_eq!(s.deadline, Some(120.0));
+        let s = SloSpec::parse(" TPOT:0.5 , ttft:1.5 ").unwrap();
+        assert_eq!(s.tpot, Some(0.5));
+        assert_eq!(s.ttft, Some(1.5));
+    }
+
+    #[test]
+    fn parse_slo_rejects_garbage() {
+        for bad in [
+            "ttft",
+            "ttft:abc",
+            "ttft:-1",
+            "ttft:inf",
+            "ttft:NaN",
+            "latency:3",
+            "ttft:1,ttft:2",
+            "deadline:0",
+        ] {
+            let e = SloSpec::parse(bad).unwrap_err();
+            assert!(!e.contains('\n'), "multi-line error for {bad:?}: {e}");
+        }
+        assert!(SloSpec::parse("ttft:1,ttft:2")
+            .unwrap_err()
+            .contains("duplicate"));
+        assert!(SloSpec::parse("latency:3").unwrap_err().contains("valid keys"));
+    }
+
+    #[test]
+    fn parse_tenants_grammar() {
+        assert_eq!(TenantMix::parse("4").unwrap(), TenantMix::uniform(4));
+        let m = TenantMix::parse("3:5,3,1").unwrap();
+        assert_eq!(m.weights, vec![5.0, 3.0, 1.0]);
+        for bad in ["0", "-1", "x", "2:1", "2:1,2,3", "2:1,-2", "2:1,inf", ""] {
+            let e = TenantMix::parse(bad).unwrap_err();
+            assert!(!e.contains('\n'), "multi-line error for {bad:?}: {e}");
+        }
+    }
+
+    #[test]
+    fn evaluate_judges_each_axis() {
+        let spec = SloSpec {
+            ttft: Some(1.0),
+            tpot: Some(0.1),
+            deadline: Some(10.0),
+        };
+        let mut r = Request::new(1, 100.0, 32, 64);
+        r.generated = 11;
+        r.first_token_at = Some(100.5);
+        // 0.5s TTFT, 10 decode tokens over 0.5s = 0.05 TPOT, 1s total.
+        let o = spec.evaluate(&r, 101.0);
+        assert!(o.ttft_ok && o.tpot_ok && o.deadline_ok && o.attained);
+        assert!((o.ttft - 0.5).abs() < 1e-12);
+        assert!((o.tpot - 0.05).abs() < 1e-12);
+        // Blow the deadline only.
+        let o = spec.evaluate(&r, 111.0);
+        assert!(o.ttft_ok && !o.deadline_ok && !o.attained);
+        // Unstamped first token falls back to finished_at: TTFT == latency.
+        r.first_token_at = None;
+        let o = spec.evaluate(&r, 100.8);
+        assert!((o.ttft - 0.8).abs() < 1e-12);
+        assert_eq!(o.tpot, 0.0, "no post-first-token span to spread");
+        // ≤ 1 generated token attains TPOT trivially.
+        r.generated = 1;
+        r.first_token_at = Some(100.2);
+        assert!(spec.evaluate(&r, 100.2).tpot_ok);
+    }
+
+    #[test]
+    fn slo_free_spec_is_always_attained() {
+        let mut r = Request::new(1, 0.0, 32, 64);
+        r.generated = 5;
+        let o = SloSpec::none().evaluate(&r, 1e9);
+        assert!(o.attained);
+        assert!(SloSpec::none().is_none());
+    }
+
+    #[test]
+    fn stamp_trace_is_deterministic_and_tier_scaled() {
+        let cfg = TraceConfig {
+            kind: WorkloadKind::CodeFuse,
+            rate: 10.0,
+            duration: 30.0,
+            max_input_len: 512,
+            max_gen_len: 512,
+            seed: 42,
+        };
+        let mix = TenantMix::parse("3:4,2,1").unwrap();
+        let base = SloSpec::parse("ttft:2,tpot:0.2,deadline:60").unwrap();
+        let mut a = crate::workload::Trace::generate(&cfg);
+        let mut b = crate::workload::Trace::generate(&cfg);
+        stamp_trace(&mut a, &mix, &base, 7);
+        stamp_trace(&mut b, &mix, &base, 7);
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x.tenant, y.tenant);
+            assert_eq!(x.priority, y.priority);
+            assert_eq!(x.slo, y.slo);
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for r in &a.requests {
+            assert!(r.tenant < 3);
+            assert_eq!(r.priority as u32, r.tenant);
+            seen.insert(r.tenant);
+            let tier = tenant_tier(r.tenant);
+            assert_eq!(r.slo.ttft, Some(2.0 * tier), "ttft is tier-exact");
+            assert_eq!(r.slo.tpot, Some(0.2 * tier));
+            let d = r.slo.deadline.unwrap();
+            assert!(
+                d >= 60.0 * tier * 0.9 - 1e-9 && d <= 60.0 * tier * 1.1 + 1e-9,
+                "deadline jitter out of band: {d}"
+            );
+        }
+        assert_eq!(seen.len(), 3, "every tenant appears at this volume");
+        // A different seed reshuffles tenant assignments.
+        let mut c = crate::workload::Trace::generate(&cfg);
+        stamp_trace(&mut c, &mix, &base, 8);
+        assert!(a
+            .requests
+            .iter()
+            .zip(&c.requests)
+            .any(|(x, y)| x.tenant != y.tenant));
+    }
+
+    #[test]
+    fn tracker_counts_and_percentiles() {
+        let mut t = SloTracker::default();
+        assert_eq!(t.attainment(), 1.0);
+        assert_eq!(t.ttft_p99(), 0.0);
+        let spec = SloSpec {
+            ttft: Some(1.0),
+            tpot: None,
+            deadline: Some(5.0),
+        };
+        let mut fast = Request::new(1, 0.0, 8, 8);
+        fast.generated = 4;
+        fast.first_token_at = Some(0.5);
+        fast.tenant = 0;
+        t.observe(&spec.evaluate(&fast, 2.0));
+        let mut slow = Request::new(2, 0.0, 8, 8);
+        slow.generated = 4;
+        slow.first_token_at = Some(3.0);
+        slow.tenant = 1;
+        t.observe(&spec.evaluate(&slow, 9.0));
+        t.observe_shed(1);
+        assert_eq!(t.tracked, 3);
+        assert_eq!(t.attained, 1);
+        assert_eq!(t.ttft_misses, 1);
+        assert_eq!(t.deadline_misses, 2, "miss + shed");
+        assert_eq!(t.shed, 1);
+        assert!((t.attainment() - 1.0 / 3.0).abs() < 1e-12);
+        assert!(t.ttft_p99() > 0.5 && t.ttft_p99() <= 3.0);
+        assert_eq!(t.per_tenant.len(), 2);
+        assert_eq!(t.per_tenant[&0].attained, 1);
+        assert_eq!(t.per_tenant[&1].shed, 1);
+        assert_eq!(t.per_tenant[&1].tracked, 2);
+    }
+}

@@ -95,6 +95,23 @@ impl Trace {
                     .set("arrival", r.arrival)
                     .set("input_len", r.input_len)
                     .set("gen_len", r.target_gen_len);
+                // Tenancy/SLO keys only when non-default, so SLO-free
+                // traces serialize byte-identically to the legacy format.
+                if r.tenant != 0 {
+                    o.set("tenant", r.tenant);
+                }
+                if r.priority != 0 {
+                    o.set("priority", r.priority as u32);
+                }
+                if let Some(t) = r.slo.ttft {
+                    o.set("slo_ttft", t);
+                }
+                if let Some(t) = r.slo.tpot {
+                    o.set("slo_tpot", t);
+                }
+                if let Some(d) = r.slo.deadline {
+                    o.set("slo_deadline", d);
+                }
                 o
             })
             .collect();
@@ -126,7 +143,7 @@ impl Trace {
                     .map(|x| x as u32)
                     .ok_or_else(|| anyhow::anyhow!("trace request: missing {k}"))
             };
-            requests.push(Request::new(
+            let mut req = Request::new(
                 r.get("id")
                     .and_then(Json::as_i64)
                     .ok_or_else(|| anyhow::anyhow!("trace request: missing id"))?
@@ -136,7 +153,19 @@ impl Trace {
                     .ok_or_else(|| anyhow::anyhow!("trace request: missing arrival"))?,
                 get_u32("input_len")?,
                 get_u32("gen_len")?,
-            ));
+            );
+            // Optional tenancy/SLO keys: absent in legacy traces, which
+            // load with the SLO-free defaults.
+            if let Some(t) = r.get("tenant").and_then(Json::as_i64) {
+                req.tenant = t as u32;
+            }
+            if let Some(p) = r.get("priority").and_then(Json::as_i64) {
+                req.priority = p as u8;
+            }
+            req.slo.ttft = r.get("slo_ttft").and_then(Json::as_f64);
+            req.slo.tpot = r.get("slo_tpot").and_then(Json::as_f64);
+            req.slo.deadline = r.get("slo_deadline").and_then(Json::as_f64);
+            requests.push(req);
         }
         Ok(Trace {
             requests,
@@ -217,6 +246,36 @@ mod tests {
         });
         assert!(t.requests.iter().all(|r| r.input_len <= 128));
         assert!(t.requests.iter().all(|r| r.target_gen_len <= 64));
+    }
+
+    #[test]
+    fn slo_fields_roundtrip_and_stay_off_the_wire_when_default() {
+        let mut t = Trace::generate(&TraceConfig {
+            duration: 5.0,
+            ..cfg()
+        });
+        // SLO-free serialization has no tenancy keys at all.
+        let text = t.to_json().to_string_compact();
+        for key in ["tenant", "priority", "slo_ttft", "slo_tpot", "slo_deadline"] {
+            assert!(!text.contains(key), "{key} leaked into an SLO-free trace");
+        }
+        // Legacy text (no keys) loads with defaults.
+        let legacy = Trace::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert!(legacy
+            .requests
+            .iter()
+            .all(|r| r.tenant == 0 && r.priority == 0 && r.slo.is_none()));
+        // Stamped fields round-trip exactly.
+        t.requests[0].tenant = 3;
+        t.requests[0].priority = 3;
+        t.requests[0].slo.ttft = Some(1.25);
+        t.requests[0].slo.deadline = Some(90.5);
+        let back = Trace::from_json(&t.to_json()).unwrap();
+        assert_eq!(back.requests[0].tenant, 3);
+        assert_eq!(back.requests[0].priority, 3);
+        assert_eq!(back.requests[0].slo.ttft, Some(1.25));
+        assert_eq!(back.requests[0].slo.tpot, None);
+        assert_eq!(back.requests[0].slo.deadline, Some(90.5));
     }
 
     #[test]

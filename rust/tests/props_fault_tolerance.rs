@@ -97,7 +97,8 @@ fn assert_complete(
 #[test]
 fn none_plan_is_byte_identical_for_every_policy() {
     let names = [
-        "sls", "so", "pm", "ab", "lb", "scls", "ils", "scls-cb", "p-scls", "p-cb",
+        "sls", "so", "pm", "ab", "lb", "scls", "ils", "scls-cb", "p-scls", "p-cb", "d-scls",
+        "p-srpt", "sw-slo",
     ];
     for kind in [EngineKind::Hf, EngineKind::Ds] {
         let t = trace(WorkloadKind::CodeFuse, 5.0, 30.0, 601);

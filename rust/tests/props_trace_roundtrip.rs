@@ -5,6 +5,7 @@
 //! shortest representation that parses back to the identical f64, so
 //! exactness is a guarantee, not an approximation).
 
+use scls::slo::{stamp_trace, SloSpec, TenantMix};
 use scls::testprop::{check, Gen};
 use scls::util::json::Json;
 use scls::workload::distributions::WorkloadKind;
@@ -125,4 +126,82 @@ fn trace_save_load_roundtrip_on_disk() {
             && r.predicted_gen.is_none()
             && r.finished_at.is_none()));
     }
+}
+
+#[test]
+fn slo_stamped_trace_roundtrip_is_field_exact() {
+    // Tenancy and SLO stamps survive serialization bit-exactly: tenant,
+    // priority, and every per-tier-scaled (and jittered) SLO target.
+    check("slo-trace-roundtrip", 16, |g: &mut Gen| {
+        let cfg = TraceConfig {
+            kind: WorkloadKind::CodeFuse,
+            rate: *g.pick(&[2.0, 10.0]),
+            duration: *g.pick(&[10.0, 30.0]),
+            max_input_len: 512,
+            max_gen_len: 512,
+            seed: g.u64(),
+        };
+        let mut t = Trace::generate(&cfg);
+        let mix = TenantMix::parse(g.pick(&["1", "4", "3:5,2,1"])).expect("static mix");
+        let base = SloSpec::parse(g.pick(&[
+            "ttft:2",
+            "ttft:1,tpot:0.25,deadline:90",
+            "deadline:120",
+        ]))
+        .expect("static spec");
+        stamp_trace(&mut t, &mix, &base, g.u64());
+        let back = Trace::from_json(&Json::parse(&t.to_json().to_string_pretty()).map_err(
+            |e| scls::testprop::PropFail {
+                msg: format!("reparse failed: {e:?}"),
+            },
+        )?)
+        .map_err(|e| scls::testprop::PropFail {
+            msg: format!("from_json failed: {e:#}"),
+        })?;
+        assert_traces_field_exact(&t, &back)?;
+        for (x, y) in t.requests.iter().zip(&back.requests) {
+            prop_assert_eq!(x.tenant, y.tenant, "tenant of {}", x.id);
+            prop_assert_eq!(x.priority, y.priority, "priority of {}", x.id);
+            for (name, a, b) in [
+                ("ttft", x.slo.ttft, y.slo.ttft),
+                ("tpot", x.slo.tpot, y.slo.tpot),
+                ("deadline", x.slo.deadline, y.slo.deadline),
+            ] {
+                prop_assert!(
+                    a.map(f64::to_bits) == b.map(f64::to_bits),
+                    "{} of {} drifted: {:?} vs {:?}",
+                    name,
+                    x.id,
+                    a,
+                    b
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn legacy_traces_load_with_default_tenancy() {
+    // Unstamped traces keep the pre-tenancy wire format (no tenant /
+    // priority / slo_* keys at all), and anything serialized by an older
+    // build loads with the neutral defaults.
+    let t = Trace::generate(&TraceConfig {
+        kind: WorkloadKind::CodeFuse,
+        rate: 8.0,
+        duration: 20.0,
+        max_input_len: 512,
+        max_gen_len: 512,
+        seed: 99,
+    });
+    let text = t.to_json().to_string_pretty();
+    assert!(
+        !text.contains("tenant") && !text.contains("priority") && !text.contains("slo_"),
+        "default tenancy must stay off the wire"
+    );
+    let back = Trace::from_json(&Json::parse(&text).expect("parse")).expect("from_json");
+    assert!(back
+        .requests
+        .iter()
+        .all(|r| r.tenant == 0 && r.priority == 0 && r.slo.is_none()));
 }
