@@ -24,9 +24,12 @@ use scls::engine::presets::{EngineKind, EnginePreset};
 use scls::engine::sim::SimEngine;
 use scls::estimator::serving_time::ServeEstimate;
 use scls::offloader::{LoadLedger, MaxMinOffloader};
-use scls::sim::driver::fitted_estimator;
+use scls::sim::driver::{fitted_estimator, SimConfig, Simulation};
 use scls::sim::EventQueue;
+use scls::telemetry::profile;
 use scls::util::rng::Rng;
+use scls::workload::distributions::WorkloadKind;
+use scls::workload::{Trace, TraceConfig};
 
 fn requests(n: usize, seed: u64) -> Vec<Request> {
     let mut rng = Rng::new(seed);
@@ -176,6 +179,28 @@ fn main() {
             acc
         });
         println!("{}", r.report());
+    }
+
+    // Hot-path profile over a short end-to-end SCLS run: the same sections
+    // `simulate --profile` reports (dp_plan, offload, drain_sort,
+    // schedule_tick), measured in situ rather than in isolation — this is
+    // where the per-tick shares show up.
+    {
+        let trace = Trace::generate(&TraceConfig {
+            kind: WorkloadKind::CodeFuse,
+            rate: 20.0,
+            duration: 30.0,
+            max_input_len: 1024,
+            max_gen_len: 1024,
+            seed: 42,
+        });
+        let sim =
+            Simulation::new(SimConfig::new(8, EnginePreset::paper(EngineKind::Ds), 1024, 42));
+        profile::enable();
+        let m = sim.run_named(&trace, "SCLS", 128).expect("SCLS run");
+        profile::disable();
+        println!("scls end-to-end (30 s trace, rate 20): {} completed", m.completed.len());
+        print!("{}", profile::take().report());
     }
 
     // Real PJRT slice execution, when artifacts exist (the L3→runtime hot

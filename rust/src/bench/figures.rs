@@ -13,6 +13,7 @@ use crate::engine::EngineLatency;
 use crate::estimator::profiler::{profile_and_fit, validate_serving_time, LatencySource, ProfileGrid};
 use crate::metrics::Summary;
 use crate::sim::driver::{fitted_estimator, SimConfig, Simulation};
+use crate::telemetry::TimeSeriesSink;
 use crate::util::jobs::parallel_map;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -123,6 +124,27 @@ pub fn run_cell(
     sim.run_named(&trace, which, slice_len)
         .unwrap_or_else(|e| panic!("{e}"))
         .summarize()
+}
+
+/// [`run_cell`] with a [`TimeSeriesSink`] riding along, for figures that
+/// report load-imbalance indices over the per-worker gauges. The sink
+/// never touches `RunMetrics`, so the summary is byte-identical to the
+/// sink-free cell's.
+pub fn run_cell_observed(
+    fc: &FigureConfig,
+    kind: EngineKind,
+    which: &str,
+    rate: f64,
+    slice_len: u32,
+) -> (Summary, TimeSeriesSink) {
+    let trace = fc.trace(rate);
+    let sim = Simulation::new(fc.sim(kind));
+    let mut ts = TimeSeriesSink::default();
+    let s = sim
+        .run_named_with_sink(&trace, which, slice_len, &mut ts)
+        .unwrap_or_else(|e| panic!("{e}"))
+        .summarize();
+    (s, ts)
 }
 
 // ---------------------------------------------------------------------------
@@ -460,27 +482,90 @@ pub fn fig17(fc: &FigureConfig, rates: &[f64]) -> FigureResult {
         }
     }
     let sums = parallel_map(fc.jobs, items, |(rate, kind, which)| {
-        (rate, kind, which, run_cell(fc, kind, which, rate, fc.slice_len))
+        (rate, kind, which, run_cell_observed(fc, kind, which, rate, fc.slice_len))
     });
     let mut rows = Vec::new();
     let mut arr = Vec::new();
-    for (rate, kind, which, s) in sums {
+    for (rate, kind, which, (s, ts)) in sums {
+        let served = ts.served_imbalance();
         rows.push(vec![
             format!("{}-{}", kind.name(), which),
             format!("{rate:.0}"),
             f2(s.ct_std),
+            f3(served.jains),
+            f3(served.cv),
         ]);
         let mut o = Json::obj();
         o.set("engine", kind.name())
             .set("scheduler", which)
             .set("rate", rate)
-            .set("ct_std", s.ct_std);
+            .set("ct_std", s.ct_std)
+            .set("served_imbalance", served.to_json());
         arr.push(o);
     }
     FigureResult {
         id: "fig17".into(),
-        title: "Load imbalance: STD of instance completion times vs rate".into(),
-        header: vec!["cell".into(), "rate".into(), "CT STD (s)".into()],
+        title: "Load imbalance: completion-time STD and served-token fairness vs rate".into(),
+        header: vec![
+            "cell".into(),
+            "rate".into(),
+            "CT STD (s)".into(),
+            "Jain".into(),
+            "CV".into(),
+        ],
+        rows,
+        json: Json::Arr(arr),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Observability figure — per-worker load gauges and imbalance indices
+// ---------------------------------------------------------------------------
+
+/// Extension figure: the telemetry view of the load-balance claim. Each
+/// scheduler family runs at rate 20 on DS with a [`TimeSeriesSink`]
+/// attached; the table reports the imbalance indices over served tokens
+/// and busy time per worker, next to the paper's CT-STD endpoint. The
+/// JSON payload carries the full per-worker binned series (KV occupancy,
+/// queue depth, busy seconds per interval) for plotting.
+pub fn figobs(fc: &FigureConfig) -> FigureResult {
+    let ladder = vec!["SLS", "ILS", "SCLS", "SCLS-CB"];
+    let sums = parallel_map(fc.jobs, ladder, |which| {
+        (which, run_cell_observed(fc, EngineKind::Ds, which, 20.0, fc.slice_len))
+    });
+    let mut rows = Vec::new();
+    let mut arr = Vec::new();
+    for (which, (s, ts)) in sums {
+        let served = ts.served_imbalance();
+        let busy = ts.busy_imbalance();
+        rows.push(vec![
+            which.to_string(),
+            f2(s.throughput),
+            f3(served.jains),
+            f2(served.max_over_mean),
+            f3(served.cv),
+            f3(busy.jains),
+            f2(s.ct_std),
+        ]);
+        let mut o = Json::obj();
+        o.set("scheduler", which)
+            .set("throughput", s.throughput)
+            .set("ct_std", s.ct_std)
+            .set("series", ts.to_json(fc.duration));
+        arr.push(o);
+    }
+    FigureResult {
+        id: "figobs".into(),
+        title: "Observability: per-worker served/busy imbalance indices (DS, rate 20)".into(),
+        header: vec![
+            "scheduler".into(),
+            "thpt".into(),
+            "served Jain".into(),
+            "served max/mean".into(),
+            "served CV".into(),
+            "busy Jain".into(),
+            "CT STD (s)".into(),
+        ],
         rows,
         json: Json::Arr(arr),
     }
@@ -1191,6 +1276,51 @@ mod tests {
                 let shed = o.get("shed_requests").unwrap().as_i64().unwrap();
                 assert_eq!(shed, 0, "{which} must not shed");
             }
+        }
+    }
+
+    #[test]
+    fn figobs_indices_bounded_and_series_cover_fleet() {
+        let fc = quick();
+        let r = figobs(&fc);
+        assert_eq!(r.rows.len(), 4, "SLS / ILS / SCLS / SCLS-CB");
+        for o in r.json.as_arr().unwrap() {
+            let which = o.get("scheduler").and_then(Json::as_str).unwrap();
+            assert!(o.get("throughput").unwrap().as_f64().unwrap() > 0.0);
+            let series = o.get("series").unwrap();
+            let rep = series.get("served_imbalance").unwrap();
+            let per_worker = rep.get("per_worker").unwrap().as_arr().unwrap();
+            let n = per_worker.len();
+            assert!(
+                (1..=fc.workers).contains(&n),
+                "{which}: {n} worker series for a {}-worker fleet",
+                fc.workers
+            );
+            let jains = rep.get("jains").unwrap().as_f64().unwrap();
+            let lo = 1.0 / fc.workers as f64 - 1e-9;
+            assert!((lo..=1.0 + 1e-9).contains(&jains), "{which} Jain {jains}");
+            assert!(rep.get("max_over_mean").unwrap().as_f64().unwrap() >= 1.0 - 1e-9);
+            assert!(rep.get("cv").unwrap().as_f64().unwrap() >= 0.0);
+            let total: f64 = per_worker.iter().map(|x| x.as_f64().unwrap()).sum();
+            assert!(total > 0.0, "{which} served no tokens");
+            // A 30-second rate-20 trace keeps the whole 8-worker fleet
+            // busy under every static sliced family.
+            if which == "SLS" || which == "SCLS" {
+                assert_eq!(n, fc.workers, "{which} left workers idle");
+            }
+        }
+    }
+
+    #[test]
+    fn fig17_reports_imbalance_alongside_ct_std() {
+        let r = fig17(&quick(), &[20.0]);
+        assert_eq!(r.rows.len(), 5, "5 cells at one rate");
+        assert_eq!(r.header.len(), r.rows[0].len());
+        for o in r.json.as_arr().unwrap() {
+            let rep = o.get("served_imbalance").unwrap();
+            let jains = rep.get("jains").unwrap().as_f64().unwrap();
+            assert!(jains > 0.0 && jains <= 1.0 + 1e-9);
+            assert!(o.get("ct_std").unwrap().as_f64().unwrap() >= 0.0);
         }
     }
 

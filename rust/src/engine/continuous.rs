@@ -106,6 +106,13 @@ impl ContinuousWorker {
         for r in &mut self.running {
             r.cached += 1;
             r.remaining -= 1;
+            // First-token stamp for TTFT accounting: this boundary delivers
+            // the request's first generated token. (Crash-reclaimed
+            // re-admissions resume with `generated > 0` and keep their
+            // original stamp.)
+            if r.req.generated == 0 && r.req.first_token_at.is_none() {
+                r.req.first_token_at = Some(now);
+            }
             r.req.generated += 1;
         }
         let mut exited = Vec::new();
@@ -192,6 +199,29 @@ mod tests {
     fn idle_when_empty() {
         let mut w = worker(4);
         assert!(w.begin_iteration().is_none());
+    }
+
+    #[test]
+    fn ttft_stamped_at_first_decode_iteration() {
+        let mut w = worker(8);
+        w.waiting.push_back(req(0, 10, 4));
+        let mut now = 0.0;
+        let done = loop {
+            let d = w.begin_iteration().unwrap();
+            now += d;
+            let exited = w.finish_iteration(now);
+            if !exited.is_empty() {
+                break exited;
+            }
+        };
+        let r = &done[0];
+        let first = r.first_token_at.expect("first token stamped");
+        let finished = r.finished_at.unwrap();
+        assert!(
+            first < finished,
+            "a multi-iteration request's TTFT ({first}) must be strictly \
+             earlier than its finish ({finished})"
+        );
     }
 
     #[test]

@@ -188,6 +188,12 @@ impl PredictiveContinuousWorker {
             r.cached += 1;
             r.remaining -= 1;
             r.gen_this_residency += 1;
+            // First-token stamp for TTFT accounting: this boundary delivers
+            // the request's first generated token. (Evicted requests resume
+            // with `generated > 0` and keep their original stamp.)
+            if r.req.generated == 0 && r.req.first_token_at.is_none() {
+                r.req.first_token_at = Some(now);
+            }
             r.req.generated += 1;
         }
         let mut out = PredExits::default();
@@ -326,6 +332,26 @@ mod tests {
             w.begin_iteration().unwrap();
         }
         assert!(evicted);
+    }
+
+    #[test]
+    fn ttft_stamped_at_first_decode_iteration() {
+        let mut w = worker(10_000);
+        w.waiting.push_back(req(0, 10, 5, 5));
+        let mut now = 0.0;
+        let done = loop {
+            let d = w.begin_iteration().unwrap();
+            now += d;
+            let out = w.finish_iteration(now);
+            if let Some((r, _)) = out.done.into_iter().next() {
+                break r;
+            }
+        };
+        let first = done.first_token_at.expect("first token stamped");
+        assert!(
+            first < done.finished_at.unwrap(),
+            "TTFT must be strictly earlier than finish"
+        );
     }
 
     #[test]

@@ -143,6 +143,12 @@ impl SlicedContinuousWorker {
             r.cached += 1;
             r.remaining -= 1;
             r.gen_this_slice += 1;
+            // First-token stamp for TTFT accounting: this boundary delivers
+            // the request's first generated token. (Rescheduled requests
+            // resume with `generated > 0` and keep their original stamp.)
+            if r.req.generated == 0 && r.req.first_token_at.is_none() {
+                r.req.first_token_at = Some(now);
+            }
             r.req.generated += 1;
         }
         let mut out = SliceExits::default();
@@ -245,6 +251,33 @@ mod tests {
         assert_eq!(out.done.len(), 1);
         assert_eq!(out.done[0].generated, 3);
         assert!(out.rescheduled.is_empty());
+    }
+
+    #[test]
+    fn ttft_stamped_at_first_decode_iteration_and_survives_reschedule() {
+        let mut w = worker(4);
+        w.waiting.push_back(req(0, 10, 6)); // needs 6 > slice 4: reschedules
+        let mut now = 0.0;
+        let mut carried = None;
+        let done = loop {
+            let d = w.begin_iteration().unwrap();
+            now += d;
+            let out = w.finish_iteration(now);
+            if !out.done.is_empty() {
+                break out.done;
+            }
+            for r in out.rescheduled {
+                carried = r.first_token_at;
+                w.waiting.push_back(r); // re-admit on the same instance
+            }
+        };
+        let r = &done[0];
+        let first = r.first_token_at.expect("first token stamped");
+        assert_eq!(Some(first), carried, "reschedule keeps the stamp");
+        assert!(
+            first < r.finished_at.unwrap(),
+            "TTFT must be strictly earlier than finish"
+        );
     }
 
     #[test]

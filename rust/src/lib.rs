@@ -39,6 +39,7 @@ pub mod runtime;
 pub mod scheduler;
 pub mod sim;
 pub mod slo;
+pub mod telemetry;
 pub mod testprop;
 pub mod util;
 pub mod worker;

@@ -27,9 +27,11 @@ use scls::estimator::profiler::{profile_and_fit, ProfileGrid};
 use scls::predictor::PredictorSpec;
 use scls::scheduler::parse_policy_name;
 use scls::scheduler::spec::SchedulerSpec;
+use scls::metrics::{Fanout, MetricsSink};
 use scls::sim::driver::{SimConfig, Simulation};
 use scls::sim::FaultPlan;
 use scls::slo::{stamp_trace, SloSpec, TenantMix};
+use scls::telemetry::{profile, TimeSeriesSink, TimelineSink};
 use scls::util::cli::Args;
 use scls::util::jobs::parallel_map;
 use scls::util::logging;
@@ -88,6 +90,17 @@ SUBCOMMANDS:
                          comma list of ttft:SECS | tpot:SECS |
                          deadline:SECS (e.g. ttft:2,deadline:120);
                          lower-numbered tenants get tighter tiers [none]
+      --trace-out FILE   write the run timeline as JSONL (one span or
+                         fleet/reclaim/shed instant per line)    [off]
+      --chrome-trace FILE  write the timeline as Chrome trace_event
+                         JSON — load in Perfetto or chrome://tracing,
+                         one track per worker                    [off]
+      --imbalance        collect per-worker gauges and print the load-
+                         imbalance indices (Jain's, max/mean, CV) [off]
+      --profile          time scheduler hot paths (dp_plan, offload,
+                         drain sort, schedule tick) and print the
+                         wall-clock report                       [off]
+      --out FILE         write the summary JSON                  [off]
   serve       Serve a scaled trace on the real PJRT cluster
       --artifacts DIR    AOT artifact dir            [artifacts]
       --workers W        worker threads              [2]
@@ -150,7 +163,7 @@ fn dispatch(args: &Args) -> Result<()> {
 fn figure_ids() -> Vec<&'static str> {
     vec![
         "fig5", "fig6", "fig8", "fig10", "fig11", "fig12", "fig15", "fig17", "fig18", "fig22",
-        "figpred", "figdrift", "figfault", "figslo",
+        "figpred", "figdrift", "figfault", "figslo", "figobs",
     ]
 }
 
@@ -192,6 +205,9 @@ fn run_figure(id: &str, fc: &FigureConfig) -> Result<Vec<FigureResult>> {
         // saturation so the deadline-aware policies separate from the
         // oblivious ladder.
         "figslo" => vec![figures::fig_slo(fc, &[8.0, 16.0, 24.0, 32.0, 40.0])],
+        // Extension: per-worker telemetry view of the load-balance claim
+        // (served/busy imbalance indices over the time-series gauges).
+        "figobs" => vec![figures::figobs(fc)],
         other => bail!("unknown figure id '{other}' (known: {:?})", figure_ids()),
     })
 }
@@ -457,9 +473,35 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         cfg.engine.name(),
         which
     );
-    let metrics = sim
-        .run_named_faulted(&trace, which, cfg.slice_len, &plan)
-        .map_err(|e| anyhow!("{e}"))?;
+    // Opt-in telemetry: attaching sinks cannot perturb the run (they never
+    // touch `RunMetrics`), so a traced run's summary is byte-identical to
+    // a bare one.
+    let trace_out = args.str_opt("trace-out");
+    let chrome_out = args.str_opt("chrome-trace");
+    let want_timeline = trace_out.is_some() || chrome_out.is_some();
+    let want_imbalance = args.bool_or("imbalance", false);
+    let want_profile = args.bool_or("profile", false);
+    let mut timeline = TimelineSink::new();
+    let mut series = TimeSeriesSink::default();
+    if want_profile {
+        profile::enable();
+    }
+    let metrics = {
+        let mut sinks: Vec<&mut dyn MetricsSink> = Vec::new();
+        if want_timeline {
+            sinks.push(&mut timeline);
+        }
+        if want_imbalance {
+            sinks.push(&mut series);
+        }
+        if sinks.is_empty() {
+            sim.run_named_faulted(&trace, which, cfg.slice_len, &plan)
+        } else {
+            let mut fan = Fanout(sinks);
+            sim.run_named_faulted_with_sink(&trace, which, cfg.slice_len, &plan, &mut fan)
+        }
+    }
+    .map_err(|e| anyhow!("{e}"))?;
     let s = metrics.summarize();
     println!("engine            {}", cfg.engine.name());
     println!("scheduler         {which}");
@@ -510,6 +552,34 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         if pred_corrected {
             println!("corrected batches {}", metrics.corrected_batches);
         }
+    }
+    if want_imbalance {
+        let served = series.served_imbalance();
+        let busy = series.busy_imbalance();
+        println!(
+            "served imbalance  Jain {:.3}  max/mean {:.2}  CV {:.3}",
+            served.jains, served.max_over_mean, served.cv
+        );
+        println!(
+            "busy imbalance    Jain {:.3}  max/mean {:.2}  CV {:.3}",
+            busy.jains, busy.max_over_mean, busy.cv
+        );
+    }
+    if want_profile {
+        profile::disable();
+        print!("{}", profile::take().report());
+    }
+    if let Some(path) = trace_out {
+        timeline.write_jsonl(Path::new(path))?;
+        log::info!(
+            "wrote timeline {path} ({} spans, {} instants)",
+            timeline.spans().len(),
+            timeline.instants().len()
+        );
+    }
+    if let Some(path) = chrome_out {
+        timeline.write_chrome_trace(Path::new(path))?;
+        log::info!("wrote Chrome trace {path}");
     }
     if let Some(out) = args.str_opt("out") {
         std::fs::write(out, s.to_json().to_string_pretty())?;

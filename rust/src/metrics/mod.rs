@@ -8,6 +8,7 @@ pub mod sink;
 pub use sink::{Fanout, MetricsSink, NullSink, Tally};
 
 use crate::slo::{SloOutcome, SloTracker};
+use crate::telemetry::StreamingHist;
 use crate::util::json::Json;
 use crate::util::stats;
 
@@ -232,6 +233,22 @@ impl RunMetrics {
             .set("ttft_p99", self.slo.ttft_p99())
             .set("makespan", self.makespan)
             .set("worker_completion", self.worker_completion.clone());
+        // Distribution summaries, sketched lazily at serialization time
+        // from the retained logs / SLO tracker — pure functions of the
+        // deterministic event log, so they are identical across driver
+        // implementations and unaffected by attached sinks.
+        let mut latency = StreamingHist::new();
+        for c in &self.completed {
+            latency.add(c.finished - c.arrival);
+        }
+        let mut serve = StreamingHist::new();
+        for b in &self.batches {
+            serve.add(b.actual_serve_time);
+        }
+        o.set("latency_dist", latency.summary_json())
+            .set("serve_time_dist", serve.summary_json())
+            .set("ttft_dist", self.slo.ttft_hist.summary_json())
+            .set("tpot_dist", self.slo.tpot_hist.summary_json());
         let tenants: Vec<Json> = self
             .slo
             .per_tenant
@@ -484,6 +501,26 @@ mod tests {
         assert_eq!(tenants.len(), 2, "tenants 0 and 2");
         assert_eq!(tenants[1].get("tenant").unwrap().as_i64(), Some(2));
         assert_eq!(tenants[1].get("shed").unwrap().as_i64(), Some(1));
+    }
+
+    #[test]
+    fn to_json_distribution_summaries_are_lazy_and_deterministic() {
+        let mut m = RunMetrics::default();
+        m.record_completion(&Request::new(1, 0.0, 10, 5), 2.0);
+        m.record_completion(&Request::new(2, 1.0, 10, 5), 5.0);
+        let j = m.to_json();
+        let lat = j.get("latency_dist").unwrap();
+        assert_eq!(lat.get("count").unwrap().as_i64(), Some(2));
+        assert_eq!(lat.get("min").unwrap().as_f64(), Some(2.0), "extrema are exact");
+        assert_eq!(lat.get("max").unwrap().as_f64(), Some(4.0));
+        // Empty logs serialize all-zero summaries (byte-stable on runs
+        // that never consult the sketches).
+        let e = RunMetrics::default().to_json();
+        let serve = e.get("serve_time_dist").unwrap();
+        assert_eq!(serve.get("count").unwrap().as_i64(), Some(0));
+        assert_eq!(e.get("ttft_dist").unwrap().get("p99").unwrap().as_f64(), Some(0.0));
+        // Serialization is a pure function of the log: repeat calls match.
+        assert_eq!(m.to_json().to_string_pretty(), j.to_string_pretty());
     }
 
     #[test]

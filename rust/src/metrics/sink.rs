@@ -50,6 +50,21 @@ pub trait MetricsSink {
     /// An SLO-aware policy shed `req` before service (deadline-infeasible
     /// admission or an expired requeue).
     fn on_shed(&mut self, _now: f64, _req: &Request) {}
+    /// A worker finished a serving iteration / settled a slice:
+    /// `new_tokens` were decoded this iteration, `kv_in_use` KV tokens are
+    /// resident on the worker afterwards (0 for static-batching engines,
+    /// which release the batch at the slice boundary), and `queue_depth`
+    /// requests are still queued on that worker. Telemetry-only — the
+    /// sample never enters `RunMetrics`, so sink-free runs are unaffected.
+    fn on_worker_sample(
+        &mut self,
+        _now: f64,
+        _worker: usize,
+        _new_tokens: u64,
+        _kv_in_use: u64,
+        _queue_depth: usize,
+    ) {
+    }
     /// The run drained; `metrics` is the final event log.
     fn on_run_end(&mut self, _metrics: &RunMetrics) {}
 }
@@ -233,6 +248,19 @@ impl MetricsSink for Fanout<'_> {
         }
     }
 
+    fn on_worker_sample(
+        &mut self,
+        now: f64,
+        worker: usize,
+        new_tokens: u64,
+        kv_in_use: u64,
+        queue_depth: usize,
+    ) {
+        for s in self.0.iter_mut() {
+            s.on_worker_sample(now, worker, new_tokens, kv_in_use, queue_depth);
+        }
+    }
+
     fn on_run_end(&mut self, metrics: &RunMetrics) {
         for s in self.0.iter_mut() {
             s.on_run_end(metrics);
@@ -348,6 +376,169 @@ mod tests {
         assert_eq!(t.slo_attained, 1);
         assert_eq!(t.deadline_misses, 2);
         assert_eq!(t.shed_requests, 2);
+    }
+
+    /// Appends `"<id>:<hook>"` to a shared log on every hook — proves the
+    /// fanout forwards the *full* trait surface to every child, children
+    /// in declaration order for each event.
+    struct RecordingSink {
+        id: &'static str,
+        log: std::rc::Rc<std::cell::RefCell<Vec<String>>>,
+    }
+
+    impl RecordingSink {
+        fn note(&mut self, hook: &str) {
+            self.log.borrow_mut().push(format!("{}:{hook}", self.id));
+        }
+    }
+
+    impl MetricsSink for RecordingSink {
+        fn on_batch(&mut self, _now: f64, _rec: &BatchRecord) {
+            self.note("on_batch");
+        }
+        fn on_completion(&mut self, _now: f64, _req: &CompletedRequest) {
+            self.note("on_completion");
+        }
+        fn on_pool_depth(&mut self, _now: f64, _depth: usize) {
+            self.note("on_pool_depth");
+        }
+        fn on_prediction(&mut self, _now: f64, _rec: &PredictionRecord) {
+            self.note("on_prediction");
+        }
+        fn on_predictor_refit(&mut self, _now: f64) {
+            self.note("on_predictor_refit");
+        }
+        fn on_corrected_batch(&mut self, _now: f64) {
+            self.note("on_corrected_batch");
+        }
+        fn on_fleet(&mut self, _now: f64, _rec: &FleetRecord) {
+            self.note("on_fleet");
+        }
+        fn on_reclaim(&mut self, _now: f64, _worker: usize, _in_flight: usize, _queued: usize) {
+            self.note("on_reclaim");
+        }
+        fn on_migration(&mut self, _now: f64, _worker: usize, _count: usize) {
+            self.note("on_migration");
+        }
+        fn on_slo(&mut self, _now: f64, _outcome: &SloOutcome) {
+            self.note("on_slo");
+        }
+        fn on_shed(&mut self, _now: f64, _req: &Request) {
+            self.note("on_shed");
+        }
+        fn on_worker_sample(
+            &mut self,
+            _now: f64,
+            _worker: usize,
+            _new_tokens: u64,
+            _kv_in_use: u64,
+            _queue_depth: usize,
+        ) {
+            self.note("on_worker_sample");
+        }
+        fn on_run_end(&mut self, _metrics: &RunMetrics) {
+            self.note("on_run_end");
+        }
+    }
+
+    #[test]
+    fn fanout_forwards_full_hook_surface_in_order() {
+        let log = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
+        let mut a = RecordingSink {
+            id: "a",
+            log: log.clone(),
+        };
+        let mut b = RecordingSink {
+            id: "b",
+            log: log.clone(),
+        };
+        {
+            let mut f = Fanout(vec![&mut a, &mut b]);
+            f.on_batch(
+                0.1,
+                &BatchRecord {
+                    start: 0.1,
+                    worker: 0,
+                    size: 1,
+                    input_len: 4,
+                    pad_tokens: 0,
+                    est_serve_time: 0.5,
+                    actual_serve_time: 0.5,
+                    early_return: false,
+                },
+            );
+            f.on_completion(
+                0.6,
+                &CompletedRequest {
+                    id: 0,
+                    arrival: 0.0,
+                    finished: 0.6,
+                    generated: 1,
+                    slices: 1,
+                    pad_tokens: 0,
+                    invalid_tokens: 0,
+                },
+            );
+            f.on_pool_depth(0.7, 3);
+            f.on_prediction(
+                0.8,
+                &PredictionRecord {
+                    id: 1,
+                    underpredicted: true,
+                    wasted_tokens: 0,
+                },
+            );
+            f.on_predictor_refit(0.9);
+            f.on_corrected_batch(1.0);
+            f.on_fleet(
+                1.1,
+                &FleetRecord {
+                    worker: 1,
+                    kind: super::super::FleetEventKind::Crash,
+                },
+            );
+            f.on_reclaim(1.1, 1, 2, 3);
+            f.on_migration(1.2, 1, 4);
+            f.on_slo(
+                1.3,
+                &SloOutcome {
+                    tenant: 0,
+                    ttft: 0.1,
+                    tpot: 0.01,
+                    ttft_ok: true,
+                    tpot_ok: true,
+                    deadline_ok: true,
+                    attained: true,
+                },
+            );
+            f.on_shed(1.4, &Request::new(5, 0.0, 4, 4));
+            f.on_worker_sample(1.5, 2, 64, 512, 1);
+            f.on_run_end(&RunMetrics::default());
+        }
+        let hooks = [
+            "on_batch",
+            "on_completion",
+            "on_pool_depth",
+            "on_prediction",
+            "on_predictor_refit",
+            "on_corrected_batch",
+            "on_fleet",
+            "on_reclaim",
+            "on_migration",
+            "on_slo",
+            "on_shed",
+            "on_worker_sample",
+            "on_run_end",
+        ];
+        let want: Vec<String> = hooks
+            .iter()
+            .flat_map(|h| [format!("a:{h}"), format!("b:{h}")])
+            .collect();
+        assert_eq!(
+            *log.borrow(),
+            want,
+            "every hook must reach every child, children in order per event"
+        );
     }
 
     #[test]

@@ -33,6 +33,9 @@ impl MaxMinOffloader {
         ledger: &mut LoadLedger,
         out: &mut Vec<(usize, Batch)>,
     ) {
+        // Opt-in hot-path profiling: one thread-local bool load when
+        // disabled.
+        let _t = crate::telemetry::profile::timer("offload");
         out.clear();
         // Longest estimated serving time first.
         batches.sort_by(|a, b| b.est_serve_time.total_cmp(&a.est_serve_time));

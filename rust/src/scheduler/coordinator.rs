@@ -225,6 +225,9 @@ impl SlicedCoordinator {
         est: &E,
         mem: &MemoryEstimator,
     ) -> usize {
+        // Opt-in hot-path profiling: one thread-local bool load when
+        // disabled.
+        let _t = crate::telemetry::profile::timer("schedule_tick");
         self.pool.drain_sorted_into(&mut self.tick_reqs);
         let drained = self.tick_reqs.len();
         if drained == 0 {

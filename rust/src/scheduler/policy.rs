@@ -194,6 +194,24 @@ impl<'a> SimCtx<'a> {
         self.metrics.migrations += count as u64;
         self.sink.on_migration(self.now, worker, count);
     }
+
+    /// Stream a per-worker telemetry sample: `worker` just finished a
+    /// serving that produced `new_tokens`, holds `kv_in_use` KV-cache
+    /// tokens after the boundary (0 for static-batching engines, which
+    /// release the batch at every slice boundary), and has `queue_depth`
+    /// requests waiting locally. Telemetry-only — never touches
+    /// `RunMetrics`, so attaching or dropping a sink that consumes it
+    /// cannot move a run's deterministic fingerprint.
+    pub fn record_served(
+        &mut self,
+        worker: usize,
+        new_tokens: u64,
+        kv_in_use: u64,
+        queue_depth: usize,
+    ) {
+        self.sink
+            .on_worker_sample(self.now, worker, new_tokens, kv_in_use, queue_depth);
+    }
 }
 
 /// A scheduling policy: the full decision surface of one cluster

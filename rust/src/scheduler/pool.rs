@@ -111,6 +111,9 @@ impl RequestPool {
     /// merging only the arrivals since the last background merge. `out` is
     /// cleared and swapped so the drain allocates nothing in steady state.
     pub fn drain_sorted_into(&mut self, out: &mut Vec<Request>) {
+        // Opt-in hot-path profiling: one thread-local bool load when
+        // disabled.
+        let _t = crate::telemetry::profile::timer("drain_sort");
         self.merge_pending();
         out.clear();
         std::mem::swap(&mut self.sorted, out);

@@ -76,6 +76,18 @@ pub(crate) struct ServingSlot {
     li: u32,
 }
 
+impl ServingSlot {
+    /// Tokens this slice will deliver across the whole batch (telemetry:
+    /// the per-worker served-token share).
+    pub(crate) fn new_tokens_total(&self) -> u64 {
+        self.outcome
+            .per_request
+            .iter()
+            .map(|o| o.new_tokens as u64)
+            .sum()
+    }
+}
+
 /// Serving-start accounting shared by every static-batching policy
 /// (sliced family and P-SCLS): serve one slice of `iter_limit` iterations,
 /// log the batch record, park the batch + outcome in the worker's serving
@@ -332,10 +344,15 @@ impl SchedulingPolicy for SlicedPolicy {
         let Some(slot) = self.workers[w].serving.take() else {
             return;
         };
+        let new_tokens = slot.new_tokens_total();
         let batch = settle_batch(slot, ctx.now);
         self.coord.batch_done(w, batch.est_serve_time);
         self.coord.note_progress(w, ctx.now);
         self.workers[w].last_done = ctx.now;
+        // Telemetry sample at the slice boundary (static batching releases
+        // the batch here, so KV-in-use is 0 by construction).
+        let depth = self.workers[w].batch_queue.len() + self.workers[w].req_queue.len();
+        ctx.record_served(w, new_tokens, 0, depth);
         for r in batch.requests {
             if r.is_finished() {
                 ctx.record_completion(&r);
@@ -566,7 +583,13 @@ impl SchedulingPolicy for IlsPolicy {
         if self.health[wi] == WorkerHealth::Dead {
             return; // stale completion from a crashed worker
         }
-        for r in self.workers[wi].finish_iteration(ctx.now) {
+        let done = self.workers[wi].finish_iteration(ctx.now);
+        // Every request running this iteration decoded one token: the
+        // exits plus whatever is still running.
+        let new_tokens = (done.len() + self.workers[wi].running.len()) as u64;
+        let kv = self.workers[wi].kv_in_use();
+        ctx.record_served(wi, new_tokens, kv, self.workers[wi].waiting.len());
+        for r in done {
             self.last_done[wi] = ctx.now;
             ctx.record_completion(&r);
         }
@@ -752,6 +775,12 @@ impl SchedulingPolicy for SclsCbPolicy {
 
     fn on_worker_done(&mut self, wi: usize, ctx: &mut SimCtx) {
         let exits = self.workers[wi].finish_iteration(ctx.now);
+        // Every request running this iteration decoded one token: the
+        // exits plus whatever is still running.
+        let new_tokens =
+            (exits.done.len() + exits.rescheduled.len() + self.workers[wi].running_len()) as u64;
+        let kv = self.workers[wi].kv_projected();
+        ctx.record_served(wi, new_tokens, kv, self.workers[wi].waiting.len());
         for r in exits.done {
             self.last_done[wi] = ctx.now;
             ctx.record_completion(&r);
@@ -1105,10 +1134,14 @@ impl SchedulingPolicy for PredictiveSlicedPolicy {
         let Some(slot) = self.workers[w].serving.take() else {
             return;
         };
+        let new_tokens = slot.new_tokens_total();
         let batch = settle_batch(slot, ctx.now);
         self.ledger.complete(w, batch.est_serve_time);
         self.fleet.batch_completed(w, ctx.now);
         self.workers[w].last_done = ctx.now;
+        // Telemetry sample at the slice boundary (static batching releases
+        // the batch here, so KV-in-use is 0 by construction).
+        ctx.record_served(w, new_tokens, 0, self.workers[w].batch_queue.len());
         let s = self.spec.slice_len.max(1);
         for r in batch.requests {
             if r.is_finished() {
@@ -1347,6 +1380,12 @@ impl SchedulingPolicy for PredictiveCbPolicy {
 
     fn on_worker_done(&mut self, wi: usize, ctx: &mut SimCtx) {
         let exits = self.workers[wi].finish_iteration(ctx.now);
+        // Every request running this iteration decoded one token: the
+        // exits plus whatever is still running.
+        let new_tokens =
+            (exits.done.len() + exits.evicted.len() + self.workers[wi].running_len()) as u64;
+        let kv = self.workers[wi].kv_projected();
+        ctx.record_served(wi, new_tokens, kv, self.workers[wi].waiting.len());
         for (r, unused) in exits.done {
             self.last_done[wi] = ctx.now;
             // Completion feedback: online predictors refit from the true

@@ -13,17 +13,18 @@
 //!
 //! **TTFT measurement caveat:** static-batching engines deliver all of a
 //! slice's tokens at the slice boundary, so the first-token timestamp is
-//! the end of the request's first scheduled slice. Policies that never
-//! stamp `Request::first_token_at` (the continuous-batching family, which
-//! streams tokens internally) fall back to `finished_at` as the
-//! first-token time — a conservative over-estimate that can only *miss*
-//! a TTFT target, never falsely attain it.
+//! the end of the request's first scheduled slice. The continuous-batching
+//! engines stamp `Request::first_token_at` at the end of the iteration
+//! that decodes the request's first token. Any policy that never stamps
+//! it falls back to `finished_at` as the first-token time — a
+//! conservative over-estimate that can only *miss* a TTFT target, never
+//! falsely attain it.
 
 use std::collections::BTreeMap;
 
 use crate::core::Request;
+use crate::telemetry::StreamingHist;
 use crate::util::rng::Rng;
-use crate::util::stats::percentile;
 use crate::workload::Trace;
 
 /// Per-request service-level objective: any subset of a time-to-first-token
@@ -263,8 +264,12 @@ pub struct SloTracker {
     pub deadline_misses: u64,
     /// SLO-carrying requests shed before service.
     pub shed: u64,
-    /// Measured TTFT of every tracked completion (for the p99).
-    pub ttft_samples: Vec<f64>,
+    /// Streaming sketch of measured TTFT across tracked completions
+    /// (≤ 1% relative quantile error, O(1) memory per sample — the run
+    /// never retains per-sample vectors).
+    pub ttft_hist: StreamingHist,
+    /// Streaming sketch of measured TPOT across tracked completions.
+    pub tpot_hist: StreamingHist,
     pub per_tenant: BTreeMap<u32, TenantSlo>,
 }
 
@@ -272,7 +277,8 @@ impl SloTracker {
     /// Fold one judged completion in.
     pub fn observe(&mut self, o: &SloOutcome) {
         self.tracked += 1;
-        self.ttft_samples.push(o.ttft);
+        self.ttft_hist.add(o.ttft);
+        self.tpot_hist.add(o.tpot);
         let t = self.per_tenant.entry(o.tenant).or_default();
         t.tracked += 1;
         if o.attained {
@@ -315,9 +321,10 @@ impl SloTracker {
         }
     }
 
-    /// P99 of measured TTFT across tracked completions (0 when none).
+    /// P99 of measured TTFT across tracked completions (0 when none),
+    /// answered by the streaming sketch within its ≤ 1% relative bound.
     pub fn ttft_p99(&self) -> f64 {
-        percentile(&self.ttft_samples, 99.0)
+        self.ttft_hist.percentile(99.0)
     }
 
     pub fn is_empty(&self) -> bool {
@@ -487,7 +494,11 @@ mod tests {
         assert_eq!(t.deadline_misses, 2, "miss + shed");
         assert_eq!(t.shed, 1);
         assert!((t.attainment() - 1.0 / 3.0).abs() < 1e-12);
-        assert!(t.ttft_p99() > 0.5 && t.ttft_p99() <= 3.0);
+        // The sketch answers within its ≤ 1% relative bound of the exact
+        // nearest-rank p99 (= 3.0 here).
+        assert!(t.ttft_p99() > 0.5 && t.ttft_p99() <= 3.0 * 1.02);
+        assert_eq!(t.ttft_hist.count(), 2, "sheds never enter the sketch");
+        assert_eq!(t.tpot_hist.count(), 2);
         assert_eq!(t.per_tenant.len(), 2);
         assert_eq!(t.per_tenant[&0].attained, 1);
         assert_eq!(t.per_tenant[&1].shed, 1);

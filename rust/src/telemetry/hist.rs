@@ -1,0 +1,369 @@
+//! Streaming log-bucketed histogram with a guaranteed relative quantile
+//! error — the O(1)-per-sample replacement for stored-sample percentiles.
+//!
+//! [`StreamingHist`] is a DDSketch-style sketch over non-negative values:
+//! bucket `i` covers `(γ^(i-1), γ^i]` with `γ = (1+α)/(1-α)`, so any two
+//! values in one bucket differ by at most a factor of `γ` and the bucket's
+//! representative value `2·γ^i/(γ+1)` is within relative error **α** of
+//! every member. Quantiles are answered by nearest-rank walk over the
+//! bucket counts, giving the documented guarantee:
+//!
+//! > for any q, `|quantile(q) - exact_nearest_rank_quantile(q)| ≤
+//! > α · exact_nearest_rank_quantile(q)` (up to float rounding at bucket
+//! > boundaries), where the exact quantile is `sorted[rank-1]` with
+//! > `rank = clamp(ceil(q·n), 1, n)`.
+//!
+//! Memory is O(number of occupied buckets) — for the default `α = 0.01`
+//! that is ~70 buckets per decade of dynamic range, *independent of the
+//! sample count*, which is what lets the DES keep latency/TTFT/TPOT
+//! distributions on 100M-request traces without retaining per-sample
+//! vectors. Sketches over the same `α` merge losslessly (bucket-wise count
+//! addition), so per-shard sketches can be combined after a parallel run.
+//!
+//! Values `v ≤ 0` (and every non-finite value except `+∞`, which is
+//! rejected too) land in a dedicated zero bucket reported as exactly
+//! `0.0` — the domain here is durations, where negatives only arise from
+//! clock clamping. An empty histogram answers `0.0` for every quantile,
+//! matching the legacy stored-sample behavior on empty sample sets.
+
+use crate::util::json::Json;
+
+/// Default relative-error bound α (1%).
+pub const DEFAULT_ALPHA: f64 = 0.01;
+
+/// Mergeable log-bucketed quantile sketch (see module docs).
+#[derive(Debug, Clone)]
+pub struct StreamingHist {
+    alpha: f64,
+    gamma: f64,
+    ln_gamma: f64,
+    /// Samples with `v ≤ 0` (reported as exactly 0.0).
+    zero_count: u64,
+    /// Total samples folded in, including the zero bucket.
+    count: u64,
+    /// Exact extrema (tracked outside the buckets).
+    min: f64,
+    max: f64,
+    /// Sum of all samples (exact mean numerator, accumulated in add order).
+    sum: f64,
+    /// Bucket index of `counts[0]`; buckets are a contiguous window.
+    offset: i32,
+    counts: Vec<u64>,
+}
+
+impl Default for StreamingHist {
+    fn default() -> Self {
+        StreamingHist::new()
+    }
+}
+
+impl StreamingHist {
+    /// Sketch with the default α = 1% relative-error bound.
+    pub fn new() -> StreamingHist {
+        StreamingHist::with_alpha(DEFAULT_ALPHA)
+    }
+
+    /// Sketch with a caller-chosen relative-error bound `alpha ∈ (0, 1)`.
+    pub fn with_alpha(alpha: f64) -> StreamingHist {
+        assert!(alpha > 0.0 && alpha < 1.0, "alpha must be in (0, 1)");
+        let gamma = (1.0 + alpha) / (1.0 - alpha);
+        StreamingHist {
+            alpha,
+            gamma,
+            ln_gamma: gamma.ln(),
+            zero_count: 0,
+            count: 0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            sum: 0.0,
+            offset: 0,
+            counts: Vec::new(),
+        }
+    }
+
+    /// The documented relative quantile-error bound.
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    /// Bucket index for a strictly positive value.
+    fn index_of(&self, v: f64) -> i32 {
+        (v.ln() / self.ln_gamma).ceil() as i32
+    }
+
+    /// Representative value of bucket `i`: the point whose relative error
+    /// to every member of `(γ^(i-1), γ^i]` is ≤ α.
+    fn value_of(&self, i: i32) -> f64 {
+        2.0 * (self.gamma.powi(i)) / (self.gamma + 1.0)
+    }
+
+    /// Fold one sample in. NaN is skipped; `v ≤ 0` lands in the zero
+    /// bucket.
+    pub fn add(&mut self, v: f64) {
+        if v.is_nan() {
+            return;
+        }
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        if v <= 0.0 {
+            self.zero_count += 1;
+            return;
+        }
+        let i = self.index_of(v);
+        self.bump(i, 1);
+    }
+
+    fn bump(&mut self, i: i32, by: u64) {
+        if self.counts.is_empty() {
+            self.offset = i;
+            self.counts.push(by);
+            return;
+        }
+        if i < self.offset {
+            let grow = (self.offset - i) as usize;
+            self.counts.splice(0..0, vec![0; grow]);
+            self.offset = i;
+        } else if (i - self.offset) as usize >= self.counts.len() {
+            let need = (i - self.offset) as usize + 1;
+            self.counts.resize(need, 0);
+        }
+        self.counts[(i - self.offset) as usize] += by;
+    }
+
+    /// Merge another sketch of the *same* α in (lossless: bucket-wise count
+    /// addition). Panics when the error bounds differ — merging sketches
+    /// with different bucket bases has no exact meaning.
+    pub fn merge(&mut self, other: &StreamingHist) {
+        assert!(
+            self.alpha == other.alpha,
+            "cannot merge sketches with different alpha ({} vs {})",
+            self.alpha,
+            other.alpha
+        );
+        self.count += other.count;
+        self.zero_count += other.zero_count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        for (k, &c) in other.counts.iter().enumerate() {
+            if c > 0 {
+                self.bump(other.offset + k as i32, c);
+            }
+        }
+    }
+
+    /// Total samples folded in.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact minimum sample (0.0 when empty).
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact maximum sample (0.0 when empty).
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Exact mean (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Nearest-rank quantile with relative error ≤ α (see module docs).
+    /// `q` is clamped to `[0, 1]`; an empty sketch answers exactly 0.0.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let q = if q.is_nan() { 1.0 } else { q.clamp(0.0, 1.0) };
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        if rank <= self.zero_count {
+            return 0.0;
+        }
+        let mut seen = self.zero_count;
+        for (k, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return self.value_of(self.offset + k as i32);
+            }
+        }
+        // Unreachable when counts are consistent; fall back to the exact
+        // max rather than panicking inside metrics code.
+        self.max()
+    }
+
+    /// Percentile convenience: `p` in `[0, 100]`.
+    pub fn percentile(&self, p: f64) -> f64 {
+        self.quantile(p / 100.0)
+    }
+
+    /// Deterministic distribution summary for result JSON: exact count,
+    /// min, max, and mean, plus sketched p50/p90/p99. An empty sketch
+    /// serializes as all zeros (byte-stable on runs that never add).
+    pub fn summary_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("count", self.count)
+            .set("min", self.min())
+            .set("max", self.max())
+            .set("mean", self.mean())
+            .set("p50", self.quantile(0.50))
+            .set("p90", self.quantile(0.90))
+            .set("p99", self.quantile(0.99));
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The exact nearest-rank quantile the sketch is measured against.
+    fn exact_nearest_rank(sorted: &[f64], q: f64) -> f64 {
+        let n = sorted.len() as u64;
+        let rank = ((q * n as f64).ceil() as u64).clamp(1, n);
+        sorted[(rank - 1) as usize]
+    }
+
+    #[test]
+    fn empty_hist_is_all_zeros() {
+        let h = StreamingHist::new();
+        assert_eq!(h.count(), 0);
+        assert!(h.is_empty());
+        assert_eq!(h.quantile(0.99), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        let j = h.summary_json();
+        assert_eq!(j.get("count").unwrap().as_i64(), Some(0));
+        assert_eq!(j.get("p99").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn single_value_quantiles_hit_the_bound() {
+        let mut h = StreamingHist::new();
+        h.add(3.7);
+        assert_eq!(h.count(), 1);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            let got = h.quantile(q);
+            assert!(
+                (got - 3.7).abs() <= 3.7 * h.alpha() + 1e-12,
+                "q={q}: {got} vs 3.7"
+            );
+        }
+        assert_eq!(h.min(), 3.7);
+        assert_eq!(h.max(), 3.7);
+        assert_eq!(h.mean(), 3.7);
+    }
+
+    #[test]
+    fn quantiles_match_exact_within_alpha_on_wide_range() {
+        // Values spanning 6 decades; deterministic LCG draws.
+        let mut h = StreamingHist::new();
+        let mut vals = Vec::new();
+        let mut x = 0x2545F4914F6CDD1Du64;
+        for _ in 0..5000 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let u = (x >> 11) as f64 / (1u64 << 53) as f64;
+            let v = 1e-3 * (13.8 * u).exp(); // ~1e-3 .. ~1e3
+            vals.push(v);
+            h.add(v);
+        }
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 0.999, 1.0] {
+            let exact = exact_nearest_rank(&vals, q);
+            let got = h.quantile(q);
+            assert!(
+                (got - exact).abs() <= exact * (h.alpha() + 1e-9) + 1e-12,
+                "q={q}: sketch {got} vs exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_and_negative_values_land_in_the_zero_bucket() {
+        let mut h = StreamingHist::new();
+        h.add(0.0);
+        h.add(-1.5);
+        h.add(2.0);
+        h.add(f64::NAN); // skipped
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.quantile(0.01), 0.0, "rank 1 is a zero-bucket sample");
+        let p99 = h.quantile(0.99);
+        assert!((p99 - 2.0).abs() <= 2.0 * h.alpha() + 1e-12);
+        assert_eq!(h.min(), -1.5, "extrema stay exact");
+    }
+
+    #[test]
+    fn merge_is_lossless_bucket_addition() {
+        let mut a = StreamingHist::new();
+        let mut b = StreamingHist::new();
+        let mut whole = StreamingHist::new();
+        for i in 1..=100 {
+            let v = i as f64 * 0.13;
+            whole.add(v);
+            if i % 2 == 0 {
+                a.add(v);
+            } else {
+                b.add(v);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert_eq!(a.min(), whole.min());
+        assert_eq!(a.max(), whole.max());
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            assert_eq!(
+                a.quantile(q).to_bits(),
+                whole.quantile(q).to_bits(),
+                "merged sketch must answer bit-identically at q={q}"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "different alpha")]
+    fn merge_rejects_mismatched_alpha() {
+        let mut a = StreamingHist::with_alpha(0.01);
+        let b = StreamingHist::with_alpha(0.02);
+        a.merge(&b);
+    }
+
+    #[test]
+    fn determinism_add_order_independent_quantiles() {
+        // Bucket counts are order-independent; only `sum` accumulates in
+        // add order, and these values sum exactly either way.
+        let mut fwd = StreamingHist::new();
+        let mut rev = StreamingHist::new();
+        let vals: Vec<f64> = (1..=64).map(|i| i as f64).collect();
+        for &v in &vals {
+            fwd.add(v);
+        }
+        for &v in vals.iter().rev() {
+            rev.add(v);
+        }
+        for q in [0.25, 0.5, 0.99] {
+            assert_eq!(fwd.quantile(q).to_bits(), rev.quantile(q).to_bits());
+        }
+    }
+}

@@ -1,0 +1,34 @@
+//! Observability subsystem: streaming histograms, per-worker time-series,
+//! exportable run timelines, and opt-in hot-path profiling.
+//!
+//! Everything here layers on the existing [`crate::metrics::MetricsSink`]
+//! seam — telemetry *observes* the run's event stream, it never feeds back
+//! into scheduling or into the deterministic `RunMetrics` event log, so a
+//! run with every sink attached stays byte-identical to a `NullSink` run
+//! (property-enforced by `tests/props_telemetry.rs`).
+//!
+//! * [`hist::StreamingHist`] — mergeable log-bucketed quantile sketch with
+//!   a documented ≤ α relative error bound and O(1)-per-sample memory;
+//!   backs `SloTracker`'s TTFT/TPOT percentiles and the distribution
+//!   summaries in `RunMetrics::to_json`.
+//! * [`timeseries::TimeSeriesSink`] — fixed-interval per-worker gauges
+//!   (KV occupancy, queue depth, busy fraction, served-token share)
+//!   folded into load-imbalance indices
+//!   ([`timeseries::ImbalanceReport`]: Jain's fairness, max/mean, CV).
+//! * [`timeline::TimelineSink`] — batches as per-worker spans and
+//!   fleet/shed/reclaim events as instants, exportable as JSONL
+//!   (`simulate --trace-out`) and Chrome `trace_event` JSON
+//!   (`--chrome-trace`, Perfetto-loadable).
+//! * [`profile`] — opt-in wall-clock section timers on the coordinator
+//!   hot paths (`dp_plan`, offload, drain-sort); zero overhead when
+//!   disabled, surfaced by `simulate --profile` and `micro_hotpaths`.
+
+pub mod hist;
+pub mod profile;
+pub mod timeline;
+pub mod timeseries;
+
+pub use hist::StreamingHist;
+pub use profile::{HotPathProfile, Stopwatch};
+pub use timeline::TimelineSink;
+pub use timeseries::{ImbalanceReport, TimeSeriesSink};

@@ -1,0 +1,221 @@
+//! Opt-in hot-path profiling: cheap wall-clock section timers on the
+//! coordinator's schedule-tick paths (`dp_plan` / `dp_plan_corrected`,
+//! max-min offload, pool drain-sort).
+//!
+//! Profiling is **off by default** and gated by one thread-local boolean:
+//! an instrumented site costs a single TLS load when disabled and never
+//! allocates, so the default simulation path carries zero instrumentation
+//! overhead that could perturb benchmarks. Timings are *wall-clock* and
+//! never enter `RunMetrics` or any deterministic result JSON — they are
+//! surfaced separately (the `simulate --profile` report and the
+//! `micro_hotpaths` bench), so enabling profiling cannot move a run's
+//! byte-identical fingerprint.
+//!
+//! Usage at an instrumented site (the guard must be bound to a named
+//! variable — binding to `_` drops it immediately and times nothing):
+//!
+//! ```
+//! let _t = scls::telemetry::profile::timer("dp_plan");
+//! // ... hot path ...
+//! // guard drop records the elapsed time when profiling is enabled
+//! ```
+//!
+//! Collection is per-thread: `enable()` / `take()` operate on the calling
+//! thread's profile, matching the single-threaded DES loop. Profiles from
+//! worker threads can be combined with [`HotPathProfile::merge`].
+
+use std::cell::{Cell, RefCell};
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+thread_local! {
+    static ENABLED: Cell<bool> = const { Cell::new(false) };
+    static PROFILE: RefCell<HotPathProfile> = RefCell::new(HotPathProfile::default());
+}
+
+/// Thin wall-clock stopwatch (monotonic, ns resolution).
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Stopwatch {
+        Stopwatch {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed_ns(&self) -> u64 {
+        self.start.elapsed().as_nanos() as u64
+    }
+}
+
+/// Accumulated timings of one instrumented section.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SectionStat {
+    pub count: u64,
+    pub total_ns: u64,
+    pub max_ns: u64,
+}
+
+impl SectionStat {
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.total_ns as f64 / self.count as f64
+        }
+    }
+}
+
+/// Per-thread profile: section name → accumulated stat. Section names are
+/// static strings so recording never allocates.
+#[derive(Debug, Clone, Default)]
+pub struct HotPathProfile {
+    pub sections: BTreeMap<&'static str, SectionStat>,
+}
+
+impl HotPathProfile {
+    pub fn is_empty(&self) -> bool {
+        self.sections.is_empty()
+    }
+
+    fn record(&mut self, section: &'static str, ns: u64) {
+        let s = self.sections.entry(section).or_default();
+        s.count += 1;
+        s.total_ns += ns;
+        s.max_ns = s.max_ns.max(ns);
+    }
+
+    /// Fold another profile in (e.g. from a worker thread).
+    pub fn merge(&mut self, other: &HotPathProfile) {
+        for (name, o) in &other.sections {
+            let s = self.sections.entry(name).or_default();
+            s.count += o.count;
+            s.total_ns += o.total_ns;
+            s.max_ns = s.max_ns.max(o.max_ns);
+        }
+    }
+
+    /// Human-readable per-section report (one line per section).
+    pub fn report(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        if self.sections.is_empty() {
+            out.push_str("hot-path profile: no sections recorded\n");
+            return out;
+        }
+        out.push_str("hot-path profile (wall-clock):\n");
+        for (name, s) in &self.sections {
+            let _ = writeln!(
+                out,
+                "  {name:<18} calls {:>8}  total {:>10.3} ms  mean {:>9.1} ns  max {:>9} ns",
+                s.count,
+                s.total_ns as f64 / 1e6,
+                s.mean_ns(),
+                s.max_ns
+            );
+        }
+        out
+    }
+}
+
+/// Turn profiling on for the calling thread (idempotent).
+pub fn enable() {
+    ENABLED.with(|e| e.set(true));
+}
+
+/// Turn profiling off for the calling thread. Accumulated sections are
+/// kept until [`take`].
+pub fn disable() {
+    ENABLED.with(|e| e.set(false));
+}
+
+pub fn is_enabled() -> bool {
+    ENABLED.with(|e| e.get())
+}
+
+/// Take (and reset) the calling thread's accumulated profile.
+pub fn take() -> HotPathProfile {
+    PROFILE.with(|p| std::mem::take(&mut *p.borrow_mut()))
+}
+
+/// RAII section timer: records elapsed wall time into the thread profile
+/// on drop. Obtain through [`timer`].
+#[derive(Debug)]
+pub struct TimerGuard {
+    section: &'static str,
+    sw: Stopwatch,
+}
+
+impl Drop for TimerGuard {
+    fn drop(&mut self) {
+        let ns = self.sw.elapsed_ns();
+        PROFILE.with(|p| p.borrow_mut().record(self.section, ns));
+    }
+}
+
+/// Start timing `section` when profiling is enabled; `None` (one TLS bool
+/// load, no allocation) otherwise. Bind the result to a named variable.
+#[inline]
+pub fn timer(section: &'static str) -> Option<TimerGuard> {
+    if !is_enabled() {
+        return None;
+    }
+    Some(TimerGuard {
+        section,
+        sw: Stopwatch::start(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_timer_records_nothing() {
+        disable();
+        let _ = take(); // reset any prior state on this test thread
+        {
+            let _t = timer("noop");
+            assert!(_t.is_none());
+        }
+        assert!(take().is_empty());
+    }
+
+    #[test]
+    fn enabled_timer_accumulates_sections() {
+        disable();
+        let _ = take();
+        enable();
+        for _ in 0..3 {
+            let _t = timer("section_a");
+            std::hint::black_box(0u64);
+        }
+        {
+            let _t = timer("section_b");
+        }
+        disable();
+        let prof = take();
+        assert_eq!(prof.sections["section_a"].count, 3);
+        assert_eq!(prof.sections["section_b"].count, 1);
+        assert!(prof.sections["section_a"].total_ns >= prof.sections["section_a"].max_ns);
+        let report = prof.report();
+        assert!(report.contains("section_a") && report.contains("section_b"));
+    }
+
+    #[test]
+    fn merge_folds_counts_and_maxima() {
+        let mut a = HotPathProfile::default();
+        a.record("x", 10);
+        let mut b = HotPathProfile::default();
+        b.record("x", 30);
+        b.record("y", 5);
+        a.merge(&b);
+        assert_eq!(a.sections["x"].count, 2);
+        assert_eq!(a.sections["x"].total_ns, 40);
+        assert_eq!(a.sections["x"].max_ns, 30);
+        assert_eq!(a.sections["y"].count, 1);
+    }
+}

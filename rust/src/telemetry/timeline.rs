@@ -1,0 +1,318 @@
+//! Exportable run timelines: batches as per-worker spans, fleet/shed/
+//! reclaim/migration events as instants.
+//!
+//! [`TimelineSink`] records the event stream a run emits through the
+//! [`MetricsSink`] hooks and serializes it two ways:
+//!
+//! * **JSONL** ([`TimelineSink::to_jsonl`] / `write_jsonl`): one JSON
+//!   object per line — `{"type":"span",...}` for batch servings,
+//!   `{"type":"instant",...}` for point events — trivially streamable
+//!   into pandas / jq.
+//! * **Chrome `trace_event` JSON** ([`TimelineSink::to_chrome_trace`] /
+//!   `write_chrome_trace`): one `{"traceEvents":[...]}` document with a
+//!   named thread per worker (`"ph":"M"` metadata), complete spans
+//!   (`"ph":"X"`, µs timestamps), and global instants (`"ph":"i"`) —
+//!   loadable directly in Perfetto (<https://ui.perfetto.dev>) or
+//!   `chrome://tracing`.
+//!
+//! Virtual seconds map to trace microseconds (`ts = now · 1e6`), so a
+//! 600 s run renders as a 600 s timeline. The sink only observes — it
+//! never touches `RunMetrics` — so attaching it cannot move a run's
+//! deterministic fingerprint.
+
+use std::io::Write as _;
+use std::path::Path;
+
+use crate::core::Request;
+use crate::metrics::{BatchRecord, FleetEventKind, FleetRecord, MetricsSink};
+use crate::util::json::Json;
+
+/// One batch serving: `worker` was busy on `[start, start + dur)`.
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub worker: usize,
+    pub start: f64,
+    pub dur: f64,
+    pub size: u32,
+    pub input_len: u32,
+    pub early_return: bool,
+}
+
+/// A point event on the timeline.
+#[derive(Debug, Clone)]
+pub struct InstantEvent {
+    /// Event kind: `join` / `drain` / `crash` / `reclaim` / `migration` /
+    /// `shed`.
+    pub name: &'static str,
+    /// Worker the event belongs to (`None` for fleet-wide events like
+    /// sheds, which have no worker yet).
+    pub worker: Option<usize>,
+    pub at: f64,
+    /// Kind-specific detail (reclaimed counts, migrated counts, request
+    /// id), already rendered.
+    pub detail: String,
+}
+
+/// Streaming timeline collector (see module docs).
+#[derive(Debug, Clone, Default)]
+pub struct TimelineSink {
+    spans: Vec<Span>,
+    instants: Vec<InstantEvent>,
+}
+
+impl TimelineSink {
+    pub fn new() -> TimelineSink {
+        TimelineSink::default()
+    }
+
+    pub fn spans(&self) -> &[Span] {
+        &self.spans
+    }
+
+    pub fn instants(&self) -> &[InstantEvent] {
+        &self.instants
+    }
+
+    /// Distinct workers appearing in spans or worker-carrying instants,
+    /// ascending — the span tracks of the Chrome trace.
+    pub fn workers(&self) -> Vec<usize> {
+        let mut ws: Vec<usize> = self
+            .spans
+            .iter()
+            .map(|s| s.worker)
+            .chain(self.instants.iter().filter_map(|i| i.worker))
+            .collect();
+        ws.sort_unstable();
+        ws.dedup();
+        ws
+    }
+
+    /// One JSON object per line (`span` and `instant` records, in event
+    /// order: all spans, then all instants).
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for s in &self.spans {
+            let mut j = Json::obj();
+            j.set("type", "span")
+                .set("worker", s.worker)
+                .set("start", s.start)
+                .set("dur", s.dur)
+                .set("size", s.size)
+                .set("input_len", s.input_len)
+                .set("early_return", s.early_return);
+            out.push_str(&j.to_string_compact());
+            out.push('\n');
+        }
+        for i in &self.instants {
+            let mut j = Json::obj();
+            j.set("type", "instant").set("name", i.name).set("at", i.at);
+            if let Some(w) = i.worker {
+                j.set("worker", w);
+            }
+            if !i.detail.is_empty() {
+                j.set("detail", i.detail.as_str());
+            }
+            out.push_str(&j.to_string_compact());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// The Chrome `trace_event` document (see module docs).
+    pub fn to_chrome_trace(&self) -> Json {
+        let mut events: Vec<Json> = Vec::with_capacity(self.spans.len() + self.instants.len() + 8);
+        // Named thread per worker so Perfetto labels the tracks.
+        for w in self.workers() {
+            let mut m = Json::obj();
+            let mut args = Json::obj();
+            args.set("name", format!("worker {w}"));
+            m.set("ph", "M")
+                .set("name", "thread_name")
+                .set("pid", 0u32)
+                .set("tid", w)
+                .set("args", args);
+            events.push(m);
+        }
+        for s in &self.spans {
+            let mut args = Json::obj();
+            args.set("size", s.size)
+                .set("input_len", s.input_len)
+                .set("early_return", s.early_return);
+            let mut e = Json::obj();
+            e.set("ph", "X")
+                .set("name", format!("batch N={}", s.size))
+                .set("cat", "serve")
+                .set("pid", 0u32)
+                .set("tid", s.worker)
+                .set("ts", s.start * 1e6)
+                .set("dur", s.dur * 1e6)
+                .set("args", args);
+            events.push(e);
+        }
+        for i in &self.instants {
+            let mut args = Json::obj();
+            if !i.detail.is_empty() {
+                args.set("detail", i.detail.as_str());
+            }
+            let mut e = Json::obj();
+            e.set("ph", "i")
+                .set("name", i.name)
+                .set("cat", "fleet")
+                .set("pid", 0u32)
+                .set("tid", i.worker.unwrap_or(0))
+                .set("ts", i.at * 1e6)
+                // Scope: thread-local mark when worker-bound, global
+                // otherwise.
+                .set("s", if i.worker.is_some() { "t" } else { "g" })
+                .set("args", args);
+            events.push(e);
+        }
+        let mut doc = Json::obj();
+        doc.set("traceEvents", Json::Arr(events))
+            .set("displayTimeUnit", "ms");
+        doc
+    }
+
+    pub fn write_jsonl(&self, path: &Path) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_jsonl().as_bytes())
+    }
+
+    pub fn write_chrome_trace(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_chrome_trace().to_string_pretty())
+    }
+}
+
+impl MetricsSink for TimelineSink {
+    fn on_batch(&mut self, now: f64, rec: &BatchRecord) {
+        self.spans.push(Span {
+            worker: rec.worker,
+            start: now,
+            dur: rec.actual_serve_time.max(0.0),
+            size: rec.size,
+            input_len: rec.input_len,
+            early_return: rec.early_return,
+        });
+    }
+
+    fn on_fleet(&mut self, now: f64, rec: &FleetRecord) {
+        let name = match rec.kind {
+            FleetEventKind::Join => "join",
+            FleetEventKind::Drain => "drain",
+            FleetEventKind::Crash => "crash",
+        };
+        self.instants.push(InstantEvent {
+            name,
+            worker: Some(rec.worker),
+            at: now,
+            detail: String::new(),
+        });
+    }
+
+    fn on_reclaim(&mut self, now: f64, worker: usize, in_flight: usize, queued: usize) {
+        self.instants.push(InstantEvent {
+            name: "reclaim",
+            worker: Some(worker),
+            at: now,
+            detail: format!("in_flight={in_flight} queued={queued}"),
+        });
+    }
+
+    fn on_migration(&mut self, now: f64, worker: usize, count: usize) {
+        self.instants.push(InstantEvent {
+            name: "migration",
+            worker: Some(worker),
+            at: now,
+            detail: format!("count={count}"),
+        });
+    }
+
+    fn on_shed(&mut self, now: f64, req: &Request) {
+        self.instants.push(InstantEvent {
+            name: "shed",
+            worker: None,
+            at: now,
+            detail: format!("req={}", req.id),
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batch(worker: usize, start: f64, dur: f64) -> BatchRecord {
+        BatchRecord {
+            start,
+            worker,
+            size: 2,
+            input_len: 32,
+            pad_tokens: 0,
+            est_serve_time: dur,
+            actual_serve_time: dur,
+            early_return: false,
+        }
+    }
+
+    #[test]
+    fn jsonl_lines_parse_individually() {
+        let mut t = TimelineSink::new();
+        t.on_batch(1.0, &batch(0, 1.0, 0.5));
+        t.on_batch(2.0, &batch(1, 2.0, 0.25));
+        t.on_fleet(
+            3.0,
+            &FleetRecord {
+                worker: 1,
+                kind: FleetEventKind::Crash,
+            },
+        );
+        t.on_reclaim(3.0, 1, 2, 1);
+        let mut shed = Request::new(9, 0.0, 8, 8);
+        shed.slo.deadline = Some(0.1);
+        t.on_shed(4.0, &shed);
+        let jsonl = t.to_jsonl();
+        let lines: Vec<&str> = jsonl.lines().collect();
+        assert_eq!(lines.len(), 5);
+        for line in &lines {
+            let j = Json::parse(line).expect("every JSONL line parses");
+            assert!(j.get("type").is_some());
+        }
+        assert!(lines[0].contains("\"span\""));
+        assert!(lines[2].contains("\"crash\""));
+        assert!(lines[4].contains("\"shed\""));
+    }
+
+    #[test]
+    fn chrome_trace_has_tracks_spans_and_instants() {
+        let mut t = TimelineSink::new();
+        t.on_batch(0.5, &batch(0, 0.5, 1.0));
+        t.on_batch(1.0, &batch(2, 1.0, 1.0));
+        t.on_fleet(
+            2.0,
+            &FleetRecord {
+                worker: 2,
+                kind: FleetEventKind::Drain,
+            },
+        );
+        t.on_migration(2.0, 2, 3);
+        let doc = t.to_chrome_trace();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let phase = |e: &Json| e.get("ph").unwrap().as_str().unwrap().to_string();
+        let meta: Vec<&Json> = events.iter().filter(|e| phase(e) == "M").collect();
+        let spans: Vec<&Json> = events.iter().filter(|e| phase(e) == "X").collect();
+        let insts: Vec<&Json> = events.iter().filter(|e| phase(e) == "i").collect();
+        assert_eq!(meta.len(), 2, "one thread_name per distinct worker");
+        assert_eq!(spans.len(), 2);
+        assert_eq!(insts.len(), 2);
+        // µs mapping: a 1 s span at t=0.5 s is ts=5e5, dur=1e6.
+        assert_eq!(spans[0].get("ts").unwrap().as_f64(), Some(5e5));
+        assert_eq!(spans[0].get("dur").unwrap().as_f64(), Some(1e6));
+        // The whole document round-trips through the parser.
+        let s = doc.to_string_pretty();
+        let back = Json::parse(&s).unwrap();
+        assert_eq!(
+            back.get("traceEvents").unwrap().as_arr().unwrap().len(),
+            events.len()
+        );
+    }
+}

@@ -1,0 +1,334 @@
+//! Per-worker time-series gauges and load-imbalance indices.
+//!
+//! The paper's load-balance claim is about *distributions over time* —
+//! per-worker KV occupancy, queue depth, busy fraction — not just the
+//! end-of-run completion-time spread. [`TimeSeriesSink`] is a
+//! [`MetricsSink`] that bins the run's per-worker observations into
+//! fixed-interval gauges (memory O(workers · duration/dt), independent of
+//! request count) and folds them into an [`ImbalanceReport`]:
+//!
+//! * **Jain's fairness index** `(Σx)² / (n·Σx²)` — 1.0 is perfectly
+//!   balanced, `1/n` is one worker doing everything;
+//! * **max/mean** — how far the hottest worker runs above the average;
+//! * **CV** (coefficient of variation, σ/μ) — the spread the paper's
+//!   CT-std metric approximates, but over *served work* rather than final
+//!   completion times.
+//!
+//! Observations arrive on two hooks: `on_worker_sample` (per serving
+//! iteration: decoded tokens, resident KV, queue depth — emitted by every
+//! built-in policy through `SimCtx::record_served`) and `on_batch` (busy
+//! spans: in the DES the serve duration is known at batch start). The sink
+//! never touches `RunMetrics`, so attaching it cannot move a run's
+//! deterministic fingerprint.
+
+use crate::metrics::{BatchRecord, MetricsSink};
+use crate::util::json::Json;
+
+/// Default gauge sampling interval (seconds of virtual time per bin).
+pub const DEFAULT_INTERVAL: f64 = 1.0;
+
+/// One worker's binned gauges plus run totals.
+#[derive(Debug, Clone, Default)]
+pub struct WorkerSeries {
+    /// Per-bin maximum resident KV tokens observed.
+    pub kv: Vec<u64>,
+    /// Per-bin maximum queue depth observed.
+    pub queue: Vec<u64>,
+    /// Per-bin busy seconds (serve-span overlap with the bin).
+    pub busy: Vec<f64>,
+    /// Total decoded tokens served by this worker.
+    pub served_tokens: u64,
+    /// Total busy seconds (Σ batch serve durations).
+    pub busy_time: f64,
+    /// Batches this worker served.
+    pub batches: u64,
+}
+
+/// Load-imbalance indices over a per-worker load vector.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ImbalanceReport {
+    /// Jain's fairness index in `[1/n, 1]`; 1.0 = perfectly balanced.
+    pub jains: f64,
+    /// Hottest worker's load over the mean (≥ 1.0; 1.0 = balanced).
+    pub max_over_mean: f64,
+    /// Coefficient of variation σ/μ (0.0 = balanced).
+    pub cv: f64,
+    /// The per-worker loads the indices were computed from.
+    pub per_worker: Vec<f64>,
+}
+
+impl ImbalanceReport {
+    /// Compute the indices from a per-worker load vector. Workers that
+    /// served nothing count as zeros (they are imbalance, not absence).
+    pub fn from_loads(loads: &[f64]) -> ImbalanceReport {
+        ImbalanceReport {
+            jains: jains_fairness(loads),
+            max_over_mean: max_over_mean(loads),
+            cv: coeff_of_variation(loads),
+            per_worker: loads.to_vec(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("jains", self.jains)
+            .set("max_over_mean", self.max_over_mean)
+            .set("cv", self.cv)
+            .set("per_worker", self.per_worker.clone());
+        o
+    }
+}
+
+/// Jain's fairness index `(Σx)²/(n·Σx²)`; 1.0 for empty/all-zero input
+/// (nothing served is vacuously balanced).
+pub fn jains_fairness(xs: &[f64]) -> f64 {
+    let n = xs.len() as f64;
+    let sum: f64 = xs.iter().sum();
+    let sq: f64 = xs.iter().map(|x| x * x).sum();
+    if n == 0.0 || sq == 0.0 {
+        1.0
+    } else {
+        (sum * sum) / (n * sq)
+    }
+}
+
+/// Max load over mean load; 1.0 for empty/all-zero input.
+pub fn max_over_mean(xs: &[f64]) -> f64 {
+    let n = xs.len() as f64;
+    let sum: f64 = xs.iter().sum();
+    let max = xs.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    if n == 0.0 || sum <= 0.0 {
+        1.0
+    } else {
+        max / (sum / n)
+    }
+}
+
+/// Coefficient of variation σ/μ (population σ); 0.0 for empty/all-zero.
+pub fn coeff_of_variation(xs: &[f64]) -> f64 {
+    let n = xs.len() as f64;
+    if n == 0.0 {
+        return 0.0;
+    }
+    let mean = xs.iter().sum::<f64>() / n;
+    if mean <= 0.0 {
+        return 0.0;
+    }
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    var.sqrt() / mean
+}
+
+/// Streaming per-worker time-series collector (see module docs).
+#[derive(Debug, Clone)]
+pub struct TimeSeriesSink {
+    dt: f64,
+    workers: Vec<WorkerSeries>,
+}
+
+impl Default for TimeSeriesSink {
+    fn default() -> Self {
+        TimeSeriesSink::new(DEFAULT_INTERVAL)
+    }
+}
+
+impl TimeSeriesSink {
+    /// Collector with a `dt`-second sampling interval.
+    pub fn new(dt: f64) -> TimeSeriesSink {
+        assert!(dt.is_finite() && dt > 0.0, "interval must be positive");
+        TimeSeriesSink {
+            dt,
+            workers: Vec::new(),
+        }
+    }
+
+    pub fn interval(&self) -> f64 {
+        self.dt
+    }
+
+    /// Per-worker series, indexed by worker id (empty entries for workers
+    /// that never appeared).
+    pub fn workers(&self) -> &[WorkerSeries] {
+        &self.workers
+    }
+
+    fn worker_mut(&mut self, w: usize) -> &mut WorkerSeries {
+        if w >= self.workers.len() {
+            self.workers.resize_with(w + 1, WorkerSeries::default);
+        }
+        &mut self.workers[w]
+    }
+
+    fn bin(&self, now: f64) -> usize {
+        ((now / self.dt).floor().max(0.0)) as usize
+    }
+
+    /// Imbalance indices over total served tokens per worker.
+    pub fn served_imbalance(&self) -> ImbalanceReport {
+        let loads: Vec<f64> = self.workers.iter().map(|w| w.served_tokens as f64).collect();
+        ImbalanceReport::from_loads(&loads)
+    }
+
+    /// Imbalance indices over total busy time per worker.
+    pub fn busy_imbalance(&self) -> ImbalanceReport {
+        let loads: Vec<f64> = self.workers.iter().map(|w| w.busy_time).collect();
+        ImbalanceReport::from_loads(&loads)
+    }
+
+    /// Per-worker busy *fraction* over `[0, horizon]` (clamped to 1.0 per
+    /// worker when spans overlap the horizon edge).
+    pub fn busy_fractions(&self, horizon: f64) -> Vec<f64> {
+        if !(horizon.is_finite() && horizon > 0.0) {
+            return vec![0.0; self.workers.len()];
+        }
+        self.workers
+            .iter()
+            .map(|w| (w.busy_time / horizon).min(1.0))
+            .collect()
+    }
+
+    /// Full per-worker series + indices as JSON (the `figobs` payload).
+    pub fn to_json(&self, horizon: f64) -> Json {
+        let mut o = Json::obj();
+        o.set("interval", self.dt)
+            .set("served_imbalance", self.served_imbalance().to_json())
+            .set("busy_imbalance", self.busy_imbalance().to_json())
+            .set("busy_fractions", self.busy_fractions(horizon));
+        let workers: Vec<Json> = self
+            .workers
+            .iter()
+            .enumerate()
+            .map(|(i, w)| {
+                let mut j = Json::obj();
+                j.set("worker", i)
+                    .set("served_tokens", w.served_tokens)
+                    .set("busy_time", w.busy_time)
+                    .set("batches", w.batches)
+                    .set("kv_max", Json::Arr(w.kv.iter().map(|&x| Json::from(x)).collect()))
+                    .set(
+                        "queue_max",
+                        Json::Arr(w.queue.iter().map(|&x| Json::from(x)).collect()),
+                    )
+                    .set("busy", w.busy.clone());
+                j
+            })
+            .collect();
+        o.set("workers", Json::Arr(workers));
+        o
+    }
+}
+
+impl MetricsSink for TimeSeriesSink {
+    fn on_batch(&mut self, now: f64, rec: &BatchRecord) {
+        let dt = self.dt;
+        let bin0 = self.bin(now);
+        let dur = rec.actual_serve_time.max(0.0);
+        let w = self.worker_mut(rec.worker);
+        w.batches += 1;
+        w.busy_time += dur;
+        // Spread the serve span over the bins it overlaps.
+        let end = now + dur;
+        let bin1 = ((end / dt).floor().max(0.0)) as usize;
+        if w.busy.len() <= bin1 {
+            w.busy.resize(bin1 + 1, 0.0);
+        }
+        for (k, slot) in w.busy.iter_mut().enumerate().take(bin1 + 1).skip(bin0) {
+            let lo = (k as f64 * dt).max(now);
+            let hi = ((k + 1) as f64 * dt).min(end);
+            if hi > lo {
+                *slot += hi - lo;
+            }
+        }
+    }
+
+    fn on_worker_sample(
+        &mut self,
+        now: f64,
+        worker: usize,
+        new_tokens: u64,
+        kv_in_use: u64,
+        queue_depth: usize,
+    ) {
+        let bin = self.bin(now);
+        let w = self.worker_mut(worker);
+        w.served_tokens += new_tokens;
+        if w.kv.len() <= bin {
+            w.kv.resize(bin + 1, 0);
+        }
+        w.kv[bin] = w.kv[bin].max(kv_in_use);
+        if w.queue.len() <= bin {
+            w.queue.resize(bin + 1, 0);
+        }
+        w.queue[bin] = w.queue[bin].max(queue_depth as u64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indices_on_degenerate_inputs() {
+        assert_eq!(jains_fairness(&[]), 1.0);
+        assert_eq!(jains_fairness(&[0.0, 0.0]), 1.0);
+        assert_eq!(max_over_mean(&[]), 1.0);
+        assert_eq!(coeff_of_variation(&[]), 0.0);
+    }
+
+    #[test]
+    fn indices_on_balanced_and_skewed_loads() {
+        let balanced = [10.0, 10.0, 10.0, 10.0];
+        assert!((jains_fairness(&balanced) - 1.0).abs() < 1e-12);
+        assert!((max_over_mean(&balanced) - 1.0).abs() < 1e-12);
+        assert!(coeff_of_variation(&balanced).abs() < 1e-12);
+
+        let one_hot = [40.0, 0.0, 0.0, 0.0];
+        assert!((jains_fairness(&one_hot) - 0.25).abs() < 1e-12, "1/n");
+        assert!((max_over_mean(&one_hot) - 4.0).abs() < 1e-12);
+        assert!(coeff_of_variation(&one_hot) > 1.0);
+
+        // More balanced always scores higher on Jain's.
+        let mild = [12.0, 11.0, 9.0, 8.0];
+        assert!(jains_fairness(&mild) > jains_fairness(&one_hot));
+    }
+
+    #[test]
+    fn sink_bins_samples_and_busy_spans() {
+        let mut ts = TimeSeriesSink::new(1.0);
+        ts.on_worker_sample(0.4, 0, 64, 512, 3);
+        ts.on_worker_sample(0.9, 0, 32, 800, 1);
+        ts.on_worker_sample(2.5, 1, 128, 300, 0);
+        // A 1.5 s serve span starting at 0.75 overlaps bins 0, 1, 2.
+        ts.on_batch(
+            0.75,
+            &BatchRecord {
+                start: 0.75,
+                worker: 0,
+                size: 4,
+                input_len: 64,
+                pad_tokens: 0,
+                est_serve_time: 1.4,
+                actual_serve_time: 1.5,
+                early_return: false,
+            },
+        );
+        let w0 = &ts.workers()[0];
+        assert_eq!(w0.served_tokens, 96);
+        assert_eq!(w0.kv[0], 800, "bin keeps the max gauge");
+        assert_eq!(w0.queue[0], 3);
+        assert_eq!(w0.batches, 1);
+        assert!((w0.busy_time - 1.5).abs() < 1e-12);
+        assert!((w0.busy[0] - 0.25).abs() < 1e-12);
+        assert!((w0.busy[1] - 1.0).abs() < 1e-12);
+        assert!((w0.busy[2] - 0.25).abs() < 1e-12);
+        let w1 = &ts.workers()[1];
+        assert_eq!(w1.served_tokens, 128);
+        assert_eq!(w1.kv[2], 300);
+
+        let rep = ts.served_imbalance();
+        assert_eq!(rep.per_worker, vec![96.0, 128.0]);
+        assert!(rep.jains > 0.9 && rep.jains <= 1.0);
+        let busy = ts.busy_fractions(3.0);
+        assert!((busy[0] - 0.5).abs() < 1e-12);
+        assert_eq!(busy[1], 0.0);
+    }
+}

@@ -1,7 +1,9 @@
 //! Minimal `log` facade backend (env_logger is not in the offline registry).
 //!
-//! `SCLS_LOG=debug|info|warn|error|off` controls the level (default `info`).
-//! Messages go to stderr with elapsed wall-time prefixes.
+//! `SCLS_LOG=trace|debug|info|warn|error|off` controls the level (default
+//! `info`). Any other non-empty value falls back to `info` and a one-line
+//! warning is printed so typos (`SCLS_LOG=dbug`) don't silently change the
+//! level. Messages go to stderr with elapsed wall-time prefixes.
 
 use std::sync::OnceLock;
 use std::time::Instant;
@@ -36,9 +38,11 @@ static LOGGER: OnceLock<StderrLogger> = OnceLock::new();
 
 /// Install the logger (idempotent). Call once at binary startup.
 pub fn init() {
-    let level = match std::env::var("SCLS_LOG").as_deref() {
-        Ok("debug") => log::LevelFilter::Debug,
+    let var = std::env::var("SCLS_LOG");
+    let level = match var.as_deref() {
         Ok("trace") => log::LevelFilter::Trace,
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("info") => log::LevelFilter::Info,
         Ok("warn") => log::LevelFilter::Warn,
         Ok("error") => log::LevelFilter::Error,
         Ok("off") => log::LevelFilter::Off,
@@ -50,4 +54,9 @@ pub fn init() {
     });
     let _ = log::set_logger(logger);
     log::set_max_level(level);
+    if let Ok(v) = var.as_deref() {
+        if !v.is_empty() && !matches!(v, "trace" | "debug" | "info" | "warn" | "error" | "off") {
+            log::warn!("unrecognized SCLS_LOG value {v:?}; defaulting to info");
+        }
+    }
 }
