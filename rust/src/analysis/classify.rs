@@ -1,0 +1,119 @@
+//! Module classification for the lint rules.
+//!
+//! Paths are crate-relative (`src/sim/driver.rs`, `src/main.rs`) with `/`
+//! separators. Classification is purely positional: the first directory
+//! under `src/` names the module, top-level files classify as their stem
+//! (`src/main.rs` → `main`). Two module sets drive the rules:
+//!
+//! * **Deterministic modules** — the simulator's measurement core. Every
+//!   byte of their output must be a pure function of (trace, config,
+//!   seed): no hash-order iteration, no wall clock, no ad-hoc float
+//!   comparators. This is what the frozen differential suites
+//!   (`props_policy_differential`, `props_dp_differential`, ...) rely on.
+//! * **Real-time allowlist** — the modules whose *job* is wall-clock time
+//!   (profiling, bench harness, log timestamps, the real PJRT driver).
+//!   Only these may touch `Instant`/`SystemTime`.
+
+/// Modules whose behaviour must be bit-deterministic (hash-order and
+/// float-cmp rules apply).
+pub const DETERMINISTIC_MODULES: [&str; 10] = [
+    "core",
+    "sim",
+    "scheduler",
+    "batcher",
+    "estimator",
+    "engine",
+    "offloader",
+    "predictor",
+    "slo",
+    "workload",
+];
+
+/// Modules (or `module/file` submodules) allowed to read the wall clock.
+pub const WALL_CLOCK_ALLOWLIST: [&str; 6] = [
+    "telemetry/profile",
+    "bench",
+    "util/logging",
+    "runtime",
+    "worker/real_driver",
+    "main",
+];
+
+/// Top-level module of a crate-relative path (`src/sim/driver.rs` → `sim`,
+/// `src/main.rs` → `main`). Non-`src/` paths have no module.
+pub fn module_of(rel: &str) -> Option<&str> {
+    let mut parts = rel.split('/');
+    if parts.next() != Some("src") {
+        return None;
+    }
+    let first = parts.next()?;
+    match parts.next() {
+        Some(_) => Some(first),
+        None => Some(first.strip_suffix(".rs").unwrap_or(first)),
+    }
+}
+
+/// `module/file-stem` of a nested path (`src/util/logging.rs` →
+/// `util/logging`); `None` for top-level files.
+pub fn submodule_of(rel: &str) -> Option<String> {
+    let parts: Vec<&str> = rel.split('/').collect();
+    if parts.first() != Some(&"src") || parts.len() < 3 {
+        return None;
+    }
+    let stem = parts[2].strip_suffix(".rs").unwrap_or(parts[2]);
+    Some(format!("{}/{stem}", parts[1]))
+}
+
+/// True when the deterministic-module rules (hash-order, float-cmp) apply.
+pub fn is_deterministic(rel: &str) -> bool {
+    module_of(rel).is_some_and(|m| DETERMINISTIC_MODULES.contains(&m))
+}
+
+/// True when the file may read the wall clock.
+pub fn wall_clock_allowed(rel: &str) -> bool {
+    if module_of(rel).is_some_and(|m| WALL_CLOCK_ALLOWLIST.contains(&m)) {
+        return true;
+    }
+    submodule_of(rel).is_some_and(|s| WALL_CLOCK_ALLOWLIST.contains(&s.as_str()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classification() {
+        assert_eq!(module_of("src/sim/driver.rs"), Some("sim"));
+        assert_eq!(module_of("src/main.rs"), Some("main"));
+        assert_eq!(module_of("src/lib.rs"), Some("lib"));
+        assert_eq!(module_of("tests/props_lint.rs"), None);
+        assert_eq!(submodule_of("src/util/logging.rs"), Some("util/logging".into()));
+        assert_eq!(submodule_of("src/main.rs"), None);
+    }
+
+    #[test]
+    fn deterministic_set() {
+        assert!(is_deterministic("src/sim/driver.rs"));
+        assert!(is_deterministic("src/batcher/dp.rs"));
+        assert!(is_deterministic("src/predictor/mod.rs"));
+        assert!(!is_deterministic("src/telemetry/hist.rs"));
+        assert!(!is_deterministic("src/util/stats.rs"));
+        assert!(!is_deterministic("src/metrics/sink.rs"));
+        assert!(!is_deterministic("src/main.rs"));
+        assert!(!is_deterministic("src/analysis/rules.rs"));
+    }
+
+    #[test]
+    fn wall_clock_allowlist() {
+        assert!(wall_clock_allowed("src/telemetry/profile.rs"));
+        assert!(wall_clock_allowed("src/bench/harness.rs"));
+        assert!(wall_clock_allowed("src/util/logging.rs"));
+        assert!(wall_clock_allowed("src/runtime/client.rs"));
+        assert!(wall_clock_allowed("src/worker/real_driver.rs"));
+        assert!(wall_clock_allowed("src/main.rs"));
+        assert!(!wall_clock_allowed("src/telemetry/timeline.rs"));
+        assert!(!wall_clock_allowed("src/worker/mod.rs"));
+        assert!(!wall_clock_allowed("src/sim/driver.rs"));
+        assert!(!wall_clock_allowed("src/util/stats.rs"));
+    }
+}

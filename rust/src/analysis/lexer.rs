@@ -1,0 +1,476 @@
+//! Comment/string-stripping token scanner for the lint pass.
+//!
+//! Not a Rust parser: a single forward scan that is exact about the three
+//! things the rules need — (1) which characters are code vs. comment vs.
+//! string/char literal, (2) identifier/number/punctuation token boundaries
+//! with 1-based line attribution, and (3) per-line
+//! `// scls-lint: allow(<rule>[, <rule>...])` suppression directives
+//! harvested from line comments. String *contents* are kept on their
+//! tokens (the sink-surface rule reads the registry's name literals) but
+//! never match identifier rules, so `"HashMap"` in a message is not a
+//! finding.
+//!
+//! Mirrored line-for-line by the Python generator used to author
+//! `lint/frozen.sha256` — behavioural changes here must keep the frozen
+//! span extraction ([`crate::analysis::manifest`]) byte-stable.
+
+use std::collections::BTreeMap;
+
+/// Token class. `Str` covers string/byte-string/raw-string literals;
+/// char literals and lifetimes produce no token at all.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Num,
+    Str,
+    Punct,
+}
+
+/// One lexed token with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub line: u32,
+    pub kind: TokKind,
+    pub text: String,
+    /// For `Num` tokens: the literal is a float (has a fraction, a decimal
+    /// exponent, or an `f32`/`f64` suffix).
+    pub is_float: bool,
+}
+
+/// Per-line suppressions: line number → rules allowed on that line.
+pub type Suppressions = BTreeMap<u32, Vec<String>>;
+
+/// Two-character operators lexed as one token (the rules only consume
+/// `==`/`!=`/`::`, but lexing the rest keeps e.g. `<=` from emitting a
+/// stray `=` that could pair into a phantom comparator).
+const TWO_CHAR: [&str; 10] = ["==", "!=", "::", "<=", ">=", "->", "=>", "..", "&&", "||"];
+
+fn is_ident_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_'
+}
+
+fn is_ident_cont(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Lex `src` into tokens plus the per-line suppression table.
+pub fn lex(src: &str) -> (Vec<Tok>, Suppressions) {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut toks = Vec::new();
+    let mut supp = Suppressions::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == ' ' || c == '\t' || c == '\r' {
+            i += 1;
+            continue;
+        }
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let mut j = i + 2;
+            while j < n && chars[j] != '\n' {
+                j += 1;
+            }
+            let comment: String = chars[i + 2..j].iter().collect();
+            scan_suppression(&comment, line, &mut supp);
+            i = j;
+            continue;
+        }
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let mut depth = 1u32;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if chars[j] == '\n' {
+                    line += 1;
+                    j += 1;
+                } else if chars[j] == '/' && j + 1 < n && chars[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if chars[j] == '*' && j + 1 < n && chars[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            i = j;
+            continue;
+        }
+        if c == '"' {
+            let start_line = line;
+            let (j, nl, content) = consume_string(&chars, i);
+            line += nl;
+            toks.push(Tok {
+                line: start_line,
+                kind: TokKind::Str,
+                text: content,
+                is_float: false,
+            });
+            i = j;
+            continue;
+        }
+        if c == '\'' {
+            // Char literal (`'x'`, `'\n'`, `'\u{1F600}'`) or lifetime
+            // (`'a`, `'_`). Escaped literals scan to the closing quote;
+            // `'x'` is recognized by the quote two ahead; anything else is
+            // a lifetime and is skipped without emitting a token.
+            if i + 1 < n && chars[i + 1] == '\\' {
+                let mut j = i + 2;
+                if j < n {
+                    j += 1; // the escaped character itself
+                }
+                while j < n && chars[j] != '\'' {
+                    j += 1;
+                }
+                i = (j + 1).min(n);
+                continue;
+            }
+            if i + 2 < n && chars[i + 2] == '\'' {
+                i += 3;
+                continue;
+            }
+            let mut j = i + 1;
+            while j < n && is_ident_cont(chars[j]) {
+                j += 1;
+            }
+            i = j;
+            continue;
+        }
+        if is_ident_start(c) {
+            let mut j = i + 1;
+            while j < n && is_ident_cont(chars[j]) {
+                j += 1;
+            }
+            let text: String = chars[i..j].iter().collect();
+            // Raw/byte string prefixes: `r"..."`, `r#"..."#`, `b"..."`,
+            // `br#"..."#`. The prefix ident is swallowed by the literal.
+            if (text == "r" || text == "b" || text == "br")
+                && j < n
+                && (chars[j] == '"' || chars[j] == '#')
+            {
+                let start_line = line;
+                let (k, nl, content) = consume_raw_string(&chars, j);
+                if k > j {
+                    line += nl;
+                    toks.push(Tok {
+                        line: start_line,
+                        kind: TokKind::Str,
+                        text: content,
+                        is_float: false,
+                    });
+                    i = k;
+                    continue;
+                }
+            }
+            toks.push(Tok {
+                line,
+                kind: TokKind::Ident,
+                text,
+                is_float: false,
+            });
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let (j, is_float) = consume_number(&chars, i);
+            toks.push(Tok {
+                line,
+                kind: TokKind::Num,
+                text: chars[i..j].iter().collect(),
+                is_float,
+            });
+            i = j;
+            continue;
+        }
+        let two: String = chars[i..(i + 2).min(n)].iter().collect();
+        if TWO_CHAR.contains(&two.as_str()) {
+            toks.push(Tok {
+                line,
+                kind: TokKind::Punct,
+                text: two,
+                is_float: false,
+            });
+            i += 2;
+            continue;
+        }
+        toks.push(Tok {
+            line,
+            kind: TokKind::Punct,
+            text: c.to_string(),
+            is_float: false,
+        });
+        i += 1;
+    }
+    (toks, supp)
+}
+
+/// Consume a `"..."` literal starting at the opening quote. Returns
+/// (index past the closing quote, newlines crossed, raw content).
+fn consume_string(chars: &[char], start: usize) -> (usize, u32, String) {
+    let n = chars.len();
+    let mut j = start + 1;
+    let mut nl = 0u32;
+    let mut content = String::new();
+    while j < n {
+        if chars[j] == '\\' {
+            content.push(chars[j]);
+            if j + 1 < n {
+                content.push(chars[j + 1]);
+            }
+            j += 2;
+            continue;
+        }
+        if chars[j] == '\n' {
+            nl += 1;
+            content.push('\n');
+            j += 1;
+            continue;
+        }
+        if chars[j] == '"' {
+            return (j + 1, nl, content);
+        }
+        content.push(chars[j]);
+        j += 1;
+    }
+    (n, nl, content)
+}
+
+/// Consume a raw string whose `#`/`"` run starts at `start` (just past the
+/// `r`/`b`/`br` prefix). Returns (index past the close, newlines crossed,
+/// content); a non-match (e.g. the raw identifier `r#match`) returns
+/// `start` untouched so the caller falls back to the plain identifier.
+fn consume_raw_string(chars: &[char], start: usize) -> (usize, u32, String) {
+    let n = chars.len();
+    let mut j = start;
+    let mut hashes = 0usize;
+    while j < n && chars[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j >= n || chars[j] != '"' {
+        return (start, 0, String::new());
+    }
+    j += 1;
+    let mut nl = 0u32;
+    let mut content = String::new();
+    while j < n {
+        if chars[j] == '\n' {
+            nl += 1;
+            content.push('\n');
+            j += 1;
+            continue;
+        }
+        if chars[j] == '"' {
+            let mut k = j + 1;
+            let mut seen = 0usize;
+            while k < n && seen < hashes && chars[k] == '#' {
+                seen += 1;
+                k += 1;
+            }
+            if seen == hashes {
+                return (k, nl, content);
+            }
+        }
+        content.push(chars[j]);
+        j += 1;
+    }
+    (n, nl, content)
+}
+
+/// Consume a numeric literal starting at a digit. A `.` is part of the
+/// number only when followed by a digit (so `1..5` and `1.max(2)` lex as
+/// integer + punctuation), mirroring rustc closely enough for the rules.
+fn consume_number(chars: &[char], start: usize) -> (usize, bool) {
+    let n = chars.len();
+    let mut j = start + 1;
+    let mut is_float = false;
+    if chars[start] == '0' && j < n && (chars[j] == 'x' || chars[j] == 'o' || chars[j] == 'b') {
+        j += 1;
+        while j < n && is_ident_cont(chars[j]) {
+            j += 1;
+        }
+        return (j, false);
+    }
+    while j < n && (chars[j].is_ascii_digit() || chars[j] == '_') {
+        j += 1;
+    }
+    if j < n && chars[j] == '.' && j + 1 < n && chars[j + 1].is_ascii_digit() {
+        is_float = true;
+        j += 1;
+        while j < n && (chars[j].is_ascii_digit() || chars[j] == '_') {
+            j += 1;
+        }
+    }
+    if j < n && (chars[j] == 'e' || chars[j] == 'E') {
+        let mut k = j + 1;
+        if k < n && (chars[k] == '+' || chars[k] == '-') {
+            k += 1;
+        }
+        if k < n && chars[k].is_ascii_digit() {
+            is_float = true;
+            j = k;
+            while j < n && (chars[j].is_ascii_digit() || chars[j] == '_') {
+                j += 1;
+            }
+        }
+    }
+    let suffix_start = j;
+    while j < n && is_ident_cont(chars[j]) {
+        j += 1;
+    }
+    let suffix: String = chars[suffix_start..j].iter().collect();
+    if suffix == "f32" || suffix == "f64" {
+        is_float = true;
+    }
+    (j, is_float)
+}
+
+/// Harvest `scls-lint: allow(rule[, rule...])` from one line comment's
+/// text. Rule names are kebab-case; anything after the closing paren is
+/// free-form justification and is ignored.
+fn scan_suppression(comment: &str, line: u32, supp: &mut Suppressions) {
+    let Some(pos) = comment.find("scls-lint:") else {
+        return;
+    };
+    let rest = comment[pos + "scls-lint:".len()..].trim_start();
+    let Some(inner) = rest.strip_prefix("allow(") else {
+        return;
+    };
+    let Some(close) = inner.find(')') else {
+        return;
+    };
+    for rule in inner[..close].split(',') {
+        let rule = rule.trim();
+        let well_formed = !rule.is_empty()
+            && rule
+                .chars()
+                .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '-');
+        if well_formed {
+            supp.entry(line).or_default().push(rule.to_string());
+        }
+    }
+}
+
+/// True when `rule` is suppressed on `line`.
+pub fn is_allowed(supp: &Suppressions, line: u32, rule: &str) -> bool {
+    supp.get(&line).is_some_and(|rules| rules.iter().any(|r| r == rule))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<(u32, String)> {
+        lex(src)
+            .0
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| (t.line, t.text))
+            .collect()
+    }
+
+    #[test]
+    fn comments_and_strings_emit_no_idents() {
+        let src = "// HashMap here\nlet x = \"HashMap\";\n/* HashMap\n HashMap */ let y = 1;\n";
+        let ids = idents(src);
+        assert_eq!(
+            ids,
+            vec![(2, "let".into()), (2, "x".into()), (4, "let".into()), (4, "y".into())]
+        );
+    }
+
+    #[test]
+    fn string_tokens_keep_content_and_lines_advance() {
+        let src = "let a = \"two\nlines\";\nlet b = 2;\n";
+        let (toks, _) = lex(src);
+        let s: Vec<&Tok> = toks.iter().filter(|t| t.kind == TokKind::Str).collect();
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0].text, "two\nlines");
+        assert_eq!(s[0].line, 1);
+        let b: Vec<&Tok> = toks.iter().filter(|t| t.text == "b").collect();
+        assert_eq!(b[0].line, 3, "newline inside the string must count");
+    }
+
+    #[test]
+    fn raw_strings_and_lifetimes() {
+        let src = "let s = r#\"Instant::now() \"quoted\" \"#; fn f<'a>(x: &'a str) {}\n";
+        let (toks, _) = lex(src);
+        assert!(!toks.iter().any(|t| t.kind == TokKind::Ident && t.text == "Instant"));
+        let raw: Vec<&Tok> = toks.iter().filter(|t| t.kind == TokKind::Str).collect();
+        assert_eq!(raw.len(), 1);
+        assert!(raw[0].text.contains("Instant::now()"));
+        // The lifetime `'a` emits nothing; `a` must not appear as an ident.
+        assert!(!toks.iter().any(|t| t.kind == TokKind::Ident && t.text == "a"));
+    }
+
+    #[test]
+    fn char_literals_do_not_eat_code() {
+        let src = "let c = 'x'; let nl = '\\n'; let d = c;\n";
+        let ids = idents(src);
+        assert!(ids.iter().any(|(_, t)| t == "d"));
+        assert_eq!(ids.iter().filter(|(_, t)| t == "let").count(), 3);
+    }
+
+    #[test]
+    fn number_classification() {
+        let cases = [
+            ("1", false),
+            ("10_000", false),
+            ("0xff", false),
+            ("0b1010", false),
+            ("1.5", true),
+            ("2.0f64", true),
+            ("1e3", true),
+            ("1.5e-3", true),
+            ("3f64", true),
+            ("128u32", false),
+        ];
+        for (lit, want) in cases {
+            let (toks, _) = lex(&format!("let x = {lit};"));
+            let num = toks.iter().find(|t| t.kind == TokKind::Num).unwrap();
+            assert_eq!(num.is_float, want, "{lit}");
+            assert_eq!(num.text, lit, "{lit}");
+        }
+    }
+
+    #[test]
+    fn range_and_method_dots_are_not_fractions() {
+        let (toks, _) = lex("for i in 1..5 { x = 1.max(2); }");
+        let nums: Vec<&Tok> = toks.iter().filter(|t| t.kind == TokKind::Num).collect();
+        assert!(nums.iter().all(|t| !t.is_float), "{nums:?}");
+    }
+
+    #[test]
+    fn two_char_operators_lex_whole() {
+        let (toks, _) = lex("a == b; c != d; e::f; g <= 1.0;");
+        let puncts: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Punct)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert!(puncts.contains(&"=="));
+        assert!(puncts.contains(&"!="));
+        assert!(puncts.contains(&"::"));
+        assert!(puncts.contains(&"<="));
+        assert!(!puncts.contains(&"="), "no stray `=` from `<=`: {puncts:?}");
+    }
+
+    #[test]
+    fn suppressions_parse_per_line() {
+        let src = "let m = x; // scls-lint: allow(hash-order): keyed, never iterated\n\
+                   let n = y; // scls-lint: allow(float-cmp, wall-clock)\n\
+                   let o = z; // plain comment\n";
+        let (_, supp) = lex(src);
+        assert!(is_allowed(&supp, 1, "hash-order"));
+        assert!(!is_allowed(&supp, 1, "float-cmp"));
+        assert!(is_allowed(&supp, 2, "float-cmp"));
+        assert!(is_allowed(&supp, 2, "wall-clock"));
+        assert!(!is_allowed(&supp, 3, "hash-order"));
+    }
+}

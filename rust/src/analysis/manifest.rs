@@ -1,0 +1,293 @@
+//! Frozen-reference manifests: the `frozen-manifest` rule.
+//!
+//! The differential test suites pin today's optimised schedulers to
+//! reference implementations that were reviewed once and then *frozen* —
+//! their bytes are the spec. This module hashes those artifacts and
+//! compares against the committed manifest at `lint/frozen.sha256`
+//! (relative to the crate root), so an edit to a reference — even a
+//! well-intentioned one — fails lint until the manifest is regenerated
+//! deliberately via `scls-repro lint --write-manifest`.
+//!
+//! Two entry forms:
+//!
+//! * `path` — SHA-256 of the whole file's bytes.
+//! * `path#fn_name` — SHA-256 of the named fn item's span: the line
+//!   holding the `fn` keyword through the line of its matching close
+//!   brace, each line rejoined with `\n`. Brace matching runs on the
+//!   lexed token stream, so braces in comments and strings don't count.
+//!
+//! Manifest line format is `sha256sum`-compatible: `<hex>  <entry>` with
+//! two spaces; blank lines and `#`-prefixed comment lines are skipped.
+
+use std::fs;
+use std::path::Path;
+
+use super::lexer::{self, TokKind};
+use super::rules::RULE_FROZEN_MANIFEST;
+use super::{sha256, Finding};
+
+/// Where the manifest lives, relative to the crate root.
+pub const MANIFEST_PATH: &str = "lint/frozen.sha256";
+
+/// The canonical frozen artifacts. Every entry must appear in the
+/// committed manifest; a manifest that drops one is itself a finding.
+pub const FROZEN: [&str; 7] = [
+    "src/sim/reference.rs",
+    "src/batcher/dp.rs#dp_batch_reference",
+    "src/batcher/dp.rs#dp_plan_reference",
+    "src/batcher/dp.rs#dp_plan_corrected_reference",
+    "tests/props_dp_differential.rs",
+    "tests/props_dp_corrected_differential.rs",
+    "tests/props_policy_differential.rs",
+];
+
+/// 1-based inclusive line span of the first `fn <name>` item in `src`:
+/// the `fn` keyword's line through the line of the brace closing its
+/// body. `None` when the fn (or a complete body) isn't found.
+pub fn fn_span(src: &str, fn_name: &str) -> Option<(u32, u32)> {
+    let (toks, _) = lexer::lex(src);
+    let mut i = 0;
+    while i < toks.len() {
+        let is_decl = toks[i].kind == TokKind::Ident
+            && toks[i].text == "fn"
+            && toks.get(i + 1).is_some_and(|t| t.kind == TokKind::Ident && t.text == fn_name);
+        if !is_decl {
+            i += 1;
+            continue;
+        }
+        let start_line = toks[i].line;
+        let mut j = i + 2;
+        while j < toks.len() && !(toks[j].kind == TokKind::Punct && toks[j].text == "{") {
+            j += 1;
+        }
+        let mut depth = 0i32;
+        while j < toks.len() {
+            if toks[j].kind == TokKind::Punct {
+                if toks[j].text == "{" {
+                    depth += 1;
+                } else if toks[j].text == "}" {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Some((start_line, toks[j].line));
+                    }
+                }
+            }
+            j += 1;
+        }
+        return None;
+    }
+    None
+}
+
+/// Bytes of lines `lo..=hi` (1-based), each line rejoined with `\n` —
+/// the normalisation both the manifest writer and checker hash.
+pub fn span_bytes(src: &str, lo: u32, hi: u32) -> Vec<u8> {
+    let mut out = Vec::new();
+    for (idx, line) in src.split('\n').enumerate() {
+        let n = (idx + 1) as u32;
+        if n >= lo && n <= hi {
+            out.extend_from_slice(line.as_bytes());
+            out.push(b'\n');
+        }
+    }
+    out
+}
+
+/// Digest of one manifest entry under `root`, or `None` when the file or
+/// fn span can't be resolved.
+pub fn digest_entry(root: &Path, entry: &str) -> Option<String> {
+    if let Some((path, fn_name)) = entry.split_once('#') {
+        let src = fs::read_to_string(root.join(path)).ok()?;
+        let (lo, hi) = fn_span(&src, fn_name)?;
+        Some(sha256::digest_hex(&span_bytes(&src, lo, hi)))
+    } else {
+        let data = fs::read(root.join(entry)).ok()?;
+        Some(sha256::digest_hex(&data))
+    }
+}
+
+/// Parse manifest text into `(digest, entry)` pairs. Malformed lines are
+/// returned as findings rather than silently dropped.
+pub fn parse(text: &str) -> (Vec<(String, String)>, Vec<Finding>) {
+    let mut entries = Vec::new();
+    let mut findings = Vec::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let ok = line
+            .split_once("  ")
+            .filter(|(hex, entry)| {
+                hex.len() == 64
+                    && hex.bytes().all(|b| b.is_ascii_hexdigit())
+                    && !entry.trim().is_empty()
+            })
+            .map(|(hex, entry)| (hex.to_string(), entry.trim().to_string()));
+        match ok {
+            Some(pair) => entries.push(pair),
+            None => findings.push(Finding {
+                file: MANIFEST_PATH.to_string(),
+                line: (idx + 1) as u32,
+                rule: RULE_FROZEN_MANIFEST,
+                message: format!("malformed manifest line (want `<sha256-hex>  <entry>`): {line}"),
+            }),
+        }
+    }
+    (entries, findings)
+}
+
+/// Check the committed manifest under `root`. A missing manifest file is
+/// itself a finding — the frozen references must always be pinned.
+pub fn check(root: &Path) -> Vec<Finding> {
+    match fs::read_to_string(root.join(MANIFEST_PATH)) {
+        Ok(text) => check_with(root, &text, &FROZEN),
+        Err(_) => vec![Finding {
+            file: MANIFEST_PATH.to_string(),
+            line: 0,
+            rule: RULE_FROZEN_MANIFEST,
+            message: format!(
+                "manifest {MANIFEST_PATH} is missing; regenerate with \
+                 `scls-repro lint --write-manifest` and review the diff"
+            ),
+        }],
+    }
+}
+
+/// Testable core of [`check`]: verify `manifest_text` against the tree at
+/// `root`, requiring every entry in `required` to be covered.
+pub fn check_with(root: &Path, manifest_text: &str, required: &[&str]) -> Vec<Finding> {
+    let (entries, mut findings) = parse(manifest_text);
+    for (want, entry) in &entries {
+        match digest_entry(root, entry) {
+            None => findings.push(Finding {
+                file: MANIFEST_PATH.to_string(),
+                line: 0,
+                rule: RULE_FROZEN_MANIFEST,
+                message: format!("frozen artifact `{entry}` not found (file or fn span missing)"),
+            }),
+            Some(got) if got != *want => findings.push(Finding {
+                file: entry.split('#').next().unwrap_or(entry).to_string(),
+                line: 0,
+                rule: RULE_FROZEN_MANIFEST,
+                message: format!(
+                    "frozen artifact `{entry}` drifted: manifest {want} != tree {got}; \
+                     frozen references are the spec — revert, or regenerate the manifest \
+                     with `--write-manifest` and have the diff reviewed"
+                ),
+            }),
+            Some(_) => {}
+        }
+    }
+    for req in required {
+        if !entries.iter().any(|(_, e)| e == req) {
+            findings.push(Finding {
+                file: MANIFEST_PATH.to_string(),
+                line: 0,
+                rule: RULE_FROZEN_MANIFEST,
+                message: format!(
+                    "canonical frozen artifact `{req}` is not covered by the manifest"
+                ),
+            });
+        }
+    }
+    findings
+}
+
+/// The comment header both the committed manifest and `--write-manifest`
+/// regeneration carry, so regeneration on an unchanged tree is a no-op
+/// diff.
+pub const HEADER: &str = "\
+# Frozen-reference manifest — checked by `scls-repro lint` (rule:
+# frozen-manifest). These artifacts are byte-frozen: the differential
+# suites compare optimised implementations against them, so any edit
+# must be deliberate. Regenerate with `scls-repro lint --write-manifest`
+# and have the diff reviewed.
+";
+
+/// Render the manifest for the current tree (the `--write-manifest`
+/// payload). Entries that can't be digested render as a comment so the
+/// breakage is visible in the diff rather than silently dropped.
+pub fn render(root: &Path) -> String {
+    let mut out = String::from(HEADER);
+    for entry in FROZEN {
+        match digest_entry(root, entry) {
+            Some(hex) => {
+                out.push_str(&hex);
+                out.push_str("  ");
+            }
+            None => out.push_str("# UNRESOLVED  "),
+        }
+        out.push_str(entry);
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SRC: &str = "fn alpha() -> u32 {\n    let s = \"}\"; // }\n    1\n}\n\nfn beta() {}\n";
+
+    #[test]
+    fn fn_span_matches_braces_not_strings() {
+        assert_eq!(fn_span(SRC, "alpha"), Some((1, 4)));
+        assert_eq!(fn_span(SRC, "beta"), Some((6, 6)));
+        assert_eq!(fn_span(SRC, "gamma"), None);
+    }
+
+    #[test]
+    fn span_bytes_rejoins_with_newlines() {
+        assert_eq!(span_bytes(SRC, 6, 6), b"fn beta() {}\n");
+        let whole = span_bytes(SRC, 1, 4);
+        assert!(whole.starts_with(b"fn alpha"));
+        assert!(whole.ends_with(b"}\n"));
+    }
+
+    #[test]
+    fn parse_flags_malformed_lines() {
+        let text = "# comment\n\nabc  src/x.rs\n";
+        let (entries, findings) = parse(text);
+        assert!(entries.is_empty());
+        assert_eq!(findings.len(), 1);
+        assert_eq!(findings[0].line, 3);
+        assert_eq!(findings[0].rule, RULE_FROZEN_MANIFEST);
+    }
+
+    #[test]
+    fn parse_accepts_sha256sum_format() {
+        let hex = "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b7852b855";
+        let (entries, findings) = parse(&format!("{hex}  src/sim/reference.rs\n"));
+        assert!(findings.is_empty());
+        assert_eq!(entries, vec![(hex.to_string(), "src/sim/reference.rs".to_string())]);
+    }
+
+    #[test]
+    fn check_with_reports_drift_missing_and_uncovered() {
+        let dir = std::env::temp_dir().join(format!("scls_lint_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(dir.join("src")).unwrap();
+        std::fs::write(dir.join("src/frozen.rs"), "fn keep() {}\n").unwrap();
+        let good = sha256::digest_hex(b"fn keep() {}\n");
+
+        // Clean: digest matches, required entry covered.
+        let manifest = format!("{good}  src/frozen.rs\n");
+        assert!(check_with(&dir, &manifest, &["src/frozen.rs"]).is_empty());
+
+        // Drift: digest mismatch names the file and the rule.
+        let bad = format!("{}  src/frozen.rs\n", "0".repeat(64));
+        let f = check_with(&dir, &bad, &["src/frozen.rs"]);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].file, "src/frozen.rs");
+        assert!(f[0].message.contains("drifted"));
+
+        // Missing artifact + uncovered canonical entry.
+        let gone = format!("{good}  src/not_there.rs\n");
+        let f = check_with(&dir, &gone, &["src/frozen.rs"]);
+        assert_eq!(f.len(), 2);
+        assert!(f.iter().any(|x| x.message.contains("not found")));
+        assert!(f.iter().any(|x| x.message.contains("not covered")));
+
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

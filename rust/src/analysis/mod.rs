@@ -1,0 +1,192 @@
+//! In-repo static analysis: the determinism & invariant lint pass.
+//!
+//! `scls-repro lint` runs this over the crate tree and exits non-zero on
+//! any finding, so CI (and a contributor's shell) catches the failure
+//! modes that the differential suites can only catch *after* they bite:
+//! hash-order nondeterminism, wall-clock reads in measured paths, ad-hoc
+//! float comparison, silent edits to frozen reference implementations,
+//! and trait/docs surfaces drifting apart. See the module docs of
+//! [`rules`], [`manifest`] and [`surface`] for the rule catalog, and
+//! [`lexer`] for the suppression grammar
+//! (`// scls-lint: allow(<rule>): <justification>`).
+//!
+//! Everything here is std-only and works on source *text* — no rustc
+//! internals, no build, no network — so the pass runs in under a second
+//! and the same logic is trivially mirrored by scripts.
+
+pub mod classify;
+pub mod lexer;
+pub mod manifest;
+pub mod rules;
+pub mod sha256;
+pub mod surface;
+
+use std::fs;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+pub use rules::{
+    scan_source, ALL_RULES, RULE_FLOAT_CMP, RULE_FROZEN_MANIFEST, RULE_HASH_ORDER,
+    RULE_SINK_SURFACE, RULE_WALL_CLOCK,
+};
+
+/// One diagnostic: `file:line: rule: message`. `line` 0 means the finding
+/// concerns the file (or an artifact) as a whole.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Crate-relative path with `/` separators.
+    pub file: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: {}: {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Run the full lint pass over the crate tree at `root` (the directory
+/// holding `src/`). Token rules scan `src/**/*.rs` in sorted path order;
+/// then the frozen manifest and the coverage surfaces are checked. The
+/// result is deterministic: stable walk order, stable finding order.
+pub fn run_lint(root: &Path) -> Result<Vec<Finding>, String> {
+    let src_dir = root.join("src");
+    if !src_dir.is_dir() {
+        return Err(format!("{}: no src/ directory — not a crate root", root.display()));
+    }
+    let mut files = Vec::new();
+    collect_rs_files(&src_dir, &mut files)?;
+    files.sort();
+    let mut findings = Vec::new();
+    for rel in &files {
+        let text = fs::read_to_string(root.join(rel)).map_err(|e| format!("{rel}: {e}"))?;
+        findings.extend(scan_source(rel, &text));
+    }
+    findings.extend(manifest::check(root));
+    findings.extend(surface::check(root));
+    Ok(findings)
+}
+
+/// Collect `.rs` files under `dir` as crate-relative `/`-separated paths
+/// (`src/...`). Recurses in sorted order for reproducible output.
+fn collect_rs_files(dir: &Path, out: &mut Vec<String>) -> Result<(), String> {
+    let mut entries: Vec<_> = fs::read_dir(dir)
+        .map_err(|e| format!("{}: {e}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            let mut rel = Vec::new();
+            for comp in path.components().rev() {
+                let s = comp.as_os_str().to_string_lossy().into_owned();
+                let is_src = s == "src";
+                rel.push(s);
+                if is_src {
+                    break;
+                }
+            }
+            rel.reverse();
+            out.push(rel.join("/"));
+        }
+    }
+    Ok(())
+}
+
+/// Render findings as the `--json` payload: rule catalog, counts, and the
+/// diagnostics themselves.
+pub fn findings_to_json(findings: &[Finding]) -> Json {
+    let mut by_rule = Json::obj();
+    for rule in ALL_RULES {
+        let n = findings.iter().filter(|f| f.rule == rule).count();
+        by_rule.set(rule, n);
+    }
+    let items: Vec<Json> = findings
+        .iter()
+        .map(|f| {
+            let mut o = Json::obj();
+            o.set("file", f.file.as_str())
+                .set("line", f.line)
+                .set("rule", f.rule)
+                .set("message", f.message.as_str());
+            o
+        })
+        .collect();
+    let mut out = Json::obj();
+    out.set("total", findings.len())
+        .set("by_rule", by_rule)
+        .set("findings", Json::Arr(items));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_format_is_file_line_rule_message() {
+        let f = Finding {
+            file: "src/sim/x.rs".to_string(),
+            line: 7,
+            rule: RULE_HASH_ORDER,
+            message: "m".to_string(),
+        };
+        assert_eq!(f.to_string(), "src/sim/x.rs:7: hash-order: m");
+    }
+
+    #[test]
+    fn json_payload_shape() {
+        let f = vec![Finding {
+            file: "src/sim/x.rs".to_string(),
+            line: 7,
+            rule: RULE_HASH_ORDER,
+            message: "m".to_string(),
+        }];
+        let j = findings_to_json(&f);
+        assert_eq!(j.at(&["total"]).and_then(Json::as_i64), Some(1));
+        assert_eq!(j.at(&["by_rule", "hash-order"]).and_then(Json::as_i64), Some(1));
+        assert_eq!(j.at(&["by_rule", "wall-clock"]).and_then(Json::as_i64), Some(0));
+        match j.at(&["findings"]) {
+            Some(Json::Arr(items)) => {
+                assert_eq!(items.len(), 1);
+                assert_eq!(
+                    items[0].at(&["file"]),
+                    Some(&Json::Str("src/sim/x.rs".to_string()))
+                );
+            }
+            other => panic!("findings not an array: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn run_lint_flags_a_seeded_violation_tree() {
+        let dir = std::env::temp_dir().join(format!("scls_lint_run_{}", std::process::id()));
+        let src = dir.join("src/sim");
+        std::fs::create_dir_all(&src).unwrap();
+        std::fs::write(src.join("bad.rs"), "use std::collections::HashMap;\n").unwrap();
+        let findings = run_lint(&dir).unwrap();
+        assert!(
+            findings
+                .iter()
+                .any(|f| f.rule == RULE_HASH_ORDER && f.file == "src/sim/bad.rs" && f.line == 1),
+            "{findings:?}"
+        );
+        // The bare tree also lacks manifest + surfaces; those flag too.
+        assert!(findings.iter().any(|f| f.rule == RULE_FROZEN_MANIFEST));
+        assert!(findings.iter().any(|f| f.rule == RULE_SINK_SURFACE));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn run_lint_errors_without_src() {
+        let dir = std::env::temp_dir().join(format!("scls_lint_nosrc_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(run_lint(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

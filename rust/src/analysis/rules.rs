@@ -1,0 +1,219 @@
+//! The token-stream rules: hash-order, wall-clock, float-cmp.
+//!
+//! Each rule is deliberately *stricter than the invariant it protects* —
+//! a lexical pass cannot see types or data flow, so it flags every
+//! mention and lets a reviewed, per-line
+//! `// scls-lint: allow(<rule>): <justification>` carve out the sound
+//! exceptions. The catalog:
+//!
+//! * `hash-order` — any `HashMap`/`HashSet` identifier in a deterministic
+//!   module. Hash iteration order is seeded per-process, so a drain, sort
+//!   key, or event sequence derived from one silently varies run-to-run;
+//!   deterministic modules use `BTreeMap`/`BTreeSet` or sorted vectors.
+//! * `wall-clock` — any `Instant`/`SystemTime` identifier outside the
+//!   real-time allowlist. Virtual time is the only clock the simulator
+//!   and scheduler may read; a wall-clock read anywhere else makes
+//!   results machine-dependent.
+//! * `float-cmp` — in deterministic modules: `==`/`!=` with a float
+//!   literal operand, or any `partial_cmp` call (its `None`-on-NaN result
+//!   turns into comparator panics or order flips). Ordering goes through
+//!   `total_cmp`; exact sentinel comparisons carry a justified `allow`.
+
+use super::classify;
+use super::lexer::{self, Suppressions, Tok, TokKind};
+use super::Finding;
+
+/// Rule names (the suppression grammar's vocabulary).
+pub const RULE_HASH_ORDER: &str = "hash-order";
+pub const RULE_WALL_CLOCK: &str = "wall-clock";
+pub const RULE_FLOAT_CMP: &str = "float-cmp";
+pub const RULE_FROZEN_MANIFEST: &str = "frozen-manifest";
+pub const RULE_SINK_SURFACE: &str = "sink-surface";
+
+/// All rule names, for docs and `--json` output.
+pub const ALL_RULES: [&str; 5] = [
+    RULE_HASH_ORDER,
+    RULE_WALL_CLOCK,
+    RULE_FLOAT_CMP,
+    RULE_FROZEN_MANIFEST,
+    RULE_SINK_SURFACE,
+];
+
+/// Run the token-stream rules over one source file. `rel` is the
+/// crate-relative path (`src/sim/driver.rs`) that drives module
+/// classification.
+pub fn scan_source(rel: &str, src: &str) -> Vec<Finding> {
+    let (toks, supp) = lexer::lex(src);
+    let det = classify::is_deterministic(rel);
+    let clock_checked = !classify::wall_clock_allowed(rel);
+    let mut findings = Vec::new();
+    for (idx, t) in toks.iter().enumerate() {
+        if det {
+            scan_hash_order(rel, t, &supp, &mut findings);
+            scan_float_cmp(rel, &toks, idx, &supp, &mut findings);
+        }
+        if clock_checked {
+            scan_wall_clock(rel, t, &supp, &mut findings);
+        }
+    }
+    findings
+}
+
+fn push(findings: &mut Vec<Finding>, rel: &str, line: u32, rule: &'static str, msg: String) {
+    findings.push(Finding {
+        file: rel.to_string(),
+        line,
+        rule,
+        message: msg,
+    });
+}
+
+fn scan_hash_order(rel: &str, t: &Tok, supp: &Suppressions, findings: &mut Vec<Finding>) {
+    if t.kind != TokKind::Ident || (t.text != "HashMap" && t.text != "HashSet") {
+        return;
+    }
+    if lexer::is_allowed(supp, t.line, RULE_HASH_ORDER) {
+        return;
+    }
+    let module = classify::module_of(rel).unwrap_or("?");
+    push(
+        findings,
+        rel,
+        t.line,
+        RULE_HASH_ORDER,
+        format!(
+            "{} in deterministic module `{module}` — iteration order is \
+             process-seeded; use BTreeMap/BTreeSet or a sorted vector",
+            t.text
+        ),
+    );
+}
+
+fn scan_wall_clock(rel: &str, t: &Tok, supp: &Suppressions, findings: &mut Vec<Finding>) {
+    if t.kind != TokKind::Ident || (t.text != "Instant" && t.text != "SystemTime") {
+        return;
+    }
+    if lexer::is_allowed(supp, t.line, RULE_WALL_CLOCK) {
+        return;
+    }
+    push(
+        findings,
+        rel,
+        t.line,
+        RULE_WALL_CLOCK,
+        format!(
+            "{} outside the real-time allowlist — deterministic paths read \
+             only virtual time",
+            t.text
+        ),
+    );
+}
+
+fn scan_float_cmp(
+    rel: &str,
+    toks: &[Tok],
+    idx: usize,
+    supp: &Suppressions,
+    findings: &mut Vec<Finding>,
+) {
+    let t = &toks[idx];
+    if t.kind == TokKind::Punct && (t.text == "==" || t.text == "!=") {
+        let float_operand =
+            |i: usize| toks.get(i).is_some_and(|o| o.kind == TokKind::Num && o.is_float);
+        let prev = idx > 0 && float_operand(idx - 1);
+        let next = float_operand(idx + 1);
+        if (prev || next) && !lexer::is_allowed(supp, t.line, RULE_FLOAT_CMP) {
+            push(
+                findings,
+                rel,
+                t.line,
+                RULE_FLOAT_CMP,
+                format!(
+                    "bare `{}` against a float literal in a deterministic \
+                     module — compare via total_cmp or a documented sentinel \
+                     with an allow",
+                    t.text
+                ),
+            );
+        }
+        return;
+    }
+    if t.kind == TokKind::Ident && t.text == "partial_cmp" {
+        // `fn partial_cmp` is a PartialOrd impl, not a comparator call.
+        let is_def = idx > 0 && toks[idx - 1].kind == TokKind::Ident && toks[idx - 1].text == "fn";
+        if !is_def && !lexer::is_allowed(supp, t.line, RULE_FLOAT_CMP) {
+            push(
+                findings,
+                rel,
+                t.line,
+                RULE_FLOAT_CMP,
+                "partial_cmp in a deterministic module — NaN turns it into \
+                 None (comparator panics / order flips); use total_cmp"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lines_of(rel: &str, src: &str, rule: &str) -> Vec<u32> {
+        scan_source(rel, src)
+            .into_iter()
+            .filter(|f| f.rule == rule)
+            .map(|f| f.line)
+            .collect()
+    }
+
+    #[test]
+    fn hash_order_fires_only_in_deterministic_modules() {
+        let src = "use std::collections::HashMap;\nlet m: HashMap<u32, u32> = HashMap::new();\n";
+        assert_eq!(lines_of("src/sim/x.rs", src, RULE_HASH_ORDER), vec![1, 2, 2]);
+        assert!(lines_of("src/telemetry/x.rs", src, RULE_HASH_ORDER).is_empty());
+    }
+
+    #[test]
+    fn wall_clock_respects_allowlist() {
+        let src = "use std::time::Instant;\nlet t = Instant::now();\n";
+        assert_eq!(lines_of("src/sim/x.rs", src, RULE_WALL_CLOCK), vec![1, 2]);
+        assert_eq!(lines_of("src/metrics/x.rs", src, RULE_WALL_CLOCK), vec![1, 2]);
+        assert!(lines_of("src/bench/x.rs", src, RULE_WALL_CLOCK).is_empty());
+        assert!(lines_of("src/util/logging.rs", src, RULE_WALL_CLOCK).is_empty());
+    }
+
+    #[test]
+    fn instant_event_is_not_instant() {
+        let src = "let e = InstantEvent { at: 1 };\n";
+        assert!(lines_of("src/sim/x.rs", src, RULE_WALL_CLOCK).is_empty());
+    }
+
+    #[test]
+    fn float_cmp_literal_adjacency() {
+        let src = "if x == 0.0 { }\nif 1.5 != y { }\nif n == 0 { }\nif x <= 1.0 { }\n";
+        assert_eq!(lines_of("src/estimator/x.rs", src, RULE_FLOAT_CMP), vec![1, 2]);
+        assert!(lines_of("src/util/x.rs", src, RULE_FLOAT_CMP).is_empty());
+    }
+
+    #[test]
+    fn partial_cmp_call_flagged_definition_not() {
+        let src = "fn partial_cmp(&self, o: &Self) -> Option<Ordering> { None }\n\
+                   v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n\
+                   v.sort_by(|a, b| a.total_cmp(b));\n";
+        assert_eq!(lines_of("src/scheduler/x.rs", src, RULE_FLOAT_CMP), vec![2]);
+    }
+
+    #[test]
+    fn suppressions_silence_exact_line() {
+        let src = "if x == 0.0 { } // scls-lint: allow(float-cmp): sentinel\n\
+                   if y == 0.0 { }\n";
+        assert_eq!(lines_of("src/engine/x.rs", src, RULE_FLOAT_CMP), vec![2]);
+    }
+
+    #[test]
+    fn strings_and_comments_never_fire() {
+        let src = "// HashMap Instant 1.0 == 2.0\nlet s = \"HashMap Instant\";\n";
+        assert!(scan_source("src/sim/x.rs", src).is_empty());
+    }
+}

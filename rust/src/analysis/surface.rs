@@ -1,0 +1,277 @@
+//! Surface-coverage checks: the `sink-surface` rule.
+//!
+//! Two drift-prone surfaces are re-derived from source on every lint run:
+//!
+//! * **MetricsSink coverage** — every method of the `MetricsSink` trait
+//!   must be forwarded by `Fanout` (or a fan-out silently drops events
+//!   for some sinks) and counted by `Tally` (or the cheap counters stop
+//!   reflecting the full event stream). Adding a hook to the trait and
+//!   forgetting an impl is exactly the bug class this catches: default
+//!   trait methods make it compile clean.
+//! * **Policy registry ↔ README** — every name in `BUILTIN_POLICIES`
+//!   must appear backtick-quoted in the repo README, so the documented
+//!   policy catalog can't silently fall behind the registry.
+//!
+//! Checks are text-level (token stream from [`super::lexer`]), with
+//! doctored-input entry points so tests can exercise the failure paths
+//! without mutating the real sources.
+
+use std::fs;
+use std::path::Path;
+
+use super::lexer::{self, Tok, TokKind};
+use super::rules::RULE_SINK_SURFACE;
+use super::Finding;
+
+/// `src/metrics/sink.rs` relative to the crate root.
+pub const SINK_PATH: &str = "src/metrics/sink.rs";
+/// `src/scheduler/policy.rs` relative to the crate root.
+pub const POLICY_PATH: &str = "src/scheduler/policy.rs";
+
+/// The impls that must cover the full trait surface.
+const REQUIRED_IMPLS: [&str; 2] = ["Fanout", "Tally"];
+
+/// Method names (with the `fn` keyword's line) declared by
+/// `trait MetricsSink` in `src`. Empty when the trait isn't found.
+pub fn trait_methods(src: &str) -> Vec<(String, u32)> {
+    let (toks, _) = lexer::lex(src);
+    let Some(open) = toks
+        .windows(2)
+        .position(|w| ident_is(&w[0], "trait") && ident_is(&w[1], "MetricsSink"))
+    else {
+        return Vec::new();
+    };
+    fns_in_block(&toks, open + 2)
+}
+
+/// Method names implemented by `impl MetricsSink for <type_name>` in
+/// `src`. `None` when no such impl exists.
+pub fn impl_methods(src: &str, type_name: &str) -> Option<Vec<String>> {
+    let (toks, _) = lexer::lex(src);
+    let at = toks.windows(4).position(|w| {
+        ident_is(&w[0], "impl")
+            && ident_is(&w[1], "MetricsSink")
+            && ident_is(&w[2], "for")
+            && ident_is(&w[3], type_name)
+    })?;
+    Some(fns_in_block(&toks, at + 4).into_iter().map(|(name, _)| name).collect())
+}
+
+fn ident_is(t: &Tok, text: &str) -> bool {
+    t.kind == TokKind::Ident && t.text == text
+}
+
+/// `fn` item names at depth 1 of the first brace block at or after
+/// `from`. Depth filtering keeps closures and nested items inside method
+/// bodies from registering as surface methods.
+fn fns_in_block(toks: &[Tok], from: usize) -> Vec<(String, u32)> {
+    let mut j = from;
+    while j < toks.len() && !(toks[j].kind == TokKind::Punct && toks[j].text == "{") {
+        j += 1;
+    }
+    let mut depth = 0i32;
+    let mut out = Vec::new();
+    while j < toks.len() {
+        let t = &toks[j];
+        if t.kind == TokKind::Punct {
+            if t.text == "{" {
+                depth += 1;
+            } else if t.text == "}" {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+        } else if depth == 1 && ident_is(t, "fn") {
+            if let Some(name) = toks.get(j + 1).filter(|n| n.kind == TokKind::Ident) {
+                out.push((name.text.clone(), t.line));
+            }
+        }
+        j += 1;
+    }
+    out
+}
+
+/// String literals of the `BUILTIN_POLICIES` const initializer (with
+/// their lines): the tokens between the declaration's `=` and its `;`.
+pub fn policy_names(src: &str) -> Vec<(String, u32)> {
+    let (toks, _) = lexer::lex(src);
+    let Some(decl) = toks
+        .windows(2)
+        .position(|w| ident_is(&w[0], "const") && ident_is(&w[1], "BUILTIN_POLICIES"))
+    else {
+        return Vec::new();
+    };
+    let mut j = decl + 2;
+    while j < toks.len() && !(toks[j].kind == TokKind::Punct && toks[j].text == "=") {
+        j += 1;
+    }
+    let mut out = Vec::new();
+    for t in &toks[j..] {
+        if t.kind == TokKind::Punct && t.text == ";" {
+            break;
+        }
+        if t.kind == TokKind::Str {
+            out.push((t.text.clone(), t.line));
+        }
+    }
+    out
+}
+
+/// Check MetricsSink coverage from the trait file's text.
+pub fn check_sink_text(sink_src: &str) -> Vec<Finding> {
+    let methods = trait_methods(sink_src);
+    let mut findings = Vec::new();
+    if methods.is_empty() {
+        findings.push(missing(SINK_PATH, 0, "trait MetricsSink not found".to_string()));
+        return findings;
+    }
+    for impl_ty in REQUIRED_IMPLS {
+        let Some(have) = impl_methods(sink_src, impl_ty) else {
+            findings.push(missing(
+                SINK_PATH,
+                0,
+                format!("impl MetricsSink for {impl_ty} not found"),
+            ));
+            continue;
+        };
+        for (name, line) in &methods {
+            if !have.iter().any(|h| h == name) {
+                findings.push(missing(
+                    SINK_PATH,
+                    *line,
+                    format!(
+                        "MetricsSink::{name} is not implemented by {impl_ty} — the default \
+                         no-op hides dropped events; forward (Fanout) or count (Tally) it"
+                    ),
+                ));
+            }
+        }
+    }
+    findings
+}
+
+/// Check registry ↔ README coverage from the two files' texts. Policy
+/// names must appear backtick-quoted in the README, the form the policy
+/// catalog uses.
+pub fn check_readme_text(policy_src: &str, readme: &str) -> Vec<Finding> {
+    let names = policy_names(policy_src);
+    let mut findings = Vec::new();
+    if names.is_empty() {
+        findings.push(missing(POLICY_PATH, 0, "BUILTIN_POLICIES const not found".to_string()));
+        return findings;
+    }
+    for (name, line) in names {
+        if !readme.contains(&format!("`{name}`")) {
+            findings.push(missing(
+                POLICY_PATH,
+                line,
+                format!("registry policy `{name}` is not documented in README.md"),
+            ));
+        }
+    }
+    findings
+}
+
+fn missing(file: &str, line: u32, message: String) -> Finding {
+    Finding {
+        file: file.to_string(),
+        line,
+        rule: RULE_SINK_SURFACE,
+        message,
+    }
+}
+
+/// Run both surface checks against the tree at `root` (the crate root).
+/// The README lives beside the crate directory (repo root), with a
+/// fallback to `root/README.md` for self-contained fixture trees.
+pub fn check(root: &Path) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    match fs::read_to_string(root.join(SINK_PATH)) {
+        Ok(src) => findings.extend(check_sink_text(&src)),
+        Err(_) => findings.push(missing(SINK_PATH, 0, "file missing".to_string())),
+    }
+    let policy = match fs::read_to_string(root.join(POLICY_PATH)) {
+        Ok(src) => src,
+        Err(_) => {
+            findings.push(missing(POLICY_PATH, 0, "file missing".to_string()));
+            return findings;
+        }
+    };
+    let readme = root
+        .parent()
+        .and_then(|p| fs::read_to_string(p.join("README.md")).ok())
+        .or_else(|| fs::read_to_string(root.join("README.md")).ok());
+    match readme {
+        Some(text) => findings.extend(check_readme_text(&policy, &text)),
+        None => findings.push(missing(POLICY_PATH, 0, "README.md not found".to_string())),
+    }
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SINK: &str = "pub trait MetricsSink {\n\
+                        \x20   fn on_a(&mut self) {}\n\
+                        \x20   fn on_b(&mut self, x: u64) {}\n\
+                        }\n\
+                        impl MetricsSink for Fanout<'_> {\n\
+                        \x20   fn on_a(&mut self) { let f = |q: u32| { q }; f(1); }\n\
+                        \x20   fn on_b(&mut self, x: u64) {}\n\
+                        }\n\
+                        impl MetricsSink for Tally {\n\
+                        \x20   fn on_a(&mut self) {}\n\
+                        }\n";
+
+    #[test]
+    fn trait_and_impl_parsing() {
+        let m = trait_methods(SINK);
+        assert_eq!(m, vec![("on_a".to_string(), 2), ("on_b".to_string(), 3)]);
+        assert_eq!(
+            impl_methods(SINK, "Fanout"),
+            Some(vec!["on_a".to_string(), "on_b".to_string()])
+        );
+        assert_eq!(impl_methods(SINK, "Tally"), Some(vec!["on_a".to_string()]));
+        assert_eq!(impl_methods(SINK, "NullSink"), None);
+    }
+
+    #[test]
+    fn missing_method_is_a_finding_at_trait_line() {
+        let f = check_sink_text(SINK);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, RULE_SINK_SURFACE);
+        assert_eq!(f[0].line, 3, "anchored at the trait's fn line");
+        assert!(f[0].message.contains("on_b"));
+        assert!(f[0].message.contains("Tally"));
+    }
+
+    #[test]
+    fn closure_body_fns_do_not_count_as_methods() {
+        // `f` inside on_a's body is at depth > 1 and must not register.
+        assert!(!impl_methods(SINK, "Fanout").unwrap().contains(&"f".to_string()));
+    }
+
+    const POLICY: &str =
+        "pub const BUILTIN_POLICIES: [&str; 2] = [\"SLS\", \"SCLS-CB\"];\nfn x() {}\n";
+
+    #[test]
+    fn policy_names_from_const_initializer() {
+        assert_eq!(
+            policy_names(POLICY),
+            vec![("SLS".to_string(), 1), ("SCLS-CB".to_string(), 1)]
+        );
+    }
+
+    #[test]
+    fn readme_check_wants_backtick_quoted_names() {
+        assert!(check_readme_text(POLICY, "docs: `SLS` and `SCLS-CB` here").is_empty());
+        let f = check_readme_text(POLICY, "only `SLS` is documented");
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("SCLS-CB"));
+        // Bare (unquoted) mention is not enough.
+        let f = check_readme_text(POLICY, "`SLS` and SCLS-CB");
+        assert_eq!(f.len(), 1);
+    }
+}

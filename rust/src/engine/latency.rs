@@ -71,7 +71,7 @@ impl EngineLatency {
     }
 
     fn jittered(&mut self, base: f64) -> f64 {
-        if self.jitter == 0.0 {
+        if self.jitter == 0.0 { // scls-lint: allow(float-cmp): exact zero = no-jitter sentinel
             return base;
         }
         base * self.rng.lognormal(0.0, self.jitter)

@@ -25,7 +25,14 @@
 //! stream live. `examples/quickstart.rs` is the five-minute tour;
 //! `examples/custom_policy.rs` shows a user-defined scheduler in ~20
 //! lines.
+//!
+//! Determinism is load-bearing here (frozen differential suites compare
+//! runs byte-for-byte), so the crate ships its own static-analysis pass:
+//! [`analysis`], exposed as `scls-repro lint`.
 
+#![forbid(unsafe_code)]
+
+pub mod analysis;
 pub mod batcher;
 pub mod bench;
 pub mod config;

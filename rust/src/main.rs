@@ -13,8 +13,12 @@
 //! * `profile`    — print the engine latency profile grid and the fitted
 //!                  Eq. (3)/(4) coefficients.
 //! * `trace`      — generate a synthetic CodeFuse/ShareGPT trace to JSON.
+//! * `lint`       — run the in-repo determinism & invariant static
+//!                  analysis; non-zero exit on any finding.
 //!
 //! Run `scls-repro help` for flags.
+
+#![forbid(unsafe_code)]
 
 use std::path::{Path, PathBuf};
 
@@ -116,6 +120,16 @@ SUBCOMMANDS:
       --out FILE         output path                 [trace.json]
       --workload NAME    codefuse|sharegpt           [codefuse]
       --rate R --duration SECS --seed N
+  lint        Static analysis: determinism & invariant rules
+              (hash-order, wall-clock, float-cmp, frozen-manifest,
+              sink-surface). Exits non-zero on any finding. Suppress a
+              reviewed exception with
+              `// scls-lint: allow(<rule>): <why>` on the flagged line.
+      --root DIR         crate root (holding src/); default: `.` if it
+                         has src/lib.rs, else `rust`
+      --json             machine-readable report on stdout
+      --write-manifest   regenerate lint/frozen.sha256 from the current
+                         tree (review the diff before committing!)
   help        Print this text
 "#;
 
@@ -147,6 +161,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("serve") => cmd_serve(args),
         Some("profile") => cmd_profile(args),
         Some("trace") => cmd_trace(args),
+        Some("lint") => cmd_lint(args),
         Some("help") | None => {
             print!("{USAGE}");
             Ok(())
@@ -714,6 +729,56 @@ fn cmd_profile(args: &Args) -> Result<()> {
 }
 
 // ---------------------------------------------------------------------------
+// lint
+// ---------------------------------------------------------------------------
+
+/// Crate root for the lint pass: `--root DIR`, else `.` when it looks
+/// like the crate directory, else the `rust/` subdirectory (so the
+/// command works from both the repo root and the crate root).
+fn lint_root(args: &Args) -> PathBuf {
+    if let Some(dir) = args.str_opt("root") {
+        return PathBuf::from(dir);
+    }
+    if Path::new("src/lib.rs").exists() {
+        PathBuf::from(".")
+    } else {
+        PathBuf::from("rust")
+    }
+}
+
+fn cmd_lint(args: &Args) -> Result<()> {
+    let root = lint_root(args);
+    if args.bool_or("write-manifest", false) {
+        let text = scls::analysis::manifest::render(&root);
+        let path = root.join(scls::analysis::manifest::MANIFEST_PATH);
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(&path, &text)?;
+        println!("wrote {} ({} entries)", path.display(), text.lines().count());
+        return Ok(());
+    }
+    let findings = scls::analysis::run_lint(&root).map_err(|e| anyhow!("lint: {e}"))?;
+    if args.bool_or("json", false) {
+        println!("{}", scls::analysis::findings_to_json(&findings).to_string_pretty());
+    } else {
+        for f in &findings {
+            println!("{f}");
+        }
+        println!(
+            "lint: {} finding(s) across {} rule(s)",
+            findings.len(),
+            scls::analysis::ALL_RULES.len()
+        );
+    }
+    if findings.is_empty() {
+        Ok(())
+    } else {
+        Err(anyhow!("lint: {} finding(s)", findings.len()))
+    }
+}
+
+// ---------------------------------------------------------------------------
 // trace
 // ---------------------------------------------------------------------------
 
@@ -890,6 +955,33 @@ mod tests {
                 .to_string();
             assert!(err.contains("--slo"), "slo {bad}: {err}");
         }
+    }
+
+    #[test]
+    fn lint_root_flag_overrides_autodetect() {
+        assert_eq!(lint_root(&args("lint --root /tmp/x")), PathBuf::from("/tmp/x"));
+        // Unit tests run from the crate root, where src/lib.rs exists.
+        assert_eq!(lint_root(&args("lint")), PathBuf::from("."));
+    }
+
+    #[test]
+    fn lint_exits_nonzero_on_a_seeded_violation() {
+        let dir = std::env::temp_dir().join(format!("scls_lint_cli_{}", std::process::id()));
+        std::fs::create_dir_all(dir.join("src/scheduler")).unwrap();
+        std::fs::write(dir.join("src/scheduler/bad.rs"), "type M = HashMap<u8, u8>;\n").unwrap();
+        let err = cmd_lint(&args(&format!("lint --root {}", dir.display())))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("finding"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn lint_missing_root_is_a_friendly_error() {
+        let err = cmd_lint(&args("lint --root /nonexistent_scls"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("no src/"), "{err}");
     }
 
     #[test]

@@ -107,6 +107,10 @@ pub struct Tally {
     pub slo_attained: u64,
     pub deadline_misses: u64,
     pub shed_requests: u64,
+    /// Per-worker telemetry samples seen (0 unless a gauge-sampling
+    /// driver is attached) and runs drained through this tally.
+    pub worker_samples: u64,
+    pub runs: u64,
 }
 
 impl MetricsSink for Tally {
@@ -175,6 +179,21 @@ impl MetricsSink for Tally {
             self.slo_tracked += 1;
             self.deadline_misses += 1;
         }
+    }
+
+    fn on_worker_sample(
+        &mut self,
+        _now: f64,
+        _worker: usize,
+        _new_tokens: u64,
+        _kv_in_use: u64,
+        _queue_depth: usize,
+    ) {
+        self.worker_samples += 1;
+    }
+
+    fn on_run_end(&mut self, _metrics: &RunMetrics) {
+        self.runs += 1;
     }
 }
 
@@ -376,6 +395,16 @@ mod tests {
         assert_eq!(t.slo_attained, 1);
         assert_eq!(t.deadline_misses, 2);
         assert_eq!(t.shed_requests, 2);
+    }
+
+    #[test]
+    fn tally_telemetry_counters() {
+        let mut t = Tally::default();
+        t.on_worker_sample(1.0, 0, 16, 128, 2);
+        t.on_worker_sample(2.0, 1, 8, 64, 0);
+        t.on_run_end(&RunMetrics::default());
+        assert_eq!(t.worker_samples, 2);
+        assert_eq!(t.runs, 1);
     }
 
     /// Appends `"<id>:<hook>"` to a shared log on every hook — proves the

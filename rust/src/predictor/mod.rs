@@ -190,7 +190,7 @@ impl NoisyOracle {
 impl LengthPredictor for NoisyOracle {
     fn predict(&self, req: &Request) -> u32 {
         let truth = req.target_gen_len.max(1) as f64;
-        if self.sigma == 0.0 {
+        if self.sigma == 0.0 { // scls-lint: allow(float-cmp): exact zero is the no-noise sentinel
             return truth as u32;
         }
         let z = per_request_rng(self.seed, req.id).normal();
@@ -372,7 +372,7 @@ mod tests {
         let p = NoisyOracle::new(0.5, 42);
         let a = p.predict(&req(1, 200));
         assert_eq!(a, p.predict(&req(1, 200)), "same request, same prediction");
-        let distinct: std::collections::HashSet<u32> =
+        let distinct: std::collections::BTreeSet<u32> =
             (0..64).map(|id| p.predict(&req(id, 200))).collect();
         assert!(distinct.len() > 16, "error draws must vary per request");
         assert!(distinct.iter().all(|&x| x >= 1));

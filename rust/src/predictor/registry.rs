@@ -101,10 +101,11 @@ impl PredictorSpec {
         // Integer-valued knobs (bucket counts, window sizes) must actually
         // be integers in a sane range — an unchecked `as` cast would turn
         // `online:1e18` into a capacity-overflow abort instead of an error.
+        let is_integral = |v: f64| v.fract() == 0.0; // scls-lint: allow(float-cmp): exact test
         let parse_count = |what: &str, max: u64| -> Result<Option<u64>, String> {
             match parse_param(what)? {
                 None => Ok(None),
-                Some(v) if v.fract() == 0.0 && v >= 1.0 && v <= max as f64 => Ok(Some(v as u64)),
+                Some(v) if is_integral(v) && v >= 1.0 && v <= max as f64 => Ok(Some(v as u64)),
                 Some(v) => Err(format!(
                     "predictor '{name}': {what} must be an integer in [1, {max}] (got '{v}')"
                 )),

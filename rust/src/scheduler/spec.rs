@@ -272,8 +272,9 @@ mod tests {
             BatchingSpec::WorkerFcfs { batch_size: 16 }
         ));
         let scls = SchedulerSpec::scls(&p, 128);
-        assert!(
-            matches!(scls.interval, IntervalSpec::Adaptive { lambda, gamma } if lambda == 0.5 && gamma == 6.0)
-        );
+        match scls.interval {
+            IntervalSpec::Adaptive { lambda, gamma } => assert_eq!((lambda, gamma), (0.5, 6.0)),
+            other => panic!("expected adaptive interval, got {other:?}"),
+        }
     }
 }

@@ -1,0 +1,14 @@
+// Lint fixture (never compiled): a deterministic-module file with zero
+// findings under every rule — the negative control for tests/props_lint.rs.
+use std::collections::BTreeMap;
+use std::collections::BTreeSet;
+
+fn clean(xs: &mut [f64], m: &BTreeMap<u64, u64>, s: &BTreeSet<u64>) -> u64 {
+    xs.sort_by(|a, b| a.total_cmp(b));
+    let virtual_now = 12.5_f64;
+    let count = m.len() as u64 + s.len() as u64;
+    if virtual_now.total_cmp(&0.0).is_eq() {
+        return 0;
+    }
+    count
+}

@@ -1,0 +1,28 @@
+// Lint fixture (never compiled): float-cmp positives and suppressions.
+// Scanned under "src/estimator/fixture.rs" (deterministic, checked) and
+// "src/util/fixture.rs" (unchecked) by tests/props_lint.rs.
+
+fn positives(x: f64, v: &mut [f64]) {
+    if x == 0.0 {} // line 6: finding (float literal on the right)
+    if 1.5 != x {} // line 7: finding (float literal on the left)
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap()); // line 8: finding
+}
+
+fn suppressed(x: f64) {
+    if x == 0.0 {} // scls-lint: allow(float-cmp): exact zero sentinel
+}
+
+fn never_fire(x: f64, n: u32, v: &mut [f64]) {
+    if n == 0 {} // integer comparison: no finding
+    if x <= 1.0 {} // ordering operators are not equality: no finding
+    v.sort_by(|a, b| a.total_cmp(b)); // the sanctioned comparator
+    let r = 1..5; // range dots must not turn 1 into a float
+    drop(r);
+}
+
+impl PartialOrd for Thing {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        // the `fn partial_cmp` definition itself is not a call site
+        None
+    }
+}

@@ -1,0 +1,24 @@
+// Lint fixture (never compiled): hash-order positives and suppressions.
+// Scanned by tests/props_lint.rs under virtual paths — as a deterministic
+// module ("src/sim/fixture.rs") every unsuppressed mention must fire; as
+// a non-deterministic module ("src/telemetry/fixture.rs") none may.
+use std::collections::HashMap; // line 5: finding
+use std::collections::HashSet; // line 6: finding
+
+fn positives() {
+    let m: HashMap<u32, u32> = HashMap::new(); // line 9: two findings
+    let s = HashSet::from([1u32]); // line 10: finding
+    drop((m, s));
+}
+
+fn suppressed() {
+    let m: HashMap<u32, u32> = HashMap::new(); // scls-lint: allow(hash-order): keyed only, never iterated
+    drop(m);
+}
+
+fn never_fire() {
+    // HashMap in a comment is not a finding.
+    let s = "HashMap in a string is not a finding";
+    let h = MyHashMapLike::default(); // distinct identifier: no finding
+    drop((s, h));
+}

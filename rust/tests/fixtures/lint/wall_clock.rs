@@ -1,0 +1,24 @@
+// Lint fixture (never compiled): wall-clock positives and suppressions.
+// Scanned under "src/sim/fixture.rs" (checked) and "src/bench/fixture.rs"
+// (allowlisted) by tests/props_lint.rs.
+use std::time::Instant; // line 4: finding
+use std::time::SystemTime; // line 5: finding
+
+fn positives() {
+    let t0 = Instant::now(); // line 8: finding
+    let now = SystemTime::now(); // line 9: finding
+    drop((t0, now));
+}
+
+fn suppressed() {
+    let t0 = Instant::now(); // scls-lint: allow(wall-clock): log timestamp only, never measured
+    drop(t0);
+}
+
+fn never_fire() {
+    // Instant in a comment is not a finding; InstantEvent is a distinct
+    // identifier and must not match the whole-token rule.
+    let e = InstantEvent { at: 1 };
+    let s = "SystemTime in a string";
+    drop((e, s));
+}

@@ -1,0 +1,233 @@
+//! Self-tests for the `scls-repro lint` static-analysis pass.
+//!
+//! Three layers:
+//!
+//! 1. **Fixture proofs** — for every token rule, a fixture under
+//!    `tests/fixtures/lint/` is scanned under virtual paths proving the
+//!    rule fires (positive lines), honours per-line suppressions, and
+//!    stays silent in allowlisted / non-deterministic modules.
+//! 2. **Frozen-manifest drift** — a throwaway tree shows that editing a
+//!    frozen artifact flips lint from clean to failing, and that
+//!    `--write-manifest` regeneration is byte-stable on a clean tree.
+//! 3. **The repo itself** — `run_lint` over this crate returns zero
+//!    findings, which is exactly what CI enforces.
+
+use std::path::{Path, PathBuf};
+
+use scls::analysis::{
+    manifest, run_lint, scan_source, surface, RULE_FLOAT_CMP, RULE_FROZEN_MANIFEST,
+    RULE_HASH_ORDER, RULE_SINK_SURFACE, RULE_WALL_CLOCK,
+};
+
+const HASH_ORDER: &str = include_str!("fixtures/lint/hash_order.rs");
+const WALL_CLOCK: &str = include_str!("fixtures/lint/wall_clock.rs");
+const FLOAT_CMP: &str = include_str!("fixtures/lint/float_cmp.rs");
+const CLEAN: &str = include_str!("fixtures/lint/clean.rs");
+
+fn crate_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn rule_lines(rel: &str, src: &str, rule: &str) -> Vec<u32> {
+    scan_source(rel, src)
+        .into_iter()
+        .filter(|f| f.rule == rule)
+        .map(|f| f.line)
+        .collect()
+}
+
+// ---------------------------------------------------------------- rule fixtures
+
+#[test]
+fn hash_order_fixture_fires_suppresses_and_respects_module_set() {
+    // Deterministic module: every unsuppressed mention fires (line 9
+    // mentions HashMap twice), the suppressed line (15) stays silent.
+    let lines = rule_lines("src/sim/fixture.rs", HASH_ORDER, RULE_HASH_ORDER);
+    assert_eq!(lines, vec![5, 6, 9, 9, 10]);
+    // Non-deterministic module: the same text is entirely out of scope.
+    assert!(rule_lines("src/telemetry/fixture.rs", HASH_ORDER, RULE_HASH_ORDER).is_empty());
+    assert!(rule_lines("tests/fixture.rs", HASH_ORDER, RULE_HASH_ORDER).is_empty());
+}
+
+#[test]
+fn wall_clock_fixture_fires_suppresses_and_respects_allowlist() {
+    let lines = rule_lines("src/sim/fixture.rs", WALL_CLOCK, RULE_WALL_CLOCK);
+    assert_eq!(lines, vec![4, 5, 8, 9]);
+    // The rule applies outside deterministic modules too…
+    assert_eq!(rule_lines("src/metrics/fixture.rs", WALL_CLOCK, RULE_WALL_CLOCK).len(), 4);
+    // …but never inside the real-time allowlist (module and submodule).
+    assert!(rule_lines("src/bench/fixture.rs", WALL_CLOCK, RULE_WALL_CLOCK).is_empty());
+    assert!(rule_lines("src/util/logging.rs", WALL_CLOCK, RULE_WALL_CLOCK).is_empty());
+    assert!(rule_lines("src/main.rs", WALL_CLOCK, RULE_WALL_CLOCK).is_empty());
+}
+
+#[test]
+fn float_cmp_fixture_fires_suppresses_and_respects_module_set() {
+    let lines = rule_lines("src/estimator/fixture.rs", FLOAT_CMP, RULE_FLOAT_CMP);
+    assert_eq!(lines, vec![6, 7, 8]);
+    assert!(rule_lines("src/util/fixture.rs", FLOAT_CMP, RULE_FLOAT_CMP).is_empty());
+}
+
+#[test]
+fn clean_fixture_is_clean_everywhere() {
+    for rel in ["src/sim/fixture.rs", "src/batcher/fixture.rs", "src/telemetry/fixture.rs"] {
+        assert_eq!(scan_source(rel, CLEAN), vec![], "{rel}");
+    }
+}
+
+// ---------------------------------------------------------------- frozen manifest
+
+/// Build a tiny crate tree with one frozen file + matching manifest.
+fn scratch_tree(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("scls_props_lint_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(dir.join("src")).unwrap();
+    std::fs::write(dir.join("src/frozen.rs"), "fn reference() -> u32 {\n    7\n}\n").unwrap();
+    dir
+}
+
+#[test]
+fn frozen_manifest_drift_flips_clean_to_failing() {
+    let dir = scratch_tree("drift");
+    let entry = "src/frozen.rs#reference";
+    let good = manifest::digest_entry(&dir, entry).unwrap();
+    let text = format!("{good}  {entry}\n");
+    assert!(manifest::check_with(&dir, &text, &[entry]).is_empty());
+
+    // Edit the frozen fn — same file, one token changed.
+    std::fs::write(dir.join("src/frozen.rs"), "fn reference() -> u32 {\n    8\n}\n").unwrap();
+    let findings = manifest::check_with(&dir, &text, &[entry]);
+    assert_eq!(findings.len(), 1);
+    assert_eq!(findings[0].rule, RULE_FROZEN_MANIFEST);
+    assert!(findings[0].message.contains("drifted"), "{}", findings[0].message);
+
+    // Appending *after* the fn leaves the span digest intact (the span is
+    // the fn body, not the file), so span pins survive unrelated edits.
+    std::fs::write(
+        dir.join("src/frozen.rs"),
+        "fn reference() -> u32 {\n    7\n}\n\nfn unrelated() {}\n",
+    )
+    .unwrap();
+    assert!(manifest::check_with(&dir, &text, &[entry]).is_empty());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn committed_manifest_matches_regeneration_byte_for_byte() {
+    // `lint --write-manifest` on the committed tree must be a no-op diff:
+    // the Rust digests, the entry order, and the header all match what is
+    // checked in at lint/frozen.sha256.
+    let root = crate_root();
+    let committed = std::fs::read_to_string(root.join(manifest::MANIFEST_PATH)).unwrap();
+    assert_eq!(manifest::render(&root), committed);
+}
+
+#[test]
+fn every_canonical_frozen_entry_resolves_on_this_tree() {
+    let root = crate_root();
+    for entry in manifest::FROZEN {
+        assert!(
+            manifest::digest_entry(&root, entry).is_some(),
+            "frozen entry `{entry}` did not resolve (file moved or fn renamed?)"
+        );
+    }
+}
+
+// ---------------------------------------------------------------- surfaces
+
+#[test]
+fn dropping_a_trait_method_from_an_impl_is_a_finding() {
+    let src = std::fs::read_to_string(crate_root().join(surface::SINK_PATH)).unwrap();
+    assert!(surface::check_sink_text(&src).is_empty(), "committed sink surface must be clean");
+    // Doctor the text: rename one Tally method so the impl no longer
+    // covers the trait. The finding anchors at the trait's fn line.
+    let doctored = src.replacen(
+        "fn on_run_end(&mut self, _metrics: &RunMetrics) {\n        self.runs += 1;",
+        "fn run_end_renamed(&mut self, _metrics: &RunMetrics) {\n        self.runs += 1;",
+        1,
+    );
+    assert_ne!(doctored, src, "doctoring must hit the Tally impl");
+    let findings = surface::check_sink_text(&doctored);
+    assert_eq!(findings.len(), 1);
+    assert_eq!(findings[0].rule, RULE_SINK_SURFACE);
+    assert!(findings[0].message.contains("on_run_end"));
+    assert!(findings[0].message.contains("Tally"));
+}
+
+#[test]
+fn undocumented_policy_is_a_finding() {
+    let root = crate_root();
+    let policy = std::fs::read_to_string(root.join(surface::POLICY_PATH)).unwrap();
+    let readme = std::fs::read_to_string(root.parent().unwrap().join("README.md")).unwrap();
+    assert!(surface::check_readme_text(&policy, &readme).is_empty());
+    // Doctor the README: strip one policy's backtick-quoted mention.
+    let doctored = readme.replace("`SW-SLO`", "SW-SLO");
+    let findings = surface::check_readme_text(&policy, &doctored);
+    assert_eq!(findings.len(), 1);
+    assert!(findings[0].message.contains("SW-SLO"));
+}
+
+// ---------------------------------------------------------------- the repo itself
+
+#[test]
+fn lint_is_clean_on_repo() {
+    let findings = run_lint(&crate_root()).unwrap();
+    assert!(
+        findings.is_empty(),
+        "committed tree must lint clean; findings:\n{}",
+        findings.iter().map(|f| format!("  {f}\n")).collect::<String>()
+    );
+}
+
+#[test]
+fn seeded_violation_fails_repo_style_scan() {
+    // End-to-end over a scratch tree shaped like the repo: a wall-clock
+    // read seeded into a scheduler file is caught with file:line.
+    let dir = scratch_tree("seeded");
+    std::fs::create_dir_all(dir.join("src/scheduler")).unwrap();
+    std::fs::write(
+        dir.join("src/scheduler/tick.rs"),
+        "pub fn tick() {\n    let t = std::time::Instant::now();\n    drop(t);\n}\n",
+    )
+    .unwrap();
+    let findings = run_lint(&dir).unwrap();
+    let hit = findings
+        .iter()
+        .find(|f| f.rule == RULE_WALL_CLOCK)
+        .expect("seeded Instant::now must be found");
+    assert_eq!(hit.file, "src/scheduler/tick.rs");
+    assert_eq!(hit.line, 2);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn all_committed_suppressions_name_real_rules() {
+    // Guard against typo'd `allow(...)` names silently suppressing
+    // nothing: every suppression in the tree must name a known rule.
+    let root = crate_root();
+    let mut stack = vec![root.join("src")];
+    while let Some(dir) = stack.pop() {
+        for e in std::fs::read_dir(&dir).unwrap().flatten() {
+            let path = e.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|x| x == "rs") {
+                check_suppression_names(&path);
+            }
+        }
+    }
+}
+
+fn check_suppression_names(path: &Path) {
+    let src = std::fs::read_to_string(path).unwrap();
+    let (_, supp) = scls::analysis::lexer::lex(&src);
+    for (line, rules) in &supp {
+        for rule in rules {
+            assert!(
+                scls::analysis::ALL_RULES.contains(&rule.as_str()),
+                "{}:{line}: unknown rule `{rule}` in suppression",
+                path.display()
+            );
+        }
+    }
+}
