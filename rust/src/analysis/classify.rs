@@ -77,6 +77,23 @@ pub fn wall_clock_allowed(rel: &str) -> bool {
     submodule_of(rel).is_some_and(|s| WALL_CLOCK_ALLOWLIST.contains(&s.as_str()))
 }
 
+/// Module-path variant of [`wall_clock_allowed`], for the import-graph
+/// rule: does a `crate::seg1[::seg2]` path land in the real-time
+/// allowlist? Matches `seg1` as a whole module (`bench`, `runtime`) or
+/// `seg1/seg2` as an allowlisted submodule (`telemetry/profile`).
+pub fn wall_clock_module(seg1: &str, seg2: Option<&str>) -> bool {
+    if WALL_CLOCK_ALLOWLIST.contains(&seg1) {
+        return true;
+    }
+    match seg2 {
+        Some(s2) => {
+            let sub = format!("{seg1}/{s2}");
+            WALL_CLOCK_ALLOWLIST.contains(&sub.as_str())
+        }
+        None => false,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -101,6 +118,19 @@ mod tests {
         assert!(!is_deterministic("src/metrics/sink.rs"));
         assert!(!is_deterministic("src/main.rs"));
         assert!(!is_deterministic("src/analysis/rules.rs"));
+    }
+
+    #[test]
+    fn wall_clock_module_paths() {
+        assert!(wall_clock_module("bench", None));
+        assert!(wall_clock_module("runtime", Some("client")));
+        assert!(wall_clock_module("telemetry", Some("profile")));
+        assert!(wall_clock_module("util", Some("logging")));
+        assert!(wall_clock_module("worker", Some("real_driver")));
+        assert!(!wall_clock_module("telemetry", None));
+        assert!(!wall_clock_module("telemetry", Some("hist")));
+        assert!(!wall_clock_module("util", Some("stats")));
+        assert!(!wall_clock_module("sim", Some("driver")));
     }
 
     #[test]

@@ -4,8 +4,9 @@
 //! any finding, so CI (and a contributor's shell) catches the failure
 //! modes that the differential suites can only catch *after* they bite:
 //! hash-order nondeterminism, wall-clock reads in measured paths, ad-hoc
-//! float comparison, silent edits to frozen reference implementations,
-//! and trait/docs surfaces drifting apart. See the module docs of
+//! float comparison, deterministic modules linking real-time surfaces,
+//! silent edits to frozen reference implementations, and trait/docs
+//! surfaces drifting apart. See the module docs of
 //! [`rules`], [`manifest`] and [`surface`] for the rule catalog, and
 //! [`lexer`] for the suppression grammar
 //! (`// scls-lint: allow(<rule>): <justification>`).
@@ -28,7 +29,7 @@ use crate::util::json::Json;
 
 pub use rules::{
     scan_source, ALL_RULES, RULE_FLOAT_CMP, RULE_FROZEN_MANIFEST, RULE_HASH_ORDER,
-    RULE_SINK_SURFACE, RULE_WALL_CLOCK,
+    RULE_IMPORT_GRAPH, RULE_SINK_SURFACE, RULE_WALL_CLOCK,
 };
 
 /// One diagnostic: `file:line: rule: message`. `line` 0 means the finding

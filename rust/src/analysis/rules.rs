@@ -18,6 +18,12 @@
 //!   literal operand, or any `partial_cmp` call (its `None`-on-NaN result
 //!   turns into comparator panics or order flips). Ordering goes through
 //!   `total_cmp`; exact sentinel comparisons carry a justified `allow`.
+//! * `import-graph` — a `crate::<module>` path in a deterministic module
+//!   that lands in the real-time allowlist (`bench`, `runtime`,
+//!   `telemetry::profile`, ...). A measured path that *links* to a
+//!   wall-clock surface is one refactor away from reading it; the few
+//!   sound dependencies (opt-in profiling taps, the real-driver seam)
+//!   each carry a reviewed per-line allow.
 
 use super::classify;
 use super::lexer::{self, Suppressions, Tok, TokKind};
@@ -29,12 +35,14 @@ pub const RULE_WALL_CLOCK: &str = "wall-clock";
 pub const RULE_FLOAT_CMP: &str = "float-cmp";
 pub const RULE_FROZEN_MANIFEST: &str = "frozen-manifest";
 pub const RULE_SINK_SURFACE: &str = "sink-surface";
+pub const RULE_IMPORT_GRAPH: &str = "import-graph";
 
 /// All rule names, for docs and `--json` output.
-pub const ALL_RULES: [&str; 5] = [
+pub const ALL_RULES: [&str; 6] = [
     RULE_HASH_ORDER,
     RULE_WALL_CLOCK,
     RULE_FLOAT_CMP,
+    RULE_IMPORT_GRAPH,
     RULE_FROZEN_MANIFEST,
     RULE_SINK_SURFACE,
 ];
@@ -51,6 +59,7 @@ pub fn scan_source(rel: &str, src: &str) -> Vec<Finding> {
         if det {
             scan_hash_order(rel, t, &supp, &mut findings);
             scan_float_cmp(rel, &toks, idx, &supp, &mut findings);
+            scan_import_graph(rel, &toks, idx, &supp, &mut findings);
         }
         if clock_checked {
             scan_wall_clock(rel, t, &supp, &mut findings);
@@ -155,6 +164,53 @@ fn scan_float_cmp(
     }
 }
 
+fn scan_import_graph(
+    rel: &str,
+    toks: &[Tok],
+    idx: usize,
+    supp: &Suppressions,
+    findings: &mut Vec<Finding>,
+) {
+    let t = &toks[idx];
+    if t.kind != TokKind::Ident || t.text != "crate" {
+        return;
+    }
+    let sep = |i: usize| toks.get(i).is_some_and(|o| o.kind == TokKind::Punct && o.text == "::");
+    let ident =
+        |i: usize| toks.get(i).and_then(|o| (o.kind == TokKind::Ident).then_some(o.text.as_str()));
+    if !sep(idx + 1) {
+        return;
+    }
+    let Some(seg1) = ident(idx + 2) else {
+        return;
+    };
+    let seg2 = if sep(idx + 3) { ident(idx + 4) } else { None };
+    if !classify::wall_clock_module(seg1, seg2) {
+        return;
+    }
+    if lexer::is_allowed(supp, t.line, RULE_IMPORT_GRAPH) {
+        return;
+    }
+    let module = classify::module_of(rel).unwrap_or("?");
+    // Name the shallowest allowlisted path: the whole module when it
+    // matches, else the `module::submodule` pair.
+    let target = match seg2 {
+        Some(s2) if !classify::wall_clock_module(seg1, None) => format!("{seg1}::{s2}"),
+        _ => seg1.to_string(),
+    };
+    push(
+        findings,
+        rel,
+        t.line,
+        RULE_IMPORT_GRAPH,
+        format!(
+            "deterministic module `{module}` depends on real-time module \
+             `crate::{target}` — measured paths must not link wall-clock \
+             surfaces; sound taps carry a reviewed allow"
+        ),
+    );
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -202,6 +258,37 @@ mod tests {
                    v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n\
                    v.sort_by(|a, b| a.total_cmp(b));\n";
         assert_eq!(lines_of("src/scheduler/x.rs", src, RULE_FLOAT_CMP), vec![2]);
+    }
+
+    #[test]
+    fn import_graph_flags_real_time_deps_in_deterministic_modules() {
+        let src = "use crate::runtime::ModelRuntime;\n\
+                   let _t = crate::telemetry::profile::timer(\"x\");\n\
+                   use crate::telemetry::hist::Histogram;\n\
+                   use crate::util::logging::log;\n\
+                   use crate::util::stats::mean;\n\
+                   use crate::bench::harness::run;\n";
+        assert_eq!(lines_of("src/sim/x.rs", src, RULE_IMPORT_GRAPH), vec![1, 2, 4, 6]);
+        // Outside deterministic modules the dependency is fine.
+        assert!(lines_of("src/telemetry/x.rs", src, RULE_IMPORT_GRAPH).is_empty());
+        assert!(lines_of("src/metrics/x.rs", src, RULE_IMPORT_GRAPH).is_empty());
+    }
+
+    #[test]
+    fn import_graph_allow_silences_the_tap() {
+        let src = "let _t = crate::telemetry::profile::timer(\"tick\"); \
+                   // scls-lint: allow(import-graph): opt-in profiling tap\n\
+                   let _u = crate::telemetry::profile::timer(\"tock\");\n";
+        assert_eq!(lines_of("src/scheduler/x.rs", src, RULE_IMPORT_GRAPH), vec![2]);
+    }
+
+    #[test]
+    fn import_graph_ignores_non_crate_paths_and_comments() {
+        let src = "// crate::runtime in a comment\n\
+                   let s = \"crate::bench\";\n\
+                   use std::runtime_hint::x;\n\
+                   use crate::scheduler::fleet::WorkerLedger;\n";
+        assert!(lines_of("src/sim/x.rs", src, RULE_IMPORT_GRAPH).is_empty());
     }
 
     #[test]

@@ -323,11 +323,11 @@ pub fn dp_plan<E: ServeEstimate + ?Sized>(
 ) {
     debug_assert!(sorted.windows(2).all(|w| w[0].input_len <= w[1].input_len));
     if cfg.pred_corrected {
-        let _t = crate::telemetry::profile::timer("dp_plan_corrected");
+        let _t = crate::telemetry::profile::timer("dp_plan_corrected"); // scls-lint: allow(import-graph): opt-in profiling tap
         return dp_plan_corrected(sorted, est, mem, cfg, scratch);
     }
     // Opt-in hot-path profiling: one thread-local bool load when disabled.
-    let _t = crate::telemetry::profile::timer("dp_plan");
+    let _t = crate::telemetry::profile::timer("dp_plan"); // scls-lint: allow(import-graph): opt-in profiling tap
     let n = sorted.len();
     let s = cfg.slice_len;
     scratch.cuts.clear();

@@ -856,10 +856,30 @@ fn fault_scenarios(fc: &FigureConfig) -> Vec<(&'static str, crate::sim::FaultPla
         correlated = correlated.crash(w - 1 - i, fc.duration / 3.0);
     }
     correlated = correlated.join(half as u32, 2.0 * fc.duration / 3.0);
+    // Coordinator crash amid worker churn: the successor must rebuild a
+    // ledger that already carries load AND a dead worker.
+    let coord = FaultPlan::none()
+        .crash(w - 1, fc.duration / 4.0)
+        .coordinator_crash(fc.duration / 3.0);
+    // Probabilistic churn: Poisson crashes (worker 0 spared) with repair
+    // joins, expanded deterministically over the trace window by the
+    // seeded grammar — the same plan byte-for-byte on every run.
+    let mtbf = FaultPlan::parse_with_horizon(
+        &format!(
+            "mtbf:{:.3},mttr:{:.3},seed:7",
+            fc.duration / 3.0,
+            fc.duration / 20.0
+        ),
+        w,
+        fc.duration,
+    )
+    .expect("figure mtbf spec is valid");
     vec![
         ("none", FaultPlan::none()),
         ("rolling", FaultPlan::rolling(w, period)),
         ("correlated", correlated),
+        ("coord", coord),
+        ("mtbf", mtbf),
     ]
 }
 
@@ -872,22 +892,31 @@ fn run_fault_cell(
     rate: f64,
     plan: &crate::sim::FaultPlan,
 ) -> crate::metrics::RunMetrics {
+    use crate::estimator::TransferCost;
     let trace = fc.trace(rate);
-    Simulation::new(fc.sim(EngineKind::Ds))
-        .run_named_faulted(&trace, which, fc.slice_len, plan)
-        .unwrap_or_else(|e| panic!("{e}"))
+    // The transfer model prices migration KV movement (2M tokens/s);
+    // fault-free cells never migrate, so it cannot perturb the baseline.
+    Simulation::new(
+        fc.sim(EngineKind::Ds)
+            .with_kv_transfer(Some(TransferCost::from_bandwidth(2e6))),
+    )
+    .run_named_faulted(&trace, which, fc.slice_len, plan)
+    .unwrap_or_else(|e| panic!("{e}"))
 }
 
 /// Extension figure: throughput and tail latency through worker churn.
-/// SCLS, ILS, and P-SCLS run through a rolling restart and a correlated
-/// half-fleet crash, against the no-fault baseline. The acceptance shape:
-/// every request completes in every scenario (the slice-boundary reclaim
-/// loses at most one slice per crashed batch, never a request), and the
-/// faulted runs trade throughput/tail latency, not completeness.
+/// All five fault-aware policies (static SCLS, ILS, P-SCLS, and the
+/// continuous-batching SCLS-CB / P-CB) run through a rolling restart, a
+/// correlated half-fleet crash, a coordinator crash amid churn, and a
+/// seeded probabilistic mtbf/mttr plan — against the no-fault baseline.
+/// The acceptance shape: every request completes in every scenario (the
+/// slice-boundary reclaim loses at most one slice per crashed batch, never
+/// a request), and the faulted runs trade throughput/latency bands
+/// (p50/p99) plus migration KV traffic, not completeness.
 pub fn fig_fault(fc: &FigureConfig) -> FigureResult {
     let scenarios = fault_scenarios(fc);
     let mut items: Vec<(&'static str, &'static str, crate::sim::FaultPlan)> = Vec::new();
-    for which in ["SCLS", "ILS", "P-SCLS"] {
+    for which in ["SCLS", "ILS", "P-SCLS", "SCLS-CB", "P-CB"] {
         for (label, plan) in &scenarios {
             items.push((which, label, plan.clone()));
         }
@@ -896,51 +925,71 @@ pub fn fig_fault(fc: &FigureConfig) -> FigureResult {
         let m = run_fault_cell(fc, which, 20.0, &plan);
         let mut rts: Vec<f64> = m.completed.iter().map(|c| c.finished - c.arrival).collect();
         rts.sort_by(f64::total_cmp);
+        let p50 = crate::util::stats::percentile_sorted(&rts, 0.50);
         let p99 = crate::util::stats::percentile_sorted(&rts, 0.99);
-        let fleet = (m.worker_crashes, m.reclaimed_requests, m.lost_slices, m.migrations);
-        (which, label, m.summarize(), p99, fleet)
+        let fleet = (
+            m.worker_crashes,
+            m.coordinator_crashes,
+            m.reclaimed_requests,
+            m.lost_slices,
+            m.migrations,
+            m.kv_tokens_migrated,
+            m.migration_stall_s,
+        );
+        (which, label, m.summarize(), p50, p99, fleet)
     });
     let mut rows = Vec::new();
     let mut arr = Vec::new();
-    for (which, label, s, p99, (crashes, reclaimed, lost, migrations)) in sums {
+    for (which, label, s, p50, p99, fleet) in sums {
+        let (crashes, coord_crashes, reclaimed, lost, migrations, kv_tokens, stall) = fleet;
         rows.push(vec![
             which.to_string(),
             label.to_string(),
             f2(s.throughput),
-            f2(s.avg_response_time),
+            f2(p50),
             f2(p99),
             s.completed.to_string(),
             crashes.to_string(),
+            coord_crashes.to_string(),
             reclaimed.to_string(),
             lost.to_string(),
             migrations.to_string(),
+            kv_tokens.to_string(),
+            f2(stall),
         ]);
         let mut o = s.to_json();
         o.set("scheduler", which)
             .set("scenario", label)
+            .set("p50_response_time", p50)
             .set("p99_response_time", p99)
             .set("worker_crashes", crashes)
+            .set("coordinator_crashes", coord_crashes)
             .set("reclaimed_requests", reclaimed)
             .set("lost_slices", lost)
-            .set("migrations", migrations);
+            .set("migrations", migrations)
+            .set("kv_tokens_migrated", kv_tokens)
+            .set("migration_stall_s", stall);
         arr.push(o);
     }
     FigureResult {
         id: "figfault".into(),
-        title: "Fault sweep: throughput/tail latency through rolling restart and \
-                correlated crash (DS, rate 20)"
+        title: "Fault sweep: latency bands through rolling restart, correlated \
+                crash, coordinator crash, and seeded mtbf churn (DS, rate 20)"
             .into(),
         header: vec![
             "scheduler".into(),
             "scenario".into(),
             "thpt".into(),
-            "avg RT".into(),
+            "p50 RT".into(),
             "p99 RT".into(),
             "completed".into(),
             "crashes".into(),
+            "coord".into(),
             "reclaimed".into(),
             "lost slices".into(),
             "migrations".into(),
+            "kv tok".into(),
+            "stall s".into(),
         ],
         rows,
         json: Json::Arr(arr),
@@ -1214,7 +1263,7 @@ mod tests {
     #[test]
     fn figfault_every_scenario_completes_everything() {
         let r = fig_fault(&quick());
-        assert_eq!(r.rows.len(), 9, "3 policies x 3 scenarios");
+        assert_eq!(r.rows.len(), 25, "5 policies x 5 scenarios");
         let arr = r.json.as_arr().unwrap();
         let cell = |which: &str, scen: &str| {
             arr.iter()
@@ -1227,15 +1276,22 @@ mod tests {
         let num = |which: &str, scen: &str, key: &str| {
             cell(which, scen).get(key).unwrap().as_i64().unwrap()
         };
-        for which in ["SCLS", "ILS", "P-SCLS"] {
+        for which in ["SCLS", "ILS", "P-SCLS", "SCLS-CB", "P-CB"] {
             // The no-fault baseline completes the whole trace and touches
             // no fleet counter.
             let base = num(which, "none", "completed");
             assert!(base > 0);
-            for key in ["worker_crashes", "reclaimed_requests", "lost_slices", "migrations"] {
+            for key in [
+                "worker_crashes",
+                "coordinator_crashes",
+                "reclaimed_requests",
+                "lost_slices",
+                "migrations",
+                "kv_tokens_migrated",
+            ] {
                 assert_eq!(num(which, "none", key), 0, "{which} none {key}");
             }
-            for scen in ["rolling", "correlated"] {
+            for scen in ["rolling", "correlated", "coord", "mtbf"] {
                 // The headline invariant: churn costs work, never requests.
                 assert_eq!(
                     num(which, scen, "completed"),
@@ -1248,6 +1304,14 @@ mod tests {
                     num(which, scen, "reclaimed_requests") >= num(which, scen, "lost_slices"),
                     "{which}/{scen} counter identity"
                 );
+                // KV-transfer accounting: pricing is on, so every
+                // migration moved tokens.
+                if num(which, scen, "migrations") > 0 {
+                    assert!(
+                        num(which, scen, "kv_tokens_migrated") > 0,
+                        "{which}/{scen} migrated without moving KV"
+                    );
+                }
             }
             assert_eq!(
                 num(which, "correlated", "worker_crashes"),
@@ -1255,6 +1319,14 @@ mod tests {
                 "{which} must see the half-fleet crash"
             );
             assert_eq!(num(which, "rolling", "worker_crashes"), 0);
+            // The coord scenario's crash is observed by every policy
+            // (worker-locus recovery is a no-op, but the event counts).
+            assert_eq!(num(which, "coord", "coordinator_crashes"), 1, "{which}");
+            assert_eq!(num(which, "coord", "worker_crashes"), 1, "{which}");
+            assert!(
+                num(which, "mtbf", "worker_crashes") > 0,
+                "{which} mtbf plan must generate crashes"
+            );
         }
     }
 

@@ -179,6 +179,18 @@ impl PredictiveContinuousWorker {
         Some(admit_prefill + self.engine.decode_iter_mean(mean_l, n))
     }
 
+    /// Crash-path surrender: hand back everything this instance holds —
+    /// the running set (the caller re-prefills over input + generated) and
+    /// the untouched waiting queue — and release every reservation (the
+    /// projected-KV sum resets to zero with the running set).
+    pub fn abandon(&mut self) -> (Vec<Request>, Vec<Request>) {
+        self.projected = 0;
+        (
+            self.running.drain(..).map(|r| r.req).collect(),
+            self.waiting.drain(..).collect(),
+        )
+    }
+
     /// Complete the iteration: every running request gains one token;
     /// finished requests exit as `done` (with their unused reservation),
     /// reservation-exhausted ones as `evicted` (with `input_len` advanced
@@ -352,6 +364,24 @@ mod tests {
             first < done.finished_at.unwrap(),
             "TTFT must be strictly earlier than finish"
         );
+    }
+
+    #[test]
+    fn abandon_surrenders_state_and_releases_reservations() {
+        let mut w = worker(200);
+        w.waiting.push_back(req(0, 100, 500, 80)); // reserves 180 tokens
+        w.waiting.push_back(req(1, 100, 500, 80)); // does not fit: waits
+        w.begin_iteration().unwrap();
+        w.finish_iteration(1.0);
+        let (running, waiting) = w.abandon();
+        assert_eq!(running.len(), 1);
+        assert_eq!(running[0].id, 0);
+        assert_eq!(running[0].generated, 1, "boundary state survives");
+        assert_eq!(waiting.len(), 1);
+        assert_eq!(waiting[0].id, 1);
+        assert_eq!(w.running_len(), 0);
+        assert_eq!(w.kv_projected(), 0, "reservations fully released");
+        assert!(w.begin_iteration().is_none(), "instance is empty");
     }
 
     #[test]

@@ -134,6 +134,18 @@ impl SlicedContinuousWorker {
         Some(admit_prefill + self.engine.decode_iter_mean(mean_l, n))
     }
 
+    /// Crash-path surrender: hand back everything this instance holds —
+    /// the running set (the caller re-prefills over input + generated, so
+    /// at most the interrupted slice's tokens since the last boundary are
+    /// recomputed) and the untouched waiting queue. The KV accounting
+    /// resets with the running set.
+    pub fn abandon(&mut self) -> (Vec<Request>, Vec<Request>) {
+        (
+            self.running.drain(..).map(|r| r.req).collect(),
+            self.waiting.drain(..).collect(),
+        )
+    }
+
     /// Complete the iteration: every running request gains one token;
     /// finished requests exit as `done`, slice-capped ones as
     /// `rescheduled` (with `input_len` advanced so the next prefill covers
@@ -278,6 +290,25 @@ mod tests {
             first < r.finished_at.unwrap(),
             "TTFT must be strictly earlier than finish"
         );
+    }
+
+    #[test]
+    fn abandon_surrenders_running_and_waiting_and_resets_kv() {
+        let mut w = worker(8);
+        w.kv_budget = (10 + 8) * w.kv_delta; // exactly one request fits
+        w.waiting.push_back(req(0, 10, 20));
+        w.waiting.push_back(req(1, 10, 20));
+        w.begin_iteration().unwrap();
+        w.finish_iteration(1.0);
+        let (running, waiting) = w.abandon();
+        assert_eq!(running.len(), 1);
+        assert_eq!(running[0].id, 0);
+        assert_eq!(running[0].generated, 1, "boundary state survives");
+        assert_eq!(waiting.len(), 1);
+        assert_eq!(waiting[0].id, 1);
+        assert_eq!(w.running_len(), 0);
+        assert_eq!(w.kv_projected(), 0);
+        assert!(w.begin_iteration().is_none(), "instance is empty");
     }
 
     #[test]

@@ -11,7 +11,7 @@ use std::path::Path;
 use anyhow::{anyhow, Result};
 
 use crate::core::{Batch, BatchOutcome, RequestOutcome};
-use crate::runtime::{Bucket, ModelRuntime};
+use crate::runtime::{Bucket, ModelRuntime}; // scls-lint: allow(import-graph): the real-engine seam is wall-clock by design
 
 /// Per-request result of a real slice, with the concrete tokens.
 #[derive(Debug, Clone)]

@@ -7,4 +7,4 @@ pub mod profiler;
 pub mod serving_time;
 
 pub use memory::{MemoryEstimator, MemoryRule};
-pub use serving_time::{LinearLatency, ServingTimeEstimator};
+pub use serving_time::{LinearLatency, ServingTimeEstimator, TransferCost};

@@ -311,6 +311,48 @@ impl ServeEstimate for SliceTimeEstimator {
     }
 }
 
+/// Fitted KV-transfer cost model: the wall-clock stall a migrated request
+/// pays before it is servable on its new worker, as an affine function of
+/// the resident KV tokens being shipped (`base_s + per_token_s * tokens`).
+///
+/// The affine shape mirrors the `ServeEstimate` family: a fixed per-transfer
+/// setup term (connection + metadata) plus a bandwidth-limited linear term.
+/// `from_bandwidth` builds the common case from a tokens-per-second link
+/// rate with a small fixed setup cost.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TransferCost {
+    /// Fixed per-migration setup time in seconds.
+    pub base_s: f64,
+    /// Seconds per resident KV token shipped.
+    pub per_token_s: f64,
+}
+
+impl TransferCost {
+    /// Default per-transfer setup cost (seconds) used by `from_bandwidth`.
+    pub const DEFAULT_BASE_S: f64 = 0.01;
+
+    /// Build a cost model from a link bandwidth in KV tokens per second.
+    ///
+    /// Panics if `tokens_per_s` is not finite and positive (the CLI layer
+    /// rejects such values with a friendly error before reaching here).
+    pub fn from_bandwidth(tokens_per_s: f64) -> Self {
+        assert!(
+            tokens_per_s.is_finite() && tokens_per_s > 0.0,
+            "KV-transfer bandwidth must be finite and positive"
+        );
+        TransferCost {
+            base_s: Self::DEFAULT_BASE_S,
+            per_token_s: 1.0 / tokens_per_s,
+        }
+    }
+
+    /// Stall time in seconds for shipping `tokens` resident KV tokens.
+    #[inline]
+    pub fn stall(&self, tokens: u64) -> f64 {
+        self.base_s + self.per_token_s * tokens as f64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -483,5 +525,30 @@ mod tests {
             },
         };
         assert_eq!(e.serve(1, 1, 1), 0.0);
+    }
+
+    #[test]
+    fn transfer_cost_is_affine_in_tokens() {
+        let c = TransferCost {
+            base_s: 0.5,
+            per_token_s: 0.001,
+        };
+        assert_eq!(c.stall(0), 0.5);
+        assert!((c.stall(1000) - 1.5).abs() < 1e-12);
+        // Monotone in token count.
+        assert!(c.stall(2000) > c.stall(1000));
+    }
+
+    #[test]
+    fn transfer_cost_from_bandwidth() {
+        let c = TransferCost::from_bandwidth(10_000.0);
+        assert_eq!(c.base_s, TransferCost::DEFAULT_BASE_S);
+        assert!((c.stall(10_000) - (TransferCost::DEFAULT_BASE_S + 1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "finite and positive")]
+    fn transfer_cost_rejects_zero_bandwidth() {
+        let _ = TransferCost::from_bandwidth(0.0);
     }
 }

@@ -28,6 +28,7 @@ use scls::bench::figures::{self, FigureConfig, FigureResult};
 use scls::config::{ConfigFile, ExperimentConfig};
 use scls::engine::presets::{EngineKind, EnginePreset};
 use scls::estimator::profiler::{profile_and_fit, ProfileGrid};
+use scls::estimator::TransferCost;
 use scls::predictor::PredictorSpec;
 use scls::scheduler::parse_policy_name;
 use scls::scheduler::spec::SchedulerSpec;
@@ -81,11 +82,22 @@ SUBCOMMANDS:
       --pred-accuracy A  bucket/online classifier accuracy in [0,1] [0.85]
       --pred-corrected-dp  cost DP batches at their predicted early-return
                          budget instead of the full slice length (P-SCLS)
-      --faults SPEC      deterministic worker-lifecycle plan, comma list of
+      --faults SPEC      worker/coordinator-lifecycle plan, comma list of
                          crash:wIDX@TIME | drain:wIDX@TIME | join:N@TIME |
-                         rolling:PERIOD (e.g. crash:w3@120,join:2@300 or
-                         rolling:30s). Worker indices are 0-based; joiners
-                         get fresh indices.          [none]
+                         rolling:PERIOD | coord@TIME (coordinator crash +
+                         ledger reconstruction) | mtbf:SECS (Poisson
+                         crashes; mttr:SECS adds recovery joins, seed:N
+                         picks the stream) | burst:K@RATE (correlated
+                         K-crash bursts). Stochastic entries expand into a
+                         deterministic schedule over the run duration —
+                         byte-identical replays per seed. Worker indices
+                         are 0-based; joiners get fresh indices. E.g.
+                         crash:w3@120,join:2@300 or mtbf:30,mttr:5,seed:7
+                         or coord@15,rolling:30s.    [none]
+      --kv-bandwidth B   model KV-cache transfer cost on migration: a
+                         migrated request stalls base + tokens/B seconds
+                         before serving on its new worker (B in tokens/s).
+                         Off = migrations are free.  [off]
       --tenants SPEC     multi-tenant mix: a count N (uniform) or
                          N:w1,...,wN (weighted, e.g. 4:4,2,1,1). The
                          weights also drive the coordinator's
@@ -121,9 +133,9 @@ SUBCOMMANDS:
       --workload NAME    codefuse|sharegpt           [codefuse]
       --rate R --duration SECS --seed N
   lint        Static analysis: determinism & invariant rules
-              (hash-order, wall-clock, float-cmp, frozen-manifest,
-              sink-surface). Exits non-zero on any finding. Suppress a
-              reviewed exception with
+              (hash-order, wall-clock, float-cmp, import-graph,
+              frozen-manifest, sink-surface). Exits non-zero on any
+              finding. Suppress a reviewed exception with
               `// scls-lint: allow(<rule>): <why>` on the flagged line.
       --root DIR         crate root (holding src/); default: `.` if it
                          has src/lib.rs, else `rust`
@@ -426,11 +438,34 @@ fn predictor_spec(args: &Args, workload: WorkloadKind) -> Result<PredictorSpec> 
 
 /// Parse `--faults` into a validated plan against the run's initial fleet
 /// size. Absent flag → the canonical empty plan (byte-identical runs to the
-/// fixed-fleet world).
-fn fault_plan(args: &Args, workers: usize) -> Result<FaultPlan> {
+/// fixed-fleet world). `horizon` bounds the stochastic (`mtbf:`/`burst:`)
+/// expansion — callers pass the run duration so generated faults land
+/// inside the trace.
+fn fault_plan(args: &Args, workers: usize, horizon: f64) -> Result<FaultPlan> {
     match args.str_opt("faults") {
-        Some(spec) => FaultPlan::parse(spec, workers).map_err(|e| anyhow!("--faults: {e}")),
+        Some(spec) => FaultPlan::parse_with_horizon(spec, workers, horizon)
+            .map_err(|e| anyhow!("--faults: {e}")),
         None => Ok(FaultPlan::none()),
+    }
+}
+
+/// Parse `--kv-bandwidth` into a KV-transfer cost model: tokens/s of
+/// migration bandwidth. Absent flag → no model (migrations are free, the
+/// pre-PR 10 behaviour and the byte-identity baseline).
+fn kv_transfer_cost(args: &Args) -> Result<Option<TransferCost>> {
+    match args.str_opt("kv-bandwidth") {
+        Some(raw) => {
+            let bw: f64 = raw.parse().map_err(|_| {
+                anyhow!("--kv-bandwidth: expected tokens/s as a number, got `{raw}`")
+            })?;
+            if !bw.is_finite() || bw <= 0.0 {
+                return Err(anyhow!(
+                    "--kv-bandwidth: bandwidth must be finite and positive (got {bw})"
+                ));
+            }
+            Ok(Some(TransferCost::from_bandwidth(bw)))
+        }
+        None => Ok(None),
     }
 }
 
@@ -439,7 +474,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     // Case-insensitive; unknown names error with the valid-name list.
     let which = parse_policy_name(args.str_or("scheduler", "SCLS")).map_err(|e| anyhow!("{e}"))?;
     let pspec = predictor_spec(args, cfg.workload)?;
-    let plan = fault_plan(args, cfg.workers)?;
+    let plan = fault_plan(args, cfg.workers, cfg.duration)?;
+    let kv_transfer = kv_transfer_cost(args)?;
     let (mix, slo) = tenancy_spec(args)?;
     let mut trace = Trace::generate(&TraceConfig {
         kind: cfg.workload,
@@ -479,7 +515,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         )
         .with_predictor(pspec.clone())
         .with_pred_corrected_dp(pred_corrected)
-        .with_tenant_weights(tenant_weights),
+        .with_tenant_weights(tenant_weights)
+        .with_kv_transfer(kv_transfer),
     );
     log::info!(
         "simulate: {} requests, {} workers, engine {}, scheduler {}",
@@ -533,9 +570,12 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     if !plan.is_empty() {
         println!("fault events      {}", plan.events.len());
         println!("worker crashes    {}", metrics.worker_crashes);
+        println!("coord crashes     {}", metrics.coordinator_crashes);
         println!("reclaimed reqs    {}", metrics.reclaimed_requests);
         println!("lost slices       {}", metrics.lost_slices);
         println!("migrations        {}", metrics.migrations);
+        println!("kv tok migrated   {}", metrics.kv_tokens_migrated);
+        println!("migration stall   {:.2} s", metrics.migration_stall_s);
     }
     if slo.is_some() {
         println!(
@@ -854,7 +894,7 @@ mod tests {
     }
 
     fn plan_of(s: &str, workers: usize) -> Result<FaultPlan> {
-        fault_plan(&args(s), workers)
+        fault_plan(&args(s), workers, 600.0)
     }
 
     #[test]
@@ -900,6 +940,57 @@ mod tests {
         assert!(err.contains("unknown fault op"), "{err}");
         let err = plan_of("simulate --faults crash:w1", 8).unwrap_err().to_string();
         assert!(err.contains("@TIME"), "{err}");
+    }
+
+    #[test]
+    fn faults_coordinator_crash_parses() {
+        let plan = plan_of("simulate --faults coord@15", 8).unwrap();
+        assert_eq!(plan.events.len(), 1);
+        // Mixed with worker events, still one plan.
+        let plan = plan_of("simulate --faults coord@15,crash:w1@10", 8).unwrap();
+        assert_eq!(plan.events.len(), 2);
+    }
+
+    #[test]
+    fn faults_stochastic_grammar_parses_and_replays_deterministically() {
+        let a = plan_of("simulate --faults mtbf:30,mttr:5,seed:7", 8).unwrap();
+        assert!(!a.is_empty(), "an mtbf of 30s over 600s must generate events");
+        // Same seed → byte-identical schedule; different seed → different.
+        let b = plan_of("simulate --faults mtbf:30,mttr:5,seed:7", 8).unwrap();
+        assert_eq!(a, b);
+        let c = plan_of("simulate --faults mtbf:30,mttr:5,seed:8", 8).unwrap();
+        assert_ne!(a, c);
+        // Correlated bursts layer on top (expansion coverage lives in
+        // sim::faults's own tests; here the grammar must just parse).
+        assert!(plan_of("simulate --faults burst:3@0.05,seed:2", 8).is_ok());
+    }
+
+    #[test]
+    fn faults_stochastic_junk_rates_are_friendly_errors() {
+        for bad in ["mtbf:nan", "mtbf:0", "mtbf:-3", "mtbf:inf"] {
+            let err = plan_of(&format!("simulate --faults {bad}"), 8)
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("--faults"), "{bad}: {err}");
+        }
+        assert!(plan_of("simulate --faults mttr:5", 8).is_err(), "mttr needs mtbf");
+        assert!(plan_of("simulate --faults burst:0@0.1", 8).is_err());
+        assert!(plan_of("simulate --faults burst:2@nan", 8).is_err());
+    }
+
+    #[test]
+    fn kv_bandwidth_flag_parses_and_rejects_junk() {
+        assert_eq!(kv_transfer_cost(&args("simulate")).unwrap(), None);
+        let c = kv_transfer_cost(&args("simulate --kv-bandwidth 100000"))
+            .unwrap()
+            .unwrap();
+        assert_eq!(c, TransferCost::from_bandwidth(100_000.0));
+        for bad in ["0", "-5", "nan", "inf", "fast"] {
+            let err = kv_transfer_cost(&args(&format!("simulate --kv-bandwidth {bad}")))
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("--kv-bandwidth"), "{bad}: {err}");
+        }
     }
 
     #[test]

@@ -121,6 +121,17 @@ pub struct RunMetrics {
     /// Requests moved between workers at a slice boundary (drain handoffs
     /// plus queued-work reassignment after a crash).
     pub migrations: u64,
+    /// Coordinator crashes survived: the coordinator's in-memory state was
+    /// dropped and a successor rebuilt it from worker reports plus the
+    /// arrival log. Always 0 without `coord@T` fault events.
+    pub coordinator_crashes: u64,
+    /// Resident context tokens (prompt + cached KV at the boundary) shipped
+    /// with migrated requests. Always 0 without migrations.
+    pub kv_tokens_migrated: u64,
+    /// Total modeled KV-transfer stall charged to migrated requests before
+    /// they were servable on their new worker. Always 0 unless a transfer
+    /// cost is configured (`SimConfig::with_kv_transfer`).
+    pub migration_stall_s: f64,
     /// Requests shed before service (deadline-infeasible admissions under
     /// SLO-aware policies). Always 0 under the throughput-only policies.
     pub shed_requests: u64,
@@ -224,6 +235,9 @@ impl RunMetrics {
             .set("reclaimed_requests", self.reclaimed_requests)
             .set("lost_slices", self.lost_slices)
             .set("migrations", self.migrations)
+            .set("coordinator_crashes", self.coordinator_crashes)
+            .set("kv_tokens_migrated", self.kv_tokens_migrated)
+            .set("migration_stall_s", self.migration_stall_s)
             .set("shed_requests", self.shed_requests)
             .set("slo_tracked", self.slo.tracked)
             .set("slo_attained", self.slo.attained)

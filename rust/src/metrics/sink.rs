@@ -44,6 +44,13 @@ pub trait MetricsSink {
     fn on_reclaim(&mut self, _now: f64, _worker: usize, _in_flight: usize, _queued: usize) {}
     /// `count` requests migrated off `worker` at a slice boundary (drain).
     fn on_migration(&mut self, _now: f64, _worker: usize, _count: usize) {}
+    /// The coordinator crashed and a successor reconstructed its ledger
+    /// from worker-side state (elastic-fleet runs with `coord@T` only).
+    fn on_coordinator_crash(&mut self, _now: f64) {}
+    /// A migrated request's resident context (`tokens`) was shipped off
+    /// `worker`; `stall_s` is the modeled transfer stall charged before the
+    /// request is servable again (0 when no transfer cost is configured).
+    fn on_kv_transfer(&mut self, _now: f64, _worker: usize, _tokens: u64, _stall_s: f64) {}
     /// An SLO-carrying request completed and was judged (never fires for
     /// SLO-free requests, so SLO-free runs see no new events).
     fn on_slo(&mut self, _now: f64, _outcome: &SloOutcome) {}
@@ -102,6 +109,9 @@ pub struct Tally {
     pub reclaimed_requests: u64,
     pub lost_slices: u64,
     pub migrations: u64,
+    pub coordinator_crashes: u64,
+    pub kv_tokens_migrated: u64,
+    pub migration_stall_s: f64,
     /// SLO counters (see [`RunMetrics`]); all 0 on SLO-free runs.
     pub slo_tracked: u64,
     pub slo_attained: u64,
@@ -161,6 +171,15 @@ impl MetricsSink for Tally {
 
     fn on_migration(&mut self, _now: f64, _worker: usize, count: usize) {
         self.migrations += count as u64;
+    }
+
+    fn on_coordinator_crash(&mut self, _now: f64) {
+        self.coordinator_crashes += 1;
+    }
+
+    fn on_kv_transfer(&mut self, _now: f64, _worker: usize, tokens: u64, stall_s: f64) {
+        self.kv_tokens_migrated += tokens;
+        self.migration_stall_s += stall_s;
     }
 
     fn on_slo(&mut self, _now: f64, outcome: &SloOutcome) {
@@ -252,6 +271,18 @@ impl MetricsSink for Fanout<'_> {
     fn on_migration(&mut self, now: f64, worker: usize, count: usize) {
         for s in self.0.iter_mut() {
             s.on_migration(now, worker, count);
+        }
+    }
+
+    fn on_coordinator_crash(&mut self, now: f64) {
+        for s in self.0.iter_mut() {
+            s.on_coordinator_crash(now);
+        }
+    }
+
+    fn on_kv_transfer(&mut self, now: f64, worker: usize, tokens: u64, stall_s: f64) {
+        for s in self.0.iter_mut() {
+            s.on_kv_transfer(now, worker, tokens, stall_s);
         }
     }
 
@@ -449,6 +480,12 @@ mod tests {
         fn on_migration(&mut self, _now: f64, _worker: usize, _count: usize) {
             self.note("on_migration");
         }
+        fn on_coordinator_crash(&mut self, _now: f64) {
+            self.note("on_coordinator_crash");
+        }
+        fn on_kv_transfer(&mut self, _now: f64, _worker: usize, _tokens: u64, _stall_s: f64) {
+            self.note("on_kv_transfer");
+        }
         fn on_slo(&mut self, _now: f64, _outcome: &SloOutcome) {
             self.note("on_slo");
         }
@@ -528,6 +565,8 @@ mod tests {
             );
             f.on_reclaim(1.1, 1, 2, 3);
             f.on_migration(1.2, 1, 4);
+            f.on_coordinator_crash(1.25);
+            f.on_kv_transfer(1.26, 1, 640, 0.05);
             f.on_slo(
                 1.3,
                 &SloOutcome {
@@ -554,6 +593,8 @@ mod tests {
             "on_fleet",
             "on_reclaim",
             "on_migration",
+            "on_coordinator_crash",
+            "on_kv_transfer",
             "on_slo",
             "on_shed",
             "on_worker_sample",

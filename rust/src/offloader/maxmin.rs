@@ -35,7 +35,7 @@ impl MaxMinOffloader {
     ) {
         // Opt-in hot-path profiling: one thread-local bool load when
         // disabled.
-        let _t = crate::telemetry::profile::timer("offload");
+        let _t = crate::telemetry::profile::timer("offload"); // scls-lint: allow(import-graph): opt-in profiling tap
         out.clear();
         // Longest estimated serving time first.
         batches.sort_by(|a, b| b.est_serve_time.total_cmp(&a.est_serve_time));

@@ -14,7 +14,7 @@ use crate::core::{Batch, Request};
 use crate::estimator::serving_time::ServeEstimate;
 use crate::estimator::MemoryEstimator;
 use crate::offloader::{LoadLedger, MaxMinOffloader, RoundRobin};
-use crate::scheduler::fleet::{WorkerHealth, WorkerLedger};
+use crate::scheduler::fleet::{WorkerHealth, WorkerLedger, WorkerReport};
 use crate::scheduler::spec::{BatchingSpec, IntervalSpec, OffloadSpec, SchedulerSpec};
 use crate::scheduler::{IntervalController, RequestPool};
 
@@ -227,7 +227,7 @@ impl SlicedCoordinator {
     ) -> usize {
         // Opt-in hot-path profiling: one thread-local bool load when
         // disabled.
-        let _t = crate::telemetry::profile::timer("schedule_tick");
+        let _t = crate::telemetry::profile::timer("schedule_tick"); // scls-lint: allow(import-graph): opt-in profiling tap
         self.pool.drain_sorted_into(&mut self.tick_reqs);
         let drained = self.tick_reqs.len();
         if drained == 0 {
@@ -427,6 +427,50 @@ impl SlicedCoordinator {
     pub fn note_progress(&mut self, worker: usize, now: f64) {
         self.fleet.batch_completed(worker, now);
     }
+
+    /// Reconstruct this coordinator's soft state after a coordinator
+    /// crash, from authoritative worker-side reports plus the arrival
+    /// log's unassigned requests (`recovered`, drained into the pool).
+    ///
+    /// What is recovered exactly:
+    /// * the load ledger — each worker's `charged_load` (serving + queued
+    ///   estimated serve time) equals the pre-crash entry, because the
+    ///   ledger charges per assignment and releases per batch completion,
+    ///   both replayable from worker state;
+    /// * worker health / in-flight ownership / progress cursors — copied
+    ///   from the reports ([`WorkerLedger::from_reports`]).
+    ///
+    /// What is soft-state loss, by design:
+    /// * the round-robin cursor restarts at 0 (routing order may differ
+    ///   post-crash; the differential property is completion-*set*
+    ///   equality, not byte identity);
+    /// * deficit counters reset to 0 — at most one tick quantum of
+    ///   banked fairness credit per tenant is forfeited.
+    pub fn rebuild_after_crash(
+        &mut self,
+        now: f64,
+        reports: &[WorkerReport],
+        recovered: &mut Vec<Request>,
+    ) {
+        let n = reports.len();
+        self.ledger = LoadLedger::new(n);
+        self.rr = RoundRobin::new(n);
+        self.fleet = WorkerLedger::from_reports(now, reports);
+        for r in reports {
+            if r.health != WorkerHealth::Alive {
+                self.ledger.set_accepting(r.worker, false);
+            }
+            if r.charged_load > 0.0 {
+                self.ledger.add(r.worker, r.charged_load);
+            }
+        }
+        for d in self.deficits.iter_mut() {
+            *d = 0.0;
+        }
+        for r in recovered.drain(..) {
+            self.pool.push(r);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -572,6 +616,61 @@ mod tests {
         let w = c.worker_join(1.0);
         assert_eq!(w, 3);
         assert_eq!(c.admit(parked.pop().unwrap()).unwrap().0, 3);
+    }
+
+    #[test]
+    fn rebuild_after_crash_restores_ledger_and_pool() {
+        let preset = EnginePreset::paper(EngineKind::Ds);
+        let mut c = SlicedCoordinator::new(&SchedulerSpec::scls(&preset, 128), 3);
+        c.charge(0, 2.0);
+        c.charge(1, 0.5);
+        c.worker_drain(2);
+        // Successor state: pretend the coordinator just restarted and the
+        // workers reported the truth it had been mirroring.
+        let reports = [
+            WorkerReport {
+                worker: 0,
+                health: WorkerHealth::Alive,
+                in_flight: 4,
+                progress: 2,
+                charged_load: 2.0,
+            },
+            WorkerReport {
+                worker: 1,
+                health: WorkerHealth::Alive,
+                in_flight: 0,
+                progress: 1,
+                charged_load: 0.5,
+            },
+            WorkerReport {
+                worker: 2,
+                health: WorkerHealth::Draining,
+                in_flight: 0,
+                progress: 0,
+                charged_load: 0.0,
+            },
+        ];
+        let mut recovered = requests(5);
+        c.rebuild_after_crash(3.0, &reports, &mut recovered);
+        assert!(recovered.is_empty(), "recovered requests drained to pool");
+        assert!(!c.pool_is_empty());
+        assert_eq!(c.ledger().load(0), 2.0);
+        assert_eq!(c.ledger().load(1), 0.5);
+        assert!(!c.ledger().is_accepting(2), "drain status survives");
+        assert_eq!(c.fleet().health(2), WorkerHealth::Draining);
+        assert_eq!(c.fleet().in_flight(0), 4);
+        assert_eq!(c.fleet().last_progress(0), 2);
+        assert_eq!(c.fleet().last_heartbeat(1), 3.0);
+        // The rebuilt coordinator keeps scheduling: the recovered pool
+        // drains through a normal tick onto the accepting workers.
+        let est = fitted_estimator(&preset, 7);
+        let mem = preset.memory_estimator();
+        let drained = c.schedule_tick(&est, &mem);
+        assert_eq!(drained, 5);
+        let a = c.take_assignments();
+        let total: usize = a.iter().map(|(_, b)| b.size()).sum();
+        assert_eq!(total, 5);
+        assert!(a.iter().all(|(w, _)| *w < 2), "nothing lands on the drainer");
     }
 
     #[test]

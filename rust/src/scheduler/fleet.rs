@@ -22,6 +22,25 @@ pub enum WorkerHealth {
     Dead,
 }
 
+/// One worker's authoritative self-report, used to reconstruct a crashed
+/// coordinator's ledger. Workers own the ground truth the coordinator
+/// merely mirrors: their health, the batch they are serving, the last
+/// slice boundary they completed, and the serving-plus-queued load they
+/// still owe (which equals the pre-crash [`crate::offloader::LoadLedger`]
+/// entry exactly, since the ledger charges per assignment and releases per
+/// batch completion — both replayable from worker-side state).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WorkerReport {
+    pub worker: usize,
+    pub health: WorkerHealth,
+    /// Requests in the batch currently serving (0 when idle).
+    pub in_flight: usize,
+    /// Slice boundaries completed over the worker's lifetime.
+    pub progress: u64,
+    /// Estimated serve time of the serving slot plus every queued batch.
+    pub charged_load: f64,
+}
+
 /// Per-worker lifecycle ledger: health, heartbeats, in-flight ownership,
 /// last completed slice boundary.
 #[derive(Debug, Clone, Default)]
@@ -40,6 +59,22 @@ impl WorkerLedger {
             in_flight: vec![0; workers],
             last_progress_slice: vec![0; workers],
         }
+    }
+
+    /// Rebuild a ledger from worker self-reports after a coordinator
+    /// crash. Reports must be index-dense (report `i` describes worker
+    /// `i`); heartbeats restart at `now` — the successor has no memory of
+    /// older beats, and every reporting worker just proved liveness.
+    pub fn from_reports(now: f64, reports: &[WorkerReport]) -> Self {
+        let mut l = WorkerLedger::new(reports.len());
+        for (i, r) in reports.iter().enumerate() {
+            debug_assert_eq!(i, r.worker, "reports must be index-dense");
+            l.health[i] = r.health;
+            l.last_heartbeat[i] = now;
+            l.in_flight[i] = r.in_flight;
+            l.last_progress_slice[i] = r.progress;
+        }
+        l
     }
 
     /// Register a cold joiner; returns its (fresh, never-reused) index.
@@ -162,6 +197,43 @@ mod tests {
         assert_eq!(l.in_flight(0), 0);
         assert_eq!(l.last_progress(0), 1);
         assert_eq!(l.last_heartbeat(0), 2.0);
+    }
+
+    #[test]
+    fn rebuild_from_reports_restores_worker_truth() {
+        let reports = [
+            WorkerReport {
+                worker: 0,
+                health: WorkerHealth::Alive,
+                in_flight: 3,
+                progress: 7,
+                charged_load: 1.5,
+            },
+            WorkerReport {
+                worker: 1,
+                health: WorkerHealth::Dead,
+                in_flight: 0,
+                progress: 2,
+                charged_load: 0.0,
+            },
+            WorkerReport {
+                worker: 2,
+                health: WorkerHealth::Draining,
+                in_flight: 1,
+                progress: 4,
+                charged_load: 0.25,
+            },
+        ];
+        let l = WorkerLedger::from_reports(9.0, &reports);
+        assert_eq!(l.workers(), 3);
+        assert_eq!(l.health(0), WorkerHealth::Alive);
+        assert_eq!(l.health(1), WorkerHealth::Dead);
+        assert_eq!(l.health(2), WorkerHealth::Draining);
+        assert_eq!(l.in_flight(0), 3);
+        assert_eq!(l.last_progress(0), 7);
+        assert_eq!(l.last_progress(2), 4);
+        assert_eq!(l.accepting_count(), 1);
+        assert!((0..3).all(|w| l.last_heartbeat(w) == 9.0));
     }
 
     #[test]

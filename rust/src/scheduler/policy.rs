@@ -195,6 +195,26 @@ impl<'a> SimCtx<'a> {
         self.sink.on_migration(self.now, worker, count);
     }
 
+    /// Log a coordinator crash being handled (the successor is about to
+    /// rebuild from worker-side state): bumps `coordinator_crashes` and
+    /// streams to sinks.
+    pub fn record_coordinator_crash(&mut self) {
+        self.metrics.coordinator_crashes += 1;
+        self.sink.on_coordinator_crash(self.now);
+    }
+
+    /// Log the KV-transfer cost of one migrated request: `tokens` resident
+    /// KV tokens shipped off `worker`, stalling the request for `stall_s`
+    /// seconds before it is servable elsewhere (`stall_s` is 0 when no
+    /// [`crate::estimator::TransferCost`] model is configured — the tokens
+    /// are still counted). Bumps `kv_tokens_migrated`/`migration_stall_s`
+    /// and streams to sinks.
+    pub fn record_kv_transfer(&mut self, worker: usize, tokens: u64, stall_s: f64) {
+        self.metrics.kv_tokens_migrated += tokens;
+        self.metrics.migration_stall_s += stall_s;
+        self.sink.on_kv_transfer(self.now, worker, tokens, stall_s);
+    }
+
     /// Stream a per-worker telemetry sample: `worker` just finished a
     /// serving that produced `new_tokens`, holds `kv_in_use` KV-cache
     /// tokens after the boundary (0 for static-batching engines, which
@@ -249,6 +269,16 @@ pub trait SchedulingPolicy {
     /// it work and reclaim/migrate what it held; the default no-op keeps
     /// fault-ignorant policies byte-identical on fault-free traces.
     fn on_worker_lost(&mut self, _worker: usize, _loss: WorkerLoss, _ctx: &mut SimCtx) {}
+
+    /// Elastic fleet only: the coordinator process crashed and a successor
+    /// is taking over. Coordinator-backed policies drop their in-memory
+    /// scheduling state (pools, ledger, deficit counters) and rebuild it
+    /// from authoritative worker-side reports plus the arrival log; the
+    /// default no-op keeps policies without a coordinator abstraction
+    /// byte-identical (their "coordinator state" is the policy struct
+    /// itself, which survives by construction). Fault-free runs never
+    /// deliver this hook.
+    fn on_coordinator_crash(&mut self, _ctx: &mut SimCtx) {}
 
     /// Final accounting after the event queue drains (e.g. per-worker
     /// completion times).

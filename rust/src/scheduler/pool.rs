@@ -113,7 +113,7 @@ impl RequestPool {
     pub fn drain_sorted_into(&mut self, out: &mut Vec<Request>) {
         // Opt-in hot-path profiling: one thread-local bool load when
         // disabled.
-        let _t = crate::telemetry::profile::timer("drain_sort");
+        let _t = crate::telemetry::profile::timer("drain_sort"); // scls-lint: allow(import-graph): opt-in profiling tap
         self.merge_pending();
         out.clear();
         std::mem::swap(&mut self.sorted, out);

@@ -22,7 +22,7 @@
 
 use crate::engine::presets::EnginePreset;
 use crate::estimator::profiler::{profile_and_fit, ProfileGrid};
-use crate::estimator::ServingTimeEstimator;
+use crate::estimator::{ServingTimeEstimator, TransferCost};
 use crate::metrics::{MetricsSink, NullSink, RunMetrics};
 use crate::predictor::PredictorSpec;
 use crate::scheduler::policy::{Ev, SchedulingPolicy, SimCtx, WorkerLoss};
@@ -55,6 +55,12 @@ pub struct SimConfig {
     /// keeps the exact legacy FCFS drain order — byte-identical to the
     /// pre-tenancy code.
     pub tenant_weights: Option<Vec<f64>>,
+    /// KV-transfer cost model for migrations under fleet churn: migrated
+    /// requests stall for `stall(resident_kv_tokens)` seconds before they
+    /// are servable on a new worker. `None` (the default) keeps migration
+    /// free — byte-identical to the pre-transfer-cost code. Resident KV
+    /// tokens are always counted in `kv_tokens_migrated` either way.
+    pub kv_transfer: Option<TransferCost>,
 }
 
 impl SimConfig {
@@ -67,6 +73,7 @@ impl SimConfig {
             predictor: PredictorSpec::Oracle,
             pred_corrected_dp: false,
             tenant_weights: None,
+            kv_transfer: None,
         }
     }
 
@@ -86,6 +93,13 @@ impl SimConfig {
     /// coordinator (see [`crate::scheduler::SlicedCoordinator`]).
     pub fn with_tenant_weights(mut self, weights: Option<Vec<f64>>) -> SimConfig {
         self.tenant_weights = weights;
+        self
+    }
+
+    /// Opt in to KV-transfer cost on migration (see
+    /// [`crate::estimator::TransferCost`]).
+    pub fn with_kv_transfer(mut self, cost: Option<TransferCost>) -> SimConfig {
+        self.kv_transfer = cost;
         self
     }
 }
@@ -177,6 +191,14 @@ pub fn run_policy_faulted(
                     FaultKind::Crash { worker } => {
                         policy.on_worker_lost(worker, WorkerLoss::Crash, &mut ctx);
                     }
+                    FaultKind::CoordinatorCrash => {
+                        // Recorded here, not per-policy, so the counter is
+                        // uniform: worker-locus policies (CB family, SLS)
+                        // keep their scheduling state worker-resident and
+                        // recover with the default no-op hook.
+                        ctx.record_coordinator_crash();
+                        policy.on_coordinator_crash(&mut ctx);
+                    }
                 }
             }
         }
@@ -201,6 +223,7 @@ pub struct ClusterBuilder {
     predictor: PredictorSpec,
     pred_corrected_dp: bool,
     tenant_weights: Option<Vec<f64>>,
+    kv_transfer: Option<TransferCost>,
 }
 
 impl Default for ClusterBuilder {
@@ -214,6 +237,7 @@ impl Default for ClusterBuilder {
             predictor: PredictorSpec::Oracle,
             pred_corrected_dp: false,
             tenant_weights: None,
+            kv_transfer: None,
         }
     }
 }
@@ -263,12 +287,19 @@ impl ClusterBuilder {
         self
     }
 
+    /// KV-transfer cost model charged to migrated requests under churn.
+    pub fn kv_transfer(mut self, cost: Option<TransferCost>) -> Self {
+        self.kv_transfer = cost;
+        self
+    }
+
     pub fn build(self) -> Simulation {
         Simulation::new(
             SimConfig::new(self.workers, self.engine, self.max_gen_len, self.seed)
                 .with_predictor(self.predictor)
                 .with_pred_corrected_dp(self.pred_corrected_dp)
-                .with_tenant_weights(self.tenant_weights),
+                .with_tenant_weights(self.tenant_weights)
+                .with_kv_transfer(self.kv_transfer),
         )
     }
 }

@@ -1,10 +1,11 @@
-//! Deterministic fault schedules for the elastic-fleet DES.
+//! Fault schedules for the elastic-fleet DES: deterministic plans plus a
+//! seeded stochastic generator that expands to deterministic plans.
 //!
-//! A [`FaultPlan`] is an ordered list of worker-lifecycle events — joins,
-//! drains, crashes — stamped with simulation times. The driver turns each
-//! entry into an `Ev::Fleet` heap event *after* pushing the trace arrivals,
-//! so at equal timestamps arrivals are delivered first, then fleet events
-//! in plan order, then any runtime `WorkerDone` pushed later (the
+//! A [`FaultPlan`] is an ordered list of lifecycle events — joins, drains,
+//! crashes, coordinator crashes — stamped with simulation times. The driver
+//! turns each entry into an `Ev::Fleet` heap event *after* pushing the trace
+//! arrivals, so at equal timestamps arrivals are delivered first, then fleet
+//! events in plan order, then any runtime `WorkerDone` pushed later (the
 //! [`crate::sim::events::EventQueue`] FIFO tie-break). Delivery order is
 //! therefore exactly (time, plan index) — the same order [`FaultPlan::validate`]
 //! walks, so a plan that validates can never reference a worker the run
@@ -17,10 +18,27 @@
 //! - `join:2@300`    — two cold workers join at t=300
 //! - `rolling:30s`   — rolling restart: drain worker *i* at `(i+1)·P`, replace
 //!   it with a fresh join one period later, for every initial worker
+//! - `coord@15`      — the coordinator crashes at t=15 and a successor
+//!   reconstructs its ledger from worker-side state (see
+//!   `SchedulingPolicy::on_coordinator_crash`)
+//! - `mtbf:30`       — stochastic churn: each worker (sparing worker 0, so the
+//!   fleet always keeps a survivor) fails after an Exp(1/MTBF) lifetime
+//! - `mttr:5`        — each stochastic failure is repaired by a fresh join
+//!   after an Exp(1/MTTR) repair time (requires `mtbf:` or `burst:`)
+//! - `burst:3@0.01`  — correlated failures: at Poisson instants with the given
+//!   rate (events/s), 3 distinct alive workers crash simultaneously
+//! - `seed:7`        — RNG seed for the stochastic entries; the same seed
+//!   expands to a byte-identical concrete schedule every time
 //!
-//! Times accept an optional trailing `s` (`120` and `120s` are the same).
+//! Stochastic entries are expanded **at parse time** into ordinary
+//! crash/join events over a horizon (the run duration via
+//! [`FaultPlan::parse_with_horizon`]); from there on the plan is pure data
+//! and replays are byte-identical. Times accept an optional trailing `s`
+//! (`120` and `120s` are the same).
 
 use std::fmt;
+
+use crate::util::rng::Rng;
 
 /// What happens to the fleet at a scheduled instant.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -32,6 +50,10 @@ pub enum FaultKind {
     /// Worker dies abruptly; its in-flight slice is lost and survivors are
     /// re-queued at the last completed slice boundary.
     Crash { worker: usize },
+    /// The coordinator's in-memory state (pools, load ledger, deficit
+    /// counters) is lost; a successor rebuilds it from worker reports and
+    /// the arrival log. Workers keep computing through the failover.
+    CoordinatorCrash,
 }
 
 impl fmt::Display for FaultKind {
@@ -40,6 +62,7 @@ impl fmt::Display for FaultKind {
             FaultKind::Join { count } => write!(f, "join:{count}"),
             FaultKind::Drain { worker } => write!(f, "drain:w{worker}"),
             FaultKind::Crash { worker } => write!(f, "crash:w{worker}"),
+            FaultKind::CoordinatorCrash => write!(f, "coord"),
         }
     }
 }
@@ -62,6 +85,17 @@ pub struct FaultEvent {
 pub struct FaultPlan {
     pub events: Vec<FaultEvent>,
 }
+
+/// Horizon used by [`FaultPlan::parse`] for stochastic entries when the
+/// caller has no run duration at hand (the paper's default trace length).
+pub const DEFAULT_HORIZON: f64 = 600.0;
+
+/// Seed used for stochastic entries when the spec has no `seed:N`.
+pub const DEFAULT_FAULT_SEED: u64 = 0x5c15_fa17;
+
+/// Backstop on stochastic expansion size: a runaway rate (tiny MTBF or a
+/// huge burst rate) fails loudly instead of materializing an absurd plan.
+const MAX_GENERATED_EVENTS: usize = 100_000;
 
 impl FaultPlan {
     /// The empty plan: no faults, byte-identical runs to a fixed fleet.
@@ -100,6 +134,16 @@ impl FaultPlan {
         self.events.push(FaultEvent {
             at,
             kind: FaultKind::Join { count },
+        });
+        self
+    }
+
+    /// Builder: schedule a coordinator crash (ledger loss + successor
+    /// reconstruction) at `at`.
+    pub fn coordinator_crash(mut self, at: f64) -> Self {
+        self.events.push(FaultEvent {
+            at,
+            kind: FaultKind::CoordinatorCrash,
         });
         self
     }
@@ -159,20 +203,42 @@ impl FaultPlan {
                         ));
                     }
                 }
+                FaultKind::CoordinatorCrash => {}
             }
         }
         Ok(())
     }
 
     /// Parse the CLI `--faults` grammar against an initial fleet of
-    /// `workers`, validating as it goes. Errors are friendly, single-line
-    /// messages suitable for direct CLI display.
+    /// `workers`. Stochastic entries (`mtbf:`/`mttr:`/`burst:`/`seed:`)
+    /// expand over [`DEFAULT_HORIZON`]; callers that know the run duration
+    /// should use [`FaultPlan::parse_with_horizon`] instead. Errors are
+    /// friendly, single-line messages suitable for direct CLI display.
     pub fn parse(spec: &str, workers: usize) -> Result<Self, String> {
-        let mut plan = FaultPlan::none();
+        Self::parse_with_horizon(spec, workers, DEFAULT_HORIZON)
+    }
+
+    /// [`FaultPlan::parse`] with an explicit expansion horizon (seconds)
+    /// for the stochastic entries: generated events all fire at
+    /// `t ≤ horizon`. Deterministic entries are unaffected by the horizon.
+    pub fn parse_with_horizon(spec: &str, workers: usize, horizon: f64) -> Result<Self, String> {
+        let mut det = FaultPlan::none();
+        let mut st = Stochastic::default();
         for raw in spec.split(',') {
             let entry = raw.trim();
             if entry.is_empty() {
                 continue;
+            }
+            // `coord@T` carries no `op:args` colon — special-case it first.
+            if let Some(ttok) = entry.strip_prefix("coord@") {
+                let at = parse_time(ttok, entry)?;
+                det = det.coordinator_crash(at);
+                continue;
+            }
+            if entry == "coord" {
+                return Err(format!(
+                    "bad fault entry '{entry}': expected coord@TIME, e.g. coord@15"
+                ));
             }
             let (op, rest) = entry
                 .split_once(':')
@@ -184,10 +250,10 @@ impl FaultPlan {
                     })?;
                     let worker = parse_worker(wtok, entry)?;
                     let at = parse_time(ttok, entry)?;
-                    plan = if op == "crash" {
-                        plan.crash(worker, at)
+                    det = if op == "crash" {
+                        det.crash(worker, at)
                     } else {
-                        plan.drain(worker, at)
+                        det.drain(worker, at)
                     };
                 }
                 "join" => {
@@ -199,7 +265,7 @@ impl FaultPlan {
                         .parse()
                         .map_err(|_| format!("bad join count '{ctok}' in '{entry}'"))?;
                     let at = parse_time(ttok, entry)?;
-                    plan = plan.join(count, at);
+                    det = det.join(count, at);
                 }
                 "rolling" => {
                     let period = parse_time(rest, entry)?;
@@ -209,17 +275,229 @@ impl FaultPlan {
                         ));
                     }
                     let rolled = FaultPlan::rolling(workers, period);
-                    plan.events.extend(rolled.events);
+                    det.events.extend(rolled.events);
+                }
+                "mtbf" => {
+                    if st.mtbf.is_some() {
+                        return Err(format!("duplicate 'mtbf:' entry ('{entry}')"));
+                    }
+                    st.mtbf = Some(parse_positive_secs(rest, entry, "mtbf")?);
+                }
+                "mttr" => {
+                    if st.mttr.is_some() {
+                        return Err(format!("duplicate 'mttr:' entry ('{entry}')"));
+                    }
+                    st.mttr = Some(parse_positive_secs(rest, entry, "mttr")?);
+                }
+                "seed" => {
+                    if st.seed.is_some() {
+                        return Err(format!("duplicate 'seed:' entry ('{entry}')"));
+                    }
+                    let s: u64 = rest
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("bad seed '{rest}' in '{entry}': expected an unsigned integer"))?;
+                    st.seed = Some(s);
+                }
+                "burst" => {
+                    if st.burst.is_some() {
+                        return Err(format!("duplicate 'burst:' entry ('{entry}')"));
+                    }
+                    let (ktok, rtok) = rest.split_once('@').ok_or_else(|| {
+                        format!("bad fault entry '{entry}': expected burst:K@RATE, e.g. burst:3@0.01")
+                    })?;
+                    let k: u32 = ktok
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("bad burst size '{ktok}' in '{entry}'"))?;
+                    if k == 0 {
+                        return Err(format!("burst size must be at least 1 (got 0 in '{entry}')"));
+                    }
+                    let rate: f64 = rtok
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("bad burst rate '{rtok}' in '{entry}': expected events/s"))?;
+                    if !(rate.is_finite() && rate > 0.0) {
+                        return Err(format!(
+                            "burst rate must be finite and positive (got '{rtok}' in '{entry}')"
+                        ));
+                    }
+                    st.burst = Some((k, rate));
                 }
                 other => {
                     return Err(format!(
-                        "unknown fault op '{other}' in '{entry}': expected crash, drain, join, or rolling"
+                        "unknown fault op '{other}' in '{entry}': expected crash, drain, join, \
+                         rolling, coord@TIME, mtbf, mttr, burst, or seed"
                     ))
                 }
             }
         }
+        let plan = if st.is_some() {
+            if st.mtbf.is_none() && st.burst.is_none() {
+                return Err(
+                    "'mttr:'/'seed:' need a stochastic source ('mtbf:' or 'burst:') in the same spec"
+                        .to_string(),
+                );
+            }
+            if !(horizon.is_finite() && horizon > 0.0) {
+                return Err(format!(
+                    "stochastic fault entries need a finite, positive horizon (got {horizon})"
+                ));
+            }
+            st.expand(det, workers, horizon)?
+        } else {
+            det
+        };
         plan.validate(workers)?;
         Ok(plan)
+    }
+}
+
+/// Stochastic spec collected from `mtbf:`/`mttr:`/`burst:`/`seed:` entries.
+#[derive(Debug, Default)]
+struct Stochastic {
+    mtbf: Option<f64>,
+    mttr: Option<f64>,
+    seed: Option<u64>,
+    burst: Option<(u32, f64)>,
+}
+
+/// One pending event on the expansion timeline.
+enum Pending {
+    /// Deterministic entry, emitted verbatim (index into the det plan).
+    Det(FaultEvent),
+    /// Stochastic failure of a concrete worker index.
+    Fail(usize),
+    /// Repair join (replacement worker gets the next fresh index).
+    Repair,
+    /// Correlated-failure burst instant.
+    Burst,
+}
+
+impl Stochastic {
+    fn is_some(&self) -> bool {
+        self.mtbf.is_some() || self.mttr.is_some() || self.seed.is_some() || self.burst.is_some()
+    }
+
+    /// Expand to a concrete plan: a virtual fault timeline is walked in
+    /// (time, insertion) order, mirroring the driver's delivery order, so
+    /// fresh join indices assigned here match the indices the driver will
+    /// hand out — generated crash events always name real workers.
+    ///
+    /// Worker 0 is spared from stochastic failure so the fleet always
+    /// keeps at least one survivor (the same convention the randomized
+    /// property plans use). Deterministic entries ride the same timeline:
+    /// their joins advance the fresh-index counter and their drains and
+    /// crashes remove victims from the alive set.
+    fn expand(&self, det: FaultPlan, workers: usize, horizon: f64) -> Result<FaultPlan, String> {
+        let mut rng = Rng::new(self.seed.unwrap_or(DEFAULT_FAULT_SEED));
+        let mut pending: Vec<(f64, u64, Pending)> = Vec::new();
+        let mut seq: u64 = 0;
+        let mut push = |pending: &mut Vec<(f64, u64, Pending)>, seq: &mut u64, at: f64, p: Pending| {
+            pending.push((at, *seq, p));
+            *seq += 1;
+        };
+        for ev in &det.events {
+            push(&mut pending, &mut seq, ev.at, Pending::Det(*ev));
+        }
+        // Worker 0 is the spared survivor; everyone else draws a lifetime.
+        let mut alive: Vec<usize> = (1..workers).collect();
+        let mut next_fresh = workers;
+        if let Some(mtbf) = self.mtbf {
+            for &w in &alive {
+                let t = rng.exponential(1.0 / mtbf);
+                push(&mut pending, &mut seq, t, Pending::Fail(w));
+            }
+        }
+        if let Some((_, rate)) = self.burst {
+            let t = rng.exponential(rate);
+            push(&mut pending, &mut seq, t, Pending::Burst);
+        }
+
+        let mut out = FaultPlan::none();
+        while !pending.is_empty() {
+            // Deterministic pop: earliest time, insertion order on ties.
+            let mut best = 0;
+            for i in 1..pending.len() {
+                let (ta, sa) = (pending[i].0, pending[i].1);
+                let (tb, sb) = (pending[best].0, pending[best].1);
+                if ta.total_cmp(&tb).then(sa.cmp(&sb)).is_lt() {
+                    best = i;
+                }
+            }
+            let (t, _, p) = pending.remove(best);
+            if out.events.len() > MAX_GENERATED_EVENTS {
+                return Err(format!(
+                    "stochastic fault spec expands to more than {MAX_GENERATED_EVENTS} events \
+                     over a {horizon}s horizon — lower the rates or shorten the horizon"
+                ));
+            }
+            match p {
+                Pending::Det(ev) => {
+                    match ev.kind {
+                        FaultKind::Join { count } => {
+                            for _ in 0..count {
+                                let idx = next_fresh;
+                                next_fresh += 1;
+                                alive.push(idx);
+                                if let Some(mtbf) = self.mtbf {
+                                    let tf = t + rng.exponential(1.0 / mtbf);
+                                    push(&mut pending, &mut seq, tf, Pending::Fail(idx));
+                                }
+                            }
+                        }
+                        FaultKind::Drain { worker } | FaultKind::Crash { worker } => {
+                            alive.retain(|&w| w != worker);
+                        }
+                        FaultKind::CoordinatorCrash => {}
+                    }
+                    out.events.push(ev);
+                }
+                Pending::Fail(w) => {
+                    if t > horizon || !alive.contains(&w) {
+                        continue;
+                    }
+                    alive.retain(|&x| x != w);
+                    out = out.crash(w, t);
+                    if let Some(mttr) = self.mttr {
+                        let tr = t + rng.exponential(1.0 / mttr);
+                        push(&mut pending, &mut seq, tr, Pending::Repair);
+                    }
+                }
+                Pending::Repair => {
+                    if t > horizon {
+                        continue;
+                    }
+                    out = out.join(1, t);
+                    let idx = next_fresh;
+                    next_fresh += 1;
+                    alive.push(idx);
+                    if let Some(mtbf) = self.mtbf {
+                        let tf = t + rng.exponential(1.0 / mtbf);
+                        push(&mut pending, &mut seq, tf, Pending::Fail(idx));
+                    }
+                }
+                Pending::Burst => {
+                    let (k, rate) = self.burst.expect("burst event without burst spec");
+                    if t > horizon {
+                        continue;
+                    }
+                    let hits = (k as usize).min(alive.len());
+                    for _ in 0..hits {
+                        let j = rng.range_u32(0, alive.len() as u32 - 1) as usize;
+                        let w = alive.remove(j);
+                        out = out.crash(w, t);
+                        if let Some(mttr) = self.mttr {
+                            let tr = t + rng.exponential(1.0 / mttr);
+                            push(&mut pending, &mut seq, tr, Pending::Repair);
+                        }
+                    }
+                    let tn = t + rng.exponential(rate);
+                    push(&mut pending, &mut seq, tn, Pending::Burst);
+                }
+            }
+        }
+        Ok(out)
     }
 }
 
@@ -242,6 +520,21 @@ fn parse_time(tok: &str, entry: &str) -> Result<f64, String> {
     }
     if t < 0.0 {
         return Err(format!("time '{tok}' in '{entry}' is negative; times are seconds from t=0"));
+    }
+    Ok(t)
+}
+
+/// `mtbf:`/`mttr:` operand: a strictly positive, finite number of seconds.
+fn parse_positive_secs(tok: &str, entry: &str, what: &str) -> Result<f64, String> {
+    let tok = tok.trim();
+    let digits = tok.strip_suffix('s').unwrap_or(tok);
+    let t: f64 = digits
+        .parse()
+        .map_err(|_| format!("bad {what} '{tok}' in '{entry}': expected seconds, e.g. 30 or 30s"))?;
+    if !(t.is_finite() && t > 0.0) {
+        return Err(format!(
+            "{what} must be a finite, positive number of seconds (got '{tok}' in '{entry}')"
+        ));
     }
     Ok(t)
 }
@@ -332,5 +625,132 @@ mod tests {
         assert_eq!(order[0].kind, FaultKind::Drain { worker: 2 });
         assert_eq!(order[1].kind, FaultKind::Crash { worker: 1 });
         assert_eq!(order[2].kind, FaultKind::Join { count: 1 });
+    }
+
+    // ------------------------------------------------ coordinator crashes
+
+    #[test]
+    fn coord_entry_parses_and_round_trips() {
+        let plan = FaultPlan::parse("coord@15,crash:w1@10", 4).unwrap();
+        assert_eq!(plan.events.len(), 2);
+        assert_eq!(plan.events[0].kind, FaultKind::CoordinatorCrash);
+        assert_eq!(plan.events[0].at, 15.0);
+        assert_eq!(FaultKind::CoordinatorCrash.to_string(), "coord");
+        // With the seconds suffix too.
+        let plan = FaultPlan::parse("coord@15s", 4).unwrap();
+        assert_eq!(plan.events[0].at, 15.0);
+    }
+
+    #[test]
+    fn coord_without_time_is_friendly() {
+        let err = FaultPlan::parse("coord", 4).unwrap_err();
+        assert!(err.contains("coord@TIME"), "{err}");
+        let err = FaultPlan::parse("coord@-3", 4).unwrap_err();
+        assert!(err.contains("negative"), "{err}");
+        let err = FaultPlan::parse("coord@nan", 4).unwrap_err();
+        assert!(err.contains("finite"), "{err}");
+    }
+
+    // ------------------------------------------------ stochastic expansion
+
+    #[test]
+    fn mtbf_expansion_is_byte_stable_and_seed_sensitive() {
+        let a = FaultPlan::parse_with_horizon("mtbf:30,mttr:5,seed:7", 8, 600.0).unwrap();
+        let b = FaultPlan::parse_with_horizon("mtbf:30,mttr:5,seed:7", 8, 600.0).unwrap();
+        assert_eq!(a, b);
+        assert!(!a.is_empty(), "600s horizon at 30s MTBF must generate churn");
+        let c = FaultPlan::parse_with_horizon("mtbf:30,mttr:5,seed:8", 8, 600.0).unwrap();
+        assert_ne!(a, c, "different seeds must expand differently");
+    }
+
+    #[test]
+    fn mtbf_expansion_validates_and_spares_worker_zero() {
+        let plan = FaultPlan::parse_with_horizon("mtbf:20,mttr:10,seed:3", 6, 400.0).unwrap();
+        assert!(plan.validate(6).is_ok());
+        // All events in time order (plan order == delivery order).
+        let order = plan.delivery_order();
+        assert_eq!(order, plan.events);
+        for ev in &plan.events {
+            assert!(ev.at <= 400.0, "{ev:?} beyond horizon");
+            if let FaultKind::Crash { worker } = ev.kind {
+                assert_ne!(worker, 0, "worker 0 is the spared survivor");
+            }
+        }
+    }
+
+    #[test]
+    fn mtbf_without_mttr_kills_each_worker_at_most_once() {
+        let plan = FaultPlan::parse_with_horizon("mtbf:10,seed:1", 5, 1000.0).unwrap();
+        let mut seen = Vec::new();
+        for ev in &plan.events {
+            match ev.kind {
+                FaultKind::Crash { worker } => {
+                    assert!(!seen.contains(&worker), "worker {worker} crashed twice");
+                    seen.push(worker);
+                }
+                other => panic!("unexpected event {other} in mttr-free plan"),
+            }
+        }
+        assert!(seen.len() <= 4, "only workers 1..5 can fail");
+    }
+
+    #[test]
+    fn burst_crashes_k_distinct_workers_at_one_instant() {
+        let plan = FaultPlan::parse_with_horizon("burst:3@0.05,mttr:5,seed:9", 8, 600.0).unwrap();
+        assert!(plan.validate(8).is_ok());
+        assert!(!plan.is_empty());
+        // Group crashes by timestamp: each burst hits distinct workers.
+        let mut i = 0;
+        let evs = &plan.events;
+        while i < evs.len() {
+            if let FaultKind::Crash { .. } = evs[i].kind {
+                let t = evs[i].at;
+                let mut victims = Vec::new();
+                while i < evs.len() && evs[i].at == t {
+                    if let FaultKind::Crash { worker } = evs[i].kind {
+                        assert!(!victims.contains(&worker), "duplicate victim in burst");
+                        victims.push(worker);
+                    }
+                    i += 1;
+                }
+                assert!(victims.len() <= 3, "burst size exceeded: {victims:?}");
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn stochastic_layered_on_deterministic_keeps_join_indices_consistent() {
+        // A deterministic join advances the fresh-index counter inside the
+        // expansion too, so generated crashes never name phantom workers.
+        let plan =
+            FaultPlan::parse_with_horizon("join:2@5,mtbf:15,mttr:5,seed:4", 4, 300.0).unwrap();
+        assert!(plan.validate(4).is_ok());
+        assert!(plan.events.iter().any(|e| e.kind == FaultKind::Join { count: 2 }));
+    }
+
+    #[test]
+    fn stochastic_junk_is_friendly() {
+        for (spec, needle) in [
+            ("mtbf:0", "positive"),
+            ("mtbf:-3", "positive"),
+            ("mtbf:nan", "positive"),
+            ("mttr:5", "stochastic source"),
+            ("seed:7", "stochastic source"),
+            ("mtbf:30,mtbf:40", "duplicate"),
+            ("mtbf:30,seed:x", "seed"),
+            ("burst:0@0.1", "at least 1"),
+            ("burst:2@0", "finite and positive"),
+            ("burst:2@-1", "finite and positive"),
+            ("burst:2@nan", "finite and positive"),
+            ("burst:2", "K@RATE"),
+        ] {
+            let err = FaultPlan::parse_with_horizon(spec, 4, 600.0).unwrap_err();
+            assert!(err.contains(needle), "spec {spec}: {err}");
+        }
+        // A stochastic spec against a degenerate horizon fails loudly.
+        let err = FaultPlan::parse_with_horizon("mtbf:30", 4, f64::NAN).unwrap_err();
+        assert!(err.contains("horizon"), "{err}");
     }
 }

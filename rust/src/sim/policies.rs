@@ -25,20 +25,34 @@
 //! (`tests/props_policy_differential.rs`) asserts the ports are
 //! byte-identical on the full `RunMetrics` event log.
 //!
-//! **Elastic fleet.** [`SlicedPolicy`], [`IlsPolicy`], and
-//! [`PredictiveSlicedPolicy`] implement the optional
+//! **Elastic fleet.** [`SlicedPolicy`], [`IlsPolicy`],
+//! [`PredictiveSlicedPolicy`], [`SclsCbPolicy`], and
+//! [`PredictiveCbPolicy`] implement the optional
 //! `on_worker_join`/`on_worker_lost` hooks: joins add cold workers under
 //! fresh (never-reused) indices, drains stop accepting and migrate queued
 //! work at the slice boundary, and crashes reclaim everything the dead
 //! worker held — re-queued with generation advanced to the last completed
-//! slice boundary, so at most one slice of work is lost per surviving
-//! request (the structural gift of slicing: every boundary is a
-//! checkpoint). [`SclsCbPolicy`] and [`PredictiveCbPolicy`] deliberately
-//! keep the default no-op hooks (they are not part of the fault figure's
-//! trio); on fault-free traces every policy is byte-identical to the
-//! pre-elastic code.
+//! slice/iteration boundary, so at most one slice of work is lost per
+//! surviving request (the structural gift of slicing: every boundary is a
+//! checkpoint). The CB pair reclaims its running set via the worker's
+//! `abandon` (re-prefill over input + generated; P-CB keeps the stale
+//! prediction and lets the evict/double/re-admit ladder re-calibrate the
+//! reservation). The coordinator-backed pair ([`SlicedPolicy`], P-SCLS)
+//! additionally implements `on_coordinator_crash`: the successor rebuilds
+//! pools, ledgers, and deficit counters from authoritative worker-side
+//! reports plus the arrival log (see
+//! [`SlicedCoordinator::rebuild_after_crash`]).
+//!
+//! **KV-transfer cost.** With `SimConfig::kv_transfer` set, every
+//! migrated (queued) request is charged a modeled transfer stall over its
+//! resident context before it is servable on the new worker — static
+//! policies bank the stall as per-request debt paid at the next serving
+//! start, continuous policies fold it into the next iteration arm. The
+//! resident tokens are counted in `kv_tokens_migrated` even without a
+//! cost model. On fault-free traces every policy stays byte-identical to
+//! the pre-elastic code.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 
 use crate::batcher::{dp_batch_sorted_into, fcfs_batches, DpBatcherConfig, DpScratch};
 use crate::core::{Batch, BatchOutcome, Request};
@@ -47,12 +61,12 @@ use crate::engine::continuous_pred::PredictiveContinuousWorker;
 use crate::engine::continuous_scls::SlicedContinuousWorker;
 use crate::engine::presets::EnginePreset;
 use crate::engine::sim::SimEngine;
-use crate::estimator::{MemoryEstimator, ServingTimeEstimator};
+use crate::estimator::{MemoryEstimator, ServingTimeEstimator, TransferCost};
 use crate::metrics::{BatchRecord, FleetEventKind, FleetRecord, PredictionRecord, RunMetrics};
 use crate::offloader::{LoadLedger, RoundRobin};
 use crate::predictor::LengthPredictor;
 use crate::scheduler::coordinator::SlicedCoordinator;
-use crate::scheduler::fleet::{WorkerHealth, WorkerLedger};
+use crate::scheduler::fleet::{WorkerHealth, WorkerLedger, WorkerReport};
 use crate::scheduler::policy::{SchedulingPolicy, SimCtx, WorkerLoss};
 use crate::scheduler::spec::{BatchingSpec, IntervalSpec, OffloadSpec, SchedulerSpec};
 use crate::scheduler::{IntervalController, RequestPool};
@@ -92,13 +106,19 @@ impl ServingSlot {
 /// (sliced family and P-SCLS): serve one slice of `iter_limit` iterations,
 /// log the batch record, park the batch + outcome in the worker's serving
 /// slot, and schedule the completion event. Request state is deliberately
-/// untouched until [`settle_batch`] at done-time.
+/// untouched until [`settle_batch`] at done-time. `stall` is the
+/// KV-transfer debt owed by the batch's migrated members (0 on fault-free
+/// runs — the completion time is then bit-identical to the stall-free
+/// code): the batch cannot start until the slowest transfer lands, so the
+/// stall shifts the completion event without touching the engine's
+/// recorded serve time.
 pub(crate) fn start_static_batch(
     engine: &mut SimEngine,
     serving: &mut Option<ServingSlot>,
     w: usize,
     batch: Batch,
     iter_limit: u32,
+    stall: f64,
     ctx: &mut SimCtx,
 ) {
     debug_assert!(serving.is_none(), "worker {w} already serving");
@@ -114,9 +134,47 @@ pub(crate) fn start_static_batch(
         actual_serve_time: outcome.duration,
         early_return: outcome.early_return,
     });
-    let done_at = ctx.now + outcome.duration;
+    let done_at = if stall > 0.0 {
+        ctx.now + stall + outcome.duration
+    } else {
+        ctx.now + outcome.duration
+    };
     *serving = Some(ServingSlot { batch, outcome, li });
     ctx.complete_at(done_at, w);
+}
+
+/// Charge one migrated request's KV-transfer cost: its full resident
+/// context (input + everything generated so far — what the successor
+/// worker must hold before serving it) counts as migrated tokens, and the
+/// configured cost model prices the stall (0 without a model — the tokens
+/// are still counted). Returns the stall for the caller to bank as debt.
+pub(crate) fn charge_transfer(
+    cost: &Option<TransferCost>,
+    w: usize,
+    r: &Request,
+    ctx: &mut SimCtx,
+) -> f64 {
+    let tokens = r.input_len as u64;
+    let stall = cost.as_ref().map(|c| c.stall(tokens)).unwrap_or(0.0);
+    ctx.record_kv_transfer(w, tokens, stall);
+    stall
+}
+
+/// Largest outstanding transfer debt among `reqs`, removed from the map.
+/// Transfers overlap, so a batch stalls until its slowest member's KV
+/// lands — the max, not the sum. 0 when no member owes anything (the
+/// fault-free fast path: the map is empty).
+pub(crate) fn take_debt(debt: &mut BTreeMap<u64, f64>, reqs: &[Request]) -> f64 {
+    if debt.is_empty() {
+        return 0.0;
+    }
+    let mut stall = 0.0f64;
+    for r in reqs {
+        if let Some(d) = debt.remove(&r.id) {
+            stall = stall.max(d);
+        }
+    }
+    stall
 }
 
 /// Apply a slice outcome at its completion boundary: charge each request
@@ -202,6 +260,10 @@ pub struct SlicedPolicy {
     tick_armed: bool,
     /// Scratch for draining the coordinator's parked requests on a join.
     park_buf: Vec<Request>,
+    /// KV-transfer cost model for migrations (`None` = free, pre-PR 10).
+    kv_transfer: Option<TransferCost>,
+    /// Outstanding per-request transfer stalls, paid at serving start.
+    transfer_debt: BTreeMap<u64, f64>,
 }
 
 impl SlicedPolicy {
@@ -237,6 +299,8 @@ impl SlicedPolicy {
             max_gen_len: cfg.max_gen_len,
             tick_armed: false,
             park_buf: Vec::new(),
+            kv_transfer: cfg.kv_transfer,
+            transfer_debt: BTreeMap::new(),
         }
     }
 
@@ -262,7 +326,8 @@ impl SlicedPolicy {
             return;
         };
         let size = batch.size();
-        start_static_batch(&mut ws.engine, &mut ws.serving, w, batch, slice_len, ctx);
+        let stall = take_debt(&mut self.transfer_debt, &batch.requests);
+        start_static_batch(&mut ws.engine, &mut ws.serving, w, batch, slice_len, stall, ctx);
         self.coord.note_batch_start(w, size, ctx.now);
     }
 
@@ -423,6 +488,10 @@ impl SchedulingPolicy for SlicedPolicy {
                 if !moved.is_empty() {
                     ctx.record_migration(w, moved.len());
                     for r in moved {
+                        let stall = charge_transfer(&self.kv_transfer, w, &r, ctx);
+                        if stall > 0.0 {
+                            self.transfer_debt.insert(r.id, stall);
+                        }
                         self.readmit(r, ctx);
                     }
                 }
@@ -458,12 +527,60 @@ impl SchedulingPolicy for SlicedPolicy {
                 if in_flight + queued > 0 {
                     ctx.record_reclaim(w, in_flight, queued);
                 }
-                for r in reclaimed {
+                // The queued portion migrates (its context ships to a new
+                // worker); the in-flight portion re-prefills from the last
+                // boundary — a recompute, not a transfer.
+                for (i, r) in reclaimed.into_iter().enumerate() {
+                    if i >= in_flight {
+                        let stall = charge_transfer(&self.kv_transfer, w, &r, ctx);
+                        if stall > 0.0 {
+                            self.transfer_debt.insert(r.id, stall);
+                        }
+                    }
                     self.readmit(r, ctx);
                 }
                 self.ensure_tick(ctx);
             }
         }
+    }
+
+    fn on_coordinator_crash(&mut self, ctx: &mut SimCtx) {
+        // Successor takeover: each worker reports its authoritative state
+        // (the DES reads the report off the worker structs and the fleet
+        // mirror, which tracks exactly what a worker knows about itself —
+        // its health, in-flight batch, progress cursor, and the estimated
+        // serve-time of everything it holds).
+        let reports: Vec<WorkerReport> = self
+            .workers
+            .iter()
+            .enumerate()
+            .map(|(w, ws)| {
+                let mut charged = 0.0;
+                let mut in_flight = 0;
+                if let Some(slot) = &ws.serving {
+                    in_flight = slot.batch.size();
+                    charged += slot.batch.est_serve_time;
+                }
+                for b in &ws.batch_queue {
+                    charged += b.est_serve_time;
+                }
+                WorkerReport {
+                    worker: w,
+                    health: self.coord.fleet().health(w),
+                    in_flight,
+                    progress: self.coord.fleet().last_progress(w),
+                    charged_load: charged,
+                }
+            })
+            .collect();
+        // Requests no worker holds — the dead coordinator's pool — are
+        // recovered from the arrival log (the DES hands the lost pool
+        // contents straight back; a real deployment replays its journal).
+        let mut recovered = std::mem::take(&mut self.park_buf);
+        self.coord.take_parked(&mut recovered);
+        self.coord.rebuild_after_crash(ctx.now, &reports, &mut recovered);
+        self.park_buf = recovered;
+        self.ensure_tick(ctx);
     }
 
     fn finish(&mut self, metrics: &mut RunMetrics) {
@@ -493,6 +610,13 @@ pub struct IlsPolicy {
     preset: EnginePreset,
     seed: u64,
     max_gen_len: u32,
+    /// KV-transfer cost model for migrations (`None` = free, pre-PR 10).
+    kv_transfer: Option<TransferCost>,
+    /// Outstanding per-request transfer stalls (parked requests keep
+    /// theirs until routed).
+    transfer_debt: BTreeMap<u64, f64>,
+    /// Per-worker stall folded into its next iteration arm.
+    pending_stall: Vec<f64>,
 }
 
 impl IlsPolicy {
@@ -524,6 +648,9 @@ impl IlsPolicy {
             preset: cfg.engine.clone(),
             seed: cfg.seed,
             max_gen_len: cfg.max_gen_len,
+            kv_transfer: cfg.kv_transfer,
+            transfer_debt: BTreeMap::new(),
+            pending_stall: vec![0.0; n],
         }
     }
 
@@ -538,13 +665,24 @@ impl IlsPolicy {
         self.max_kv_seen
     }
 
+    /// Schedule `w`'s next iteration completion, folding in any pending
+    /// KV-transfer stall (0 on fault-free runs — bit-identical arming).
+    fn arm(&mut self, w: usize, d: f64, ctx: &mut SimCtx) {
+        let stall = std::mem::take(&mut self.pending_stall[w]);
+        if stall > 0.0 {
+            ctx.complete_at(ctx.now + stall + d, w);
+        } else {
+            ctx.complete_at(ctx.now + d, w);
+        }
+    }
+
     /// Kick worker `w`'s iteration loop if it is idle.
     fn kick(&mut self, w: usize, ctx: &mut SimCtx) {
         if !self.looping[w] {
             if let Some(d) = self.workers[w].begin_iteration() {
                 self.looping[w] = true;
                 self.max_kv_seen = self.max_kv_seen.max(self.workers[w].kv_in_use());
-                ctx.complete_at(ctx.now + d, w);
+                self.arm(w, d, ctx);
             }
         }
     }
@@ -562,10 +700,17 @@ impl IlsPolicy {
         None
     }
 
-    /// Route to an alive worker or park until one joins.
+    /// Route to an alive worker or park until one joins. A routed
+    /// request's outstanding transfer debt folds into the target's next
+    /// iteration arm; a parked request keeps its debt mapped.
     fn reroute(&mut self, req: Request, ctx: &mut SimCtx) {
         match self.route() {
             Some(w) => {
+                if !self.transfer_debt.is_empty() {
+                    if let Some(d) = self.transfer_debt.remove(&req.id) {
+                        self.pending_stall[w] = self.pending_stall[w].max(d);
+                    }
+                }
                 self.workers[w].waiting.push_back(req);
                 self.kick(w, ctx);
             }
@@ -595,7 +740,7 @@ impl SchedulingPolicy for IlsPolicy {
         }
         if let Some(d) = self.workers[wi].begin_iteration() {
             self.max_kv_seen = self.max_kv_seen.max(self.workers[wi].kv_in_use());
-            ctx.complete_at(ctx.now + d, wi);
+            self.arm(wi, d, ctx);
         } else {
             self.looping[wi] = false;
             if self.health[wi] == WorkerHealth::Draining {
@@ -618,6 +763,7 @@ impl SchedulingPolicy for IlsPolicy {
         self.looping.push(false);
         self.last_done.push(0.0);
         self.health.push(WorkerHealth::Alive);
+        self.pending_stall.push(0.0);
         self.rr.grow(self.workers.len());
         ctx.record_fleet(FleetRecord {
             worker: w,
@@ -648,6 +794,10 @@ impl SchedulingPolicy for IlsPolicy {
                 if !moved.is_empty() {
                     ctx.record_migration(w, moved.len());
                     for r in moved {
+                        let stall = charge_transfer(&self.kv_transfer, w, &r, ctx);
+                        if stall > 0.0 {
+                            self.transfer_debt.insert(r.id, stall);
+                        }
                         self.reroute(r, ctx);
                     }
                 }
@@ -671,11 +821,18 @@ impl SchedulingPolicy for IlsPolicy {
                 }
                 for mut r in running {
                     // Recovered at the last completed iteration boundary;
-                    // the re-prefill covers everything generated so far.
+                    // the re-prefill covers everything generated so far (a
+                    // recompute, not a KV transfer — nothing to charge).
                     r.input_len = r.orig_input_len + r.generated;
                     self.reroute(r, ctx);
                 }
                 for r in waiting {
+                    // Queued work moves instances: its resident KV (the
+                    // prefillable context) pays the transfer toll.
+                    let stall = charge_transfer(&self.kv_transfer, w, &r, ctx);
+                    if stall > 0.0 {
+                        self.transfer_debt.insert(r.id, stall);
+                    }
                     self.reroute(r, ctx);
                 }
             }
@@ -700,8 +857,23 @@ pub struct SclsCbPolicy {
     workers: Vec<SlicedContinuousWorker>,
     looping: Vec<bool>,
     last_done: Vec<f64>,
+    health: Vec<WorkerHealth>,
+    /// Requests with nowhere to go (whole fleet down) until a joiner.
+    parked: VecDeque<Request>,
     kv_budget: u64,
     max_kv_seen: u64,
+    /// Engine preset + base seed + caps for building joiners.
+    preset: EnginePreset,
+    seed: u64,
+    slice_len: u32,
+    max_gen_len: u32,
+    /// KV-transfer cost model for migrations (`None` = free, pre-PR 10).
+    kv_transfer: Option<TransferCost>,
+    /// Outstanding per-request transfer stalls (parked requests keep
+    /// theirs until routed).
+    transfer_debt: BTreeMap<u64, f64>,
+    /// Per-worker stall folded into its next iteration arm.
+    pending_stall: Vec<f64>,
 }
 
 impl SclsCbPolicy {
@@ -725,8 +897,17 @@ impl SclsCbPolicy {
             workers,
             looping: vec![false; n],
             last_done: vec![0.0; n],
+            health: vec![WorkerHealth::Alive; n],
+            parked: VecDeque::new(),
             kv_budget,
             max_kv_seen: 0,
+            preset: cfg.engine.clone(),
+            seed: cfg.seed,
+            slice_len,
+            max_gen_len: cfg.max_gen_len,
+            kv_transfer: cfg.kv_transfer,
+            transfer_debt: BTreeMap::new(),
+            pending_stall: vec![0.0; n],
         }
     }
 
@@ -741,10 +922,25 @@ impl SclsCbPolicy {
         self.max_kv_seen
     }
 
-    /// Offload to the instance with the most free projected memory (ties:
-    /// shortest local queue); kick its iteration loop if idle.
+    /// Schedule `w`'s next iteration completion, folding in any pending
+    /// KV-transfer stall (0 on fault-free runs — bit-identical arming).
+    fn arm(&mut self, w: usize, d: f64, ctx: &mut SimCtx) {
+        let stall = std::mem::take(&mut self.pending_stall[w]);
+        if stall > 0.0 {
+            ctx.complete_at(ctx.now + stall + d, w);
+        } else {
+            ctx.complete_at(ctx.now + d, w);
+        }
+    }
+
+    /// Offload to the alive instance with the most free projected memory
+    /// (ties: shortest local queue); kick its iteration loop if idle. With
+    /// the whole fleet down/draining, park until a joiner. On a fixed
+    /// all-alive fleet the filter keeps the iteration order, so the argmin
+    /// — and the run — is bit-identical to pre-elastic.
     fn assign(&mut self, r: Request, ctx: &mut SimCtx) {
-        let w = (0..self.workers.len())
+        let pick = (0..self.workers.len())
+            .filter(|&w| self.health[w] == WorkerHealth::Alive)
             .min_by(|&a, &b| {
                 self.workers[a]
                     .kv_projected()
@@ -755,14 +951,25 @@ impl SclsCbPolicy {
                             .len()
                             .cmp(&self.workers[b].waiting.len())
                     })
-            })
-            .unwrap();
+            });
+        let w = match pick {
+            Some(w) => w,
+            None => {
+                self.parked.push_back(r);
+                return;
+            }
+        };
+        if !self.transfer_debt.is_empty() {
+            if let Some(d) = self.transfer_debt.remove(&r.id) {
+                self.pending_stall[w] = self.pending_stall[w].max(d);
+            }
+        }
         self.workers[w].waiting.push_back(r);
         if !self.looping[w] {
             if let Some(d) = self.workers[w].begin_iteration() {
                 self.looping[w] = true;
                 self.max_kv_seen = self.max_kv_seen.max(self.workers[w].kv_projected());
-                ctx.complete_at(ctx.now + d, w);
+                self.arm(w, d, ctx);
             }
         }
     }
@@ -774,6 +981,9 @@ impl SchedulingPolicy for SclsCbPolicy {
     }
 
     fn on_worker_done(&mut self, wi: usize, ctx: &mut SimCtx) {
+        if self.health[wi] == WorkerHealth::Dead {
+            return; // stale completion from a crashed worker
+        }
         let exits = self.workers[wi].finish_iteration(ctx.now);
         // Every request running this iteration decoded one token: the
         // exits plus whatever is still running.
@@ -786,15 +996,109 @@ impl SchedulingPolicy for SclsCbPolicy {
             ctx.record_completion(&r);
         }
         // §7: slice-capped requests are rescheduled to the least
-        // memory-loaded instance (their KV was just released).
+        // memory-loaded instance (their KV was just released; the fresh
+        // prefill on the target already models the recompute, so no
+        // transfer toll here).
         for r in exits.rescheduled {
             self.assign(r, ctx);
         }
         if let Some(d) = self.workers[wi].begin_iteration() {
             self.max_kv_seen = self.max_kv_seen.max(self.workers[wi].kv_projected());
-            ctx.complete_at(ctx.now + d, wi);
+            self.arm(wi, d, ctx);
         } else {
             self.looping[wi] = false;
+            if self.health[wi] == WorkerHealth::Draining {
+                // Drained dry — retired for good.
+                self.health[wi] = WorkerHealth::Dead;
+            }
+        }
+    }
+
+    fn on_worker_join(&mut self, w: usize, ctx: &mut SimCtx) {
+        debug_assert_eq!(w, self.workers.len(), "join indices are dense");
+        self.workers.push(SlicedContinuousWorker::new(
+            self.preset
+                .latency(self.seed ^ (w as u64).wrapping_mul(0x5A5A)),
+            self.slice_len,
+            self.kv_budget,
+            self.preset.kv_delta,
+            self.max_gen_len,
+        ));
+        self.looping.push(false);
+        self.last_done.push(0.0);
+        self.health.push(WorkerHealth::Alive);
+        self.pending_stall.push(0.0);
+        ctx.record_fleet(FleetRecord {
+            worker: w,
+            kind: FleetEventKind::Join,
+        });
+        while let Some(r) = self.parked.pop_front() {
+            self.assign(r, ctx);
+        }
+    }
+
+    fn on_worker_lost(&mut self, w: usize, loss: WorkerLoss, ctx: &mut SimCtx) {
+        match loss {
+            WorkerLoss::Drain => {
+                if self.health[w] != WorkerHealth::Alive {
+                    return;
+                }
+                self.health[w] = WorkerHealth::Draining;
+                ctx.record_fleet(FleetRecord {
+                    worker: w,
+                    kind: FleetEventKind::Drain,
+                });
+                // The waiting queue never started: it migrates wholesale
+                // and pays the transfer toll; the running set finishes its
+                // slices in place (slice exits re-assign elsewhere since
+                // `assign` skips non-alive instances).
+                let moved: Vec<Request> = self.workers[w].waiting.drain(..).collect();
+                if !moved.is_empty() {
+                    ctx.record_migration(w, moved.len());
+                    for r in moved {
+                        let stall = charge_transfer(&self.kv_transfer, w, &r, ctx);
+                        if stall > 0.0 {
+                            self.transfer_debt.insert(r.id, stall);
+                        }
+                        self.assign(r, ctx);
+                    }
+                }
+                if !self.looping[w] {
+                    self.health[w] = WorkerHealth::Dead; // idle — retired now
+                }
+            }
+            WorkerLoss::Crash => {
+                if self.health[w] == WorkerHealth::Dead {
+                    return;
+                }
+                self.health[w] = WorkerHealth::Dead;
+                self.looping[w] = false;
+                self.pending_stall[w] = 0.0;
+                ctx.record_fleet(FleetRecord {
+                    worker: w,
+                    kind: FleetEventKind::Crash,
+                });
+                let (running, waiting) = self.workers[w].abandon();
+                if running.len() + waiting.len() > 0 {
+                    ctx.record_reclaim(w, running.len(), waiting.len());
+                }
+                for mut r in running {
+                    // Recovered at the last completed iteration boundary;
+                    // the re-prefill covers everything generated so far (a
+                    // recompute, not a KV transfer — nothing to charge).
+                    r.input_len = r.orig_input_len + r.generated;
+                    self.assign(r, ctx);
+                }
+                for r in waiting {
+                    // Queued work moves instances: its resident KV (the
+                    // prefillable context) pays the transfer toll.
+                    let stall = charge_transfer(&self.kv_transfer, w, &r, ctx);
+                    if stall > 0.0 {
+                        self.transfer_debt.insert(r.id, stall);
+                    }
+                    self.assign(r, ctx);
+                }
+            }
         }
     }
 
@@ -894,6 +1198,11 @@ pub struct PredictiveSlicedPolicy {
     tick_armed: bool,
     /// Cost rung batches at their predicted budget (`SimConfig::pred_corrected_dp`).
     pred_corrected: bool,
+    /// KV-transfer cost model for migrations (`None` = free, pre-PR 10).
+    kv_transfer: Option<TransferCost>,
+    /// Outstanding per-request transfer stalls (pooled requests keep
+    /// theirs until their next batch starts).
+    transfer_debt: BTreeMap<u64, f64>,
     // Reused per-tick buffers (allocation-lean discipline from PR 1).
     tick_reqs: Vec<Request>,
     batch_buf: Vec<Batch>,
@@ -941,6 +1250,8 @@ impl PredictiveSlicedPolicy {
             max_rung,
             tick_armed: false,
             pred_corrected: cfg.pred_corrected_dp,
+            kv_transfer: cfg.kv_transfer,
+            transfer_debt: BTreeMap::new(),
             tick_reqs: Vec::new(),
             batch_buf: Vec::new(),
             staged: Vec::new(),
@@ -974,8 +1285,9 @@ impl PredictiveSlicedPolicy {
             return;
         };
         let size = batch.size();
+        let stall = take_debt(&mut self.transfer_debt, &batch.requests);
         let ws = &mut self.workers[w];
-        start_static_batch(&mut ws.engine, &mut ws.serving, w, batch, budget, ctx);
+        start_static_batch(&mut ws.engine, &mut ws.serving, w, batch, budget, stall, ctx);
         self.fleet.batch_started(w, size, ctx.now);
     }
 
@@ -1222,6 +1534,13 @@ impl SchedulingPolicy for PredictiveSlicedPolicy {
                     moved += batch.size();
                     let rung = self.rung_of(budget) as usize - 1;
                     for r in batch.requests {
+                        // Queued work moves instances: its resident KV
+                        // pays the transfer toll, banked until the request
+                        // starts on its next worker.
+                        let stall = charge_transfer(&self.kv_transfer, w, &r, ctx);
+                        if stall > 0.0 {
+                            self.transfer_debt.insert(r.id, stall);
+                        }
                         self.pools[rung].push(r);
                     }
                 }
@@ -1260,6 +1579,13 @@ impl SchedulingPolicy for PredictiveSlicedPolicy {
                 for (_, batch) in queue {
                     queued += batch.size();
                     for r in batch.requests {
+                        // Queued work migrates (the in-flight slot above
+                        // re-prefills instead — a recompute, not a
+                        // transfer) and pays the KV toll.
+                        let stall = charge_transfer(&self.kv_transfer, w, &r, ctx);
+                        if stall > 0.0 {
+                            self.transfer_debt.insert(r.id, stall);
+                        }
                         self.requeue_reclaimed(r);
                     }
                 }
@@ -1269,6 +1595,53 @@ impl SchedulingPolicy for PredictiveSlicedPolicy {
                 self.ensure_tick(ctx);
             }
         }
+    }
+
+    fn on_coordinator_crash(&mut self, ctx: &mut SimCtx) {
+        // The coordinator's soft state (load ledger, RR cursor, worker
+        // mirror) is lost; the successor reconstructs it from
+        // authoritative worker-side reports: health, in-flight batch, last
+        // progress boundary, and the serving + queued load each worker
+        // still owes. Charged load equals the pre-crash ledger entry
+        // exactly — the ledger charges per assignment and releases per
+        // batch completion, both of which the worker can replay.
+        let reports: Vec<WorkerReport> = (0..self.workers.len())
+            .map(|w| {
+                let ws = &self.workers[w];
+                let mut charged = 0.0f64;
+                let mut in_flight = 0usize;
+                if let Some(slot) = &ws.serving {
+                    in_flight = slot.batch.size();
+                    charged += slot.batch.est_serve_time;
+                }
+                for (_, batch) in &ws.batch_queue {
+                    charged += batch.est_serve_time;
+                }
+                WorkerReport {
+                    worker: w,
+                    health: self.fleet.health(w),
+                    in_flight,
+                    progress: self.fleet.last_progress(w),
+                    charged_load: charged,
+                }
+            })
+            .collect();
+        self.ledger = LoadLedger::new(reports.len());
+        self.rr = RoundRobin::new(reports.len());
+        self.fleet = WorkerLedger::from_reports(ctx.now, &reports);
+        for rep in &reports {
+            if rep.health != WorkerHealth::Alive {
+                self.ledger.set_accepting(rep.worker, false);
+            }
+            if rep.charged_load > 0.0 {
+                self.ledger.add(rep.worker, rep.charged_load);
+            }
+        }
+        // Rung pools survive as the recovery set itself: pooled requests
+        // are exactly the unassigned arrivals the log would replay, and
+        // keeping them in place preserves their prediction stamps (an
+        // online predictor re-stamping could differ).
+        self.ensure_tick(ctx);
     }
 
     fn finish(&mut self, metrics: &mut RunMetrics) {
@@ -1300,10 +1673,23 @@ pub struct PredictiveCbPolicy {
     workers: Vec<PredictiveContinuousWorker>,
     looping: Vec<bool>,
     last_done: Vec<f64>,
+    health: Vec<WorkerHealth>,
+    /// Requests with nowhere to go (whole fleet down) until a joiner.
+    parked: VecDeque<Request>,
     predictor: Box<dyn LengthPredictor>,
     max_gen_len: u32,
     kv_budget: u64,
     max_kv_seen: u64,
+    /// Engine preset + base seed for building joiners mid-run.
+    preset: EnginePreset,
+    seed: u64,
+    /// KV-transfer cost model for migrations (`None` = free, pre-PR 10).
+    kv_transfer: Option<TransferCost>,
+    /// Outstanding per-request transfer stalls (parked requests keep
+    /// theirs until routed).
+    transfer_debt: BTreeMap<u64, f64>,
+    /// Per-worker stall folded into its next iteration arm.
+    pending_stall: Vec<f64>,
 }
 
 impl PredictiveCbPolicy {
@@ -1326,10 +1712,17 @@ impl PredictiveCbPolicy {
             workers,
             looping: vec![false; n],
             last_done: vec![0.0; n],
+            health: vec![WorkerHealth::Alive; n],
+            parked: VecDeque::new(),
             predictor,
             max_gen_len: cfg.max_gen_len,
             kv_budget,
             max_kv_seen: 0,
+            preset: cfg.engine.clone(),
+            seed: cfg.seed,
+            kv_transfer: cfg.kv_transfer,
+            transfer_debt: BTreeMap::new(),
+            pending_stall: vec![0.0; n],
         }
     }
 
@@ -1345,10 +1738,25 @@ impl PredictiveCbPolicy {
         self.max_kv_seen
     }
 
-    /// Offload to the instance with the most free reserved memory (ties:
-    /// shortest local queue); kick its iteration loop if idle.
+    /// Schedule `w`'s next iteration completion, folding in any pending
+    /// KV-transfer stall (0 on fault-free runs — bit-identical arming).
+    fn arm(&mut self, w: usize, d: f64, ctx: &mut SimCtx) {
+        let stall = std::mem::take(&mut self.pending_stall[w]);
+        if stall > 0.0 {
+            ctx.complete_at(ctx.now + stall + d, w);
+        } else {
+            ctx.complete_at(ctx.now + d, w);
+        }
+    }
+
+    /// Offload to the alive instance with the most free reserved memory
+    /// (ties: shortest local queue); kick its iteration loop if idle. With
+    /// the whole fleet down/draining, park until a joiner. On a fixed
+    /// all-alive fleet the filter keeps the iteration order, so the argmin
+    /// — and the run — is bit-identical to pre-elastic.
     fn assign(&mut self, r: Request, ctx: &mut SimCtx) {
-        let w = (0..self.workers.len())
+        let pick = (0..self.workers.len())
+            .filter(|&w| self.health[w] == WorkerHealth::Alive)
             .min_by(|&a, &b| {
                 self.workers[a]
                     .kv_projected()
@@ -1359,14 +1767,25 @@ impl PredictiveCbPolicy {
                             .len()
                             .cmp(&self.workers[b].waiting.len())
                     })
-            })
-            .unwrap();
+            });
+        let w = match pick {
+            Some(w) => w,
+            None => {
+                self.parked.push_back(r);
+                return;
+            }
+        };
+        if !self.transfer_debt.is_empty() {
+            if let Some(d) = self.transfer_debt.remove(&r.id) {
+                self.pending_stall[w] = self.pending_stall[w].max(d);
+            }
+        }
         self.workers[w].waiting.push_back(r);
         if !self.looping[w] {
             if let Some(d) = self.workers[w].begin_iteration() {
                 self.looping[w] = true;
                 self.max_kv_seen = self.max_kv_seen.max(self.workers[w].kv_projected());
-                ctx.complete_at(ctx.now + d, w);
+                self.arm(w, d, ctx);
             }
         }
     }
@@ -1379,6 +1798,9 @@ impl SchedulingPolicy for PredictiveCbPolicy {
     }
 
     fn on_worker_done(&mut self, wi: usize, ctx: &mut SimCtx) {
+        if self.health[wi] == WorkerHealth::Dead {
+            return; // stale completion from a crashed worker
+        }
         let exits = self.workers[wi].finish_iteration(ctx.now);
         // Every request running this iteration decoded one token: the
         // exits plus whatever is still running.
@@ -1421,9 +1843,104 @@ impl SchedulingPolicy for PredictiveCbPolicy {
         }
         if let Some(d) = self.workers[wi].begin_iteration() {
             self.max_kv_seen = self.max_kv_seen.max(self.workers[wi].kv_projected());
-            ctx.complete_at(ctx.now + d, wi);
+            self.arm(wi, d, ctx);
         } else {
             self.looping[wi] = false;
+            if self.health[wi] == WorkerHealth::Draining {
+                // Drained dry — retired for good.
+                self.health[wi] = WorkerHealth::Dead;
+            }
+        }
+    }
+
+    fn on_worker_join(&mut self, w: usize, ctx: &mut SimCtx) {
+        debug_assert_eq!(w, self.workers.len(), "join indices are dense");
+        self.workers.push(PredictiveContinuousWorker::new(
+            self.preset
+                .latency(self.seed ^ (w as u64).wrapping_mul(0xD1CE)),
+            self.kv_budget,
+            self.preset.kv_delta,
+            self.max_gen_len,
+        ));
+        self.looping.push(false);
+        self.last_done.push(0.0);
+        self.health.push(WorkerHealth::Alive);
+        self.pending_stall.push(0.0);
+        ctx.record_fleet(FleetRecord {
+            worker: w,
+            kind: FleetEventKind::Join,
+        });
+        while let Some(r) = self.parked.pop_front() {
+            self.assign(r, ctx);
+        }
+    }
+
+    fn on_worker_lost(&mut self, w: usize, loss: WorkerLoss, ctx: &mut SimCtx) {
+        match loss {
+            WorkerLoss::Drain => {
+                if self.health[w] != WorkerHealth::Alive {
+                    return;
+                }
+                self.health[w] = WorkerHealth::Draining;
+                ctx.record_fleet(FleetRecord {
+                    worker: w,
+                    kind: FleetEventKind::Drain,
+                });
+                // The waiting queue never started: it migrates wholesale
+                // and pays the transfer toll; the running set finishes (or
+                // evicts at reservation exhaustion) in place — `assign`
+                // skips non-alive instances, so exits land elsewhere.
+                let moved: Vec<Request> = self.workers[w].waiting.drain(..).collect();
+                if !moved.is_empty() {
+                    ctx.record_migration(w, moved.len());
+                    for r in moved {
+                        let stall = charge_transfer(&self.kv_transfer, w, &r, ctx);
+                        if stall > 0.0 {
+                            self.transfer_debt.insert(r.id, stall);
+                        }
+                        self.assign(r, ctx);
+                    }
+                }
+                if !self.looping[w] {
+                    self.health[w] = WorkerHealth::Dead; // idle — retired now
+                }
+            }
+            WorkerLoss::Crash => {
+                if self.health[w] == WorkerHealth::Dead {
+                    return;
+                }
+                self.health[w] = WorkerHealth::Dead;
+                self.looping[w] = false;
+                self.pending_stall[w] = 0.0;
+                ctx.record_fleet(FleetRecord {
+                    worker: w,
+                    kind: FleetEventKind::Crash,
+                });
+                let (running, waiting) = self.workers[w].abandon();
+                if running.len() + waiting.len() > 0 {
+                    ctx.record_reclaim(w, running.len(), waiting.len());
+                }
+                for mut r in running {
+                    // Recovered at the last completed iteration boundary;
+                    // the re-prefill covers everything generated so far (a
+                    // recompute, not a KV transfer — nothing to charge).
+                    // The stale `predicted_gen` is kept: `reservation()`
+                    // clamps the remaining reservation to ≥ 1, so a
+                    // too-small stamp costs at most one short residency
+                    // before the evict/double ladder re-calibrates.
+                    r.input_len = r.orig_input_len + r.generated;
+                    self.assign(r, ctx);
+                }
+                for r in waiting {
+                    // Queued work moves instances: its resident KV (the
+                    // prefillable context) pays the transfer toll.
+                    let stall = charge_transfer(&self.kv_transfer, w, &r, ctx);
+                    if stall > 0.0 {
+                        self.transfer_debt.insert(r.id, stall);
+                    }
+                    self.assign(r, ctx);
+                }
+            }
         }
     }
 

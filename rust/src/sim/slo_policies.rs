@@ -160,7 +160,7 @@ impl DeadlineSclsPolicy {
         let Some((budget, batch)) = ws.batch_queue.pop_front() else {
             return;
         };
-        start_static_batch(&mut ws.engine, &mut ws.serving, w, batch, budget, ctx);
+        start_static_batch(&mut ws.engine, &mut ws.serving, w, batch, budget, 0.0, ctx);
     }
 }
 
@@ -430,7 +430,7 @@ impl RankedSlicePolicy {
         let Some((budget, batch)) = ws.batch_queue.pop_front() else {
             return;
         };
-        start_static_batch(&mut ws.engine, &mut ws.serving, w, batch, budget, ctx);
+        start_static_batch(&mut ws.engine, &mut ws.serving, w, batch, budget, 0.0, ctx);
     }
 
     /// Place one batch per the spec's offload axis (most urgent batches

@@ -1,0 +1,23 @@
+// Lint fixture (never compiled): import-graph positives and suppressions.
+// Scanned under "src/sim/fixture.rs" (deterministic: checked) and
+// "src/telemetry/fixture.rs" (out of scope) by tests/props_lint.rs.
+use crate::runtime::ModelRuntime; // line 4: finding (whole-module match)
+use crate::bench::harness::FigureConfig; // line 5: finding
+use crate::util::logging::log_line; // line 6: finding (submodule match)
+use crate::telemetry::hist::Histogram; // telemetry alone is not allowlisted
+use crate::util::stats::mean; // util alone is not allowlisted
+use crate::scheduler::fleet::WorkerLedger; // deterministic peer: fine
+
+fn positives() {
+    let _t = crate::telemetry::profile::timer("tick"); // line 12: finding
+}
+
+fn suppressed() {
+    let _t = crate::telemetry::profile::timer("tock"); // scls-lint: allow(import-graph): opt-in profiling tap
+}
+
+fn never_fire() {
+    // crate::runtime in a comment is not a finding, nor in a string:
+    let s = "crate::bench::harness";
+    drop(s);
+}

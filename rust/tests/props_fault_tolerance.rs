@@ -20,6 +20,7 @@
 use std::collections::HashMap;
 
 use scls::engine::presets::{EngineKind, EnginePreset};
+use scls::estimator::TransferCost;
 use scls::sim::driver::{SimConfig, Simulation};
 use scls::sim::reference::{run_ils_reference, run_scls_cb_reference, run_sliced_reference};
 use scls::sim::FaultPlan;
@@ -51,7 +52,7 @@ fn fingerprint(m: &scls::metrics::RunMetrics) -> String {
 
 /// Policies with fault hooks wired (the other registry names keep the
 /// default no-op hooks and are covered by the identity tests only).
-const ELASTIC: [&str; 3] = ["scls", "ils", "p-scls"];
+const ELASTIC: [&str; 5] = ["scls", "ils", "p-scls", "scls-cb", "p-cb"];
 
 /// Every completed request appears exactly once with its full generation
 /// length (target capped by the run's max-gen limit).
@@ -274,4 +275,204 @@ fn join_only_plans_touch_no_fault_counters() {
         assert_eq!(m.lost_slices, 0);
         assert_eq!(m.migrations, 0);
     }
+}
+
+// ---------------------------------------------------------------------------
+// 3. Coordinator crash and ledger reconstruction
+// ---------------------------------------------------------------------------
+
+/// The completion set as a canonical `(id, generated)` list — the unit of
+/// comparison for the reconstruction differential. The coordinator rebuild
+/// loses soft state (round-robin cursor, deficit quanta), so runs are not
+/// byte-identical; the guarantee is that the *set* of completed work is.
+fn completion_set(m: &scls::metrics::RunMetrics) -> Vec<(u64, u32)> {
+    let mut v: Vec<(u64, u32)> = m.completed.iter().map(|c| (c.id, c.generated)).collect();
+    v.sort_unstable();
+    v
+}
+
+#[test]
+fn coordinator_crash_reconstruction_differential() {
+    // Drop the coordinator mid-run, alone and amid worker churn. The
+    // successor rebuilds its ledger from worker reports; every policy
+    // (including the worker-locus ones, for which recovery is a no-op)
+    // must finish the exact same completion set as the fault-free run,
+    // with the crash observed exactly once.
+    let t = trace(WorkloadKind::CodeFuse, 7.0, 25.0, 620);
+    let sim = Simulation::new(cfg(3, EngineKind::Ds, 620));
+    let solo = FaultPlan::none().coordinator_crash(9.0);
+    let churn = FaultPlan::none().crash(1, 6.0).coordinator_crash(10.0).join(1, 14.0);
+    for name in ELASTIC {
+        let base = sim.run_named(&t, name, 128).unwrap();
+        let m = sim.run_named_faulted(&t, name, 128, &solo).unwrap();
+        assert_eq!(
+            completion_set(&m),
+            completion_set(&base),
+            "{name}: coordinator crash changed the completion set"
+        );
+        assert_eq!(m.coordinator_crashes, 1, "{name} miscounted the crash");
+        // A coordinator crash alone touches no worker: no reclaim, no
+        // slice loss, no migration.
+        assert_eq!(m.worker_crashes, 0, "{name}");
+        assert_eq!(m.lost_slices, 0, "{name} lost a slice without a worker fault");
+        assert_eq!(m.migrations, 0, "{name} migrated without a worker fault");
+
+        let m = sim.run_named_faulted(&t, name, 128, &churn).unwrap();
+        assert_eq!(
+            completion_set(&m),
+            completion_set(&base),
+            "{name}: crash + rebuild lost or duplicated requests"
+        );
+        assert_eq!(m.coordinator_crashes, 1, "{name}");
+        assert_eq!(m.worker_crashes, 1, "{name}");
+        assert!(
+            m.reclaimed_requests >= m.lost_slices,
+            "{name}: reclaimed {} < lost slices {}",
+            m.reclaimed_requests,
+            m.lost_slices
+        );
+    }
+}
+
+#[test]
+fn randomized_coordinator_crashes_lose_no_requests() {
+    check("coord-crash-no-lost-work", 10, |g: &mut Gen| {
+        let workers = *g.pick(&[2usize, 4]);
+        let seed = g.u64();
+        let t = trace(WorkloadKind::CodeFuse, 6.0, 20.0, seed);
+        let (mut plan, _) = random_plan(g, workers, 30.0);
+        let n_coord = g.usize(1, 3);
+        for _ in 0..n_coord {
+            plan = plan.coordinator_crash(g.f64(1.0, 30.0));
+        }
+        let sim = Simulation::new(cfg(workers, EngineKind::Ds, seed));
+        for name in ELASTIC {
+            let m = sim.run_named_faulted(&t, name, 128, &plan).unwrap();
+            let label = format!("{name} ({workers}w seed {seed} plan {plan:?})");
+            assert_complete(&m, &t, &label)?;
+            // Events past the drain-out of the run never fire, so the
+            // observed count is bounded, not exact.
+            prop_assert!(
+                m.coordinator_crashes as usize <= n_coord,
+                "{label}: {} coordinator crashes recorded, {} scheduled",
+                m.coordinator_crashes,
+                n_coord
+            );
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// 4. Probabilistic fault plans (mtbf / burst grammar)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn stochastic_plan_expansion_is_byte_stable() {
+    // The same seeded spec expands to the identical event schedule every
+    // time, and a run driven by it replays byte-identically.
+    let spec = "mtbf:8,mttr:2,seed:7";
+    let a = FaultPlan::parse_with_horizon(spec, 4, 40.0).unwrap();
+    let b = FaultPlan::parse_with_horizon(spec, 4, 40.0).unwrap();
+    assert_eq!(format!("{a:?}"), format!("{b:?}"), "expansion must be deterministic");
+    let c = FaultPlan::parse_with_horizon("mtbf:8,mttr:2,seed:8", 4, 40.0).unwrap();
+    assert_ne!(
+        format!("{a:?}"),
+        format!("{c:?}"),
+        "different seeds must draw different schedules"
+    );
+
+    let t = trace(WorkloadKind::CodeFuse, 5.0, 30.0, 630);
+    let sim = Simulation::new(cfg(4, EngineKind::Ds, 630));
+    for name in ELASTIC {
+        let x = sim.run_named_faulted(&t, name, 128, &a).unwrap();
+        let y = sim.run_named_faulted(&t, name, 128, &b).unwrap();
+        assert_eq!(
+            fingerprint(&x),
+            fingerprint(&y),
+            "{name}: seeded mtbf plan did not replay byte-identically"
+        );
+        assert_complete(&x, &t, &format!("{name} mtbf")).unwrap();
+    }
+}
+
+#[test]
+fn burst_plans_crash_and_recover_without_loss() {
+    // A correlated burst: K simultaneous crashes drawn at a seeded rate,
+    // each followed by a recovery join. Worker 0 is always spared, so the
+    // run drains and everything completes.
+    let plan = FaultPlan::parse_with_horizon("burst:2@0.2,mttr:3,seed:11", 4, 30.0).unwrap();
+    let t = trace(WorkloadKind::CodeFuse, 5.0, 25.0, 631);
+    let sim = Simulation::new(cfg(4, EngineKind::Ds, 631));
+    for name in ELASTIC {
+        let m = sim.run_named_faulted(&t, name, 128, &plan).unwrap();
+        assert_eq!(m.completed.len(), t.len(), "{name} lost requests under burst plan");
+        assert!(
+            m.reclaimed_requests >= m.lost_slices,
+            "{name}: reclaimed {} < lost slices {}",
+            m.reclaimed_requests,
+            m.lost_slices
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 5. KV-transfer cost on migration
+// ---------------------------------------------------------------------------
+
+fn kv_cfg(workers: usize, seed: u64) -> SimConfig {
+    cfg(workers, EngineKind::Ds, seed)
+        .with_kv_transfer(Some(TransferCost::from_bandwidth(1_000_000.0)))
+}
+
+#[test]
+fn kv_pricing_is_invisible_without_migrations() {
+    // With the transfer model enabled but no faults, nothing migrates and
+    // the run is byte-identical to the unpriced one.
+    let t = trace(WorkloadKind::CodeFuse, 5.0, 25.0, 640);
+    let plain = Simulation::new(cfg(3, EngineKind::Ds, 640));
+    let priced = Simulation::new(kv_cfg(3, 640));
+    for name in ELASTIC {
+        let a = plain.run_named(&t, name, 128).unwrap();
+        let b = priced.run_named(&t, name, 128).unwrap();
+        assert_eq!(
+            fingerprint(&a),
+            fingerprint(&b),
+            "{name}: kv pricing perturbed a migration-free run"
+        );
+        assert_eq!(b.kv_tokens_migrated, 0);
+        assert_eq!(b.migration_stall_s, 0.0);
+    }
+}
+
+#[test]
+fn migrations_always_move_kv_tokens_when_priced() {
+    // Drain one of two loaded workers: queued work must migrate, and with
+    // the transfer model on, every migration carries tokens and a stall.
+    let t = trace(WorkloadKind::CodeFuse, 8.0, 25.0, 641);
+    let plan = FaultPlan::none().drain(1, 5.0).join(1, 15.0);
+    let sim = Simulation::new(kv_cfg(2, 641));
+    let mut total_migrations = 0u64;
+    for name in ELASTIC {
+        let m = sim.run_named_faulted(&t, name, 128, &plan).unwrap();
+        assert_eq!(m.completed.len(), t.len(), "{name} lost requests on priced drain");
+        if m.migrations > 0 {
+            assert!(
+                m.kv_tokens_migrated > 0,
+                "{name}: {} migrations moved zero KV tokens",
+                m.migrations
+            );
+            assert!(
+                m.migration_stall_s > 0.0,
+                "{name}: priced migrations must stall"
+            );
+        } else {
+            assert_eq!(m.kv_tokens_migrated, 0, "{name}: phantom KV traffic");
+        }
+        total_migrations += m.migrations;
+    }
+    assert!(
+        total_migrations > 0,
+        "draining half a loaded fleet must migrate something somewhere"
+    );
 }

@@ -16,12 +16,13 @@ use std::path::{Path, PathBuf};
 
 use scls::analysis::{
     manifest, run_lint, scan_source, surface, RULE_FLOAT_CMP, RULE_FROZEN_MANIFEST,
-    RULE_HASH_ORDER, RULE_SINK_SURFACE, RULE_WALL_CLOCK,
+    RULE_HASH_ORDER, RULE_IMPORT_GRAPH, RULE_SINK_SURFACE, RULE_WALL_CLOCK,
 };
 
 const HASH_ORDER: &str = include_str!("fixtures/lint/hash_order.rs");
 const WALL_CLOCK: &str = include_str!("fixtures/lint/wall_clock.rs");
 const FLOAT_CMP: &str = include_str!("fixtures/lint/float_cmp.rs");
+const IMPORT_GRAPH: &str = include_str!("fixtures/lint/import_graph.rs");
 const CLEAN: &str = include_str!("fixtures/lint/clean.rs");
 
 fn crate_root() -> PathBuf {
@@ -66,6 +67,18 @@ fn float_cmp_fixture_fires_suppresses_and_respects_module_set() {
     let lines = rule_lines("src/estimator/fixture.rs", FLOAT_CMP, RULE_FLOAT_CMP);
     assert_eq!(lines, vec![6, 7, 8]);
     assert!(rule_lines("src/util/fixture.rs", FLOAT_CMP, RULE_FLOAT_CMP).is_empty());
+}
+
+#[test]
+fn import_graph_fixture_fires_suppresses_and_respects_module_set() {
+    // Deterministic module: whole-module and submodule allowlist paths
+    // fire; non-allowlisted siblings (`telemetry::hist`, `util::stats`)
+    // and deterministic peers stay silent; line 16 is suppressed.
+    let lines = rule_lines("src/sim/fixture.rs", IMPORT_GRAPH, RULE_IMPORT_GRAPH);
+    assert_eq!(lines, vec![4, 5, 6, 12]);
+    // Outside the deterministic set the dependency is legitimate.
+    assert!(rule_lines("src/telemetry/fixture.rs", IMPORT_GRAPH, RULE_IMPORT_GRAPH).is_empty());
+    assert!(rule_lines("src/metrics/fixture.rs", IMPORT_GRAPH, RULE_IMPORT_GRAPH).is_empty());
 }
 
 #[test]
